@@ -1,0 +1,130 @@
+//! End-to-end validation driver (EXPERIMENTS.md "end-to-end" entry):
+//! compress a synthetic NN layer through the FULL three-layer stack —
+//! rust coordinator → PJRT artifacts (Pallas cost kernel) → BBO — and
+//! compare greedy vs BBO on the paper's headline metric (residual error /
+//! exact-solution hits), plus wall-clock for each stage.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_layer
+//! ```
+
+use std::sync::Arc;
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::bruteforce::brute_force;
+use intdecomp::cost::compression_ratio;
+use intdecomp::greedy::greedy;
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::minlp::Oracle;
+use intdecomp::runtime::{XlaCostOracle, XlaRuntime};
+use intdecomp::solvers::sa::SimulatedAnnealing;
+use intdecomp::util::timer::Timer;
+
+fn main() {
+    let cfg = InstanceConfig::default();
+    let n_instances = 3;
+    let rt = XlaRuntime::load_default().map(Arc::new);
+    match &rt {
+        Some(r) => println!(
+            "PJRT artifacts: {} ({}) — cost evaluations run the Pallas \
+             kernel",
+            r.dir.display(),
+            r.platform()
+        ),
+        None => println!(
+            "no artifacts/ — run `make artifacts`; falling back to native \
+             cost"
+        ),
+    }
+
+    let mut greedy_errs = Vec::new();
+    let mut bbo_errs = Vec::new();
+    let mut hits = 0;
+
+    for idx in 0..n_instances {
+        let problem = generate(&cfg, idx);
+        println!(
+            "\n== layer {idx} ({}x{} -> K={}, {:.1}% size) ==",
+            problem.n(),
+            problem.d(),
+            problem.k,
+            100.0
+                * compression_ratio(problem.n(), problem.d(), problem.k, 32)
+        );
+
+        let t = Timer::start();
+        let exact = brute_force(&problem);
+        println!(
+            "exact:  cost {:.6}  ({} canonical evals, {:.2}s)",
+            exact.best_cost,
+            exact.evaluated,
+            t.seconds()
+        );
+
+        let t = Timer::start();
+        let g = greedy(&problem, 7);
+        let g_err = problem.residual_error(g.cost_refit, exact.best_cost);
+        println!(
+            "greedy: cost {:.6}  residual error {:.4}  ({:.4}s)",
+            g.cost_refit,
+            g_err,
+            t.seconds()
+        );
+        greedy_errs.push(g_err);
+
+        let bcfg = BboConfig::smoke_scale(problem.n_bits(), 400);
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        let sa = SimulatedAnnealing::default();
+        let run = match &rt {
+            Some(rt) => {
+                let oracle = XlaCostOracle {
+                    rt: rt.clone(),
+                    problem: problem.clone(),
+                };
+                bbo::run(&oracle, &algo, &sa, &bcfg, &Backends::default(),
+                         idx as u64)
+            }
+            None => bbo::run(&problem, &algo, &sa, &bcfg,
+                             &Backends::default(), idx as u64),
+        };
+        let b_err = problem.residual_error(run.best_y, exact.best_cost);
+        let hit = run.found_exact(exact.best_cost, 1e-6);
+        if hit {
+            hits += 1;
+        }
+        println!(
+            "BBO:    cost {:.6}  residual error {:.4}  ({} evals, \
+             {:.2}s: surrogate {:.2}s solver {:.2}s eval {:.2}s)  exact \
+             hit: {hit}",
+            run.best_y,
+            b_err,
+            run.ys.len(),
+            run.time_total,
+            run.time_surrogate,
+            run.time_solver,
+            run.time_eval
+        );
+        bbo_errs.push(b_err);
+
+        // Sanity: re-evaluate the winner natively.
+        let native = problem.eval(&run.best_x);
+        assert!(
+            (native - run.best_y).abs() < 1e-4 * (1.0 + native),
+            "XLA/native cost disagreement"
+        );
+    }
+
+    println!("\n== summary over {n_instances} layers ==");
+    println!(
+        "mean residual error: greedy {:.4}  vs  BBO {:.4}",
+        intdecomp::util::mean(&greedy_errs),
+        intdecomp::util::mean(&bbo_errs)
+    );
+    println!("BBO exact-solution hits: {hits}/{n_instances}");
+    assert!(
+        intdecomp::util::mean(&bbo_errs)
+            <= intdecomp::util::mean(&greedy_errs) + 1e-9,
+        "BBO should not lose to greedy on average"
+    );
+    println!("end-to-end OK");
+}

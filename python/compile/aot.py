@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the rust coordinator loads the text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Emits into ``--out`` (default ../artifacts):
+
+  cost_batch.hlo.txt    (W[n,d], M[b,n,k])                  -> (cost[b],)
+  gram.hlo.txt          (Phi[nmax,p], y[nmax,1])            -> (G, gv, yy)
+  bocs_sample.hlo.txt   (G[p,p], gv[p,1], lam[p], s2, z[p]) -> (alpha, hld)
+  fm_epoch_k{8,12}.hlo.txt (X, y, mask, w0, w, V, lr)       -> (w0, w, V)
+  meta.json             shape/layout contract consumed by rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_all(n, d, k, batch, nmax, kfms):
+    """Lower every graph at the configured paper-scale shapes."""
+    nbits = n * k
+    p = 1 + nbits + nbits * (nbits - 1) // 2
+    arts = {}
+
+    arts["cost_batch"] = jax.jit(model.cost_batch_graph).lower(
+        _spec(n, d), _spec(batch, n, k)
+    )
+    arts["gram"] = jax.jit(model.gram_graph).lower(
+        _spec(nmax, p), _spec(nmax, 1)
+    )
+    arts["bocs_sample"] = jax.jit(model.bocs_sample_graph).lower(
+        _spec(p, p), _spec(p, 1), _spec(p), _spec(), _spec(p)
+    )
+    for kfm in kfms:
+        arts[f"fm_epoch_k{kfm}"] = jax.jit(model.fm_epoch_graph).lower(
+            _spec(nmax, nbits),  # X
+            _spec(nmax),  # y
+            _spec(nmax),  # mask
+            _spec(1),  # w0
+            _spec(nbits),  # w
+            _spec(nbits, kfm),  # V
+            _spec(1),  # lr
+        )
+
+    meta = {
+        "n": n,
+        "d": d,
+        "k": k,
+        "nbits": nbits,
+        "p": p,
+        "batch": batch,
+        "nmax": nmax,
+        "kfms": list(kfms),
+        "fm_steps": model.FM_STEPS,
+        "feature_order": "bias, linear, upper-tri pairs (lexicographic)",
+    }
+    return arts, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=8, help="rows of W")
+    ap.add_argument("--d", type=int, default=100, help="cols of W")
+    ap.add_argument("--k", type=int, default=3, help="decomposition rank")
+    ap.add_argument("--batch", type=int, default=256, help="cost batch B")
+    ap.add_argument(
+        "--nmax", type=int, default=1280, help="padded dataset rows"
+    )
+    ap.add_argument("--kfm", type=int, nargs="*", default=[8, 12])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arts, meta = lower_all(
+        args.n, args.d, args.k, args.batch, args.nmax, args.kfm
+    )
+    for name, lowered in arts.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

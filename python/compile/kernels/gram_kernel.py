@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: row-tiled Gram accumulation for the BOCS surrogate.
+
+Every BBO iteration rebuilds the Bayesian-linear-regression posterior from
+the quadratic feature matrix Phi (rows = evaluated candidates, cols = the
+1 + n + n(n-1)/2 quadratic features).  The O(N * P^2) Gram product
+``Phi^T Phi`` dominates that rebuild, and — unlike the Gibbs sweeps that
+reuse it — is a classic MXU tiling problem, so it lives in a kernel.
+
+Blocking: the grid walks row-blocks of Phi; each step loads a
+(BLOCK_R, P) slab into VMEM, contracts it on the MXU, and accumulates into
+the (P, P) output block, which maps to the same tile at every step (the
+canonical Pallas accumulation pattern: initialise at program_id == 0, then
+``+=``).  Padding rows are all-zero and therefore accumulate nothing, which
+is how the fixed-shape AOT artifact supports a growing dataset.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gram", "DEFAULT_BLOCK_R"]
+
+DEFAULT_BLOCK_R = 128
+
+
+def _gram_kernel(phi_ref, y_ref, g_ref, gv_ref, yy_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        gv_ref[...] = jnp.zeros_like(gv_ref)
+        yy_ref[...] = jnp.zeros_like(yy_ref)
+
+    blk = phi_ref[...]  # (R, P)
+    yb = y_ref[...]  # (R, 1)
+    g_ref[...] += blk.T @ blk
+    gv_ref[...] += blk.T @ yb
+    yy_ref[...] += jnp.sum(yb * yb, keepdims=True).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def gram(phi, y, *, block_r=DEFAULT_BLOCK_R):
+    """Accumulate (Phi^T Phi, Phi^T y, y^T y) over row tiles of Phi.
+
+    Args:
+      phi: (N, P) float32 feature matrix; N must be a multiple of
+        ``block_r``.  Zero rows are inert padding.
+      y: (N, 1) float32 targets (zero on padding rows).
+
+    Returns:
+      (P, P) Gram matrix, (P, 1) moment vector, (1, 1) y^T y.
+    """
+    n, p = phi.shape
+    if n % block_r != 0:
+        raise ValueError(f"rows {n} not a multiple of block {block_r}")
+    grid = (n // block_r,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution; Mosaic is TPU-only
+    )(phi.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package is
+checked against these reference implementations by pytest (allclose), and the
+rust native implementations are cross-checked against the AOT artifacts that
+embed the kernels — so ``ref.py`` anchors the whole stack.
+
+Cost convention (paper Eq. 8-9): for a target matrix ``W`` (N x D) and a
+binary matrix ``M`` (N x K, entries +-1),
+
+    cost(W, M) = || W - M (M^T M)^+ M^T W ||_F^2
+
+i.e. the squared Frobenius norm of the residual after projecting W onto the
+column space of M (the real factor ``C = M^+ W`` is eliminated by least
+squares).  Rank-deficient M (duplicate / collinear columns) is handled with
+the pseudoinverse, exactly as ``numpy.linalg.pinv`` would.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cost_ref", "cost_batch_ref", "gram_ref", "lstsq_c_ref"]
+
+
+def cost_ref(w, m):
+    """Residual cost for a single candidate ``m`` — pseudoinverse form."""
+    w = w.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    c = jnp.linalg.pinv(m, rtol=1e-5) @ w
+    r = w - m @ c
+    return jnp.sum(r * r)
+
+
+def cost_batch_ref(w, m_batch):
+    """Vectorised :func:`cost_ref` over a leading batch axis of M."""
+    return jax.vmap(lambda m: cost_ref(w, m))(m_batch)
+
+
+def lstsq_c_ref(w, m):
+    """The eliminated real factor C = (M^T M)^+ M^T W (paper Eq. 6)."""
+    return jnp.linalg.pinv(m.astype(jnp.float32), rtol=1e-5) @ w.astype(
+        jnp.float32
+    )
+
+
+def gram_ref(phi, y):
+    """Gram matrix and moment vector: (Phi^T Phi, Phi^T y, y^T y)."""
+    phi = phi.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return phi.T @ phi, phi.T @ y, jnp.sum(y * y)

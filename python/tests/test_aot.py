@@ -1,0 +1,38 @@
+"""AOT emitter: artifacts exist, are valid HLO text, meta is consistent."""
+
+import json
+import os
+
+from compile.aot import lower_all, to_hlo_text
+
+
+def test_lower_all_tiny(tmp_path):
+    arts, meta = lower_all(n=4, d=6, k=2, batch=8, nmax=32, kfms=[3])
+    assert set(arts) == {"cost_batch", "gram", "bocs_sample", "fm_epoch_k3"}
+    assert meta["nbits"] == 8
+    assert meta["p"] == 1 + 8 + 8 * 7 // 2
+    for name, lowered in arts.items():
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        # Entry computation present with a tuple root (return_tuple=True).
+        assert "ENTRY" in text, name
+        # The rust-side runtime (xla_extension 0.5.1) rejects TYPED_FFI
+        # custom-calls; no artifact may contain ANY custom-call (this is
+        # why bocs_sample hand-rolls its Cholesky).
+        assert "custom-call" not in text, f"{name} would not load in rust"
+        path = tmp_path / f"{name}.hlo.txt"
+        path.write_text(text)
+        assert path.stat().st_size > 100
+    (tmp_path / "meta.json").write_text(json.dumps(meta))
+    reread = json.loads((tmp_path / "meta.json").read_text())
+    assert reread == meta
+
+
+def test_paper_scale_meta_contract():
+    # Shape contract the rust runtime hard-depends on (P = 301 for n = 24).
+    _, meta = lower_all(n=8, d=100, k=3, batch=256, nmax=1280, kfms=[8, 12])
+    assert meta["nbits"] == 24
+    assert meta["p"] == 301
+    assert meta["batch"] == 256
+    assert meta["nmax"] == 1280
+    assert meta["kfms"] == [8, 12]

@@ -1,0 +1,192 @@
+"""Pallas cost kernel vs the pure-jnp pseudoinverse oracle.
+
+The kernel must agree with ``ref.cost_ref`` on every shape/rank pattern the
+coordinator can feed it: generic candidates, duplicate columns, sign-flipped
+columns (rank deficiency), K == N (perfect reconstruction) and K == 1.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.cost_kernel import cost_batch
+from compile.kernels.ref import cost_batch_ref, cost_ref, lstsq_c_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_w(n, d, rng):
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def _rand_m(b, n, k, rng):
+    return rng.choice([-1.0, 1.0], size=(b, n, k)).astype(np.float32)
+
+
+def _check(w, m_batch, rtol=2e-4, atol=2e-4):
+    got = np.asarray(cost_batch(jnp.asarray(w), jnp.asarray(m_batch),
+                                block_b=m_batch.shape[0]))
+    want = np.asarray(cost_batch_ref(jnp.asarray(w), jnp.asarray(m_batch)))
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- basic --
+
+
+def test_paper_shape_batch():
+    w = _rand_w(8, 100, RNG)
+    m = _rand_m(64, 8, 3, RNG)
+    _check(w, m)
+
+
+def test_grid_multiple_blocks():
+    w = _rand_w(8, 100, RNG)
+    m = _rand_m(64, 8, 3, RNG)
+    got = np.asarray(cost_batch(jnp.asarray(w), jnp.asarray(m), block_b=16))
+    want = np.asarray(cost_batch_ref(jnp.asarray(w), jnp.asarray(m)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_batch_not_multiple_raises():
+    w = _rand_w(4, 5, RNG)
+    m = _rand_m(7, 4, 2, RNG)
+    with pytest.raises(ValueError):
+        cost_batch(jnp.asarray(w), jnp.asarray(m), block_b=4)
+
+
+# ----------------------------------------------------- rank deficiency --
+
+
+def test_duplicate_columns_match_pinv():
+    w = _rand_w(8, 20, RNG)
+    m = _rand_m(8, 8, 3, RNG)
+    m[:, :, 2] = m[:, :, 0]  # exact duplicate -> rank 2
+    _check(w, m)
+
+
+def test_sign_flipped_column_match_pinv():
+    w = _rand_w(8, 20, RNG)
+    m = _rand_m(8, 8, 3, RNG)
+    m[:, :, 1] = -m[:, :, 0]  # collinear -> rank 2
+    _check(w, m)
+
+
+def test_all_columns_identical():
+    w = _rand_w(6, 10, RNG)
+    m = np.ones((4, 6, 3), np.float32)
+    m[2] = -1.0
+    _check(w, m)
+
+
+def test_rank_deficient_cost_equals_reduced_k():
+    """Duplicating a column must give exactly the K-1 decomposition cost."""
+    w = _rand_w(8, 30, RNG)
+    m2 = _rand_m(1, 8, 2, RNG)
+    m3 = np.concatenate([m2, m2[:, :, :1]], axis=2)
+    c2 = float(cost_ref(jnp.asarray(w), jnp.asarray(m2[0])))
+    c3 = np.asarray(cost_batch(jnp.asarray(w), jnp.asarray(m3), block_b=1))[0]
+    np.testing.assert_allclose(c3, c2, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- structure --
+
+
+def test_k_equals_n_perfect_reconstruction():
+    """K == N with independent columns reconstructs W exactly (Eq. 2)."""
+    w = _rand_w(4, 12, RNG)
+    # Hadamard-like independent +-1 basis.
+    h = np.array(
+        [[1, 1, 1, 1], [1, -1, 1, -1], [1, 1, -1, -1], [1, -1, -1, 1]],
+        np.float32,
+    )
+    got = np.asarray(
+        cost_batch(jnp.asarray(w), jnp.asarray(h[None]), block_b=1)
+    )
+    np.testing.assert_allclose(got, [0.0], atol=1e-3)
+
+
+def test_cost_nonnegative_and_bounded_by_w_norm():
+    w = _rand_w(8, 40, RNG)
+    m = _rand_m(32, 8, 3, RNG)
+    got = np.asarray(cost_batch(jnp.asarray(w), jnp.asarray(m), block_b=32))
+    wnorm = float(np.sum(w * w))
+    assert np.all(got >= -1e-3)
+    assert np.all(got <= wnorm + 1e-3)
+
+
+def test_sign_and_permutation_invariance():
+    """cost(M) is invariant under column sign flips and permutations."""
+    w = _rand_w(8, 25, RNG)
+    m = _rand_m(1, 8, 3, RNG)[0]
+    variants = [
+        m,
+        m[:, [1, 0, 2]],
+        m[:, [2, 1, 0]],
+        m * np.array([-1, 1, 1], np.float32),
+        m * np.array([-1, -1, 1], np.float32),
+        (m * -1)[:, [2, 0, 1]],
+    ]
+    batch = np.stack(variants).astype(np.float32)
+    got = np.asarray(
+        cost_batch(jnp.asarray(w), jnp.asarray(batch), block_b=len(variants))
+    )
+    np.testing.assert_allclose(got, got[0] * np.ones_like(got), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_residual_identity_vs_explicit_c():
+    """cost == ||W - M C||^2 with C from the oracle lstsq (Eq. 3 vs Eq. 8)."""
+    w = _rand_w(8, 15, RNG)
+    m = _rand_m(1, 8, 3, RNG)[0]
+    c = np.asarray(lstsq_c_ref(jnp.asarray(w), jnp.asarray(m)))
+    explicit = float(np.sum((w - m @ c) ** 2))
+    got = np.asarray(
+        cost_batch(jnp.asarray(w), jnp.asarray(m[None]), block_b=1)
+    )[0]
+    np.testing.assert_allclose(got, explicit, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- hypothesis --
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    d=st.integers(1, 24),
+    k=st.integers(1, 4),
+    b=st.integers(1, 6),
+    seed=st.integers(0, 2**32 - 1),
+    degenerate=st.booleans(),
+)
+def test_kernel_matches_oracle_shape_sweep(n, d, k, b, seed, degenerate):
+    rng = np.random.default_rng(seed)
+    w = _rand_w(n, d, rng)
+    m = _rand_m(b, n, k, rng)
+    if degenerate and k >= 2:
+        m[:, :, -1] = m[:, :, 0] * (-1.0 if seed % 2 else 1.0)
+    _check(w, m, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    k=st.integers(1, 3),
+    scale=st.floats(1e-2, 1e2),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_cost_scales_quadratically_with_w(n, k, scale, seed):
+    """cost(s*W, M) == s^2 cost(W, M) — the projector is scale-free."""
+    rng = np.random.default_rng(seed)
+    w = _rand_w(n, 12, rng)
+    m = _rand_m(2, n, k, rng)
+    base = np.asarray(cost_batch(jnp.asarray(w), jnp.asarray(m), block_b=2))
+    scaled = np.asarray(
+        cost_batch(jnp.asarray(w * scale), jnp.asarray(m), block_b=2)
+    )
+    # atol tracks the fp32 cancellation floor of ||sW||^2 - captured.
+    np.testing.assert_allclose(
+        scaled, base * scale**2, rtol=3e-3,
+        atol=1e-5 * max(1.0, scale**2),
+    )

@@ -1,0 +1,85 @@
+"""Pallas Gram kernel vs the dense jnp oracle, incl. padding semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.gram_kernel import gram
+from compile.kernels.ref import gram_ref
+
+RNG = np.random.default_rng(1)
+
+
+def _check(phi, y, block_r):
+    g, gv, yy = gram(jnp.asarray(phi), jnp.asarray(y), block_r=block_r)
+    rg, rgv, ryy = gram_ref(jnp.asarray(phi), jnp.asarray(y[:, 0]))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(gv)[:, 0], np.asarray(rgv), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        float(np.asarray(yy)[0, 0]), float(ryy), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_paper_scale_single_block():
+    phi = RNG.normal(size=(128, 61)).astype(np.float32)
+    y = RNG.normal(size=(128, 1)).astype(np.float32)
+    _check(phi, y, 128)
+
+
+def test_multi_block_accumulation():
+    phi = RNG.normal(size=(256, 31)).astype(np.float32)
+    y = RNG.normal(size=(256, 1)).astype(np.float32)
+    _check(phi, y, 32)
+
+
+def test_zero_padding_rows_are_inert():
+    phi = RNG.normal(size=(64, 13)).astype(np.float32)
+    y = RNG.normal(size=(64, 1)).astype(np.float32)
+    phi[40:] = 0.0
+    y[40:] = 0.0
+    g, gv, yy = gram(jnp.asarray(phi), jnp.asarray(y), block_r=16)
+    rg, rgv, ryy = gram_ref(jnp.asarray(phi[:40]), jnp.asarray(y[:40, 0]))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(gv)[:, 0], np.asarray(rgv), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        float(np.asarray(yy)[0, 0]), float(ryy), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rows_not_multiple_raises():
+    phi = np.zeros((30, 4), np.float32)
+    y = np.zeros((30, 1), np.float32)
+    with pytest.raises(ValueError):
+        gram(jnp.asarray(phi), jnp.asarray(y), block_r=16)
+
+
+def test_gram_is_symmetric_psd():
+    phi = RNG.normal(size=(64, 9)).astype(np.float32)
+    y = np.zeros((64, 1), np.float32)
+    g, _, _ = gram(jnp.asarray(phi), jnp.asarray(y), block_r=16)
+    g = np.asarray(g)
+    np.testing.assert_allclose(g, g.T, atol=1e-5)
+    eig = np.linalg.eigvalsh(g.astype(np.float64))
+    assert eig.min() >= -1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([16, 32, 64, 128]),
+    p=st.integers(1, 40),
+    block=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_gram_matches_oracle_sweep(rows, p, block, seed):
+    rng = np.random.default_rng(seed)
+    phi = rng.normal(size=(rows, p)).astype(np.float32)
+    y = rng.normal(size=(rows, 1)).astype(np.float32)
+    _check(phi, y, block)

@@ -1,0 +1,92 @@
+"""Hand-rolled HLO-friendly Cholesky / triangular solves vs LAPACK.
+
+These exist because the rust-side XLA runtime (xla_extension 0.5.1)
+rejects API_VERSION_TYPED_FFI custom-calls, so the artifacts cannot use
+``jnp.linalg.*``.  The manual versions must agree with LAPACK tightly.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    cholesky_hlo as _cholesky_hlo,
+    solve_lower_hlo as _solve_lower_hlo,
+    solve_lower_t_hlo as _solve_lower_t_hlo,
+)
+
+# jit so the fori_loop bodies compile once per shape instead of
+# re-tracing eagerly on every call.
+cholesky_hlo = jax.jit(_cholesky_hlo)
+solve_lower_hlo = jax.jit(_solve_lower_hlo)
+solve_lower_t_hlo = jax.jit(_solve_lower_t_hlo)
+
+RNG = np.random.default_rng(7)
+
+
+def _spd(p, rng):
+    a = rng.normal(size=(p + 3, p)).astype(np.float32)
+    return (a.T @ a + 0.5 * np.eye(p)).astype(np.float32)
+
+
+def test_cholesky_matches_lapack():
+    a = _spd(20, RNG)
+    got = np.asarray(cholesky_hlo(jnp.asarray(a)))
+    want = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_solves_roundtrip():
+    p = 15
+    a = _spd(p, RNG)
+    x_true = RNG.normal(size=p).astype(np.float32)
+    chol = cholesky_hlo(jnp.asarray(a))
+    b = np.asarray(chol) @ x_true
+    y = np.asarray(solve_lower_hlo(chol, jnp.asarray(b)))
+    np.testing.assert_allclose(y, x_true, rtol=2e-3, atol=2e-3)
+    bt = np.asarray(chol).T @ x_true
+    xt = np.asarray(solve_lower_t_hlo(chol, jnp.asarray(bt)))
+    np.testing.assert_allclose(xt, x_true, rtol=2e-3, atol=2e-3)
+
+
+def test_full_posterior_solve_matches_dense():
+    # A x = b through the two substitutions equals np.linalg.solve.
+    p = 12
+    a = _spd(p, RNG)
+    b = RNG.normal(size=p).astype(np.float32)
+    chol = cholesky_hlo(jnp.asarray(a))
+    x = np.asarray(
+        solve_lower_t_hlo(chol, solve_lower_hlo(chol, jnp.asarray(b)))
+    )
+    want = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=5e-3, atol=5e-3)
+
+
+def test_no_custom_calls_in_lowered_hlo():
+    # The whole point: the lowered module must be custom-call-free.
+    from compile.aot import to_hlo_text
+    from compile.model import bocs_sample_graph
+
+    p = 9
+    spec = jax.ShapeDtypeStruct((p, p), jnp.float32)
+    lowered = jax.jit(bocs_sample_graph).lower(
+        spec,
+        jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert "custom-call" not in text, "artifact would not load in rust"
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(2, 24), seed=st.integers(0, 2**31 - 1))
+def test_cholesky_sweep(p, seed):
+    rng = np.random.default_rng(seed)
+    a = _spd(p, rng)
+    got = np.asarray(cholesky_hlo(jnp.asarray(a)))
+    want = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)

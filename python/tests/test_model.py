@@ -1,0 +1,155 @@
+"""L2 graph correctness: BOCS posterior sampler and FM trainer."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+import jax
+
+from compile.model import (
+    cost_batch_graph,
+    fm_epoch_graph,
+    fm_predict,
+)
+from compile.model import bocs_sample_graph as _bocs_sample_graph
+
+# The graphs are jitted by aot.py for the artifacts; jit here too so the
+# fori_loop-based Cholesky doesn't re-trace per call.
+bocs_sample_graph = jax.jit(_bocs_sample_graph)
+from compile.kernels.ref import cost_batch_ref
+
+RNG = np.random.default_rng(2)
+
+
+def _posterior(phi, y, lam, sigma2):
+    """Dense float64 reference posterior (mean, covariance)."""
+    a = phi.T @ phi / sigma2 + np.diag(lam)
+    cov = np.linalg.inv(a)
+    mu = cov @ (phi.T @ y / sigma2)
+    return mu, cov, a
+
+
+def test_bocs_sample_zero_z_is_posterior_mean():
+    p, rows = 7, 40
+    phi = RNG.normal(size=(rows, p)).astype(np.float32)
+    y = RNG.normal(size=rows).astype(np.float32)
+    lam = np.full(p, 0.5, np.float32)
+    sigma2 = 0.3
+    mu, _, _ = _posterior(phi.astype(np.float64), y.astype(np.float64),
+                          lam.astype(np.float64), sigma2)
+    g = phi.T @ phi
+    gv = (phi.T @ y)[:, None]
+    alpha, _ = bocs_sample_graph(
+        jnp.asarray(g), jnp.asarray(gv), jnp.asarray(lam),
+        jnp.float32(sigma2), jnp.zeros(p, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(alpha), mu, rtol=1e-3, atol=1e-3)
+
+
+def test_bocs_sample_half_logdet():
+    p, rows = 5, 30
+    phi = RNG.normal(size=(rows, p)).astype(np.float32)
+    y = RNG.normal(size=rows).astype(np.float32)
+    lam = np.full(p, 2.0, np.float32)
+    sigma2 = 1.0
+    _, _, a = _posterior(phi.astype(np.float64), y.astype(np.float64),
+                         lam.astype(np.float64), sigma2)
+    g = phi.T @ phi
+    gv = (phi.T @ y)[:, None]
+    _, hld = bocs_sample_graph(
+        jnp.asarray(g), jnp.asarray(gv), jnp.asarray(lam),
+        jnp.float32(sigma2), jnp.zeros(p, jnp.float32)
+    )
+    want = 0.5 * np.linalg.slogdet(a)[1]
+    np.testing.assert_allclose(float(np.asarray(hld)[0]), want, rtol=1e-3)
+
+
+def test_bocs_sample_moments():
+    """Empirical mean/cov over many z-draws match the analytic posterior."""
+    p, rows, draws = 4, 50, 4000
+    phi = RNG.normal(size=(rows, p)).astype(np.float32)
+    y = RNG.normal(size=rows).astype(np.float32)
+    lam = np.full(p, 1.0, np.float32)
+    sigma2 = 0.5
+    mu, cov, _ = _posterior(phi.astype(np.float64), y.astype(np.float64),
+                            lam.astype(np.float64), sigma2)
+    g = jnp.asarray(phi.T @ phi)
+    gv = jnp.asarray((phi.T @ y)[:, None])
+    zs = RNG.normal(size=(draws, p)).astype(np.float32)
+    samples = np.stack([
+        np.asarray(bocs_sample_graph(g, gv, jnp.asarray(lam),
+                                     jnp.float32(sigma2),
+                                     jnp.asarray(z))[0])
+        for z in zs
+    ])
+    emp_mu = samples.mean(axis=0)
+    emp_cov = np.cov(samples.T)
+    np.testing.assert_allclose(
+        emp_mu, mu,
+        atol=float(4.0 * np.sqrt(np.diag(cov).max() / draws) + 1e-3),
+    )
+    np.testing.assert_allclose(emp_cov, cov, atol=0.15 * np.abs(cov).max()
+                               + 1e-3)
+
+
+def test_fm_predict_matches_bruteforce_pairs():
+    n, k, rows = 6, 3, 10
+    x = RNG.choice([-1.0, 1.0], size=(rows, n)).astype(np.float32)
+    w0 = RNG.normal(size=1).astype(np.float32)
+    w = RNG.normal(size=n).astype(np.float32)
+    v = RNG.normal(size=(n, k)).astype(np.float32)
+    pred = np.asarray(fm_predict(jnp.asarray(x), jnp.asarray(w0),
+                                 jnp.asarray(w), jnp.asarray(v)))
+    # brute-force Eq. 11
+    want = np.empty(rows)
+    for r in range(rows):
+        s = w0[0] + x[r] @ w
+        for i in range(n):
+            for j in range(i + 1, n):
+                s += (v[i] @ v[j]) * x[r, i] * x[r, j]
+        want[r] = s
+    np.testing.assert_allclose(pred, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fm_epoch_reduces_loss_and_ignores_padding():
+    n, kfm, rows, pad = 8, 4, 48, 16
+    x = RNG.choice([-1.0, 1.0], size=(rows + pad, n)).astype(np.float32)
+    # Planted FM model as ground truth.
+    v_true = RNG.normal(size=(n, 2)).astype(np.float32)
+    y = np.asarray(fm_predict(jnp.asarray(x), jnp.zeros(1, np.float32),
+                              jnp.zeros(n, np.float32), jnp.asarray(v_true)))
+    y = y.astype(np.float32)
+    mask = np.ones(rows + pad, np.float32)
+    mask[rows:] = 0.0
+    # Poison the padding rows: they must not influence training.
+    x[rows:] = 37.0
+    y[rows:] = -1e6
+
+    w0 = np.zeros(1, np.float32)
+    w = np.zeros(n, np.float32)
+    v = (0.01 * RNG.normal(size=(n, kfm))).astype(np.float32)
+
+    def loss(w0_, w_, v_):
+        pred = np.asarray(fm_predict(jnp.asarray(x), jnp.asarray(w0_),
+                                     jnp.asarray(w_), jnp.asarray(v_)))
+        return float(np.mean((pred[:rows] - y[:rows]) ** 2))
+
+    before = loss(w0, w, v)
+    for _ in range(6):
+        w0_j, w_j, v_j = fm_epoch_graph(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+            jnp.asarray(w0), jnp.asarray(w), jnp.asarray(v),
+            jnp.asarray(np.array([0.05], np.float32)),
+        )
+        w0, w, v = (np.asarray(w0_j), np.asarray(w_j), np.asarray(v_j))
+    after = loss(w0, w, v)
+    assert np.isfinite(after)
+    assert after < 0.2 * before
+
+
+def test_cost_batch_graph_wraps_kernel():
+    w = RNG.normal(size=(8, 100)).astype(np.float32)
+    m = RNG.choice([-1.0, 1.0], size=(256, 8, 3)).astype(np.float32)
+    (got,) = cost_batch_graph(jnp.asarray(w), jnp.asarray(m))
+    want = np.asarray(cost_batch_ref(jnp.asarray(w), jnp.asarray(m)))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)

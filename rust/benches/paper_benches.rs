@@ -1,0 +1,147 @@
+//! `cargo bench` — one bench group per paper table/figure plus the §Perf
+//! hot-path microbenchmarks, on the in-tree harness (criterion is not
+//! vendored; DESIGN.md §6).
+//!
+//! Groups:
+//!   cost        — black-box evaluation: native vs XLA artifact (L1 path)
+//!   bruteforce  — Table 2 "brute force" row workloads
+//!   solvers     — Fig. 2 back-ends on a 24-spin surrogate
+//!   surrogate   — per-iteration surrogate fits (Table 2 decomposition)
+//!   bbo         — end-to-end iterations per algorithm (Tables 1/2 engine)
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::bench::Bencher;
+use intdecomp::bruteforce::{brute_force, full_scan_gray};
+use intdecomp::cost::BinMatrix;
+use intdecomp::greedy::greedy;
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::runtime::XlaRuntime;
+use intdecomp::solvers::{self};
+use intdecomp::surrogate::{
+    blr::{Blr, Prior},
+    fm::FactorizationMachine,
+    Dataset, Surrogate,
+};
+use intdecomp::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick {
+        Bencher::new(1, 3)
+    } else {
+        Bencher::new(2, 8)
+    };
+    let p = generate(&InstanceConfig::default(), 0);
+    let mut rng = Rng::new(99);
+
+    println!("== cost: black-box evaluation (8x100, K=3) ==");
+    let batch: Vec<BinMatrix> = (0..256)
+        .map(|_| BinMatrix::new(p.n(), p.k, rng.spins(p.n_bits())))
+        .collect();
+    let s = b.run("cost/native x256", 256, || {
+        batch.iter().map(|m| p.cost(m)).sum::<f64>()
+    });
+    println!("{}", s.report());
+    if let Some(rt) = XlaRuntime::load_default() {
+        let s = b.run("cost/xla-artifact x256", 256, || {
+            rt.cost_batch(&p.w, &batch).unwrap().iter().sum::<f64>()
+        });
+        println!("{}", s.report());
+    } else {
+        println!("cost/xla-artifact: skipped (no artifacts/)");
+    }
+
+    println!("\n== bruteforce: exact search (Table 2 reference row) ==");
+    let s = b.run("bruteforce/canonical 357760", 357_760, || {
+        brute_force(&p).best_cost
+    });
+    println!("{}", s.report());
+    if !quick {
+        let small = generate(
+            &InstanceConfig { n: 6, d: 40, k: 3, gamma: 0.7, seed: 5 },
+            0,
+        );
+        let s = b.run("bruteforce/gray 2^18", 1 << 18, || {
+            full_scan_gray(&small).0
+        });
+        println!("{}", s.report());
+    }
+
+    println!("\n== solvers: 24-spin surrogate minimisation (Fig. 2) ==");
+    let model = {
+        let mut data = Dataset::new(p.n_bits());
+        for _ in 0..100 {
+            let x = rng.spins(p.n_bits());
+            let y = p.cost_spins(&x);
+            data.push(x, y);
+        }
+        let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+        blr.fit_model(&data, &mut rng)
+    };
+    for name in ["sa", "sqa", "sq"] {
+        let solver = solvers::by_name(name).unwrap();
+        let mut r = Rng::new(7);
+        let s = b.run(&format!("solver/{name} best-of-10"), 10, || {
+            solver.solve_best(&model, &mut r, 10).1
+        });
+        println!("{}", s.report());
+    }
+
+    println!("\n== surrogate: per-iteration fit at paper scale (Table 2) ==");
+    let mut data = Dataset::new(p.n_bits());
+    let mut r2 = Rng::new(8);
+    for _ in 0..300 {
+        let x = r2.spins(p.n_bits());
+        let y = p.cost_spins(&x);
+        data.push(x, y);
+    }
+    for (label, prior) in [
+        ("nBOCS", Prior::Normal { sigma2: 0.1 }),
+        ("gBOCS", Prior::NormalGamma { a: 1.0, beta: 0.001 }),
+        ("vBOCS", Prior::Horseshoe),
+    ] {
+        let mut blr = Blr::new(prior);
+        let s = b.run(&format!("surrogate/{label} fit+draw"), 1, || {
+            blr.fit_model(&data, &mut r2).energy(&vec![1i8; 24])
+        });
+        println!("{}", s.report());
+    }
+    {
+        let mut fm = FactorizationMachine::new(p.n_bits(), 8, &mut r2);
+        fm.steps = 200;
+        let s = b.run("surrogate/FMQA08 train (200 adam)", 200, || {
+            fm.fit_model(&data, &mut r2).energy(&vec![1i8; 24])
+        });
+        println!("{}", s.report());
+    }
+    {
+        let s = b.run("surrogate/dataset push (rank-1 moments)", 1, || {
+            let mut d2 = data.clone();
+            d2.push(r2.spins(24), 0.5);
+            d2.len()
+        });
+        println!("{}", s.report());
+    }
+
+    println!("\n== bbo: end-to-end iterations (Tables 1/2 engine) ==");
+    let iters = if quick { 10 } else { 30 };
+    for (label, algo) in [
+        ("nBOCS", Algorithm::Nbocs { sigma2: 0.1 }),
+        ("gBOCS", Algorithm::Gbocs { beta: 0.001 }),
+        ("FMQA08", Algorithm::Fmqa { k_fm: 8 }),
+        ("RS", Algorithm::Rs),
+    ] {
+        let sa = solvers::sa::SimulatedAnnealing::default();
+        let cfg = BboConfig::smoke_scale(p.n_bits(), iters);
+        let s = b.run(&format!("bbo/{label} {iters} iters"), iters, || {
+            bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 3).best_y
+        });
+        println!("{}", s.report());
+    }
+    {
+        let s = b.run("baseline/greedy (Table 2 row)", 1, || {
+            greedy(&p, 1).cost_refit
+        });
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,391 @@
+//! The black-box optimisation loop — the paper's core algorithm.
+//!
+//! ```text
+//!   data ← n random evaluations                    (initial design)
+//!   repeat 2n² times:
+//!     surrogate ← fit(data)         (BOCS Thompson draw / FM training)
+//!     x* ← IsingSolver.minimise(surrogate)        (best of 10 restarts)
+//!     y* ← f(x*)                                  (black-box evaluation)
+//!     data ← data ∪ {(x*, y*)}   [+ symmetry orbit if augmenting]
+//! ```
+//!
+//! Algorithms (paper labels): RS, vBOCS, nBOCS, gBOCS, FMQA08, FMQA12,
+//! nBOCSqa / nBOCSsq (solver swaps) and nBOCSa (data augmentation).
+
+use crate::minlp::Oracle;
+use crate::solvers::IsingSolver;
+use crate::surrogate::{
+    blr::{Blr, PosteriorBackend, Prior},
+    fm::{FactorizationMachine, FmTrainer},
+    Dataset, Surrogate,
+};
+use crate::util::{rng::Rng, timer::Timer};
+
+/// Paper algorithm selector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algorithm {
+    /// Random search baseline.
+    Rs,
+    /// Horseshoe-prior BOCS (vanilla).
+    Vbocs,
+    /// Normal-prior BOCS (paper-tuned σ² = 0.1).
+    Nbocs { sigma2: f64 },
+    /// Normal-gamma BOCS (paper-tuned β = 0.001).
+    Gbocs { beta: f64 },
+    /// Factorisation machine with k_FM factors (8 or 12 in the paper).
+    Fmqa { k_fm: usize },
+    /// Randomised FMQA (the paper's Discussion / ref. 24 future-work
+    /// item): FMQA plus ε-greedy exploration — with probability ε the
+    /// acquired candidate is random, which breaks the deterministic
+    /// trap-in-local-minimum behaviour of vanilla FMQA.
+    Rfmqa { k_fm: usize, eps: f64 },
+}
+
+impl Algorithm {
+    pub fn label(&self) -> String {
+        match self {
+            Algorithm::Rs => "RS".into(),
+            Algorithm::Vbocs => "vBOCS".into(),
+            Algorithm::Nbocs { .. } => "nBOCS".into(),
+            Algorithm::Gbocs { .. } => "gBOCS".into(),
+            Algorithm::Fmqa { k_fm } => format!("FMQA{k_fm:02}"),
+            Algorithm::Rfmqa { k_fm, .. } => format!("rFMQA{k_fm:02}"),
+        }
+    }
+
+    /// The paper's tuned defaults (Fig. 6 grid searches).
+    pub fn by_name(name: &str) -> Option<Algorithm> {
+        match name {
+            "rs" | "RS" => Some(Algorithm::Rs),
+            "vbocs" | "vBOCS" => Some(Algorithm::Vbocs),
+            "nbocs" | "nBOCS" => Some(Algorithm::Nbocs { sigma2: 0.1 }),
+            "gbocs" | "gBOCS" => Some(Algorithm::Gbocs { beta: 0.001 }),
+            "fmqa08" | "FMQA08" => Some(Algorithm::Fmqa { k_fm: 8 }),
+            "fmqa12" | "FMQA12" => Some(Algorithm::Fmqa { k_fm: 12 }),
+            "rfmqa08" | "rFMQA08" => {
+                Some(Algorithm::Rfmqa { k_fm: 8, eps: 0.1 })
+            }
+            "rfmqa12" | "rFMQA12" => {
+                Some(Algorithm::Rfmqa { k_fm: 12, eps: 0.1 })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Loop configuration.
+#[derive(Clone, Debug)]
+pub struct BboConfig {
+    /// Initial random design size (paper: n).
+    pub n_init: usize,
+    /// Acquisition iterations (paper: 2n²).
+    pub iters: usize,
+    /// Ising-solver restarts per iteration (paper: 10).
+    pub restarts: usize,
+    /// Add the symmetry orbit of each evaluation (nBOCSa / Fig. 3).
+    pub augment: bool,
+}
+
+impl BboConfig {
+    /// Paper defaults for a problem of n bits: n init + 2n² iterations.
+    pub fn paper_scale(n_bits: usize) -> Self {
+        BboConfig {
+            n_init: n_bits,
+            iters: 2 * n_bits * n_bits,
+            restarts: 10,
+            augment: false,
+        }
+    }
+
+    /// Reduced smoke scale for tests / default CLI runs.
+    pub fn smoke_scale(n_bits: usize, iters: usize) -> Self {
+        BboConfig { n_init: n_bits, iters, restarts: 10, augment: false }
+    }
+}
+
+/// Per-run output: everything the figures need.
+#[derive(Clone, Debug)]
+pub struct BboRun {
+    pub algo: String,
+    pub solver: String,
+    /// Black-box evaluations in acquisition order (init design first).
+    pub xs: Vec<Vec<i8>>,
+    pub ys: Vec<f64>,
+    /// Best-so-far cost after each evaluation.
+    pub best_curve: Vec<f64>,
+    /// Final best (x, y).
+    pub best_x: Vec<i8>,
+    pub best_y: f64,
+    /// Wall-clock breakdown (seconds).
+    pub time_total: f64,
+    pub time_surrogate: f64,
+    pub time_solver: f64,
+    pub time_eval: f64,
+}
+
+impl BboRun {
+    /// Did the run hit the exact optimum (within tolerance)?
+    pub fn found_exact(&self, best_cost: f64, tol: f64) -> bool {
+        self.best_y <= best_cost + tol
+    }
+}
+
+/// Hooks for routing heavy steps through the PJRT artifacts.
+#[derive(Default)]
+pub struct Backends {
+    pub posterior: Option<Box<dyn Fn() -> Box<dyn PosteriorBackend>>>,
+    pub fm_trainer: Option<Box<dyn Fn(usize) -> Box<dyn FmTrainer>>>,
+}
+
+fn build_surrogate(
+    algo: &Algorithm,
+    n_bits: usize,
+    backends: &Backends,
+    rng: &mut Rng,
+) -> Option<Box<dyn Surrogate>> {
+    let make_blr = |prior: Prior| -> Box<dyn Surrogate> {
+        match &backends.posterior {
+            Some(f) => Box::new(Blr::with_backend(prior, f())),
+            None => Box::new(Blr::new(prior)),
+        }
+    };
+    match algo {
+        Algorithm::Rs => None,
+        Algorithm::Vbocs => Some(make_blr(Prior::Horseshoe)),
+        Algorithm::Nbocs { sigma2 } => {
+            Some(make_blr(Prior::Normal { sigma2: *sigma2 }))
+        }
+        Algorithm::Gbocs { beta } => {
+            Some(make_blr(Prior::NormalGamma { a: 1.0, beta: *beta }))
+        }
+        Algorithm::Fmqa { k_fm } | Algorithm::Rfmqa { k_fm, .. } => {
+            let mut fm = FactorizationMachine::new(n_bits, *k_fm, rng);
+            if let Some(f) = &backends.fm_trainer {
+                fm = fm.with_trainer(f(*k_fm));
+            }
+            Some(Box::new(fm))
+        }
+    }
+}
+
+/// Run one BBO optimisation.
+pub fn run(
+    oracle: &dyn Oracle,
+    algo: &Algorithm,
+    solver: &dyn IsingSolver,
+    cfg: &BboConfig,
+    backends: &Backends,
+    seed: u64,
+) -> BboRun {
+    let total_timer = Timer::start();
+    let mut rng = Rng::new(seed);
+    let n = oracle.n_bits();
+    let mut data = Dataset::new(n);
+    let mut surrogate = build_surrogate(algo, n, backends, &mut rng);
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut best_curve = Vec::new();
+    let mut best_x: Vec<i8> = Vec::new();
+    let mut best_y = f64::INFINITY;
+    let (mut t_sur, mut t_sol, mut t_eval) = (0.0, 0.0, 0.0);
+
+    let mut record = |x: Vec<i8>,
+                      y: f64,
+                      data: &mut Dataset,
+                      xs: &mut Vec<Vec<i8>>,
+                      ys: &mut Vec<f64>,
+                      best_curve: &mut Vec<f64>| {
+        if y < best_y {
+            best_y = y;
+            best_x = x.clone();
+        }
+        best_curve.push(best_y);
+        if cfg.augment {
+            for eq in oracle.equivalents(&x) {
+                data.push(eq, y);
+            }
+        }
+        data.push(x.clone(), y);
+        xs.push(x);
+        ys.push(y);
+    };
+
+    // Initial design.
+    for _ in 0..cfg.n_init {
+        let x = rng.spins(n);
+        let t = Timer::start();
+        let y = oracle.eval(&x);
+        t_eval += t.seconds();
+        record(x, y, &mut data, &mut xs, &mut ys, &mut best_curve);
+    }
+
+    // ε-greedy exploration rate (rFMQA only).
+    let eps = match algo {
+        Algorithm::Rfmqa { eps, .. } => *eps,
+        _ => 0.0,
+    };
+
+    // Acquisition loop.
+    for _ in 0..cfg.iters {
+        let x = match surrogate.as_mut() {
+            None => rng.spins(n), // RS
+            Some(sur) => {
+                let t = Timer::start();
+                let model = sur.fit_model(&data, &mut rng);
+                t_sur += t.seconds();
+                let t = Timer::start();
+                let (x, _) = solver.solve_best(&model, &mut rng, cfg.restarts);
+                t_sol += t.seconds();
+                if eps > 0.0 && rng.f64() < eps {
+                    rng.spins(n) // randomised-FMQA exploration step
+                } else {
+                    x
+                }
+            }
+        };
+        let t = Timer::start();
+        let y = oracle.eval(&x);
+        t_eval += t.seconds();
+        record(x, y, &mut data, &mut xs, &mut ys, &mut best_curve);
+    }
+
+    BboRun {
+        algo: algo.label() + if cfg.augment { "a" } else { "" },
+        solver: solver.name().into(),
+        xs,
+        ys,
+        best_curve,
+        best_x,
+        best_y,
+        time_total: total_timer.seconds(),
+        time_surrogate: t_sur,
+        time_solver: t_sol,
+        time_eval: t_eval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::{generate, InstanceConfig};
+    use crate::solvers::sa::SimulatedAnnealing;
+
+    fn tiny_problem() -> crate::cost::Problem {
+        let cfg =
+            InstanceConfig { n: 4, d: 10, k: 2, gamma: 0.8, seed: 77 };
+        generate(&cfg, 0)
+    }
+
+    #[test]
+    fn best_curve_is_monotone_nonincreasing() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 30);
+        let run = run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            1,
+        );
+        assert_eq!(run.best_curve.len(), cfg.n_init + cfg.iters);
+        for w in run.best_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+        assert!((run.best_curve.last().unwrap() - run.best_y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nbocs_beats_random_search_on_tiny_problem() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 60);
+        let mut n_wins = 0;
+        for seed in 0..3 {
+            let rb = run(&p, &Algorithm::Rs, &sa, &cfg,
+                         &Backends::default(), seed);
+            let nb = run(
+                &p,
+                &Algorithm::Nbocs { sigma2: 0.1 },
+                &sa,
+                &cfg,
+                &Backends::default(),
+                seed,
+            );
+            if nb.best_y <= rb.best_y + 1e-12 {
+                n_wins += 1;
+            }
+        }
+        assert!(n_wins >= 2, "nBOCS won only {n_wins}/3 vs RS");
+    }
+
+    #[test]
+    fn bbo_finds_exact_solution_on_tiny_problem() {
+        let p = tiny_problem();
+        let exact = crate::bruteforce::brute_force(&p);
+        let sa = SimulatedAnnealing { sweeps: 30, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 2 * 8 * 8);
+        let r = run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            5,
+        );
+        assert!(
+            r.found_exact(exact.best_cost, 1e-9),
+            "best {} vs exact {}",
+            r.best_y,
+            exact.best_cost
+        );
+    }
+
+    #[test]
+    fn augmentation_multiplies_dataset_not_evaluations() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 10);
+        cfg.augment = true;
+        let r = run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            2,
+        );
+        // Evaluations (x-axis) unchanged by augmentation.
+        assert_eq!(r.xs.len(), cfg.n_init + cfg.iters);
+        assert!(r.algo.ends_with('a'));
+    }
+
+    #[test]
+    fn all_algorithms_run() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 5);
+        for name in ["rs", "vbocs", "nbocs", "gbocs", "fmqa08", "fmqa12"] {
+            let algo = Algorithm::by_name(name).unwrap();
+            let r =
+                run(&p, &algo, &sa, &cfg, &Backends::default(), 3);
+            assert_eq!(r.ys.len(), cfg.n_init + cfg.iters, "{name}");
+            assert!(r.best_y.is_finite(), "{name}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 15);
+        let a = run(&p, &Algorithm::Gbocs { beta: 0.001 }, &sa, &cfg,
+                    &Backends::default(), 9);
+        let b = run(&p, &Algorithm::Gbocs { beta: 0.001 }, &sa, &cfg,
+                    &Backends::default(), 9);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.best_x, b.best_x);
+    }
+}

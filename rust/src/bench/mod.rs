@@ -1,0 +1,122 @@
+//! Micro-benchmark substrate (criterion is not vendored; DESIGN.md §6).
+//!
+//! Wall-clock harness with warmup, repetition and robust statistics; used
+//! by `rust/benches/paper_benches.rs` (`cargo bench`) and the Table-2
+//! experiment.
+
+use crate::util::timer::Timer;
+
+/// Statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+    /// Work items per rep, for throughput reporting (0 = n/a).
+    pub items_per_rep: usize,
+}
+
+impl BenchStats {
+    pub fn throughput(&self) -> Option<f64> {
+        if self.items_per_rep > 0 && self.mean_s > 0.0 {
+            Some(self.items_per_rep as f64 / self.mean_s)
+        } else {
+            None
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:.2} k items/s", t / 1e3),
+            Some(t) => format!("  {t:.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<40} mean {:>10.4} ms  min {:>10.4} ms  ±{:>8.4} ms  ({} reps){}",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.stddev_s * 1e3,
+            self.reps,
+            tput
+        )
+    }
+}
+
+/// Benchmark runner: warms up, then times `reps` calls of `f`.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, reps: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps: reps.max(1) }
+    }
+
+    /// Time `f`; `items` is the per-rep work-item count for throughput.
+    pub fn run<T>(
+        &self,
+        name: &str,
+        items: usize,
+        mut f: impl FnMut() -> T,
+    ) -> BenchStats {
+        for _ in 0..self.warmup {
+            let _ = std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t = Timer::start();
+            let _ = std::hint::black_box(f());
+            times.push(t.seconds());
+        }
+        let mean = crate::util::mean(&times);
+        BenchStats {
+            name: name.to_string(),
+            reps: self.reps,
+            mean_s: mean,
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: times.iter().cloned().fold(0.0, f64::max),
+            stddev_s: crate::util::stddev(&times),
+            items_per_rep: items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bencher::new(1, 5);
+        let s = b.run("spin", 1000, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.reps, 5);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(s.report().contains("spin"));
+    }
+
+    #[test]
+    fn zero_items_has_no_throughput() {
+        let b = Bencher::new(0, 2);
+        let s = b.run("noop", 0, || 1);
+        assert!(s.throughput().is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Command-line argument substrate (clap is not vendored; DESIGN.md §6).
+//!
+//! Grammar: `intdecomp <subcommand...> [--flag value] [--switch]`.
+//! Positional words before the first `--flag` form the subcommand path.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional words (subcommand path + positional operands).
+    pub positional: Vec<String>,
+    /// `--key value` pairs and bare `--switch`es (value "true").
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty flag '--'".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Next token is the value unless it's another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(key.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(key.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key} expects a number: {e}")),
+        }
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(
+            self.flags.get(key).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["exp", "fig1", "--runs", "5", "--full", "--seed=7"]);
+        assert_eq!(a.positional, vec!["exp", "fig1"]);
+        assert_eq!(a.usize_flag("runs", 1).unwrap(), 5);
+        assert!(a.bool_flag("full"));
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.str_flag("solver", "sa"), "sa");
+        assert_eq!(a.f64_flag("sigma2", 0.1).unwrap(), 0.1);
+        assert!(!a.bool_flag("full"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_a_switch() {
+        let a = parse(&["run", "--augment", "--iters", "10"]);
+        assert!(a.bool_flag("augment"));
+        assert_eq!(a.usize_flag("iters", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--runs", "abc"]);
+        assert!(a.usize_flag("runs", 1).is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["x", "--gamma=-0.7"]);
+        assert_eq!(a.f64_flag("gamma", 0.0).unwrap(), -0.7);
+    }
+}

@@ -1,0 +1,289 @@
+//! Hierarchical clustering of the exact-solution set (paper Figs. 4, 5b).
+//!
+//! The 48 exact solutions are Ward-clustered (Lance–Williams recurrence on
+//! squared Euclidean distances; for ±1 vectors `d² = 4 · Hamming`), the
+//! tree is cut into four domains, and every candidate the BBO samples is
+//! assigned to the domain of its Hamming-nearest exact solution.  The
+//! smoothed domain populations reveal whether an algorithm focuses on one
+//! solution subspace (FMQA) or keeps exploring (BOCS) — the paper's Fig. 4
+//! analysis.
+
+use crate::util::smooth;
+
+/// One merge step of the agglomeration: clusters `a` and `b` (ids) merge
+/// into a new cluster at the given Ward distance.
+#[derive(Clone, Debug)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    /// Ward linkage distance (squared-Euclidean scale).
+    pub dist: f64,
+    /// Size of the merged cluster.
+    pub size: usize,
+}
+
+/// Hamming distance between spin vectors.
+pub fn hamming(a: &[i8], b: &[i8]) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+/// Ward agglomerative clustering via the Lance–Williams update.
+///
+/// Returns the merge list; leaves are cluster ids `0..m`, internal nodes
+/// get ids `m, m+1, ..` in merge order (scipy linkage convention).
+pub fn ward(points: &[Vec<i8>]) -> Vec<Merge> {
+    let m = points.len();
+    if m <= 1 {
+        return Vec::new();
+    }
+    // Active cluster list: (id, size). Distance matrix over active set.
+    let mut ids: Vec<usize> = (0..m).collect();
+    let mut sizes: Vec<f64> = vec![1.0; m];
+    let mut d: Vec<Vec<f64>> = vec![vec![0.0; m]; m];
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let d2 = 4.0 * hamming(&points[i], &points[j]) as f64;
+            d[i][j] = d2;
+            d[j][i] = d2;
+        }
+    }
+
+    let mut merges = Vec::with_capacity(m - 1);
+    let mut next_id = m;
+    while ids.len() > 1 {
+        // Find the closest active pair (positions in the active arrays).
+        let (mut bi, mut bj, mut bd) = (0, 1, f64::INFINITY);
+        for i in 0..ids.len() {
+            for j in (i + 1)..ids.len() {
+                if d[i][j] < bd {
+                    bd = d[i][j];
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        let (sa, sb) = (sizes[bi], sizes[bj]);
+        merges.push(Merge {
+            a: ids[bi],
+            b: ids[bj],
+            dist: bd,
+            size: (sa + sb) as usize,
+        });
+        // Lance–Williams Ward update of distances to every other cluster:
+        // d(AB, C) = ((a+c) d(A,C) + (b+c) d(B,C) - c d(A,B)) / (a+b+c).
+        let mut new_row = Vec::with_capacity(ids.len() - 2);
+        for k in 0..ids.len() {
+            if k == bi || k == bj {
+                continue;
+            }
+            let sc = sizes[k];
+            let v = ((sa + sc) * d[bi][k] + (sb + sc) * d[bj][k]
+                - sc * bd)
+                / (sa + sb + sc);
+            new_row.push(v);
+        }
+        // Remove bj then bi (bj > bi), append merged cluster.
+        for row in d.iter_mut() {
+            row.remove(bj);
+            row.remove(bi);
+        }
+        d.remove(bj);
+        d.remove(bi);
+        ids.remove(bj);
+        ids.remove(bi);
+        sizes.remove(bj);
+        sizes.remove(bi);
+        for (row, &v) in d.iter_mut().zip(&new_row) {
+            row.push(v);
+        }
+        new_row.push(0.0);
+        d.push(new_row);
+        ids.push(next_id);
+        sizes.push(sa + sb);
+        next_id += 1;
+    }
+    merges
+}
+
+/// Cut the Ward tree into `k` clusters; returns a label in `0..k` for each
+/// leaf (labels ordered by first occurrence).
+pub fn cut(merges: &[Merge], n_leaves: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1);
+    let k = k.min(n_leaves.max(1));
+    // Undo the last k-1 merges: union-find over the first (m-k) merges.
+    let mut parent: Vec<usize> = (0..n_leaves + merges.len()).collect();
+    fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let keep = merges.len() + 1 - k;
+    for (step, mrg) in merges.iter().take(keep).enumerate() {
+        let node = n_leaves + step;
+        let ra = find(&mut parent, mrg.a);
+        let rb = find(&mut parent, mrg.b);
+        parent[ra] = node;
+        parent[rb] = node;
+    }
+    // Label leaves by root, ordered by first occurrence.
+    let mut label_of_root = std::collections::HashMap::new();
+    let mut labels = Vec::with_capacity(n_leaves);
+    for leaf in 0..n_leaves {
+        let r = find(&mut parent, leaf);
+        let next = label_of_root.len();
+        let l = *label_of_root.entry(r).or_insert(next);
+        labels.push(l);
+    }
+    labels
+}
+
+/// Assign a candidate to the domain of its Hamming-nearest exact solution.
+pub fn assign_domain(
+    x: &[i8],
+    solutions: &[Vec<i8>],
+    labels: &[usize],
+) -> usize {
+    debug_assert_eq!(solutions.len(), labels.len());
+    let mut best = (usize::MAX, 0usize);
+    for (sol, &lab) in solutions.iter().zip(labels) {
+        let h = hamming(x, sol);
+        if h < best.0 {
+            best = (h, lab);
+        }
+    }
+    best.1
+}
+
+/// Per-domain population traces of a run's sampled candidates, smoothed
+/// with the paper's window (Fig. 4 uses 100).  Output: `domains` rows ×
+/// `len(xs)` columns of smoothed indicator fractions.
+pub fn domain_trace(
+    xs: &[Vec<i8>],
+    solutions: &[Vec<i8>],
+    labels: &[usize],
+    n_domains: usize,
+    window: usize,
+) -> Vec<Vec<f64>> {
+    let mut raw = vec![vec![0.0; xs.len()]; n_domains];
+    for (t, x) in xs.iter().enumerate() {
+        let d = assign_domain(x, solutions, labels);
+        raw[d][t] = 1.0;
+    }
+    raw.into_iter().map(|row| smooth(&row, window)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn two_blobs(rng: &mut Rng) -> Vec<Vec<i8>> {
+        // Blob A around all-ones, blob B around all-minus, 1-bit jitter.
+        let n = 12;
+        let mut pts = Vec::new();
+        for b in 0..2 {
+            let base: Vec<i8> = vec![if b == 0 { 1 } else { -1 }; n];
+            for _ in 0..4 {
+                let mut p = base.clone();
+                let i = rng.below(n);
+                p[i] = -p[i];
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn hamming_basic() {
+        assert_eq!(hamming(&[1, -1, 1], &[1, 1, -1]), 2);
+        assert_eq!(hamming(&[1, 1], &[1, 1]), 0);
+    }
+
+    #[test]
+    fn ward_merges_blobs_last() {
+        let mut rng = Rng::new(800);
+        let pts = two_blobs(&mut rng);
+        let merges = ward(&pts);
+        assert_eq!(merges.len(), pts.len() - 1);
+        // The final merge joins the two blobs — its distance must be the
+        // largest by a wide margin.
+        let last = merges.last().unwrap().dist;
+        for m in &merges[..merges.len() - 1] {
+            assert!(m.dist < last);
+        }
+    }
+
+    #[test]
+    fn cut_two_blobs_into_two_clusters() {
+        let mut rng = Rng::new(801);
+        let pts = two_blobs(&mut rng);
+        let merges = ward(&pts);
+        let labels = cut(&merges, pts.len(), 2);
+        assert_eq!(labels.len(), 8);
+        // First four leaves = blob A, last four = blob B.
+        for i in 0..4 {
+            assert_eq!(labels[i], labels[0]);
+            assert_eq!(labels[4 + i], labels[4]);
+        }
+        assert_ne!(labels[0], labels[4]);
+    }
+
+    #[test]
+    fn cut_k1_is_single_cluster_and_kn_is_all_singletons() {
+        let mut rng = Rng::new(802);
+        let pts = two_blobs(&mut rng);
+        let merges = ward(&pts);
+        let l1 = cut(&merges, pts.len(), 1);
+        assert!(l1.iter().all(|&l| l == 0));
+        let ln = cut(&merges, pts.len(), pts.len());
+        let mut s: Vec<usize> = ln.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), pts.len());
+    }
+
+    #[test]
+    fn assign_domain_picks_nearest() {
+        let sols = vec![vec![1i8, 1, 1, 1], vec![-1i8, -1, -1, -1]];
+        let labels = vec![0, 1];
+        assert_eq!(assign_domain(&[1, 1, 1, -1], &sols, &labels), 0);
+        assert_eq!(assign_domain(&[-1, -1, 1, -1], &sols, &labels), 1);
+    }
+
+    #[test]
+    fn domain_trace_fractions_sum_to_one() {
+        let mut rng = Rng::new(803);
+        let sols = vec![vec![1i8; 6], vec![-1i8; 6]];
+        let labels = vec![0, 1];
+        let xs: Vec<Vec<i8>> = (0..50).map(|_| rng.spins(6)).collect();
+        let traces = domain_trace(&xs, &sols, &labels, 2, 10);
+        for t in 0..50 {
+            let total: f64 = traces.iter().map(|row| row[t]).sum();
+            assert!((total - 1.0).abs() < 1e-9, "t={t} total={total}");
+        }
+    }
+
+    #[test]
+    fn ward_on_48_solution_orbit_gives_4_domains() {
+        // End-to-end: brute-force a tiny instance, cluster its orbit.
+        let cfg = crate::instance::InstanceConfig {
+            n: 6,
+            d: 12,
+            k: 2,
+            gamma: 0.8,
+            seed: 10,
+        };
+        let p = crate::instance::generate(&cfg, 0);
+        let bf = crate::bruteforce::brute_force(&p);
+        let pts: Vec<Vec<i8>> =
+            bf.orbit.iter().map(|m| m.data.clone()).collect();
+        let merges = ward(&pts);
+        let labels = cut(&merges, pts.len(), 4.min(pts.len()));
+        let distinct: std::collections::HashSet<_> =
+            labels.iter().collect();
+        assert_eq!(distinct.len(), 4.min(pts.len()));
+    }
+}

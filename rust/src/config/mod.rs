@@ -1,0 +1,119 @@
+//! Experiment configuration: one struct for all paper experiments, filled
+//! from CLI flags with the paper's defaults (`--full`) or a smoke scale
+//! that finishes in minutes on one core.
+
+use crate::cli::Args;
+use crate::instance::InstanceConfig;
+
+/// Scale of an experiment run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper scale: 25 runs (100 for RS), 2n² iterations, 10 instances.
+    Full,
+    /// Reduced default for interactive use.
+    Smoke,
+}
+
+/// Everything the experiment harness needs.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub instance: InstanceConfig,
+    pub scale: Scale,
+    /// BBO runs per (algorithm, instance).
+    pub runs: usize,
+    /// RS runs (paper uses 100 vs 25).
+    pub rs_runs: usize,
+    /// Acquisition iterations per run.
+    pub iters: usize,
+    /// Ising-solver restarts per iteration.
+    pub restarts: usize,
+    /// Instance count.
+    pub instances: usize,
+    /// Base RNG seed for runs.
+    pub seed: u64,
+    /// Output directory for CSV/JSON.
+    pub out_dir: String,
+    /// Use the PJRT artifacts where shapes allow.
+    pub use_xla: bool,
+    /// Worker threads for independent runs.
+    pub workers: usize,
+}
+
+impl ExpConfig {
+    /// Build from CLI flags.
+    pub fn from_args(args: &Args) -> Result<ExpConfig, String> {
+        let full = args.bool_flag("full");
+        let n = args.usize_flag("n", 8)?;
+        let d = args.usize_flag("d", 100)?;
+        let k = args.usize_flag("k", 3)?;
+        let n_bits = n * k;
+        let instance = InstanceConfig {
+            n,
+            d,
+            k,
+            gamma: args.f64_flag("gamma", 0.7)?,
+            seed: args.u64_flag("instance-seed", 5005)?,
+        };
+        // Paper scale: 25 runs, 2n^2 iterations, 10 instances, RS 100.
+        let (runs_d, rs_d, iters_d, inst_d) = if full {
+            (25, 100, 2 * n_bits * n_bits, 10)
+        } else {
+            (5, 10, 2 * n_bits * n_bits / 4, 3)
+        };
+        Ok(ExpConfig {
+            instance,
+            scale: if full { Scale::Full } else { Scale::Smoke },
+            runs: args.usize_flag("runs", runs_d)?,
+            rs_runs: args.usize_flag("rs-runs", rs_d)?,
+            iters: args.usize_flag("iters", iters_d)?,
+            restarts: args.usize_flag("restarts", 10)?,
+            instances: args.usize_flag("instances", inst_d)?,
+            seed: args.u64_flag("seed", 1)?,
+            out_dir: args.str_flag("out", "results"),
+            use_xla: !args.bool_flag("no-xla"),
+            workers: args.usize_flag(
+                "workers",
+                crate::util::threadpool::default_workers(),
+            )?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn smoke_defaults() {
+        let c = ExpConfig::from_args(&args(&[])).unwrap();
+        assert_eq!(c.scale, Scale::Smoke);
+        assert_eq!(c.runs, 5);
+        assert_eq!(c.instances, 3);
+        assert_eq!(c.instance.n, 8);
+        assert!(c.iters < 2 * 24 * 24);
+    }
+
+    #[test]
+    fn full_scale_matches_paper() {
+        let c = ExpConfig::from_args(&args(&["--full"])).unwrap();
+        assert_eq!(c.scale, Scale::Full);
+        assert_eq!(c.runs, 25);
+        assert_eq!(c.rs_runs, 100);
+        assert_eq!(c.iters, 1152); // 2 * 24^2
+        assert_eq!(c.instances, 10);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let c = ExpConfig::from_args(&args(&[
+            "--full", "--runs", "3", "--iters", "50",
+        ]))
+        .unwrap();
+        assert_eq!(c.runs, 3);
+        assert_eq!(c.iters, 50);
+    }
+}

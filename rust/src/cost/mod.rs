@@ -1,0 +1,420 @@
+//! The integer-decomposition cost function (paper Eq. 1–9) — native twin of
+//! the Pallas cost kernel.
+//!
+//! For a target `W (N×D)` and binary `M (N×K, ±1)` the black-box cost is
+//!
+//! ```text
+//!   cost(M) = || W - M (M^T M)^+ M^T W ||_F^2
+//! ```
+//!
+//! Key identity used everywhere in this crate: with `Q` an orthonormal basis
+//! of `col(M)` and `S = W W^T` (N×N, precomputed once per problem),
+//!
+//! ```text
+//!   cost(M) = ||W||_F^2 - Σ_k q_k^T S q_k
+//! ```
+//!
+//! which drops the per-candidate complexity from `O(NKD)` to `O(K N^2)` —
+//! the optimisation that makes the 2^24 brute-force sweep cheap.  The basis
+//! comes from a threshold-masked modified Gram–Schmidt, so rank-deficient
+//! candidates get exact pseudoinverse semantics (a dependent column simply
+//! contributes nothing), matching `ref.py` / the Pallas kernel.
+
+use crate::linalg::{dot, lu_solve, Matrix};
+
+/// Rank threshold for the masked Gram–Schmidt.  For integer columns the
+/// Gram determinant is a non-negative integer, so independent residual
+/// norms are bounded below by `1/N^{K-1}`; 1e-9 sits far under that floor
+/// and far above f64 noise.
+pub const EPS_RANK: f64 = 1e-9;
+
+/// Binary matrix M (N×K), column-major storage of ±1 entries.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BinMatrix {
+    pub n: usize,
+    pub k: usize,
+    /// Column-major: entry (i, j) at `data[j * n + i]`.
+    pub data: Vec<i8>,
+}
+
+impl BinMatrix {
+    pub fn new(n: usize, k: usize, data: Vec<i8>) -> Self {
+        assert_eq!(data.len(), n * k);
+        debug_assert!(data.iter().all(|&s| s == 1 || s == -1));
+        BinMatrix { n, k, data }
+    }
+
+    /// All +1 matrix.
+    pub fn ones(n: usize, k: usize) -> Self {
+        BinMatrix { n, k, data: vec![1; n * k] }
+    }
+
+    /// From a flat ±1 spin vector (column-major), as used by the BBO loop.
+    pub fn from_spins(n: usize, k: usize, x: &[i8]) -> Self {
+        BinMatrix::new(n, k, x.to_vec())
+    }
+
+    pub fn as_spins(&self) -> &[i8] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[i8] {
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        self.data[j * self.n + i]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: i8) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Flip entry (i, j).
+    pub fn flip(&mut self, i: usize, j: usize) {
+        self.data[j * self.n + i] = -self.data[j * self.n + i];
+    }
+
+    /// Apply a column permutation and per-column sign flips; used to
+    /// enumerate the `K! * 2^K` symmetry orbit (paper "two types of
+    /// arbitrariness").
+    pub fn transformed(&self, perm: &[usize], signs: &[i8]) -> BinMatrix {
+        assert_eq!(perm.len(), self.k);
+        assert_eq!(signs.len(), self.k);
+        let mut data = Vec::with_capacity(self.n * self.k);
+        for (dst, &src) in perm.iter().enumerate() {
+            let s = signs[dst];
+            data.extend(self.col(src).iter().map(|&v| v * s));
+        }
+        BinMatrix::new(self.n, self.k, data)
+    }
+
+    /// Dense f64 copy (row-major Matrix), for least-squares / display.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.k);
+        for j in 0..self.k {
+            for i in 0..self.n {
+                m[(i, j)] = self.get(i, j) as f64;
+            }
+        }
+        m
+    }
+
+    /// Canonical representative of the symmetry orbit: each column's sign
+    /// is fixed so its first element is +1, then columns are sorted
+    /// lexicographically.  Two matrices are equivalent (same cost) iff
+    /// their canonical forms are equal.
+    pub fn canonical(&self) -> BinMatrix {
+        let mut cols: Vec<Vec<i8>> = (0..self.k)
+            .map(|j| {
+                let c = self.col(j);
+                if c[0] == 1 {
+                    c.to_vec()
+                } else {
+                    c.iter().map(|&v| -v).collect()
+                }
+            })
+            .collect();
+        cols.sort();
+        let mut data = Vec::with_capacity(self.n * self.k);
+        for c in cols {
+            data.extend(c);
+        }
+        BinMatrix::new(self.n, self.k, data)
+    }
+}
+
+/// A compression problem instance: the target matrix plus precomputed
+/// quantities for fast cost evaluation.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    /// Target W (N×D).
+    pub w: Matrix,
+    /// Decomposition rank K.
+    pub k: usize,
+    /// S = W W^T (N×N).
+    pub s: Matrix,
+    /// ||W||_F^2.
+    pub w_norm_sq: f64,
+}
+
+impl Problem {
+    pub fn new(w: Matrix, k: usize) -> Self {
+        assert!(k >= 1 && k <= w.rows);
+        let wt = w.transpose();
+        let s = w.matmul(&wt);
+        let w_norm_sq = w.frob_norm_sq();
+        Problem { w, k, s, w_norm_sq }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.w.rows
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Number of binary variables n = N*K of the NLIP formulation.
+    #[inline]
+    pub fn n_bits(&self) -> usize {
+        self.n() * self.k
+    }
+
+    /// Black-box cost of a candidate (Eq. 8), pseudoinverse semantics.
+    pub fn cost(&self, m: &BinMatrix) -> f64 {
+        assert_eq!(m.n, self.n());
+        assert_eq!(m.k, self.k);
+        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(self.k);
+        let mut captured = 0.0;
+        for j in 0..self.k {
+            let mut v: Vec<f64> =
+                m.col(j).iter().map(|&s| s as f64).collect();
+            // Two MGS passes for numerical robustness.
+            for _ in 0..2 {
+                for q in &basis {
+                    let c = dot(q, &v);
+                    for (vi, qi) in v.iter_mut().zip(q) {
+                        *vi -= c * qi;
+                    }
+                }
+            }
+            let nrm2 = dot(&v, &v);
+            if nrm2 > EPS_RANK {
+                let inv = 1.0 / nrm2.sqrt();
+                for vi in v.iter_mut() {
+                    *vi *= inv;
+                }
+                // captured += q^T S q.
+                let sq = self.s.matvec(&v);
+                captured += dot(&v, &sq);
+                basis.push(v);
+            }
+        }
+        (self.w_norm_sq - captured).max(0.0)
+    }
+
+    /// Cost from a flat spin vector (column-major), the BBO interface.
+    pub fn cost_spins(&self, x: &[i8]) -> f64 {
+        self.cost(&BinMatrix::from_spins(self.n(), self.k, x))
+    }
+
+    /// The eliminated real factor `C = (M^T M)^+ M^T W` (Eq. 6).  Falls
+    /// back to a tiny ridge when M is rank-deficient (the limit equals the
+    /// pseudoinverse solution because `M^T W` lies in range(M^T M)).
+    pub fn solve_c(&self, m: &BinMatrix) -> Matrix {
+        let md = m.to_matrix();
+        let mut g = md.gram(); // K×K
+        let a = md.transpose().matmul(&self.w); // K×D
+        let mut c = Matrix::zeros(self.k, self.d());
+        // Try exact solve; on singular G, ridge-regularise.
+        let mut ridge = 0.0;
+        loop {
+            let mut gr = g.clone();
+            for i in 0..self.k {
+                gr[(i, i)] += ridge;
+            }
+            let mut ok = true;
+            for col in 0..self.d() {
+                let rhs: Vec<f64> = (0..self.k).map(|r| a[(r, col)]).collect();
+                match lu_solve(&gr, &rhs) {
+                    Some(x) => {
+                        for r in 0..self.k {
+                            c[(r, col)] = x[r];
+                        }
+                    }
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                return c;
+            }
+            ridge = if ridge == 0.0 { 1e-9 } else { ridge * 10.0 };
+            if ridge > 1.0 {
+                g = md.gram();
+                for i in 0..self.k {
+                    g[(i, i)] += 1.0;
+                }
+            }
+        }
+    }
+
+    /// Reconstruction `V = M C` and explicit residual — the slow-but-direct
+    /// check used by tests against the trace-identity fast path.
+    pub fn cost_explicit(&self, m: &BinMatrix) -> f64 {
+        let c = self.solve_c(m);
+        let v = m.to_matrix().matmul(&c);
+        self.w.sub(&v).frob_norm_sq()
+    }
+
+    /// Paper's residual-error measure:
+    /// `(||f(M)|| - ||f(M*)||) / ||W||` given the optimal cost.
+    pub fn residual_error(&self, cost: f64, best_cost: f64) -> f64 {
+        (cost.max(0.0).sqrt() - best_cost.max(0.0).sqrt())
+            / self.w_norm_sq.sqrt()
+    }
+
+    /// Normalised absolute error `||f(M)|| / ||W||`.
+    pub fn normalised_error(&self, cost: f64) -> f64 {
+        cost.max(0.0).sqrt() / self.w_norm_sq.sqrt()
+    }
+}
+
+/// Compression-rate estimate (paper intro): original N*D floats at
+/// `float_bits` vs K*D floats + N*K binary entries (1 bit each).
+pub fn compression_ratio(
+    n: usize,
+    d: usize,
+    k: usize,
+    float_bits: usize,
+) -> f64 {
+    let original = (n * d * float_bits) as f64;
+    let compressed = (k * d * float_bits + n * k) as f64;
+    compressed / original
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_problem(rng: &mut Rng, n: usize, d: usize, k: usize) -> Problem {
+        Problem::new(Matrix::from_vec(n, d, rng.normals(n * d)), k)
+    }
+
+    fn rand_bin(rng: &mut Rng, n: usize, k: usize) -> BinMatrix {
+        BinMatrix::new(n, k, rng.spins(n * k))
+    }
+
+    #[test]
+    fn trace_identity_matches_explicit_residual() {
+        let mut rng = Rng::new(100);
+        for _ in 0..50 {
+            let p = rand_problem(&mut rng, 8, 20, 3);
+            let m = rand_bin(&mut rng, 8, 3);
+            let fast = p.cost(&m);
+            let slow = p.cost_explicit(&m);
+            assert!(
+                (fast - slow).abs() < 1e-6 * (1.0 + slow),
+                "fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn rank_deficient_equals_reduced_k() {
+        let mut rng = Rng::new(101);
+        let p2 = rand_problem(&mut rng, 8, 15, 2);
+        let p3 = Problem::new(p2.w.clone(), 3);
+        let m2 = rand_bin(&mut rng, 8, 2);
+        // Duplicate first column (and sign-flip variant).
+        for dup_sign in [1i8, -1] {
+            let mut data = m2.data.clone();
+            data.extend(m2.col(0).iter().map(|&v| v * dup_sign));
+            let m3 = BinMatrix::new(8, 3, data);
+            assert!((p3.cost(&m3) - p2.cost(&m2)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_reconstructs_exactly() {
+        let mut rng = Rng::new(102);
+        // Hadamard basis for N = 4: orthogonal ±1 columns.
+        let h = BinMatrix::new(
+            4,
+            4,
+            vec![1, 1, 1, 1, 1, -1, 1, -1, 1, 1, -1, -1, 1, -1, -1, 1],
+        );
+        let p = rand_problem(&mut rng, 4, 9, 4);
+        assert!(p.cost(&h) < 1e-9 * p.w_norm_sq.max(1.0));
+    }
+
+    #[test]
+    fn cost_invariant_under_symmetry_orbit() {
+        let mut rng = Rng::new(103);
+        let p = rand_problem(&mut rng, 8, 12, 3);
+        let m = rand_bin(&mut rng, 8, 3);
+        let base = p.cost(&m);
+        for perm in [[0, 1, 2], [1, 0, 2], [2, 1, 0], [1, 2, 0]] {
+            for signs in [[1i8, 1, 1], [-1, 1, 1], [1, -1, -1], [-1, -1, -1]]
+            {
+                let t = m.transformed(&perm, &signs);
+                assert!((p.cost(&t) - base).abs() < 1e-9 * (1.0 + base));
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_form_identifies_orbit() {
+        let mut rng = Rng::new(104);
+        let m = rand_bin(&mut rng, 8, 3);
+        let canon = m.canonical();
+        let t = m.transformed(&[2, 0, 1], &[-1, 1, -1]);
+        assert_eq!(t.canonical(), canon);
+        // Canonical form has +1 leading entries and sorted columns.
+        for j in 0..3 {
+            assert_eq!(canon.col(j)[0], 1);
+        }
+    }
+
+    #[test]
+    fn cost_bounds() {
+        let mut rng = Rng::new(105);
+        let p = rand_problem(&mut rng, 6, 10, 2);
+        for _ in 0..20 {
+            let m = rand_bin(&mut rng, 6, 2);
+            let c = p.cost(&m);
+            assert!(c >= 0.0);
+            assert!(c <= p.w_norm_sq + 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_c_gives_least_squares_optimum() {
+        // Perturbing C away from solve_c must not lower the residual.
+        let mut rng = Rng::new(106);
+        let p = rand_problem(&mut rng, 8, 10, 3);
+        let m = rand_bin(&mut rng, 8, 3);
+        let c = p.solve_c(&m);
+        let md = m.to_matrix();
+        let base = p.w.sub(&md.matmul(&c)).frob_norm_sq();
+        for _ in 0..10 {
+            let mut cp = c.clone();
+            let i = rng.below(cp.rows);
+            let j = rng.below(cp.cols);
+            cp[(i, j)] += 0.01 * rng.normal();
+            let v = p.w.sub(&md.matmul(&cp)).frob_norm_sq();
+            assert!(v >= base - 1e-9);
+        }
+    }
+
+    #[test]
+    fn residual_error_zero_at_optimum() {
+        let mut rng = Rng::new(107);
+        let p = rand_problem(&mut rng, 5, 8, 2);
+        assert_eq!(p.residual_error(2.0, 2.0), 0.0);
+        assert!(p.residual_error(3.0, 2.0) > 0.0);
+    }
+
+    #[test]
+    fn compression_ratio_matches_hand_calc() {
+        // 8x100 f32 -> K=3: (3*100*32 + 8*3) / (8*100*32)
+        let r = compression_ratio(8, 100, 3, 32);
+        assert!((r - (9600.0 + 24.0) / 25600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spins_roundtrip() {
+        let mut rng = Rng::new(108);
+        let m = rand_bin(&mut rng, 8, 3);
+        let m2 = BinMatrix::from_spins(8, 3, m.as_spins());
+        assert_eq!(m, m2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Ablations of the design choices DESIGN.md calls out (not in the paper's
+//! figures, but implied by its protocol):
+//!
+//! * solver restarts per iteration (paper fixes 10);
+//! * SA sweep budget;
+//! * Gibbs sweeps per nBOCS fit;
+//! * vanilla FMQA vs the randomised FMQA the Discussion proposes
+//!   (ref. 24) — implemented as ε-greedy acquisition.
+
+use super::{count_exact_hits, Ctx, RunSpec};
+use crate::bbo::{self, Algorithm, Backends, BboConfig};
+use crate::report::{ascii_table, fmt, write_csv};
+use crate::solvers::sa::SimulatedAnnealing;
+use crate::util::mean;
+
+fn run_with(
+    ctx: &Ctx,
+    algo: &Algorithm,
+    sa: &SimulatedAnnealing,
+    restarts: usize,
+    runs: usize,
+) -> (f64, usize) {
+    let p = &ctx.problems[0];
+    let cfg = BboConfig {
+        n_init: p.n_bits(),
+        iters: ctx.cfg.iters,
+        restarts,
+        augment: false,
+    };
+    let results: Vec<_> = (0..runs)
+        .map(|r| {
+            bbo::run(p, algo, sa, &cfg, &Backends::default(),
+                     ctx.cfg.seed.wrapping_add(r as u64))
+        })
+        .collect();
+    let finals: Vec<f64> = results.iter().map(|r| r.best_y).collect();
+    let hits = count_exact_hits(ctx, 0, &results);
+    (mean(&finals), hits)
+}
+
+pub fn ablation(ctx: &Ctx) {
+    let runs = ctx.cfg.runs.max(1);
+    let nbocs = Algorithm::Nbocs { sigma2: 0.1 };
+    let mut rows = Vec::new();
+
+    println!("== ablation — design-choice sweeps (instance 1, {} runs, {} iters) ==",
+             runs, ctx.cfg.iters);
+
+    // 1. Solver restarts (paper: 10).
+    for restarts in [1usize, 3, 10, 30] {
+        let sa = SimulatedAnnealing::default();
+        let (m, hits) = run_with(ctx, &nbocs, &sa, restarts, runs);
+        rows.push(vec![
+            "restarts".into(),
+            restarts.to_string(),
+            fmt(m),
+            hits.to_string(),
+        ]);
+        eprintln!("[ablation] restarts={restarts}: mean {m:.6} hits {hits}");
+    }
+
+    // 2. SA sweep budget.
+    for sweeps in [10usize, 50, 100, 300] {
+        let sa = SimulatedAnnealing { sweeps, ..Default::default() };
+        let (m, hits) = run_with(ctx, &nbocs, &sa, 10, runs);
+        rows.push(vec![
+            "sa_sweeps".into(),
+            sweeps.to_string(),
+            fmt(m),
+            hits.to_string(),
+        ]);
+        eprintln!("[ablation] sweeps={sweeps}: mean {m:.6} hits {hits}");
+    }
+
+    // 3. FMQA vs randomised FMQA (the Discussion's future-work item).
+    for (label, algo) in [
+        ("fmqa08", Algorithm::Fmqa { k_fm: 8 }),
+        ("rfmqa08_eps0.1", Algorithm::Rfmqa { k_fm: 8, eps: 0.1 }),
+        ("rfmqa08_eps0.3", Algorithm::Rfmqa { k_fm: 8, eps: 0.3 }),
+    ] {
+        let sa = SimulatedAnnealing::default();
+        let (m, hits) = run_with(ctx, &algo, &sa, 10, runs);
+        rows.push(vec![
+            "fm_variant".into(),
+            label.into(),
+            fmt(m),
+            hits.to_string(),
+        ]);
+        eprintln!("[ablation] {label}: mean {m:.6} hits {hits}");
+    }
+
+    let headers = ["knob", "value", "mean final cost", "exact hits"];
+    println!("{}", ascii_table(&headers, &rows));
+    let path = format!("{}/ablation.csv", ctx.cfg.out_dir);
+    write_csv(&path, &headers, &rows).expect("write csv");
+    println!("csv: {path}\n");
+}
+
+/// RunSpec helper used by tests.
+pub fn rfmqa_spec() -> RunSpec {
+    RunSpec::new(Algorithm::Rfmqa { k_fm: 8, eps: 0.1 })
+}

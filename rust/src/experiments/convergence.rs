@@ -1,0 +1,128 @@
+//! Convergence experiments: Figs. 1, 2, 3 and 7 (residual error vs
+//! iteration step, 95% CI, greedy + second-best reference lines).
+
+use super::{Ctx, RunSpec};
+use crate::bbo::Algorithm;
+use crate::report::{ascii_plot_log, fmt, write_csv};
+
+/// Run a set of specs on one instance; returns (label, mean, ci) series.
+pub fn run_series(
+    ctx: &Ctx,
+    specs: &[RunSpec],
+    inst: usize,
+) -> Vec<(String, Vec<f64>, Vec<f64>)> {
+    specs
+        .iter()
+        .map(|spec| {
+            let runs = if spec.algo == Algorithm::Rs {
+                ctx.cfg.rs_runs
+            } else {
+                ctx.cfg.runs
+            };
+            eprintln!(
+                "[convergence] instance {} {} x{} runs...",
+                inst + 1,
+                spec.label(),
+                runs
+            );
+            let results = ctx.run_spec(spec, inst, runs);
+            let curves: Vec<Vec<f64>> = results
+                .iter()
+                .map(|r| ctx.residual_curve(inst, r))
+                .collect();
+            let (mean, ci) = Ctx::mean_ci(&curves);
+            (spec.label(), mean, ci)
+        })
+        .collect()
+}
+
+/// Emit one convergence figure: CSV + terminal plot with reference lines.
+pub fn emit_figure(
+    ctx: &Ctx,
+    name: &str,
+    inst: usize,
+    series: &[(String, Vec<f64>, Vec<f64>)],
+) {
+    let greedy = super::greedy_residual(ctx, inst);
+    let second = super::second_best_residual(ctx, inst);
+
+    // CSV: step, <algo>_mean, <algo>_ci95, ...
+    let len = series.iter().map(|(_, m, _)| m.len()).min().unwrap_or(0);
+    let mut header: Vec<String> = vec!["step".into()];
+    for (label, _, _) in series {
+        header.push(format!("{label}_mean"));
+        header.push(format!("{label}_ci95"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut rows = Vec::with_capacity(len);
+    for t in 0..len {
+        let mut row = vec![t.to_string()];
+        for (_, mean, ci) in series {
+            row.push(fmt(mean[t]));
+            row.push(fmt(ci[t]));
+        }
+        rows.push(row);
+    }
+    let path = format!("{}/{}.csv", ctx.cfg.out_dir, name);
+    write_csv(&path, &header_refs, &rows).expect("write csv");
+
+    // Terminal plot (+ constant reference lines).
+    let mut plot_series: Vec<(String, Vec<f64>)> = series
+        .iter()
+        .map(|(l, m, _)| (l.clone(), m.clone()))
+        .collect();
+    plot_series.push(("greedy (original)".into(), vec![greedy; len]));
+    plot_series.push(("second-best".into(), vec![second; len]));
+    println!(
+        "== {name} (instance {}) — residual error vs iteration ==",
+        inst + 1
+    );
+    println!("{}", ascii_plot_log(&plot_series, 72, 20));
+    println!("greedy residual     : {}", fmt(greedy));
+    println!("second-best residual: {}", fmt(second));
+    for (label, mean, _) in series {
+        println!(
+            "{label:<10} final mean residual: {}",
+            fmt(*mean.last().unwrap_or(&f64::NAN))
+        );
+    }
+    println!("csv: {path}\n");
+}
+
+/// Fig. 1: six core algorithms on instance 1 (SA back-end).
+pub fn fig1(ctx: &Ctx) {
+    let series = run_series(ctx, &RunSpec::core_six(), 0);
+    emit_figure(ctx, "fig1", 0, &series);
+}
+
+/// Fig. 2: nBOCS under SA vs QA(SQA) vs SQ.
+pub fn fig2(ctx: &Ctx) {
+    let nbocs = || RunSpec::new(Algorithm::Nbocs { sigma2: 0.1 });
+    let specs = vec![
+        nbocs(),
+        nbocs().with_solver("sqa"),
+        nbocs().with_solver("sq"),
+    ];
+    let series = run_series(ctx, &specs, 0);
+    emit_figure(ctx, "fig2", 0, &series);
+}
+
+/// Fig. 3: data augmentation on/off for RS and nBOCS.
+pub fn fig3(ctx: &Ctx) {
+    let specs = vec![
+        RunSpec::new(Algorithm::Rs),
+        RunSpec::new(Algorithm::Rs).augmented(),
+        RunSpec::new(Algorithm::Nbocs { sigma2: 0.1 }),
+        RunSpec::new(Algorithm::Nbocs { sigma2: 0.1 }).augmented(),
+    ];
+    let series = run_series(ctx, &specs, 0);
+    emit_figure(ctx, "fig3", 0, &series);
+}
+
+/// Fig. 7: the core six on every other instance.
+pub fn fig7(ctx: &Ctx) {
+    for inst in 1..ctx.problems.len() {
+        let series = run_series(ctx, &RunSpec::core_six(), inst);
+        emit_figure(ctx, &format!("fig7_instance{}", inst + 1), inst, &series);
+    }
+}

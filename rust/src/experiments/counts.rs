@@ -1,0 +1,57 @@
+//! Table 1: counts of exact-solution hits per algorithm × instance.
+
+use super::{count_exact_hits, Ctx, RunSpec};
+use crate::bbo::Algorithm;
+use crate::report::{ascii_table, write_csv};
+
+pub fn table1(ctx: &Ctx) {
+    let specs = RunSpec::table_nine();
+    let n_inst = ctx.problems.len();
+
+    // counts[spec][instance]
+    let mut counts = vec![vec![0usize; n_inst]; specs.len()];
+    for (si, spec) in specs.iter().enumerate() {
+        for inst in 0..n_inst {
+            let runs = if spec.algo == Algorithm::Rs {
+                ctx.cfg.rs_runs
+            } else {
+                ctx.cfg.runs
+            };
+            eprintln!(
+                "[table1] {} instance {} ({} runs)...",
+                spec.label(),
+                inst + 1,
+                runs
+            );
+            let results = ctx.run_spec(spec, inst, runs);
+            counts[si][inst] = count_exact_hits(ctx, inst, &results);
+        }
+    }
+
+    // Render like the paper: instance rows, algorithm columns.
+    let mut headers: Vec<String> = vec!["Instance".into()];
+    headers.extend(specs.iter().map(|s| s.label()));
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut rows = Vec::new();
+    for inst in 0..n_inst {
+        let mut row = vec![(inst + 1).to_string()];
+        for cnt in counts.iter() {
+            row.push(cnt[inst].to_string());
+        }
+        rows.push(row);
+    }
+    let mut total_row = vec!["Total".to_string()];
+    for cnt in counts.iter() {
+        total_row.push(cnt.iter().sum::<usize>().to_string());
+    }
+    rows.push(total_row);
+
+    println!(
+        "== table1 — exact-solution hits per {} runs (RS: {}) ==",
+        ctx.cfg.runs, ctx.cfg.rs_runs
+    );
+    println!("{}", ascii_table(&header_refs, &rows));
+    let path = format!("{}/table1.csv", ctx.cfg.out_dir);
+    write_csv(&path, &header_refs, &rows).expect("write csv");
+    println!("csv: {path}\n");
+}

@@ -1,0 +1,44 @@
+//! Fig. 6: hyperparameter grids — σ² for nBOCS, β for gBOCS, scored by the
+//! mean final best cost on instance 1.
+
+use super::{Ctx, RunSpec};
+use crate::bbo::Algorithm;
+use crate::report::{ascii_table, fmt, write_csv};
+
+pub fn fig6(ctx: &Ctx) {
+    let inst = 0;
+    let sigma2_grid = [1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];
+    let beta_grid = [1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 100.0];
+
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+
+    for &s2 in &sigma2_grid {
+        let spec = RunSpec::new(Algorithm::Nbocs { sigma2: s2 });
+        let runs = ctx.run_spec(&spec, inst, ctx.cfg.runs);
+        let finals: Vec<f64> = runs.iter().map(|r| r.best_y).collect();
+        let m = crate::util::mean(&finals);
+        rows.push(vec!["nBOCS σ²".into(), fmt(s2), fmt(m)]);
+        csv_rows.push(vec!["sigma2".into(), fmt(s2), fmt(m)]);
+        eprintln!("[fig6] nBOCS sigma2={s2}: mean final cost {m:.6}");
+    }
+    for &b in &beta_grid {
+        let spec = RunSpec::new(Algorithm::Gbocs { beta: b });
+        let runs = ctx.run_spec(&spec, inst, ctx.cfg.runs);
+        let finals: Vec<f64> = runs.iter().map(|r| r.best_y).collect();
+        let m = crate::util::mean(&finals);
+        rows.push(vec!["gBOCS β".into(), fmt(b), fmt(m)]);
+        csv_rows.push(vec!["beta".into(), fmt(b), fmt(m)]);
+        eprintln!("[fig6] gBOCS beta={b}: mean final cost {m:.6}");
+    }
+
+    println!("== fig6 — hyperparameter dependence of the final cost ==");
+    println!(
+        "{}",
+        ascii_table(&["hyperparameter", "value", "mean final cost"], &rows)
+    );
+    let path = format!("{}/fig6.csv", ctx.cfg.out_dir);
+    write_csv(&path, &["param", "value", "mean_final_cost"], &csv_rows)
+        .expect("write csv");
+    println!("csv: {path}\n");
+}

@@ -1,0 +1,99 @@
+//! Fig. 5: the 48 exact solutions of instance 1 as pixel boxes, plus the
+//! Ward dendrogram and the 4-domain cut used by Fig. 4.
+
+use super::Ctx;
+use crate::cluster::{cut, ward};
+use crate::report::write_csv;
+
+pub fn fig5(ctx: &Ctx) {
+    let inst = 0;
+    let bf = &ctx.exact[inst];
+    let pts: Vec<Vec<i8>> =
+        bf.orbit.iter().map(|m| m.data.clone()).collect();
+    let merges = ward(&pts);
+    let labels = cut(&merges, pts.len(), 4.min(pts.len()));
+
+    println!(
+        "== fig5 — {} exact solutions of instance 1 (cost {:.6}) ==",
+        bf.orbit.len(),
+        bf.best_cost
+    );
+    println!("(each box is M^T, rows = K columns of M; '#' = +1, '.' = -1)\n");
+
+    // Pixel art: boxes laid out 8 per row group.
+    let per_row = 8;
+    let (n, k) = (bf.orbit[0].n, bf.orbit[0].k);
+    for (gi, group) in bf.orbit.chunks(per_row).enumerate() {
+        let start = gi * per_row;
+        // Header: solution index + domain label.
+        let mut header = String::new();
+        for (gi, _) in group.iter().enumerate() {
+            header.push_str(&format!(
+                "{:>2}:d{}  {}",
+                start + gi,
+                labels[start + gi],
+                " ".repeat(n.saturating_sub(5))
+            ));
+        }
+        println!("{header}");
+        for row in 0..k {
+            let mut line = String::new();
+            for m in group {
+                for i in 0..n {
+                    line.push(if m.get(i, row) == 1 { '#' } else { '.' });
+                }
+                line.push_str("   ");
+            }
+            println!("{line}");
+        }
+        println!();
+    }
+
+    // Dendrogram (scipy linkage convention) to CSV + text.
+    let mut rows = Vec::new();
+    println!("Ward merges (a, b -> node, distance, size):");
+    for (step, m) in merges.iter().enumerate() {
+        let node = pts.len() + step;
+        if step >= merges.len().saturating_sub(8) {
+            println!(
+                "  {:>3} + {:>3} -> {:>3}   d={:<8.3} size={}",
+                m.a, m.b, node, m.dist, m.size
+            );
+        }
+        rows.push(vec![
+            m.a.to_string(),
+            m.b.to_string(),
+            node.to_string(),
+            format!("{:.6}", m.dist),
+            m.size.to_string(),
+        ]);
+    }
+    let path = format!("{}/fig5_dendrogram.csv", ctx.cfg.out_dir);
+    write_csv(&path, &["a", "b", "node", "dist", "size"], &rows)
+        .expect("write csv");
+
+    // Solutions + labels CSV.
+    let sol_rows: Vec<Vec<String>> = bf
+        .orbit
+        .iter()
+        .zip(&labels)
+        .enumerate()
+        .map(|(i, (m, &lab))| {
+            let bits: String = m
+                .data
+                .iter()
+                .map(|&s| if s == 1 { '1' } else { '0' })
+                .collect();
+            vec![i.to_string(), lab.to_string(), bits]
+        })
+        .collect();
+    let spath = format!("{}/fig5_solutions.csv", ctx.cfg.out_dir);
+    write_csv(&spath, &["index", "domain", "bits"], &sol_rows)
+        .expect("write csv");
+
+    let domain_sizes: Vec<usize> = (0..4)
+        .map(|d| labels.iter().filter(|&&l| l == d).count())
+        .collect();
+    println!("domain sizes: {domain_sizes:?}");
+    println!("csv: {path}, {spath}\n");
+}

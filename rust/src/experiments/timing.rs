@@ -1,0 +1,67 @@
+//! Table 2: mean execution time per run for every algorithm (instance 1),
+//! plus the greedy and brute-force reference rows the paper quotes in the
+//! text (0.00096 s and 5553.51 s on their hardware).
+
+use super::{Ctx, RunSpec};
+use crate::report::{ascii_table, fmt, write_csv};
+use crate::util::timer::Timer;
+
+pub fn table2(ctx: &Ctx) {
+    let inst = 0;
+    let specs = RunSpec::table_nine();
+    // Timing wants identical run counts per algorithm.
+    let runs = ctx.cfg.runs.max(1);
+
+    let mut rows = Vec::new();
+    for spec in &specs {
+        eprintln!("[table2] timing {} ({} runs)...", spec.label(), runs);
+        let results = ctx.run_spec(spec, inst, runs);
+        let total: Vec<f64> =
+            results.iter().map(|r| r.time_total).collect();
+        let sur: Vec<f64> =
+            results.iter().map(|r| r.time_surrogate).collect();
+        let sol: Vec<f64> =
+            results.iter().map(|r| r.time_solver).collect();
+        let ev: Vec<f64> = results.iter().map(|r| r.time_eval).collect();
+        rows.push(vec![
+            spec.label(),
+            fmt(crate::util::mean(&total)),
+            fmt(crate::util::mean(&sur)),
+            fmt(crate::util::mean(&sol)),
+            fmt(crate::util::mean(&ev)),
+        ]);
+    }
+
+    // Reference rows: the original greedy and the brute-force search.
+    let t = Timer::start();
+    let _ = crate::greedy::greedy(&ctx.problems[inst], ctx.cfg.seed);
+    let greedy_s = t.seconds();
+    rows.push(vec![
+        "original (greedy)".into(),
+        fmt(greedy_s),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    let t = Timer::start();
+    let _ = crate::bruteforce::brute_force(&ctx.problems[inst]);
+    let bf_s = t.seconds();
+    rows.push(vec![
+        "brute force (canonical)".into(),
+        fmt(bf_s),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    let headers =
+        ["algorithm", "total s/run", "surrogate s", "solver s", "eval s"];
+    println!(
+        "== table2 — mean execution time per run ({} evaluations) ==",
+        ctx.cfg.iters + ctx.problems[inst].n_bits()
+    );
+    println!("{}", ascii_table(&headers, &rows));
+    let path = format!("{}/table2.csv", ctx.cfg.out_dir);
+    write_csv(&path, &headers, &rows).expect("write csv");
+    println!("csv: {path}\n");
+}

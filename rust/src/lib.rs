@@ -1,0 +1,34 @@
+//! # intdecomp — lossy matrix compression by black-box optimisation of MINLP
+//!
+//! Reproduction of Kadowaki & Ambai, *Lossy compression of matrices by
+//! black-box optimisation of mixed integer nonlinear programming*,
+//! Scientific Reports 12 (2022).
+//!
+//! The library decomposes a real matrix `W (N×D)` into a binary matrix
+//! `M (N×K, ±1)` times a real matrix `C (K×D)` by eliminating `C` with least
+//! squares (turning the MINLP into a binary NLIP) and optimising `M` with
+//! black-box optimisation: BOCS-style Bayesian surrogates or factorisation
+//! machines, minimised by Ising solvers (SA / simulated-QA / quenching).
+//!
+//! Architecture (see DESIGN.md): this crate is the L3 coordinator; the
+//! numeric hot paths are AOT-compiled JAX/Pallas artifacts loaded through
+//! PJRT (`runtime`), each with a native Rust twin for fallback and
+//! cross-checking.
+
+pub mod bbo;
+pub mod bench;
+pub mod bruteforce;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod experiments;
+pub mod greedy;
+pub mod instance;
+pub mod linalg;
+pub mod minlp;
+pub mod report;
+pub mod runtime;
+pub mod solvers;
+pub mod surrogate;
+pub mod util;

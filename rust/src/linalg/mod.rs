@@ -1,0 +1,493 @@
+//! Dense linear-algebra substrate (f64, row-major).
+//!
+//! Built in-tree because the offline vendored crate set has no linalg crate
+//! (DESIGN.md §6).  Provides exactly what the coordinator needs: matmul,
+//! Cholesky (for the BOCS posterior samplers), triangular and LU solves,
+//! and thin Householder QR (random orthogonal factors for the instance
+//! generator).  Shapes are small (≤ a few hundred), so the implementations
+//! favour clarity + cache-friendly loop order over blocking.
+
+mod qr;
+
+pub use qr::householder_qr;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self * other` with ikj loop order (streams rows of `other`).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for j in 0..other.cols {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T * self` exploiting symmetry (Gram matrix).
+    pub fn gram(&self) -> Matrix {
+        let p = self.cols;
+        let mut g = Matrix::zeros(p, p);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..p {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..p {
+                    g[(i, j)] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..p {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i).iter().zip(x).map(|(a, b)| a * b).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// `self^T * x`.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+///
+/// Returns `None` when a pivot drops below `tol` (not SPD / numerically
+/// singular) — callers either jitter the diagonal or treat it as an error.
+pub fn cholesky(a: &Matrix, tol: f64) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        // d = a_jj - l_j[..j] . l_j[..j]  — contiguous row-prefix slices,
+        // no per-element bounds checks (hot path; EXPERIMENTS.md §Perf).
+        let row_j = &l.data[j * n..j * n + j];
+        let d = a[(j, j)] - dot(row_j, row_j);
+        if d <= tol {
+            return None;
+        }
+        let dj = d.sqrt();
+        let inv_dj = 1.0 / dj;
+        let mut col = Vec::with_capacity(n - j - 1);
+        for i in (j + 1)..n {
+            let row_i = &l.data[i * n..i * n + j];
+            col.push((a[(i, j)] - dot(row_i, row_j)) * inv_dj);
+        }
+        l.data[j * n + j] = dj;
+        for (off, v) in col.into_iter().enumerate() {
+            l.data[(j + 1 + off) * n + j] = v;
+        }
+    }
+    Some(l)
+}
+
+/// Cholesky of `A = G * scale + diag(lam) (+ jitter I)` without
+/// materialising A — the posterior-precision factorisation is the hottest
+/// O(P³) loop in the BOCS surrogate (EXPERIMENTS.md §Perf), and G's
+/// entries are each read exactly once here.
+pub fn cholesky_scaled(
+    g: &Matrix,
+    scale: f64,
+    lam: &[f64],
+    jitter: f64,
+    tol: f64,
+) -> Option<Matrix> {
+    assert_eq!(g.rows, g.cols);
+    let n = g.rows;
+    assert_eq!(lam.len(), n);
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let row_j = &l.data[j * n..j * n + j];
+        let ajj = g.data[j * n + j] * scale + lam[j] + jitter;
+        let d = ajj - dot(row_j, row_j);
+        if d <= tol {
+            return None;
+        }
+        let dj = d.sqrt();
+        let inv_dj = 1.0 / dj;
+        let mut col = Vec::with_capacity(n - j - 1);
+        for i in (j + 1)..n {
+            let row_i = &l.data[i * n..i * n + j];
+            let aij = g.data[i * n + j] * scale;
+            col.push((aij - dot(row_i, row_j)) * inv_dj);
+        }
+        l.data[j * n + j] = dj;
+        for (off, v) in col.into_iter().enumerate() {
+            l.data[(j + 1 + off) * n + j] = v;
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L x = b` for lower-triangular L.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] * x[k];
+        }
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Solve `L^T x = b` for lower-triangular L.
+pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        x[i] /= l[(i, i)];
+        let xi = x[i];
+        for k in 0..i {
+            x[k] -= l[(i, k)] * xi;
+        }
+    }
+    x
+}
+
+/// Solve `A x = b` through an existing Cholesky factor `L` (A = L L^T).
+pub fn cho_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// Solve `A x = b` by LU with partial pivoting. Returns `None` if singular.
+pub fn lu_solve(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in (col + 1)..n {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let t = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+            }
+            x.swap(col, piv);
+        }
+        let d = m[(col, col)];
+        for r in (col + 1)..n {
+            let f = m[(r, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                let v = m[(col, j)];
+                m[(r, j)] -= f * v;
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // Back substitution.
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= m[(i, j)] * x[j];
+        }
+        x[i] = s / m[(i, i)];
+    }
+    Some(x)
+}
+
+/// Dot product with four accumulators — breaks the serial FP-add chain so
+/// LLVM can vectorise/pipeline it; ~3× over the naive zip-sum on the
+/// P=301 posterior factorisations (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        // Safety: i + 3 < 4 * chunks <= n for both slices (equal length).
+        unsafe {
+            s0 += a.get_unchecked(i) * b.get_unchecked(i);
+            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1);
+            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2);
+            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3);
+        }
+    }
+    let mut tail = 0.0;
+    for i in (chunks * 4)..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s2) + (s1 + s3) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, rng.normals(r * c))
+    }
+
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let a = rand_matrix(rng, n + 3, n);
+        let mut g = a.gram();
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = rand_matrix(&mut rng, 4, 6);
+        let i6 = Matrix::identity(6);
+        assert_eq!(a.matmul(&i6).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Rng::new(2);
+        let a = rand_matrix(&mut rng, 7, 5);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for (x, y) in g.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = spd(&mut rng, 12);
+        let l = cholesky(&a, 1e-12).unwrap();
+        let llt = l.matmul(&l.transpose());
+        for (x, y) in llt.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a, 1e-12).is_none());
+    }
+
+    #[test]
+    fn cho_solve_solves() {
+        let mut rng = Rng::new(4);
+        let a = spd(&mut rng, 9);
+        let x_true = rng.normals(9);
+        let b = a.matvec(&x_true);
+        let l = cholesky(&a, 1e-12).unwrap();
+        let x = cho_solve(&l, &b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(5);
+        let a = spd(&mut rng, 6);
+        let l = cholesky(&a, 1e-12).unwrap();
+        let x_true = rng.normals(6);
+        let b = l.matvec(&x_true);
+        let x = solve_lower(&l, &b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9);
+        }
+        let bt = l.transpose().matvec(&x_true);
+        let xt = solve_lower_t(&l, &bt);
+        for (u, v) in xt.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lu_solve_general() {
+        let mut rng = Rng::new(6);
+        let a = rand_matrix(&mut rng, 8, 8);
+        let x_true = rng.normals(8);
+        let b = a.matvec(&x_true);
+        let x = lu_solve(&a, &b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn lu_solve_detects_singular() {
+        let a = Matrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![2.0, 4.0, 6.0],
+            vec![0.0, 1.0, 1.0],
+        ]);
+        assert!(lu_solve(&a, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn tmatvec_matches_transpose() {
+        let mut rng = Rng::new(7);
+        let a = rand_matrix(&mut rng, 5, 9);
+        let x = rng.normals(5);
+        let got = a.tmatvec(&x);
+        let want = a.transpose().matvec(&x);
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Thin Householder QR.
+//!
+//! Used by the instance generator to draw Haar-ish random orthonormal
+//! factors (QR of a Gaussian matrix with sign-fixed R diagonal).
+
+use super::Matrix;
+
+/// Thin QR of an m×n matrix (m >= n): returns (Q m×n with orthonormal
+/// columns, R n×n upper-triangular), with R's diagonal made non-negative so
+/// the decomposition of a Gaussian matrix is Haar-distributed.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin QR needs rows >= cols");
+    let mut r = a.clone();
+    // Householder vectors stored column-wise.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the reflector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm < 1e-300 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        v[0] = r[(k, k)] - alpha;
+        for i in (k + 1)..m {
+            v[i - k] = r[(i, k)];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v v^T / (v^T v) to the trailing block of R.
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * r[(i, j)];
+            }
+            let f = 2.0 * s / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= f * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * q[(i, j)];
+            }
+            let f = 2.0 * s / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= f * v[i - k];
+            }
+        }
+    }
+
+    // Zero the strict lower triangle of R and fix signs so diag(R) >= 0.
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    for i in 0..n {
+        if r_thin[(i, i)] < 0.0 {
+            for j in i..n {
+                r_thin[(i, j)] = -r_thin[(i, j)];
+            }
+            for row in 0..m {
+                q[(row, i)] = -q[(row, i)];
+            }
+        }
+    }
+    (q, r_thin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, rng.normals(r * c))
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(10);
+        for &(m, n) in &[(5, 5), (8, 3), (12, 7), (100, 8)] {
+            let a = rand_matrix(&mut rng, m, n);
+            let (q, r) = householder_qr(&a);
+            let qr = q.matmul(&r);
+            for (x, y) in qr.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-8, "({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(11);
+        let a = rand_matrix(&mut rng, 20, 6);
+        let (q, _) = householder_qr(&a);
+        let qtq = q.gram();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular_nonneg_diag() {
+        let mut rng = Rng::new(12);
+        let a = rand_matrix(&mut rng, 10, 10);
+        let (_, r) = householder_qr(&a);
+        for i in 0..10 {
+            assert!(r[(i, i)] >= 0.0);
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+}

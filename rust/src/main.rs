@@ -1,0 +1,349 @@
+//! `intdecomp` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   decompose                 compress one instance end-to-end (greedy vs BBO)
+//!   run                       single BBO run, full trace to stdout/CSV
+//!   brute-force               exact search of an instance
+//!   greedy                    original SPADE baseline
+//!   exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|table1|table2|all
+//!   artifacts-check           verify the PJRT artifacts against native math
+//!
+//! Common flags: --full (paper scale), --runs N, --iters N, --instances N,
+//! --seed S, --n/--d/--k (problem shape), --solver sa|sqa|sq, --algo NAME,
+//! --augment, --no-xla, --out DIR.
+
+use anyhow::{anyhow, bail, Result};
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::bruteforce::brute_force;
+use intdecomp::cli::Args;
+use intdecomp::config::ExpConfig;
+use intdecomp::cost::BinMatrix;
+use intdecomp::experiments::{self as exp, Ctx};
+use intdecomp::greedy::greedy;
+use intdecomp::instance::generate;
+use intdecomp::report::fmt;
+use intdecomp::runtime::XlaRuntime;
+use intdecomp::solvers;
+use intdecomp::util::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "decompose" => cmd_decompose(args),
+        "run" => cmd_run(args),
+        "brute-force" | "bruteforce" => cmd_brute_force(args),
+        "greedy" => cmd_greedy(args),
+        "exp" => cmd_exp(args),
+        "artifacts-check" => cmd_artifacts_check(args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try: help)"),
+    }
+}
+
+const HELP: &str = "\
+intdecomp — lossy matrix compression by black-box optimisation of MINLP
+(Kadowaki & Ambai, Sci Rep 2022 reproduction)
+
+USAGE: intdecomp <subcommand> [flags]
+
+  decompose        end-to-end compression of one instance (greedy vs BBO)
+  run              one BBO run with trace output
+  brute-force      exact search (best / second-best / solution orbit)
+  greedy           the original SPADE baseline
+  exp <fig|table>  reproduce a paper figure/table:
+                   fig1 fig2 fig3 fig4 fig5 fig6 fig7 table1 table2
+                   ablation all
+  artifacts-check  cross-check PJRT artifacts vs native math
+
+FLAGS (defaults in parens):
+  --full            paper scale (25 runs x 2n^2 iters x 10 instances)
+  --runs N          BBO runs per algorithm/instance
+  --iters N         acquisition iterations
+  --instances N     number of synthetic instances
+  --n/--d/--k       problem shape (8 / 100 / 3)
+  --seed S          base seed (1)
+  --algo NAME       rs|vbocs|nbocs|gbocs|fmqa08|fmqa12|rfmqa08 (nbocs)
+  --solver NAME     sa|sqa|sq|exhaustive (sa)
+  --augment         data augmentation (nBOCSa)
+  --no-xla          skip PJRT artifacts, native math only
+  --out DIR         results directory (results)
+";
+
+fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
+    let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let idx = args.usize_flag("instance", 1).map_err(|e| anyhow!(e))?;
+    if idx < 1 {
+        bail!("--instance is 1-based");
+    }
+    let p = generate(&cfg.instance, idx - 1);
+    Ok((cfg, p))
+}
+
+fn cmd_decompose(args: &Args) -> Result<()> {
+    let (cfg, p) = load_instance(args)?;
+    println!(
+        "instance: W {}x{}, K={}, n={} bits, compression ratio {:.3}",
+        p.n(),
+        p.d(),
+        p.k,
+        p.n_bits(),
+        intdecomp::cost::compression_ratio(p.n(), p.d(), p.k, 32)
+    );
+    let g = greedy(&p, cfg.seed);
+    println!(
+        "greedy:    cost {}  (series {})  normalised error {:.4}",
+        fmt(g.cost_refit),
+        fmt(g.cost_series),
+        p.normalised_error(g.cost_refit)
+    );
+    let bf = brute_force(&p);
+    println!(
+        "exact:     cost {}  second-best {}  orbit {}",
+        fmt(bf.best_cost),
+        fmt(bf.second_cost),
+        bf.orbit.len()
+    );
+    let algo = Algorithm::by_name(&args.str_flag("algo", "nbocs"))
+        .ok_or_else(|| anyhow!("unknown --algo"))?;
+    let solver = solvers::by_name(&args.str_flag("solver", "sa"))
+        .ok_or_else(|| anyhow!("unknown --solver"))?;
+    let bcfg = BboConfig {
+        n_init: p.n_bits(),
+        iters: cfg.iters,
+        restarts: cfg.restarts,
+        augment: args.bool_flag("augment"),
+    };
+    let run = bbo::run(
+        &p,
+        &algo,
+        solver.as_ref(),
+        &bcfg,
+        &Backends::default(),
+        cfg.seed,
+    );
+    println!(
+        "BBO {}: cost {} after {} evaluations in {:.2}s  (exact hit: {})",
+        run.algo,
+        fmt(run.best_y),
+        run.ys.len(),
+        run.time_total,
+        run.found_exact(bf.best_cost, 1e-7)
+    );
+    let m = BinMatrix::from_spins(p.n(), p.k, &run.best_x);
+    let c = p.solve_c(&m);
+    println!(
+        "M (binary, {}x{}) found; C is {}x{} real — residual {:.4} of ||W||",
+        m.n,
+        m.k,
+        c.rows,
+        c.cols,
+        p.normalised_error(run.best_y)
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (cfg, p) = load_instance(args)?;
+    let algo = Algorithm::by_name(&args.str_flag("algo", "nbocs"))
+        .ok_or_else(|| anyhow!("unknown --algo"))?;
+    let solver = solvers::by_name(&args.str_flag("solver", "sa"))
+        .ok_or_else(|| anyhow!("unknown --solver"))?;
+    let bcfg = BboConfig {
+        n_init: p.n_bits(),
+        iters: cfg.iters,
+        restarts: cfg.restarts,
+        augment: args.bool_flag("augment"),
+    };
+    let run = bbo::run(
+        &p,
+        &algo,
+        solver.as_ref(),
+        &bcfg,
+        &Backends::default(),
+        cfg.seed,
+    );
+    println!("algo {}  solver {}  evals {}", run.algo, run.solver,
+             run.ys.len());
+    for (t, (y, b)) in
+        run.ys.iter().zip(&run.best_curve).enumerate()
+    {
+        if t % 10 == 0 || t + 1 == run.ys.len() {
+            println!("step {t:>5}  y {}  best {}", fmt(*y), fmt(*b));
+        }
+    }
+    println!(
+        "time: total {:.3}s  surrogate {:.3}s  solver {:.3}s  eval {:.3}s",
+        run.time_total, run.time_surrogate, run.time_solver, run.time_eval
+    );
+    Ok(())
+}
+
+fn cmd_brute_force(args: &Args) -> Result<()> {
+    let (_cfg, p) = load_instance(args)?;
+    let t = intdecomp::util::timer::Timer::start();
+    let bf = brute_force(&p);
+    println!(
+        "evaluated {} canonical candidates in {:.2}s",
+        bf.evaluated,
+        t.seconds()
+    );
+    println!(
+        "best cost {}  (normalised {:.4})  second-best {}",
+        fmt(bf.best_cost),
+        p.normalised_error(bf.best_cost),
+        fmt(bf.second_cost)
+    );
+    println!(
+        "canonical minimisers: {}   full orbit: {}",
+        bf.canonical.len(),
+        bf.orbit.len()
+    );
+    if args.bool_flag("gray") {
+        let t = intdecomp::util::timer::Timer::start();
+        let (best, _, evals) = intdecomp::bruteforce::full_scan_gray(&p);
+        println!(
+            "gray-code full scan: {} evals in {:.2}s, best {}",
+            evals,
+            t.seconds(),
+            fmt(best)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_greedy(args: &Args) -> Result<()> {
+    let (cfg, p) = load_instance(args)?;
+    let t = intdecomp::util::timer::Timer::start();
+    let g = greedy(&p, cfg.seed);
+    println!(
+        "greedy cost {} (series {}) in {:.5}s — normalised error {:.4}",
+        fmt(g.cost_refit),
+        fmt(g.cost_series),
+        t.seconds(),
+        p.normalised_error(g.cost_refit)
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let ctx = Ctx::new(cfg);
+    match which {
+        "fig1" => exp::convergence::fig1(&ctx),
+        "fig2" => exp::convergence::fig2(&ctx),
+        "fig3" => exp::convergence::fig3(&ctx),
+        "fig4" => exp::domains::fig4(&ctx),
+        "fig5" => exp::solutions::fig5(&ctx),
+        "fig6" => exp::hyper::fig6(&ctx),
+        "fig7" => exp::convergence::fig7(&ctx),
+        "table1" => exp::counts::table1(&ctx),
+        "table2" => exp::timing::table2(&ctx),
+        "ablation" => exp::ablation::ablation(&ctx),
+        "all" => {
+            exp::solutions::fig5(&ctx);
+            exp::convergence::fig1(&ctx);
+            exp::convergence::fig2(&ctx);
+            exp::convergence::fig3(&ctx);
+            exp::domains::fig4(&ctx);
+            exp::hyper::fig6(&ctx);
+            exp::convergence::fig7(&ctx);
+            exp::counts::table1(&ctx);
+            exp::timing::table2(&ctx);
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+/// Cross-check every artifact against the native twin on random inputs —
+/// the from-rust integration gate (`make test` runs the equivalent via
+/// `rust/tests/runtime_xla.rs`).
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args.str_flag("artifacts", "artifacts");
+    let rt = XlaRuntime::load(&dir)?;
+    let meta = rt.meta.clone();
+    println!("artifacts at {dir}: platform {}", rt.platform());
+    let cfg = intdecomp::instance::InstanceConfig::default();
+    let p = generate(&cfg, 0);
+    let mut rng = Rng::new(7);
+
+    // cost_batch vs native.
+    let ms: Vec<BinMatrix> = (0..meta.batch + 3)
+        .map(|_| BinMatrix::new(meta.n, meta.k, rng.spins(meta.n * meta.k)))
+        .collect();
+    let xla_costs = rt.cost_batch(&p.w, &ms)?;
+    let mut max_err = 0.0f64;
+    for (m, &xc) in ms.iter().zip(&xla_costs) {
+        max_err = max_err.max((p.cost(m) - xc).abs());
+    }
+    println!(
+        "cost_batch: {} candidates, max |native - xla| = {max_err:.2e}",
+        ms.len()
+    );
+    if max_err > 1e-4 {
+        bail!("cost artifact disagrees with native math");
+    }
+
+    // gram vs native.
+    let mut data = intdecomp::surrogate::Dataset::new(meta.nbits);
+    for _ in 0..50 {
+        data.push(rng.spins(meta.nbits), rng.normal());
+    }
+    let phi = data.phi_matrix();
+    let (g, gv, yty) = rt.gram(&phi, &data.ys)?;
+    let mut gerr = 0.0f64;
+    for (a, b) in g.data.iter().zip(&data.g.data) {
+        gerr = gerr.max((a - b).abs());
+    }
+    for (a, b) in gv.iter().zip(&data.gv) {
+        gerr = gerr.max((a - b).abs());
+    }
+    gerr = gerr.max((yty - data.yty).abs());
+    println!("gram: max moment error = {gerr:.2e}");
+    if gerr > 1e-2 {
+        bail!("gram artifact disagrees with native math");
+    }
+
+    // bocs_sample vs native posterior.
+    let lam = vec![1.0; meta.p];
+    let z = vec![0.0; meta.p];
+    let (alpha_x, _) = rt.bocs_draw(&data.g, &data.gv, &lam, 0.5, &z)?;
+    use intdecomp::surrogate::blr::PosteriorBackend as _;
+    let (alpha_n, _) = intdecomp::surrogate::blr::NativePosterior
+        .draw(&data.g, &data.gv, &lam, 0.5, &z);
+    let aerr = alpha_x
+        .iter()
+        .zip(&alpha_n)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("bocs_sample: max |native - xla| = {aerr:.2e}");
+    if aerr > 1e-2 {
+        bail!("bocs_sample artifact disagrees with native math");
+    }
+
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Generic mixed-integer front-end — the paper's generalisation claim.
+//!
+//! The BBO machinery optimises any pseudo-Boolean black box through the
+//! [`Oracle`] trait.  The paper's observation (Discussion): every MINLP
+//! whose cost is *linear in the real variables given the binaries* can be
+//! reduced to such a black box by eliminating the real variables with
+//! least squares — exactly how the integer decomposition eliminates `C`.
+//! [`LinearLsqMinlp`] packages that reduction for general problems (the
+//! `minlp_feature_select` example uses it for subset-selection
+//! regression).
+
+use crate::cost::{BinMatrix, Problem};
+use crate::linalg::{lu_solve, Matrix};
+
+/// A pseudo-Boolean black-box objective over spins x ∈ {-1,+1}^n.
+pub trait Oracle: Sync {
+    fn n_bits(&self) -> usize;
+
+    /// The black-box evaluation y = f(x).
+    fn eval(&self, x: &[i8]) -> f64;
+
+    /// Known symmetry orbit of x (same objective value), excluding x
+    /// itself — used by the data-augmentation variant (paper Fig. 3).
+    fn equivalents(&self, _x: &[i8]) -> Vec<Vec<i8>> {
+        Vec::new()
+    }
+}
+
+impl Oracle for Problem {
+    fn n_bits(&self) -> usize {
+        Problem::n_bits(self)
+    }
+
+    fn eval(&self, x: &[i8]) -> f64 {
+        self.cost_spins(x)
+    }
+
+    /// All K!·2^K − 1 column permutation / sign-flip variants.
+    fn equivalents(&self, x: &[i8]) -> Vec<Vec<i8>> {
+        let m = BinMatrix::from_spins(self.n(), self.k, x);
+        crate::bruteforce::expand_orbit(&[m])
+            .into_iter()
+            .map(|b| b.data)
+            .filter(|d| d.as_slice() != x)
+            .collect()
+    }
+}
+
+/// MINLP with least-squares-eliminable real part:
+///
+/// ```text
+///   min_{x, z}  || A diag(gate(x)) z - b ||²  + ρ · |{i : x_i = +1}|
+/// ```
+///
+/// where `gate(x_i) = (1 + x_i)/2` activates column i of the design matrix
+/// `A` — i.e. subset-selection least squares with a cardinality penalty.
+/// Given x the optimal real vector z solves the normal equations on the
+/// active columns, so the objective is a pure function of the binaries.
+pub struct LinearLsqMinlp {
+    /// Design matrix A (m × n).
+    pub a: Matrix,
+    /// Target b (m).
+    pub b: Vec<f64>,
+    /// Per-active-column penalty ρ.
+    pub rho: f64,
+}
+
+impl LinearLsqMinlp {
+    pub fn new(a: Matrix, b: Vec<f64>, rho: f64) -> Self {
+        assert_eq!(a.rows, b.len());
+        LinearLsqMinlp { a, b, rho }
+    }
+
+    /// Optimal real coefficients for the active set (None on empty set).
+    pub fn solve_real(&self, x: &[i8]) -> Option<(Vec<usize>, Vec<f64>)> {
+        let active: Vec<usize> = (0..self.a.cols)
+            .filter(|&i| x[i] == 1)
+            .collect();
+        if active.is_empty() {
+            return None;
+        }
+        let m = self.a.rows;
+        let s = active.len();
+        // Normal equations on the active columns (+ tiny ridge).
+        let mut g = Matrix::zeros(s, s);
+        let mut rhs = vec![0.0; s];
+        for r in 0..m {
+            let row = self.a.row(r);
+            for (ii, &ci) in active.iter().enumerate() {
+                let v = row[ci];
+                rhs[ii] += v * self.b[r];
+                for (jj, &cj) in active.iter().enumerate().skip(ii) {
+                    g[(ii, jj)] += v * row[cj];
+                }
+            }
+        }
+        for i in 0..s {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+            g[(i, i)] += 1e-10;
+        }
+        let z = lu_solve(&g, &rhs)?;
+        Some((active, z))
+    }
+}
+
+impl Oracle for LinearLsqMinlp {
+    fn n_bits(&self) -> usize {
+        self.a.cols
+    }
+
+    fn eval(&self, x: &[i8]) -> f64 {
+        let bb: f64 = self.b.iter().map(|v| v * v).sum();
+        match self.solve_real(x) {
+            None => bb,
+            Some((active, z)) => {
+                // Residual via ||b||² - z^T A_S^T b (LSQ identity).
+                let mut atb = 0.0;
+                for r in 0..self.a.rows {
+                    let row = self.a.row(r);
+                    let mut pred = 0.0;
+                    for (ii, &ci) in active.iter().enumerate() {
+                        pred += row[ci] * z[ii];
+                    }
+                    atb += pred * self.b[r];
+                }
+                (bb - atb).max(0.0) + self.rho * active.len() as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn planted(rng: &mut Rng, m: usize, n: usize, truth: &[usize])
+        -> LinearLsqMinlp {
+        let a = Matrix::from_vec(m, n, rng.normals(m * n));
+        let z: Vec<f64> = (0..n)
+            .map(|i| if truth.contains(&i) { 2.0 } else { 0.0 })
+            .collect();
+        let b = a.matvec(&z);
+        LinearLsqMinlp::new(a, b, 0.01)
+    }
+
+    #[test]
+    fn true_support_has_near_zero_residual() {
+        let mut rng = Rng::new(700);
+        let p = planted(&mut rng, 30, 8, &[1, 4]);
+        let mut x = vec![-1i8; 8];
+        x[1] = 1;
+        x[4] = 1;
+        let cost = p.eval(&x);
+        assert!(cost < 0.03, "cost {cost}"); // 2 * rho + ~0 residual
+    }
+
+    #[test]
+    fn true_support_beats_others_exhaustively() {
+        let mut rng = Rng::new(701);
+        let p = planted(&mut rng, 40, 6, &[0, 3]);
+        let mut best = (0u32, f64::INFINITY);
+        for bits in 0..(1u32 << 6) {
+            let x: Vec<i8> = (0..6)
+                .map(|i| if (bits >> i) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let c = p.eval(&x);
+            if c < best.1 {
+                best = (bits, c);
+            }
+        }
+        assert_eq!(best.0, (1 << 0) | (1 << 3));
+    }
+
+    #[test]
+    fn empty_set_costs_full_norm() {
+        let mut rng = Rng::new(702);
+        let p = planted(&mut rng, 20, 5, &[2]);
+        let x = vec![-1i8; 5];
+        let bb: f64 = p.b.iter().map(|v| v * v).sum();
+        assert!((p.eval(&x) - bb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn problem_oracle_equivalents_have_equal_cost() {
+        let cfg = crate::instance::InstanceConfig {
+            n: 5,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            seed: 3,
+        };
+        let p = crate::instance::generate(&cfg, 0);
+        let mut rng = Rng::new(703);
+        let x = rng.spins(10);
+        let y = p.eval(&x);
+        let eq = Oracle::equivalents(&p, &x);
+        // Up to 2! * 2^2 - 1 = 7 equivalents for a generic x (fewer when
+        // the orbit is degenerate, e.g. m2 = ±m1).
+        assert!(!eq.is_empty() && eq.len() <= 7, "len {}", eq.len());
+        for e in &eq {
+            assert!((p.eval(e) - y).abs() < 1e-9);
+            assert_ne!(e.as_slice(), x.as_slice());
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Reporting substrate: ASCII tables, terminal line plots, CSV writers.
+//!
+//! Every experiment prints the same rows/series the paper reports and
+//! writes machine-readable CSV to `results/` for offline plotting.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Render an ASCII table with a header row.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            let _ = write!(out, "| {:w$} ", cell, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Terminal line plot of one or more (label, series) on a log-y axis —
+/// the residual-error convergence plots of Figs. 1/2/3/7.
+pub fn ascii_plot_log(
+    series: &[(String, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&', '~'];
+    let floor = 1e-12;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut max_len = 0usize;
+    for (_, ys) in series {
+        max_len = max_len.max(ys.len());
+        for &y in ys {
+            let ly = y.max(floor).log10();
+            lo = lo.min(ly);
+            hi = hi.max(ly);
+        }
+    }
+    if !lo.is_finite() || max_len == 0 {
+        return "(no data)\n".into();
+    }
+    if hi - lo < 1e-9 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (t, &y) in ys.iter().enumerate() {
+            let xx = t * (width - 1) / max_len.max(2).saturating_sub(1).max(1);
+            let ly = y.max(floor).log10();
+            let frac = (ly - lo) / (hi - lo);
+            let yy = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+            if xx < width && yy < height {
+                grid[yy][xx] = mark;
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "log10 residual  [{hi:.2} .. {lo:.2}]");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    let _ = writeln!(out, "+{}", "-".repeat(width));
+    for (si, (label, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} {}", marks[si % marks.len()], label);
+    }
+    out
+}
+
+/// Write rows as CSV (first row = header).  Creates parent directories.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format a float compactly for tables.
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = ascii_table(
+            &["algo", "hits"],
+            &[
+                vec!["nBOCS".into(), "91".into()],
+                vec!["RS".into(), "9".into()],
+            ],
+        );
+        assert!(t.contains("| algo  | hits |"));
+        assert!(t.contains("| nBOCS | 91   |"));
+        // Consistent line lengths.
+        let lens: Vec<usize> =
+            t.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn plot_contains_marks_and_legend() {
+        let s = vec![
+            ("a".to_string(), vec![1.0, 0.1, 0.01]),
+            ("b".to_string(), vec![0.5, 0.5, 0.5]),
+        ];
+        let p = ascii_plot_log(&s, 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("a\n") || p.contains("a"));
+    }
+
+    #[test]
+    fn plot_empty_series() {
+        assert_eq!(ascii_plot_log(&[], 10, 5), "(no data)\n");
+    }
+
+    #[test]
+    fn csv_roundtrip(){
+        let dir = std::env::temp_dir().join("intdecomp_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert!(fmt(12345.0).contains('e'));
+        assert!(fmt(0.25).starts_with("0.25"));
+    }
+}

@@ -1,0 +1,67 @@
+//! Exact QUBO/Ising minimiser by Gray-code enumeration — the oracle the
+//! stochastic solvers are validated against (practical up to n ≈ 22).
+
+use super::{IsingSolver, QuadModel};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Exhaustive;
+
+impl IsingSolver for Exhaustive {
+    fn solve(&self, model: &QuadModel, _rng: &mut Rng) -> Vec<i8> {
+        let n = model.n;
+        assert!(n <= 26, "exhaustive solve is 2^n");
+        let mut x = vec![1i8; n];
+        let mut e = model.energy(&x);
+        let mut best = x.clone();
+        let mut best_e = e;
+        for g in 1u64..(1u64 << n) {
+            let bit = g.trailing_zeros() as usize;
+            e += model.delta_e(&x, bit);
+            x[bit] = -x[bit];
+            if e < best_e {
+                best_e = e;
+                best.copy_from_slice(&x);
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::random_model;
+
+    #[test]
+    fn matches_naive_enumeration() {
+        let mut rng = Rng::new(330);
+        for _ in 0..5 {
+            let m = random_model(&mut rng, 8);
+            let x = Exhaustive.solve(&m, &mut rng);
+            let got = m.energy(&x);
+            // Naive O(2^n * n^2) check.
+            let mut want = f64::INFINITY;
+            for bits in 0..(1u32 << 8) {
+                let cand: Vec<i8> = (0..8)
+                    .map(|i| if (bits >> i) & 1 == 1 { 1 } else { -1 })
+                    .collect();
+                want = want.min(m.energy(&cand));
+            }
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_energy_stays_consistent() {
+        let mut rng = Rng::new(331);
+        let m = random_model(&mut rng, 6);
+        let x = Exhaustive.solve(&m, &mut rng);
+        assert_eq!(x.len(), 6);
+        assert!(x.iter().all(|&s| s == 1 || s == -1));
+    }
+}

@@ -1,0 +1,307 @@
+//! Ising solvers — the back-end minimisers of the quadratic surrogate.
+//!
+//! The surrogate model is a pseudo-Boolean quadratic over spins x ∈ {-1,+1}^n:
+//!
+//! ```text
+//!   E(x) = Σ_{i<j} J_ij x_i x_j + Σ_i h_i x_i + c
+//! ```
+//!
+//! Three stochastic solvers (paper "Ising solvers" section) plus an exact
+//! enumerator used as a test oracle:
+//!
+//! * [`sa::SimulatedAnnealing`] — Metropolis with a geometric β schedule
+//!   derived from effective-field bounds, using the same 2.9 / 0.4 hot /
+//!   cold scaling factors the paper cites for the Ocean defaults.
+//! * [`sqa::SimulatedQuantumAnnealing`] — path-integral Monte Carlo of the
+//!   transverse-field Ising model; stands in for the D-Wave QPU
+//!   (DESIGN.md §2 hardware substitution).
+//! * [`sq::SimulatedQuenching`] — SA with the temperature pinned at 0.1
+//!   (the paper's SQ variant: no global exploration).
+//! * [`exhaustive::Exhaustive`] — exact 2^n minimisation via Gray code.
+
+pub mod exhaustive;
+pub mod sa;
+pub mod sq;
+pub mod sqa;
+
+use crate::util::rng::Rng;
+
+/// Dense symmetric quadratic model over ±1 spins.
+#[derive(Clone, Debug)]
+pub struct QuadModel {
+    pub n: usize,
+    /// Pair couplings, symmetric with zero diagonal; the energy counts each
+    /// unordered pair once (J\[i\]\[j\] stored in both triangles, summed as
+    /// i<j).
+    pub j: Vec<f64>,
+    /// Linear fields.
+    pub h: Vec<f64>,
+    /// Constant offset.
+    pub c: f64,
+}
+
+impl QuadModel {
+    pub fn new(n: usize) -> Self {
+        QuadModel { n, j: vec![0.0; n * n], h: vec![0.0; n], c: 0.0 }
+    }
+
+    #[inline]
+    pub fn j_at(&self, i: usize, k: usize) -> f64 {
+        self.j[i * self.n + k]
+    }
+
+    /// Set the coupling of unordered pair (i, k).
+    pub fn set_pair(&mut self, i: usize, k: usize, v: f64) {
+        assert!(i != k);
+        self.j[i * self.n + k] = v;
+        self.j[k * self.n + i] = v;
+    }
+
+    /// Full energy of a configuration.
+    pub fn energy(&self, x: &[i8]) -> f64 {
+        debug_assert_eq!(x.len(), self.n);
+        let mut e = self.c;
+        for i in 0..self.n {
+            let xi = x[i] as f64;
+            e += self.h[i] * xi;
+            let row = &self.j[i * self.n..(i + 1) * self.n];
+            for k in (i + 1)..self.n {
+                e += row[k] * xi * x[k] as f64;
+            }
+        }
+        e
+    }
+
+    /// Local field at site i: dE of flipping x_i is `-2 x_i field_i(x)`...
+    /// precisely `ΔE_i = -2 x_i (h_i + Σ_k J_ik x_k)`.
+    #[inline]
+    pub fn local_field(&self, x: &[i8], i: usize) -> f64 {
+        let row = &self.j[i * self.n..(i + 1) * self.n];
+        let mut f = self.h[i];
+        for (k, &xk) in x.iter().enumerate() {
+            f += row[k] * xk as f64;
+        }
+        f
+    }
+
+    /// Energy change if spin i is flipped.
+    #[inline]
+    pub fn delta_e(&self, x: &[i8], i: usize) -> f64 {
+        -2.0 * x[i] as f64 * self.local_field(x, i)
+    }
+
+    /// Smallest nonzero coupling magnitude among all |h_i| and |J_ik| —
+    /// the neal-style "minimum effective field" that sets the *cold* end
+    /// of the SA schedule (the smallest energy scale that must freeze).
+    /// Using the per-site field bound here instead leaves SA finishing
+    /// hot on BOCS-surrogate-shaped models (EXPERIMENTS.md §Perf note).
+    pub fn min_nonzero_gap(&self) -> f64 {
+        let mut m = f64::INFINITY;
+        for &h in &self.h {
+            if h != 0.0 {
+                m = m.min(h.abs());
+            }
+        }
+        for i in 0..self.n {
+            for k in (i + 1)..self.n {
+                let j = self.j_at(i, k);
+                if j != 0.0 {
+                    m = m.min(j.abs());
+                }
+            }
+        }
+        if m.is_finite() {
+            m
+        } else {
+            1.0
+        }
+    }
+
+    /// Per-site maximum effective field magnitudes (|h_i| + Σ_k |J_ik|),
+    /// used to derive default temperature schedules (neal-style).
+    pub fn field_bounds(&self) -> (f64, f64) {
+        let mut max_f: f64 = 0.0;
+        let mut min_f = f64::INFINITY;
+        for i in 0..self.n {
+            let row = &self.j[i * self.n..(i + 1) * self.n];
+            let mut f = self.h[i].abs();
+            for &v in row {
+                f += v.abs();
+            }
+            if f > 0.0 {
+                max_f = max_f.max(f);
+                min_f = min_f.min(f);
+            }
+        }
+        if !min_f.is_finite() {
+            min_f = 1.0;
+            max_f = 1.0;
+        }
+        (max_f.max(1e-12), min_f.max(1e-12))
+    }
+}
+
+/// Common interface: minimise the model from a random start.
+pub trait IsingSolver: Send + Sync {
+    /// One solve attempt; returns the best configuration found.
+    fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8>;
+
+    /// Short identifier for reports.
+    fn name(&self) -> &'static str;
+
+    /// Best of `restarts` independent attempts (the paper re-optimises the
+    /// surrogate 10 times per iteration).
+    fn solve_best(
+        &self,
+        model: &QuadModel,
+        rng: &mut Rng,
+        restarts: usize,
+    ) -> (Vec<i8>, f64) {
+        let mut best_x = Vec::new();
+        let mut best_e = f64::INFINITY;
+        for _ in 0..restarts.max(1) {
+            let x = self.solve(model, rng);
+            let e = model.energy(&x);
+            if e < best_e {
+                best_e = e;
+                best_x = x;
+            }
+        }
+        (best_x, best_e)
+    }
+}
+
+/// Incrementally maintained local fields `f_i = h_i + Σ_k J_ik x_k` for
+/// Metropolis sweeps: O(n) refresh per accepted flip instead of an O(n)
+/// scan per *proposed* flip (≈2× on the SA/SQ/SQA inner loops —
+/// EXPERIMENTS.md §Perf).
+pub struct LocalFields {
+    pub f: Vec<f64>,
+}
+
+impl LocalFields {
+    pub fn new(model: &QuadModel, x: &[i8]) -> Self {
+        let f = (0..model.n).map(|i| model.local_field(x, i)).collect();
+        LocalFields { f }
+    }
+
+    /// ΔE of flipping spin i under the current fields.
+    #[inline]
+    pub fn delta_e(&self, x: &[i8], i: usize) -> f64 {
+        -2.0 * x[i] as f64 * self.f[i]
+    }
+
+    /// Commit the flip of spin i: update x and all fields it touches.
+    #[inline]
+    pub fn flip(&mut self, model: &QuadModel, x: &mut [i8], i: usize) {
+        let two_xi = 2.0 * x[i] as f64; // old value
+        x[i] = -x[i];
+        let row = &model.j[i * model.n..(i + 1) * model.n];
+        for (fk, &jik) in self.f.iter_mut().zip(row) {
+            *fk -= two_xi * jik;
+        }
+    }
+}
+
+/// Greedy single-spin descent to a local minimum (used as a polish step
+/// and by tests).
+pub fn greedy_descent(model: &QuadModel, x: &mut Vec<i8>) {
+    loop {
+        let mut improved = false;
+        for i in 0..model.n {
+            if model.delta_e(x, i) < 0.0 {
+                x[i] = -x[i];
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Construct solver by name ("sa", "sq", "sqa", "exhaustive").
+pub fn by_name(name: &str) -> Option<Box<dyn IsingSolver>> {
+    match name {
+        "sa" => Some(Box::new(sa::SimulatedAnnealing::default())),
+        "sq" => Some(Box::new(sq::SimulatedQuenching::default())),
+        "sqa" | "qa" => {
+            Some(Box::new(sqa::SimulatedQuantumAnnealing::default()))
+        }
+        "exhaustive" => Some(Box::new(exhaustive::Exhaustive)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn random_model(rng: &mut Rng, n: usize) -> QuadModel {
+    let mut m = QuadModel::new(n);
+    for i in 0..n {
+        m.h[i] = rng.normal();
+        for k in (i + 1)..n {
+            m.set_pair(i, k, rng.normal());
+        }
+    }
+    m.c = rng.normal();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_known_values() {
+        let mut m = QuadModel::new(2);
+        m.h = vec![0.5, -1.0];
+        m.set_pair(0, 1, 2.0);
+        m.c = 3.0;
+        // x = (+1, +1): 3 + 0.5 - 1 + 2 = 4.5
+        assert!((m.energy(&[1, 1]) - 4.5).abs() < 1e-12);
+        // x = (+1, -1): 3 + 0.5 + 1 - 2 = 2.5
+        assert!((m.energy(&[1, -1]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_e_matches_energy_difference() {
+        let mut rng = Rng::new(200);
+        let m = random_model(&mut rng, 10);
+        for _ in 0..50 {
+            let x = rng.spins(10);
+            let i = rng.below(10);
+            let mut xf = x.clone();
+            xf[i] = -xf[i];
+            let de = m.delta_e(&x, i);
+            let want = m.energy(&xf) - m.energy(&x);
+            assert!((de - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn greedy_descent_reaches_local_min() {
+        let mut rng = Rng::new(201);
+        let m = random_model(&mut rng, 12);
+        let mut x = rng.spins(12);
+        greedy_descent(&m, &mut x);
+        for i in 0..12 {
+            assert!(m.delta_e(&x, i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn field_bounds_positive() {
+        let mut rng = Rng::new(202);
+        let m = random_model(&mut rng, 8);
+        let (max_f, min_f) = m.field_bounds();
+        assert!(max_f >= min_f);
+        assert!(min_f > 0.0);
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for name in ["sa", "sq", "sqa", "qa", "exhaustive"] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,139 @@
+//! Simulated annealing (Kirkpatrick et al. 1983), configured like the
+//! D-Wave Ocean `neal` defaults the paper uses: the initial / final
+//! temperatures come from the estimated maximum / minimum effective fields
+//! scaled by 2.9 and 0.4 respectively, with a geometric β schedule and
+//! Metropolis single-spin updates.
+
+use super::{IsingSolver, QuadModel};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimulatedAnnealing {
+    /// Full sweeps over all spins.
+    pub sweeps: usize,
+    /// Hot-side temperature scaling (Ocean default ≈ 2.9).
+    pub hot_factor: f64,
+    /// Cold-side temperature scaling (Ocean default ≈ 0.4).
+    pub cold_factor: f64,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        SimulatedAnnealing { sweeps: 100, hot_factor: 2.9, cold_factor: 0.4 }
+    }
+}
+
+impl SimulatedAnnealing {
+    /// β schedule endpoints from the model's effective-field estimates
+    /// (neal convention): T_hot = hot_factor * max per-site field (every
+    /// move initially plausible), T_cold = cold_factor * the *smallest
+    /// nonzero coupling* (the finest energy scale must freeze by the end
+    /// — using the per-site bound here leaves SA finishing hot on
+    /// surrogate-shaped models).
+    pub fn beta_range(&self, model: &QuadModel) -> (f64, f64) {
+        let (max_f, _) = model.field_bounds();
+        let min_gap = model.min_nonzero_gap();
+        // ΔE of a flip is at most 2*max_field, at least 2*min_gap.
+        let beta_hot = 1.0 / (self.hot_factor * 2.0 * max_f);
+        let beta_cold =
+            1.0 / (self.cold_factor * 2.0 * min_gap).max(1e-12);
+        (beta_hot, beta_cold.max(beta_hot * (1.0 + 1e-9)))
+    }
+}
+
+impl IsingSolver for SimulatedAnnealing {
+    fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
+        let n = model.n;
+        let mut x = rng.spins(n);
+        let mut best = x.clone();
+        let mut e = model.energy(&x);
+        let mut best_e = e;
+        let mut fields = super::LocalFields::new(model, &x);
+
+        let (beta_hot, beta_cold) = self.beta_range(model);
+        let ratio = (beta_cold / beta_hot).powf(
+            1.0 / (self.sweeps.max(2) - 1) as f64,
+        );
+        let mut beta = beta_hot;
+
+        for _ in 0..self.sweeps {
+            for i in 0..n {
+                let de = fields.delta_e(&x, i);
+                if de <= 0.0 || rng.f64() < (-beta * de).exp() {
+                    fields.flip(model, &mut x, i);
+                    e += de;
+                    if e < best_e {
+                        best_e = e;
+                        best.copy_from_slice(&x);
+                    }
+                }
+            }
+            beta *= ratio;
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "sa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::{exhaustive::Exhaustive, random_model};
+
+    #[test]
+    fn finds_global_minimum_on_small_models() {
+        let mut rng = Rng::new(300);
+        let sa = SimulatedAnnealing::default();
+        let mut hits = 0;
+        for trial in 0..10 {
+            let m = random_model(&mut rng, 12);
+            let exact = Exhaustive.solve(&m, &mut rng);
+            let exact_e = m.energy(&exact);
+            let (_, e) = sa.solve_best(&m, &mut rng, 10);
+            if (e - exact_e).abs() < 1e-9 {
+                hits += 1;
+            } else {
+                assert!(e >= exact_e - 1e-9, "trial {trial}: beat exact?");
+            }
+        }
+        assert!(hits >= 8, "SA found the optimum only {hits}/10 times");
+    }
+
+    #[test]
+    fn beta_schedule_is_increasing() {
+        let mut rng = Rng::new(301);
+        let m = random_model(&mut rng, 8);
+        let sa = SimulatedAnnealing::default();
+        let (hot, cold) = sa.beta_range(&m);
+        assert!(cold > hot);
+    }
+
+    #[test]
+    fn ferromagnet_ground_state() {
+        // All-equal couplings J < 0 -> aligned ground state.
+        let n = 16;
+        let mut m = QuadModel::new(n);
+        for i in 0..n {
+            for k in (i + 1)..n {
+                m.set_pair(i, k, -1.0);
+            }
+        }
+        let mut rng = Rng::new(302);
+        let sa = SimulatedAnnealing::default();
+        let (x, _) = sa.solve_best(&m, &mut rng, 5);
+        assert!(x.iter().all(|&s| s == x[0]), "not aligned: {x:?}");
+    }
+
+    #[test]
+    fn solve_best_monotone_in_restarts() {
+        let mut rng = Rng::new(303);
+        let m = random_model(&mut rng, 14);
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let (_, e1) = sa.solve_best(&m, &mut Rng::new(1), 1);
+        let (_, e10) = sa.solve_best(&m, &mut Rng::new(1), 10);
+        assert!(e10 <= e1 + 1e-12);
+    }
+}

@@ -1,0 +1,82 @@
+//! Simulated quenching (paper SQ): Metropolis at a fixed low temperature
+//! (T = 0.1), i.e. SA with the schedule collapsed.  Deliberately bad at
+//! global exploration — the paper's finding is that this does *not* hurt
+//! BBO, because the surrogate landscape is simple.
+
+use super::{IsingSolver, QuadModel};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimulatedQuenching {
+    pub sweeps: usize,
+    /// Constant temperature (paper: 0.1).
+    pub temperature: f64,
+}
+
+impl Default for SimulatedQuenching {
+    fn default() -> Self {
+        SimulatedQuenching { sweeps: 100, temperature: 0.1 }
+    }
+}
+
+impl IsingSolver for SimulatedQuenching {
+    fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
+        let n = model.n;
+        let beta = 1.0 / self.temperature.max(1e-12);
+        let mut x = rng.spins(n);
+        let mut e = model.energy(&x);
+        let mut best = x.clone();
+        let mut best_e = e;
+        let mut fields = super::LocalFields::new(model, &x);
+        for _ in 0..self.sweeps {
+            for i in 0..n {
+                let de = fields.delta_e(&x, i);
+                if de <= 0.0 || rng.f64() < (-beta * de).exp() {
+                    fields.flip(model, &mut x, i);
+                    e += de;
+                    if e < best_e {
+                        best_e = e;
+                        best.copy_from_slice(&x);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "sq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::random_model;
+
+    #[test]
+    fn reaches_a_local_minimum_energy() {
+        let mut rng = Rng::new(310);
+        let m = random_model(&mut rng, 12);
+        let sq = SimulatedQuenching::default();
+        let x = sq.solve(&m, &mut rng);
+        // At T=0.1 with normal-scale couplings the result should be at or
+        // near a local minimum: no flip lowers energy by much.
+        for i in 0..12 {
+            assert!(m.delta_e(&x, i) > -0.8, "far from local min");
+        }
+    }
+
+    #[test]
+    fn quench_quality_not_worse_than_random() {
+        let mut rng = Rng::new(311);
+        let m = random_model(&mut rng, 16);
+        let sq = SimulatedQuenching::default();
+        let (_, e) = sq.solve_best(&m, &mut rng, 5);
+        let mut rand_best = f64::INFINITY;
+        for _ in 0..5 {
+            rand_best = rand_best.min(m.energy(&rng.spins(16)));
+        }
+        assert!(e <= rand_best);
+    }
+}

@@ -1,0 +1,154 @@
+//! Simulated quantum annealing: path-integral Monte Carlo of the
+//! transverse-field Ising model — the classical stand-in for the paper's
+//! D-Wave QPU runs (DESIGN.md §2).
+//!
+//! The quantum Hamiltonian `H(s) = -A(s) Σ σ^x_i + B(s) H_problem` is
+//! Trotterised into P coupled replicas of the classical model; the
+//! replica-coupling strength
+//!
+//! ```text
+//!   J_perp(s) = -(P T / 2) ln tanh( Γ(s) / (P T) )
+//! ```
+//!
+//! grows as the transverse field Γ(s) = Γ0 (1 - s) is annealed to zero,
+//! gradually freezing the replicas into a common classical configuration
+//! (Kadowaki & Nishimori 1998; Martoňák et al. 2002).  The answer is the
+//! lowest-energy replica at the end of the schedule.
+
+use super::{greedy_descent, IsingSolver, QuadModel};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimulatedQuantumAnnealing {
+    /// Trotter slices P.
+    pub slices: usize,
+    /// Monte Carlo sweeps over (site × slice).
+    pub sweeps: usize,
+    /// Initial transverse field in units of the max effective field.
+    pub gamma0_factor: f64,
+    /// PIMC temperature in units of the max effective field.
+    pub temperature_factor: f64,
+}
+
+impl Default for SimulatedQuantumAnnealing {
+    fn default() -> Self {
+        SimulatedQuantumAnnealing {
+            slices: 16,
+            sweeps: 100,
+            gamma0_factor: 1.5,
+            temperature_factor: 0.05,
+        }
+    }
+}
+
+impl IsingSolver for SimulatedQuantumAnnealing {
+    fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
+        let n = model.n;
+        let p = self.slices.max(2);
+        let (max_f, _) = model.field_bounds();
+        let t = self.temperature_factor * 2.0 * max_f;
+        let pt = p as f64 * t;
+        let beta_slice = 1.0 / pt.max(1e-12);
+        let gamma0 = self.gamma0_factor * 2.0 * max_f;
+
+        // Replica spins, slice-major, with incrementally maintained
+        // classical local fields per slice (EXPERIMENTS.md §Perf).
+        let mut x: Vec<Vec<i8>> = (0..p).map(|_| rng.spins(n)).collect();
+        let mut fields: Vec<super::LocalFields> =
+            x.iter().map(|xs| super::LocalFields::new(model, xs)).collect();
+
+        for sweep in 0..self.sweeps {
+            let s = (sweep + 1) as f64 / self.sweeps as f64;
+            let gamma = gamma0 * (1.0 - s);
+            // Replica coupling; clamped to keep exp() sane at gamma -> 0.
+            let tanh_arg = (gamma / pt).max(1e-12);
+            let j_perp = -0.5 * pt * tanh_arg.tanh().ln();
+
+            for slice in 0..p {
+                let up = (slice + 1) % p;
+                let down = (slice + p - 1) % p;
+                for i in 0..n {
+                    // Classical ΔE within the slice (scaled by 1/P in the
+                    // Trotter action) + replica-coupling ΔE.
+                    let de_classical =
+                        fields[slice].delta_e(&x[slice], i) / p as f64;
+                    let xi = x[slice][i] as f64;
+                    let neigh =
+                        (x[up][i] + x[down][i]) as f64;
+                    let de_perp = 2.0 * j_perp * xi * neigh;
+                    let de = de_classical + de_perp;
+                    if de <= 0.0 || rng.f64() < (-de * beta_slice * p as f64).exp()
+                    {
+                        fields[slice].flip(model, &mut x[slice], i);
+                    }
+                }
+            }
+        }
+
+        // Best replica by classical energy, then polish to a local min
+        // (the QPU readout analogue of the final projective measurement).
+        let mut best = x[0].clone();
+        let mut best_e = model.energy(&best);
+        for slice in x.iter().skip(1) {
+            let e = model.energy(slice);
+            if e < best_e {
+                best_e = e;
+                best = slice.clone();
+            }
+        }
+        greedy_descent(model, &mut best);
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "sqa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::{exhaustive::Exhaustive, random_model};
+
+    #[test]
+    fn finds_global_minimum_on_small_models() {
+        let mut rng = Rng::new(320);
+        let sqa = SimulatedQuantumAnnealing::default();
+        let mut hits = 0;
+        for _ in 0..10 {
+            let m = random_model(&mut rng, 10);
+            let exact = Exhaustive.solve(&m, &mut rng);
+            let exact_e = m.energy(&exact);
+            let (_, e) = sqa.solve_best(&m, &mut rng, 10);
+            assert!(e >= exact_e - 1e-9);
+            if (e - exact_e).abs() < 1e-9 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 8, "SQA found the optimum only {hits}/10 times");
+    }
+
+    #[test]
+    fn antiferromagnetic_pair() {
+        let mut m = QuadModel::new(2);
+        m.set_pair(0, 1, 5.0); // opposite spins preferred
+        let mut rng = Rng::new(321);
+        let sqa = SimulatedQuantumAnnealing::default();
+        let x = sqa.solve(&m, &mut rng);
+        assert_eq!(x[0], -x[1]);
+    }
+
+    #[test]
+    fn output_is_valid_spin_vector() {
+        let mut rng = Rng::new(322);
+        let m = random_model(&mut rng, 24);
+        let sqa = SimulatedQuantumAnnealing {
+            slices: 8,
+            sweeps: 20,
+            ..Default::default()
+        };
+        let x = sqa.solve(&m, &mut rng);
+        assert_eq!(x.len(), 24);
+        assert!(x.iter().all(|&s| s == 1 || s == -1));
+    }
+}

@@ -1,0 +1,461 @@
+//! Bayesian linear regression surrogates — the BOCS family.
+//!
+//! The surrogate is `y ≈ alpha . phi(x)` with a Gaussian likelihood
+//! (noise σ_n²) and one of three priors on the coefficients (paper
+//! "BBO algorithms"):
+//!
+//! * **Normal** (nBOCS): `alpha_k ~ N(0, σ²_prior)`, σ²_prior a tuned
+//!   hyperparameter (0.1 in the paper); σ_n² gets a Jeffreys prior and is
+//!   Gibbs-sampled from its inverse-gamma conditional.
+//! * **Normal-gamma** (gBOCS): `alpha, σ⁻² ~ NormalGamma(0, 1, 1, β)` —
+//!   conjugate, so σ² is drawn from its marginal inverse-gamma and alpha
+//!   from the conditional Gaussian.
+//! * **Horseshoe** (vBOCS, Carvalho et al. 2010): `alpha_k ~
+//!   N(0, β_k² τ² σ²)` with half-Cauchy scales, Gibbs-sampled via the
+//!   Makalic–Schmidt (2016) inverse-gamma auxiliary representation — the
+//!   slow-but-sparse vanilla BOCS of the paper.
+//!
+//! Each fit emits one Thompson draw from the posterior (Thompson 1933):
+//! the drawn coefficient vector is handed to the Ising solver as-is.
+//!
+//! The Gaussian draw `alpha ~ N(A⁻¹ b, A⁻¹)`, `A = G/σ_n² + diag(lam)`,
+//! is delegated to a [`PosteriorBackend`]: [`NativePosterior`] (in-tree
+//! Cholesky) or the PJRT `bocs_sample` artifact (`runtime::XlaPosterior`)
+//! — the "fast Gaussian sampler" of the paper, sharing the Gram moments
+//! across Gibbs sweeps so the O(rows·P²) work is never repeated.
+
+use super::{features, Dataset, Surrogate};
+use crate::linalg::{cho_solve, dot, solve_lower_t, Matrix};
+use crate::solvers::QuadModel;
+use crate::util::rng::Rng;
+
+/// Prior precision pinned on the intercept (effectively flat — the bias
+/// absorbs the mean cost and must not be shrunk).
+const BIAS_PRECISION: f64 = 1e-8;
+
+/// Numeric guard rails for Gibbs-sampled scales.
+const SCALE_MIN: f64 = 1e-12;
+const SCALE_MAX: f64 = 1e12;
+
+fn clamp_scale(v: f64) -> f64 {
+    v.clamp(SCALE_MIN, SCALE_MAX)
+}
+
+/// Coefficient prior — selects the BOCS variant.
+#[derive(Clone, Debug)]
+pub enum Prior {
+    /// nBOCS: fixed prior variance (paper-tuned value: 0.1).
+    Normal { sigma2: f64 },
+    /// gBOCS: NormalGamma(0, 1, a, beta) (paper: a = 1, beta = 0.001).
+    NormalGamma { a: f64, beta: f64 },
+    /// vBOCS: horseshoe, hyperparameter-free.
+    Horseshoe,
+}
+
+impl Prior {
+    pub fn label(&self) -> String {
+        match self {
+            Prior::Normal { .. } => "nBOCS".into(),
+            Prior::NormalGamma { .. } => "gBOCS".into(),
+            Prior::Horseshoe => "vBOCS".into(),
+        }
+    }
+}
+
+/// Where the O(P³) Gaussian draw happens (native Cholesky or PJRT artifact).
+pub trait PosteriorBackend: Send {
+    /// Draw `mu + L⁻ᵀ z` with `A = G/σ_n² + diag(lam)`, `b = gv/σ_n²`,
+    /// `mu = A⁻¹ b`; returns (draw, Σ ln diag L).
+    fn draw(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+    ) -> (Vec<f64>, f64);
+
+    fn backend_name(&self) -> &'static str;
+}
+
+/// In-tree Cholesky backend.
+pub struct NativePosterior;
+
+impl PosteriorBackend for NativePosterior {
+    fn draw(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+    ) -> (Vec<f64>, f64) {
+        let p = g.rows;
+        let inv_s2 = 1.0 / sigma_n2;
+        // Fused scale+diag factorisation; jitter ladder for the (rare)
+        // borderline case.
+        let mut jitter = 0.0;
+        let l = loop {
+            match crate::linalg::cholesky_scaled(g, inv_s2, lam, jitter, 0.0)
+            {
+                Some(l) => break l,
+                None => {
+                    jitter = if jitter == 0.0 { 1e-10 } else { jitter * 100.0 };
+                    assert!(jitter < 1.0, "posterior matrix not SPD");
+                }
+            }
+        };
+        let b: Vec<f64> = gv.iter().map(|v| v * inv_s2).collect();
+        let mu = cho_solve(&l, &b);
+        let u = solve_lower_t(&l, z);
+        let draw: Vec<f64> = mu.iter().zip(&u).map(|(m, d)| m + d).collect();
+        let half_logdet = (0..p).map(|i| l[(i, i)].ln()).sum();
+        (draw, half_logdet)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Horseshoe Gibbs state (Makalic–Schmidt auxiliary variables).
+#[derive(Clone, Debug)]
+struct HorseshoeState {
+    beta2: Vec<f64>,
+    nu: Vec<f64>,
+    tau2: f64,
+    xi: f64,
+}
+
+/// BOCS surrogate: Bayesian linear regression + Thompson sampling.
+pub struct Blr {
+    pub prior: Prior,
+    pub gibbs_sweeps: usize,
+    backend: Box<dyn PosteriorBackend>,
+    /// Noise variance carried across BBO iterations (warm start).
+    sigma_n2: f64,
+    hs: Option<HorseshoeState>,
+}
+
+impl Blr {
+    pub fn new(prior: Prior) -> Self {
+        Blr::with_backend(prior, Box::new(NativePosterior))
+    }
+
+    pub fn with_backend(
+        prior: Prior,
+        backend: Box<dyn PosteriorBackend>,
+    ) -> Self {
+        let sweeps = match prior {
+            Prior::Horseshoe => 5,
+            _ => 2,
+        };
+        Blr { prior, gibbs_sweeps: sweeps, backend, sigma_n2: 1.0, hs: None }
+    }
+
+    /// Residual sum of squares from the moments:
+    /// `SSR = y^T y - 2 a^T gv + a^T G a`.
+    fn ssr(data: &Dataset, alpha: &[f64]) -> f64 {
+        let ga = data.g.matvec(alpha);
+        (data.yty - 2.0 * dot(alpha, &data.gv) + dot(alpha, &ga)).max(0.0)
+    }
+
+    fn draw_alpha(
+        &self,
+        data: &Dataset,
+        lam: &[f64],
+        sigma_n2: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let z = rng.normals(data.p);
+        self.backend.draw(&data.g, &data.gv, lam, sigma_n2, &z).0
+    }
+
+    /// One Thompson sample of the coefficient vector.
+    pub fn sample_alpha(&mut self, data: &Dataset, rng: &mut Rng) -> Vec<f64> {
+        let p = data.p;
+        let rows = data.len().max(1) as f64;
+        match self.prior.clone() {
+            Prior::Normal { sigma2 } => {
+                let mut lam = vec![1.0 / sigma2.max(SCALE_MIN); p];
+                lam[0] = BIAS_PRECISION;
+                let mut alpha = Vec::new();
+                for _ in 0..self.gibbs_sweeps {
+                    alpha = self.draw_alpha(data, &lam, self.sigma_n2, rng);
+                    // Jeffreys conditional: σ_n² ~ IG(rows/2, SSR/2).
+                    let ssr = Self::ssr(data, &alpha);
+                    self.sigma_n2 = clamp_scale(
+                        rng.inv_gamma(rows / 2.0, (ssr / 2.0).max(SCALE_MIN)),
+                    );
+                }
+                alpha
+            }
+            Prior::NormalGamma { a, beta } => {
+                // Conjugate: draw σ² from the marginal, then alpha | σ².
+                // A0 = G + λ0 I (λ0 = 1), μ = A0⁻¹ gv.
+                let mut lam0 = vec![1.0; p];
+                lam0[0] = BIAS_PRECISION;
+                // μ via a native solve on A0 (σ_n² = 1, lam = lam0).
+                let zeros = vec![0.0; p];
+                let (mu, _) = self
+                    .backend
+                    .draw(&data.g, &data.gv, &lam0, 1.0, &zeros);
+                // β_post = β + (y^T y - μ^T (G + λ0) μ)/2, guarded >= β.
+                let gmu = data.g.matvec(&mu);
+                let quad = dot(&mu, &gmu)
+                    + mu.iter()
+                        .zip(&lam0)
+                        .map(|(m, l)| l * m * m)
+                        .sum::<f64>();
+                let beta_post = beta + ((data.yty - quad) / 2.0).max(0.0);
+                let a_post = a + rows / 2.0;
+                let sigma2 = clamp_scale(rng.inv_gamma(a_post, beta_post));
+                self.sigma_n2 = sigma2;
+                // alpha ~ N(μ, σ² (G + λ0)⁻¹): backend with σ_n² = σ²,
+                // lam = λ0/σ² gives A = (G + λ0)/σ².
+                let lam: Vec<f64> =
+                    lam0.iter().map(|l| l / sigma2).collect();
+                self.draw_alpha(data, &lam, sigma2, rng)
+            }
+            Prior::Horseshoe => {
+                if self.hs.is_none() {
+                    self.hs = Some(HorseshoeState {
+                        beta2: vec![1.0; p],
+                        nu: vec![1.0; p],
+                        tau2: 1.0,
+                        xi: 1.0,
+                    });
+                }
+                let mut alpha = Vec::new();
+                for _ in 0..self.gibbs_sweeps {
+                    let (lam, s2) = {
+                        let hs = self.hs.as_ref().unwrap();
+                        let mut lam: Vec<f64> = hs
+                            .beta2
+                            .iter()
+                            .map(|b2| {
+                                1.0 / clamp_scale(
+                                    b2 * hs.tau2 * self.sigma_n2,
+                                )
+                            })
+                            .collect();
+                        lam[0] = BIAS_PRECISION;
+                        (lam, self.sigma_n2)
+                    };
+                    alpha = self.draw_alpha(data, &lam, s2, rng);
+                    let ssr = Self::ssr(data, &alpha);
+                    let hs = self.hs.as_mut().unwrap();
+                    // Local scales (skip the intercept at k = 0).
+                    let mut shrink_sum = 0.0;
+                    for k in 1..p {
+                        let ak2 = alpha[k] * alpha[k];
+                        hs.beta2[k] = clamp_scale(rng.inv_gamma(
+                            1.0,
+                            1.0 / hs.nu[k]
+                                + ak2 / (2.0 * hs.tau2 * self.sigma_n2),
+                        ));
+                        hs.nu[k] = clamp_scale(
+                            rng.inv_gamma(1.0, 1.0 + 1.0 / hs.beta2[k]),
+                        );
+                        shrink_sum += ak2 / hs.beta2[k];
+                    }
+                    // Global scale.
+                    hs.tau2 = clamp_scale(rng.inv_gamma(
+                        (p as f64) / 2.0,
+                        1.0 / hs.xi + shrink_sum / (2.0 * self.sigma_n2),
+                    ));
+                    hs.xi = clamp_scale(
+                        rng.inv_gamma(1.0, 1.0 + 1.0 / hs.tau2),
+                    );
+                    // Noise.
+                    self.sigma_n2 = clamp_scale(rng.inv_gamma(
+                        (rows + (p - 1) as f64) / 2.0,
+                        ((ssr + shrink_sum / hs.tau2) / 2.0)
+                            .max(SCALE_MIN),
+                    ));
+                }
+                alpha
+            }
+        }
+    }
+}
+
+impl Surrogate for Blr {
+    fn fit_model(&mut self, data: &Dataset, rng: &mut Rng) -> QuadModel {
+        let alpha = self.sample_alpha(data, rng);
+        features::alpha_to_quad(&alpha, data.n_bits)
+    }
+
+    fn name(&self) -> String {
+        format!("{}[{}]", self.prior.label(), self.backend.backend_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::features::{n_features, phi};
+
+    /// Build a dataset from a planted quadratic model plus noise.
+    fn planted_dataset(
+        n: usize,
+        rows: usize,
+        noise: f64,
+        rng: &mut Rng,
+    ) -> (Dataset, Vec<f64>) {
+        let p = n_features(n);
+        let alpha_true: Vec<f64> = rng.normals(p);
+        let mut data = Dataset::new(n);
+        for _ in 0..rows {
+            let x = rng.spins(n);
+            let y: f64 = dot(&alpha_true, &phi(&x)) + noise * rng.normal();
+            data.push(x, y);
+        }
+        (data, alpha_true)
+    }
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn normal_prior_recovers_planted_model() {
+        let mut rng = Rng::new(500);
+        let n = 5;
+        let (data, alpha_true) = planted_dataset(n, 400, 0.01, &mut rng);
+        let mut blr = Blr::new(Prior::Normal { sigma2: 10.0 });
+        // Average several Thompson draws to beat sampling noise.
+        let mut avg = vec![0.0; data.p];
+        let draws = 20;
+        for _ in 0..draws {
+            let a = blr.sample_alpha(&data, &mut rng);
+            for (s, v) in avg.iter_mut().zip(&a) {
+                *s += v / draws as f64;
+            }
+        }
+        for (got, want) in avg.iter().zip(&alpha_true).skip(1) {
+            assert!((got - want).abs() < 0.15, "got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn all_priors_produce_finite_draws() {
+        let mut rng = Rng::new(501);
+        let n = 6;
+        let (data, _) = planted_dataset(n, 60, 0.1, &mut rng);
+        for prior in [
+            Prior::Normal { sigma2: 0.1 },
+            Prior::NormalGamma { a: 1.0, beta: 0.001 },
+            Prior::Horseshoe,
+        ] {
+            let mut blr = Blr::new(prior.clone());
+            for _ in 0..3 {
+                let a = blr.sample_alpha(&data, &mut rng);
+                assert_eq!(a.len(), data.p);
+                assert!(
+                    a.iter().all(|v| v.is_finite()),
+                    "{:?} produced non-finite draw",
+                    prior
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn horseshoe_shrinks_null_coefficients() {
+        // Planted model with only ONE active pair term: the horseshoe
+        // posterior should shrink the rest far more than it shrinks the
+        // active one.
+        let mut rng = Rng::new(502);
+        let n = 6;
+        let p = n_features(n);
+        let mut alpha_true = vec![0.0; p];
+        alpha_true[1 + n] = 3.0; // first pair term
+        let mut data = Dataset::new(n);
+        for _ in 0..150 {
+            let x = rng.spins(n);
+            let y = dot(&alpha_true, &phi(&x)) + 0.05 * rng.normal();
+            data.push(x, y);
+        }
+        let mut blr = Blr::new(Prior::Horseshoe);
+        let mut avg = vec![0.0; p];
+        let draws = 10;
+        for _ in 0..draws {
+            let a = blr.sample_alpha(&data, &mut rng);
+            for (s, v) in avg.iter_mut().zip(&a) {
+                *s += v.abs() / draws as f64;
+            }
+        }
+        let active = avg[1 + n];
+        let null_max = avg[1 + n + 1..]
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        assert!(active > 2.0, "active coefficient lost: {active}");
+        assert!(
+            null_max < 0.5 * active,
+            "null coeffs not shrunk: {null_max} vs {active}"
+        );
+    }
+
+    #[test]
+    fn surrogate_model_predicts_low_cost_at_planted_minimum() {
+        // Fit on exhaustive data of a small planted quadratic: the
+        // surrogate's minimiser must match the true minimiser.
+        let mut rng = Rng::new(503);
+        let n = 4;
+        let p = n_features(n);
+        let alpha_true: Vec<f64> = rng.normals(p);
+        let mut data = Dataset::new(n);
+        let mut true_best = (vec![], f64::INFINITY);
+        for bits in 0..(1u32 << n) {
+            let x: Vec<i8> = (0..n)
+                .map(|i| if (bits >> i) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let y = dot(&alpha_true, &phi(&x));
+            if y < true_best.1 {
+                true_best = (x.clone(), y);
+            }
+            data.push(x, y);
+        }
+        let mut blr = Blr::new(Prior::Normal { sigma2: 10.0 });
+        let model = blr.fit_model(&data, &mut rng);
+        // The planted minimiser should be at (or within noise of) the
+        // surrogate's own minimum.
+        let e_best = model.energy(&true_best.0);
+        let mut better = 0;
+        for bits in 0..(1u32 << n) {
+            let x: Vec<i8> = (0..n)
+                .map(|i| if (bits >> i) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            if model.energy(&x) < e_best - 1e-6 {
+                better += 1;
+            }
+        }
+        assert!(better <= 1, "surrogate ranks {better} configs above truth");
+    }
+
+    #[test]
+    fn native_backend_draw_statistics() {
+        // With G = I, gv = 0, lam = 1, σ_n² = 1: A = 2I, draws ~ N(0, I/2).
+        let p = 4;
+        let g = Matrix::identity(p);
+        let gv = vec![0.0; p];
+        let lam = vec![1.0; p];
+        let be = NativePosterior;
+        let mut rng = Rng::new(504);
+        let nsamp = 4000;
+        let mut m2 = vec![0.0; p];
+        for _ in 0..nsamp {
+            let z = rng.normals(p);
+            let (d, hld) = be.draw(&g, &gv, &lam, 1.0, &z);
+            assert!((hld - (2.0f64).ln() * p as f64 / 2.0).abs() < 1e-9);
+            for (s, v) in m2.iter_mut().zip(&d) {
+                *s += v * v / nsamp as f64;
+            }
+        }
+        for v in m2 {
+            assert!((v - 0.5).abs() < 0.05, "variance {v} != 0.5");
+        }
+    }
+}

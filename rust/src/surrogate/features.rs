@@ -1,0 +1,116 @@
+//! Quadratic feature map shared with the python layer.
+//!
+//! Layout contract (must match `python/compile/model.py`):
+//! `phi(x) = [1, x_1..x_n, x_1 x_2, x_1 x_3, .., x_{n-1} x_n]` — bias first,
+//! then linear terms, then upper-triangular pair products in lexicographic
+//! order.  P = 1 + n + n(n-1)/2 (the paper's `n + n(n-1)/2` explanatory
+//! variables plus the intercept).
+
+use crate::solvers::QuadModel;
+
+/// Feature dimension for n binary variables.
+pub fn n_features(n: usize) -> usize {
+    1 + n + n * (n - 1) / 2
+}
+
+/// Index of the pair feature (i, j), i < j, within the pair block.
+#[inline]
+pub fn pair_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// Feature vector of a spin configuration.
+pub fn phi(x: &[i8]) -> Vec<f64> {
+    let n = x.len();
+    let mut out = Vec::with_capacity(n_features(n));
+    out.push(1.0);
+    for &xi in x {
+        out.push(xi as f64);
+    }
+    for i in 0..n {
+        let xi = x[i] as f64;
+        for &xj in &x[i + 1..] {
+            out.push(xi * xj as f64);
+        }
+    }
+    out
+}
+
+/// Interpret a regression coefficient vector as a quadratic spin model:
+/// `E(x) = alpha . phi(x)` — the object the Ising solver minimises.
+pub fn alpha_to_quad(alpha: &[f64], n: usize) -> QuadModel {
+    assert_eq!(alpha.len(), n_features(n));
+    let mut m = QuadModel::new(n);
+    m.c = alpha[0];
+    m.h.copy_from_slice(&alpha[1..1 + n]);
+    let pairs = &alpha[1 + n..];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            m.set_pair(i, j, pairs[pair_index(n, i, j)]);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dimensions() {
+        assert_eq!(n_features(1), 2);
+        assert_eq!(n_features(24), 301); // the paper's P at n = 24
+    }
+
+    #[test]
+    fn pair_index_is_a_bijection() {
+        let n = 7;
+        let mut seen = vec![false; n * (n - 1) / 2];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = pair_index(n, i, j);
+                assert!(!seen[idx], "collision at ({i},{j})");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn phi_layout_hand_checked() {
+        let x = [1i8, -1, 1];
+        // [1, x1, x2, x3, x1x2, x1x3, x2x3]
+        assert_eq!(
+            phi(&x),
+            vec![1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0]
+        );
+    }
+
+    #[test]
+    fn alpha_to_quad_roundtrips_energy() {
+        // For any alpha: E(x) = alpha . phi(x).
+        let mut rng = Rng::new(410);
+        let n = 6;
+        let alpha: Vec<f64> = rng.normals(n_features(n));
+        let model = alpha_to_quad(&alpha, n);
+        for _ in 0..30 {
+            let x = rng.spins(n);
+            let via_phi: f64 =
+                alpha.iter().zip(phi(&x)).map(|(a, p)| a * p).sum();
+            assert!((model.energy(&x) - via_phi).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn phi_entries_are_pm_one_after_bias() {
+        let mut rng = Rng::new(411);
+        let x = rng.spins(10);
+        let f = phi(&x);
+        assert_eq!(f[0], 1.0);
+        for &v in &f[1..] {
+            assert!(v == 1.0 || v == -1.0);
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Degree-2 factorisation machine surrogate (FMQA; Rendle 2010, Kitai et
+//! al. 2020).
+//!
+//! ```text
+//!   ŷ(x) = w0 + Σ_i w_i x_i + Σ_{i<j} ⟨v_i, v_j⟩ x_i x_j
+//! ```
+//!
+//! The rank-k_FM factorisation of the pair matrix is what makes FMQA
+//! sparse/low-rank (the paper tests k_FM = 8 and 12).  Unlike BOCS the fit
+//! is a point estimate (full-batch Adam on squared error), so the
+//! surrogate→solver→evaluate loop is deterministic given the data — the
+//! trap-in-local-minimum behaviour the paper reports falls out of this.
+//!
+//! Training has two interchangeable engines: native Rust Adam (this file)
+//! and the AOT `fm_epoch` artifact via PJRT (`runtime::XlaFmTrainer`),
+//! cross-checked in integration tests.
+
+use super::{Dataset, Surrogate};
+use crate::linalg::Matrix;
+use crate::solvers::QuadModel;
+use crate::util::rng::Rng;
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
+const L2_REG: f64 = 1e-6;
+
+/// External training engine hook (the PJRT artifact path).
+pub trait FmTrainer: Send {
+    /// Run a training epoch bundle on (xs, ys), updating the parameters.
+    fn train_epoch(
+        &self,
+        xs: &[Vec<i8>],
+        ys: &[f64],
+        w0: &mut f64,
+        w: &mut [f64],
+        v: &mut Matrix,
+        lr: f64,
+    );
+
+    fn trainer_name(&self) -> &'static str;
+}
+
+/// Factorisation-machine surrogate with warm-started parameters.
+pub struct FactorizationMachine {
+    pub n: usize,
+    pub k_fm: usize,
+    pub w0: f64,
+    pub w: Vec<f64>,
+    /// Latent factors, n × k_fm.
+    pub v: Matrix,
+    /// Adam steps per fit call.
+    pub steps: usize,
+    pub lr: f64,
+    trainer: Option<Box<dyn FmTrainer>>,
+    adam_t: usize,
+    m_w0: f64,
+    v_w0: f64,
+    m_w: Vec<f64>,
+    v_w: Vec<f64>,
+    m_v: Matrix,
+    v_v: Matrix,
+}
+
+impl FactorizationMachine {
+    pub fn new(n: usize, k_fm: usize, rng: &mut Rng) -> Self {
+        let v = Matrix::from_vec(
+            n,
+            k_fm,
+            rng.normals(n * k_fm).iter().map(|z| 0.01 * z).collect(),
+        );
+        FactorizationMachine {
+            n,
+            k_fm,
+            w0: 0.0,
+            w: vec![0.0; n],
+            v: v.clone(),
+            steps: 200,
+            lr: 0.05,
+            trainer: None,
+            adam_t: 0,
+            m_w0: 0.0,
+            v_w0: 0.0,
+            m_w: vec![0.0; n],
+            v_w: vec![0.0; n],
+            m_v: Matrix::zeros(n, k_fm),
+            v_v: Matrix::zeros(n, k_fm),
+        }
+    }
+
+    /// Route training through an external engine (PJRT artifact).
+    pub fn with_trainer(mut self, trainer: Box<dyn FmTrainer>) -> Self {
+        self.trainer = Some(trainer);
+        self
+    }
+
+    /// FM forward pass for one spin vector.
+    pub fn predict(&self, x: &[i8]) -> f64 {
+        let mut y = self.w0;
+        for (wi, &xi) in self.w.iter().zip(x) {
+            y += wi * xi as f64;
+        }
+        // Σ_{i<j} ⟨v_i,v_j⟩ x_i x_j = ½ Σ_l [(Σ_i v_il x_i)² - Σ_i v_il²].
+        for l in 0..self.k_fm {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for i in 0..self.n {
+                let t = self.v[(i, l)] * x[i] as f64;
+                s += t;
+                s2 += t * t;
+            }
+            y += 0.5 * (s * s - s2);
+        }
+        y
+    }
+
+    /// One full-batch Adam step on MSE; returns the pre-step loss.
+    fn adam_step(&mut self, xs: &[Vec<i8>], ys: &[f64]) -> f64 {
+        let rows = xs.len();
+        let inv_rows = 1.0 / rows.max(1) as f64;
+        let mut g_w0 = 0.0;
+        let mut g_w = vec![0.0; self.n];
+        let mut g_v = Matrix::zeros(self.n, self.k_fm);
+        let mut loss = 0.0;
+
+        // Cache per-row XV sums s_l = Σ_i v_il x_i and reuse them for the
+        // prediction (recomputing via predict() doubled the work —
+        // EXPERIMENTS.md §Perf).
+        let mut s = vec![0.0; self.k_fm];
+        for (x, &y) in xs.iter().zip(ys) {
+            s.iter_mut().for_each(|v| *v = 0.0);
+            let mut s2_sum = 0.0;
+            let mut pred = self.w0;
+            for i in 0..self.n {
+                let xi = x[i] as f64;
+                pred += self.w[i] * xi;
+                let vrow = &self.v.data[i * self.k_fm..(i + 1) * self.k_fm];
+                for (l, &vil) in vrow.iter().enumerate() {
+                    let t = vil * xi;
+                    s[l] += t;
+                    s2_sum += t * t;
+                }
+            }
+            for &sl in s.iter() {
+                pred += 0.5 * sl * sl;
+            }
+            pred -= 0.5 * s2_sum;
+            let err = pred - y;
+            loss += err * err * inv_rows;
+            let e2 = 2.0 * err * inv_rows;
+            g_w0 += e2;
+            for i in 0..self.n {
+                let xi = x[i] as f64;
+                g_w[i] += e2 * xi;
+                let vrow = &self.v.data[i * self.k_fm..(i + 1) * self.k_fm];
+                let grow =
+                    &mut g_v.data[i * self.k_fm..(i + 1) * self.k_fm];
+                for (l, (&vil, g)) in
+                    vrow.iter().zip(grow.iter_mut()).enumerate()
+                {
+                    // d/dv_il of ½(s_l² - Σ t²) = x_i s_l - v_il x_i².
+                    *g += e2 * (xi * s[l] - vil);
+                }
+            }
+        }
+        // L2.
+        for i in 0..self.n {
+            g_w[i] += 2.0 * L2_REG * self.w[i];
+            for l in 0..self.k_fm {
+                g_v[(i, l)] += 2.0 * L2_REG * self.v[(i, l)];
+            }
+        }
+
+        // Adam update.
+        self.adam_t += 1;
+        let t = self.adam_t as f64;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let lr = self.lr;
+        let upd = |p: &mut f64, m: &mut f64, v: &mut f64, g: f64| {
+            *m = ADAM_B1 * *m + (1.0 - ADAM_B1) * g;
+            *v = ADAM_B2 * *v + (1.0 - ADAM_B2) * g * g;
+            *p -= lr * (*m / bc1) / ((*v / bc2).sqrt() + ADAM_EPS);
+        };
+        upd(&mut self.w0, &mut self.m_w0, &mut self.v_w0, g_w0);
+        for i in 0..self.n {
+            upd(&mut self.w[i], &mut self.m_w[i], &mut self.v_w[i], g_w[i]);
+            for l in 0..self.k_fm {
+                let g = g_v[(i, l)];
+                let (mut p, mut m, mut v) =
+                    (self.v[(i, l)], self.m_v[(i, l)], self.v_v[(i, l)]);
+                upd(&mut p, &mut m, &mut v, g);
+                self.v[(i, l)] = p;
+                self.m_v[(i, l)] = m;
+                self.v_v[(i, l)] = v;
+            }
+        }
+        loss
+    }
+
+    /// Fit on the dataset (warm start from the previous parameters).
+    pub fn train(&mut self, xs: &[Vec<i8>], ys: &[f64]) -> f64 {
+        if let Some(trainer) = self.trainer.take() {
+            trainer.train_epoch(
+                xs,
+                ys,
+                &mut self.w0,
+                &mut self.w,
+                &mut self.v,
+                self.lr,
+            );
+            self.trainer = Some(trainer);
+            let rows = xs.len().max(1) as f64;
+            return xs
+                .iter()
+                .zip(ys)
+                .map(|(x, &y)| {
+                    let e = self.predict(x) - y;
+                    e * e
+                })
+                .sum::<f64>()
+                / rows;
+        }
+        let mut loss = f64::INFINITY;
+        for _ in 0..self.steps {
+            loss = self.adam_step(xs, ys);
+        }
+        loss
+    }
+
+    /// The FM parameters read off as a QUBO (paper: the surrogate is
+    /// already quadratic, so no Thompson step is needed).
+    pub fn to_quad(&self) -> QuadModel {
+        let mut model = QuadModel::new(self.n);
+        model.c = self.w0;
+        model.h.copy_from_slice(&self.w);
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let mut dotv = 0.0;
+                for l in 0..self.k_fm {
+                    dotv += self.v[(i, l)] * self.v[(j, l)];
+                }
+                model.set_pair(i, j, dotv);
+            }
+        }
+        model
+    }
+}
+
+impl Surrogate for FactorizationMachine {
+    fn fit_model(&mut self, data: &Dataset, _rng: &mut Rng) -> QuadModel {
+        self.train(&data.xs, &data.ys);
+        self.to_quad()
+    }
+
+    fn name(&self) -> String {
+        let engine = self
+            .trainer
+            .as_ref()
+            .map(|t| t.trainer_name())
+            .unwrap_or("native");
+        format!("FMQA{:02}[{}]", self.k_fm, engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::features::{n_features, phi};
+
+    #[test]
+    fn predict_matches_pairwise_sum() {
+        let mut rng = Rng::new(600);
+        let fm = {
+            let mut f = FactorizationMachine::new(6, 3, &mut rng);
+            f.w0 = rng.normal();
+            f.w = rng.normals(6);
+            f.v = Matrix::from_vec(6, 3, rng.normals(18));
+            f
+        };
+        for _ in 0..20 {
+            let x = rng.spins(6);
+            let mut want = fm.w0;
+            for i in 0..6 {
+                want += fm.w[i] * x[i] as f64;
+                for j in (i + 1)..6 {
+                    let mut d = 0.0;
+                    for l in 0..3 {
+                        d += fm.v[(i, l)] * fm.v[(j, l)];
+                    }
+                    want += d * (x[i] as f64) * (x[j] as f64);
+                }
+            }
+            assert!((fm.predict(&x) - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn to_quad_agrees_with_predict() {
+        let mut rng = Rng::new(601);
+        let mut fm = FactorizationMachine::new(5, 4, &mut rng);
+        fm.w0 = 0.3;
+        fm.w = rng.normals(5);
+        fm.v = Matrix::from_vec(5, 4, rng.normals(20));
+        let q = fm.to_quad();
+        for _ in 0..20 {
+            let x = rng.spins(5);
+            assert!((q.energy(&x) - fm.predict(&x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn training_fits_planted_quadratic() {
+        // Data from a random quadratic (full rank in pair space is not
+        // required — k_fm=6 on n=6 gives enough freedom).
+        let mut rng = Rng::new(602);
+        let n = 6;
+        let alpha: Vec<f64> = rng.normals(n_features(n));
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for bits in 0..(1u32 << n) {
+            let x: Vec<i8> = (0..n)
+                .map(|i| if (bits >> i) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let y: f64 =
+                alpha.iter().zip(phi(&x)).map(|(a, p)| a * p).sum();
+            xs.push(x);
+            ys.push(y);
+        }
+        let mut fm = FactorizationMachine::new(n, 6, &mut rng);
+        fm.steps = 1500;
+        fm.lr = 0.05;
+        let loss = fm.train(&xs, &ys);
+        let var = {
+            let mean: f64 = ys.iter().sum::<f64>() / ys.len() as f64;
+            ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>()
+                / ys.len() as f64
+        };
+        assert!(loss < 0.05 * var, "loss {loss} vs var {var}");
+    }
+
+    #[test]
+    fn warm_start_improves_over_calls() {
+        let mut rng = Rng::new(603);
+        let n = 5;
+        let alpha: Vec<f64> = rng.normals(n_features(n));
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..40 {
+            let x = rng.spins(n);
+            let y: f64 =
+                alpha.iter().zip(phi(&x)).map(|(a, p)| a * p).sum();
+            xs.push(x);
+            ys.push(y);
+        }
+        let mut fm = FactorizationMachine::new(n, 5, &mut rng);
+        fm.steps = 50;
+        let l1 = fm.train(&xs, &ys);
+        let mut l5 = l1;
+        for _ in 0..6 {
+            l5 = fm.train(&xs, &ys);
+        }
+        assert!(l5 < l1, "warm start should keep improving: {l5} vs {l1}");
+    }
+
+    #[test]
+    fn surrogate_interface() {
+        let mut rng = Rng::new(604);
+        let mut data = Dataset::new(4);
+        for _ in 0..10 {
+            data.push(rng.spins(4), rng.normal());
+        }
+        let mut fm = FactorizationMachine::new(4, 3, &mut rng);
+        fm.steps = 20;
+        let model = fm.fit_model(&data, &mut rng);
+        assert_eq!(model.n, 4);
+        assert!(fm.name().starts_with("FMQA03"));
+    }
+}

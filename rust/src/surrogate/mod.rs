@@ -1,0 +1,154 @@
+//! Surrogate models for the BBO loop (paper "BBO algorithms" section).
+//!
+//! Both families approximate the black-box cost with a quadratic
+//! pseudo-Boolean function that an Ising solver can minimise:
+//!
+//! * [`blr::Blr`] — Bayesian linear regression over the quadratic feature
+//!   map with three priors: horseshoe (vBOCS), normal (nBOCS) and
+//!   normal-gamma (gBOCS).  A Thompson draw from the posterior becomes the
+//!   QUBO to minimise.
+//! * [`fm::FactorizationMachine`] — degree-2 FM surrogate (FMQA); its
+//!   (w, ⟨v_i, v_j⟩) parameters *are* the QUBO.
+//!
+//! [`Dataset`] accumulates evaluations and maintains the Gram moments
+//! (Φ^T Φ, Φ^T y, y^T y) incrementally — O(P^2) per push instead of an
+//! O(rows · P^2) rebuild per iteration, which is what makes the 48×
+//! data-augmentation variant (nBOCSa) tractable.
+
+pub mod blr;
+pub mod features;
+pub mod fm;
+
+use crate::linalg::Matrix;
+use crate::solvers::QuadModel;
+use crate::util::rng::Rng;
+
+/// Growing dataset of (spin vector, cost) pairs with incremental moments.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n_bits: usize,
+    /// Feature dimension P = 1 + n + n(n-1)/2.
+    pub p: usize,
+    pub xs: Vec<Vec<i8>>,
+    pub ys: Vec<f64>,
+    /// Φ^T Φ, maintained incrementally.
+    pub g: Matrix,
+    /// Φ^T y.
+    pub gv: Vec<f64>,
+    /// y^T y.
+    pub yty: f64,
+}
+
+impl Dataset {
+    pub fn new(n_bits: usize) -> Self {
+        let p = features::n_features(n_bits);
+        Dataset {
+            n_bits,
+            p,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            g: Matrix::zeros(p, p),
+            gv: vec![0.0; p],
+            yty: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Append one evaluation; rank-1 update of the moments.
+    pub fn push(&mut self, x: Vec<i8>, y: f64) {
+        debug_assert_eq!(x.len(), self.n_bits);
+        let phi = features::phi(&x);
+        for i in 0..self.p {
+            let pi = phi[i];
+            if pi == 0.0 {
+                continue;
+            }
+            let row = self.g.row_mut(i);
+            for (j, &pj) in phi.iter().enumerate() {
+                row[j] += pi * pj;
+            }
+            self.gv[i] += pi * y;
+        }
+        self.yty += y * y;
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    /// Best (lowest) observed cost and its argmin.
+    pub fn best(&self) -> Option<(&[i8], f64)> {
+        let mut bi = None;
+        let mut be = f64::INFINITY;
+        for (i, &y) in self.ys.iter().enumerate() {
+            if y < be {
+                be = y;
+                bi = Some(i);
+            }
+        }
+        bi.map(|i| (self.xs[i].as_slice(), be))
+    }
+
+    /// Dense feature matrix Φ (rows × P) — the XLA gram-artifact path and
+    /// tests rebuild it on demand.
+    pub fn phi_matrix(&self) -> Matrix {
+        let rows: Vec<Vec<f64>> =
+            self.xs.iter().map(|x| features::phi(x)).collect();
+        Matrix::from_rows(&rows)
+    }
+}
+
+/// Common interface: fit on the data seen so far, emit a QUBO to minimise.
+pub trait Surrogate: Send {
+    fn fit_model(&mut self, data: &Dataset, rng: &mut Rng) -> QuadModel;
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_moments_match_dense_rebuild() {
+        let mut rng = Rng::new(400);
+        let n = 6;
+        let mut data = Dataset::new(n);
+        for _ in 0..20 {
+            data.push(rng.spins(n), rng.normal());
+        }
+        let phi = data.phi_matrix();
+        let g = phi.gram();
+        for (a, b) in g.data.iter().zip(&data.g.data) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        let gv = phi.tmatvec(&data.ys);
+        for (a, b) in gv.iter().zip(&data.gv) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        let yty: f64 = data.ys.iter().map(|y| y * y).sum();
+        assert!((yty - data.yty).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut data = Dataset::new(2);
+        data.push(vec![1, 1], 3.0);
+        data.push(vec![1, -1], 1.0);
+        data.push(vec![-1, 1], 2.0);
+        let (x, y) = data.best().unwrap();
+        assert_eq!(x, &[1, -1]);
+        assert_eq!(y, 1.0);
+    }
+
+    #[test]
+    fn empty_dataset() {
+        let data = Dataset::new(4);
+        assert!(data.is_empty());
+        assert!(data.best().is_none());
+    }
+}

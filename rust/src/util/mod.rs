@@ -1,0 +1,97 @@
+//! Support substrates: RNG, JSON, timers, thread pool, property testing.
+//!
+//! The build environment is offline with a minimal vendored crate set, so
+//! these are purpose-built rather than pulled from crates.io (DESIGN.md §6).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Unbiased sample standard deviation (0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Half-width of the normal-approximation 95% confidence interval.
+pub fn ci95(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Moving-average smoothing with the given window (paper Fig. 4 uses 100).
+pub fn smooth(xs: &[f64], window: usize) -> Vec<f64> {
+    if window <= 1 || xs.is_empty() {
+        return xs.to_vec();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0;
+    for i in 0..xs.len() {
+        acc += xs[i];
+        if i >= window {
+            acc -= xs[i - window];
+        }
+        let n = (i + 1).min(window);
+        out.push(acc / n as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(ci95(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn smooth_window_one_is_identity() {
+        let xs = [3.0, 1.0, 4.0];
+        assert_eq!(smooth(&xs, 1), xs.to_vec());
+    }
+
+    #[test]
+    fn smooth_flattens_constant() {
+        let xs = vec![2.0; 50];
+        for v in smooth(&xs, 10) {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn smooth_warmup_prefix_uses_partial_window() {
+        let xs = [1.0, 3.0, 5.0, 7.0];
+        let s = smooth(&xs, 2);
+        assert!((s[0] - 1.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+        assert!((s[2] - 4.0).abs() < 1e-12);
+    }
+}

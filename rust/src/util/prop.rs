@@ -1,0 +1,68 @@
+//! Tiny property-testing substrate (proptest is not vendored).
+//!
+//! `for_all(cases, |rng| ...)` runs a property closure against many
+//! independently seeded RNGs; a failing case panics with the seed so it can
+//! be replayed exactly (`replay(seed, ...)`).  No shrinking — the
+//! generators used in this repo are small enough that the seed alone is an
+//! actionable repro.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panics with the failing seed on error.
+pub fn for_all(cases: u64, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(seed);
+                prop(&mut rng);
+            }),
+        );
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    err.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all(20, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn reports_failing_seed() {
+        for_all(5, |rng| {
+            assert!(rng.f64() < -1.0, "impossible");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = Vec::new();
+        let mut v2 = Vec::new();
+        replay(99, |rng| v1.push(rng.next_u64()));
+        replay(99, |rng| v2.push(rng.next_u64()));
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,326 @@
+//! Deterministic pseudo-random substrate.
+//!
+//! Core generator is xoshiro256++ seeded through SplitMix64 — fast, well
+//! tested statistically, and trivially reproducible across runs (every
+//! experiment takes an explicit seed).  On top of it sit the distributions
+//! the surrogate samplers need: normal, gamma / inverse-gamma (Marsaglia &
+//! Tsang), half-Cauchy (inverse CDF), exponential, plus ±1 spin vectors and
+//! Fisher–Yates shuffling.
+
+/// xoshiro256++ generator with distribution helpers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller deviate.
+    cached_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent child stream (for per-run / per-thread RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free multiply-shift; bias < 2^-64 * n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Fair coin.
+    #[inline]
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Random spin ±1.
+    #[inline]
+    pub fn spin(&mut self) -> i8 {
+        if self.bool() {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Vector of n random spins.
+    pub fn spins(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.spin()).collect()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Vector of n standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Exponential with rate 1.
+    pub fn exp(&mut self) -> f64 {
+        -(1.0 - self.f64()).ln()
+    }
+
+    /// Gamma(shape, scale) via Marsaglia–Tsang, with the shape < 1 boost.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Boost: X ~ Gamma(a+1), U^(1/a) * X ~ Gamma(a).
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v3 * scale;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Inverse-gamma(shape, scale): 1 / Gamma(shape, 1/scale).
+    pub fn inv_gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        1.0 / self.gamma(shape, 1.0 / scale)
+    }
+
+    /// Half-Cauchy(0, scale) via inverse CDF: scale * tan(pi U / 2).
+    pub fn half_cauchy(&mut self, scale: f64) -> f64 {
+        let u = self.f64();
+        scale * (std::f64::consts::FRAC_PI_2 * u).tan()
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices drawn from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            acc += x;
+        }
+        assert!((acc / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        assert!((m1 / n as f64).abs() < 0.02);
+        assert!((m2 / n as f64 - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(13);
+        for &(shape, scale) in &[(0.5, 2.0), (1.0, 1.0), (3.5, 0.5)] {
+            let n = 100_000;
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += r.gamma(shape, scale);
+            }
+            let want = shape * scale;
+            assert!(
+                (acc / n as f64 - want).abs() < 0.05 * want.max(0.2),
+                "shape={shape} scale={scale}"
+            );
+        }
+    }
+
+    #[test]
+    fn inv_gamma_mean() {
+        // mean = scale / (shape - 1) for shape > 1.
+        let mut r = Rng::new(17);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += r.inv_gamma(3.0, 4.0);
+        }
+        assert!((acc / n as f64 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn half_cauchy_median() {
+        let mut r = Rng::new(19);
+        let n = 100_000;
+        let mut below = 0usize;
+        for _ in 0..n {
+            assert!(r.half_cauchy(2.0) >= 0.0);
+            if r.half_cauchy(2.0) < 2.0 {
+                below += 1;
+            }
+        }
+        // Median of half-Cauchy(0, s) is s.
+        assert!((below as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(23);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(29);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(31);
+        for _ in 0..100 {
+            let idx = r.sample_indices(20, 8);
+            assert_eq!(idx.len(), 8);
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8);
+        }
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn spins_are_pm_one() {
+        let mut r = Rng::new(37);
+        let v = r.spins(1000);
+        assert!(v.iter().all(|&s| s == 1 || s == -1));
+        let ones = v.iter().filter(|&&s| s == 1).count();
+        assert!(ones > 400 && ones < 600);
+    }
+}

@@ -1,0 +1,79 @@
+//! Scoped parallel-map over std threads.
+//!
+//! The experiment harness fans independent BBO runs across workers; on this
+//! single-core testbed the win is overlap with PJRT-internal threads, but
+//! the structure is what a multi-core deployment would use.
+
+/// Map `f` over `items` using up to `workers` OS threads, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = workers.max(1);
+    if workers == 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_mx = std::sync::Mutex::new(&mut slots);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((idx, item)) => {
+                        let out = f(item);
+                        slots_mx.lock().unwrap()[idx] = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+/// Number of workers to use by default (leave one core for the runtime).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = parallel_map(items, 4, |x| x * 3);
+        assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavier_than_workers() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(items, 8, |x| x % 7);
+        assert_eq!(out.len(), 1000);
+        assert_eq!(out[700], 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Failure-injection and edge-case tests: corrupted artifacts, degenerate
+//! models/datasets, extreme problem shapes — the system must fail loudly
+//! at load time and stay numerically sane at run time.
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::cli::Args;
+use intdecomp::cost::{BinMatrix, Problem};
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::linalg::Matrix;
+use intdecomp::runtime::XlaRuntime;
+use intdecomp::solvers::{self, IsingSolver, QuadModel};
+use intdecomp::surrogate::{
+    blr::{Blr, Prior},
+    Dataset, Surrogate,
+};
+use intdecomp::util::rng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("intdecomp_fi_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------- artifacts --
+
+#[test]
+fn runtime_rejects_missing_meta() {
+    let dir = tmpdir("nometa");
+    assert!(XlaRuntime::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_rejects_corrupt_meta() {
+    let dir = tmpdir("badmeta");
+    std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+    assert!(XlaRuntime::load(&dir).is_err());
+    std::fs::write(dir.join("meta.json"), r#"{"n": 8}"#).unwrap();
+    assert!(XlaRuntime::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_rejects_missing_or_garbage_hlo() {
+    let dir = tmpdir("badhlo");
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"n":8,"d":100,"k":3,"nbits":24,"p":301,"batch":256,
+            "nmax":1280,"kfms":[8],"fm_steps":100}"#,
+    )
+    .unwrap();
+    // Missing cost_batch.hlo.txt entirely:
+    assert!(XlaRuntime::load(&dir).is_err());
+    // Garbage HLO text:
+    std::fs::write(dir.join("cost_batch.hlo.txt"), "HloModule junk\n!!!")
+        .unwrap();
+    assert!(XlaRuntime::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_shape_guards_fire() {
+    // Only runs when real artifacts exist.
+    let Some(rt) = XlaRuntime::load_default() else { return };
+    // Wrong W shape must error, not crash or silently pad.
+    let wrong_w = Matrix::zeros(4, 7);
+    let m = BinMatrix::ones(4, 2);
+    assert!(rt.cost_batch(&wrong_w, &[m]).is_err());
+    // Oversized dataset must error.
+    let phi = Matrix::zeros(rt.meta.nmax + 1, rt.meta.p);
+    let y = vec![0.0; rt.meta.nmax + 1];
+    assert!(rt.gram(&phi, &y).is_err());
+}
+
+// ------------------------------------------------------------- models --
+
+#[test]
+fn solvers_survive_all_zero_model() {
+    let model = QuadModel::new(12);
+    let mut rng = Rng::new(1);
+    for name in ["sa", "sq", "sqa", "exhaustive"] {
+        let solver = solvers::by_name(name).unwrap();
+        let x = solver.solve(&model, &mut rng);
+        assert_eq!(x.len(), 12, "{name}");
+        assert!(x.iter().all(|&s| s == 1 || s == -1), "{name}");
+        assert_eq!(model.energy(&x), 0.0, "{name}");
+    }
+}
+
+#[test]
+fn solvers_survive_huge_couplings() {
+    let mut model = QuadModel::new(8);
+    for i in 0..8 {
+        model.h[i] = 1e12;
+        for j in (i + 1)..8 {
+            model.set_pair(i, j, -1e12);
+        }
+    }
+    let mut rng = Rng::new(2);
+    for name in ["sa", "sq", "sqa"] {
+        let solver = solvers::by_name(name).unwrap();
+        let x = solver.solve(&model, &mut rng);
+        assert!(model.energy(&x).is_finite(), "{name}");
+    }
+}
+
+// ------------------------------------------------------------ datasets --
+
+#[test]
+fn blr_handles_constant_targets() {
+    // Zero-variance y: σ_n² conditional degenerates; draws must stay
+    // finite thanks to the scale clamps.
+    let mut rng = Rng::new(3);
+    let mut data = Dataset::new(6);
+    for _ in 0..40 {
+        data.push(rng.spins(6), 1.25);
+    }
+    for prior in [
+        Prior::Normal { sigma2: 0.1 },
+        Prior::NormalGamma { a: 1.0, beta: 0.001 },
+        Prior::Horseshoe,
+    ] {
+        let mut blr = Blr::new(prior.clone());
+        for _ in 0..3 {
+            let a = blr.sample_alpha(&data, &mut rng);
+            assert!(
+                a.iter().all(|v| v.is_finite()),
+                "{prior:?} non-finite"
+            );
+        }
+    }
+}
+
+#[test]
+fn blr_underdetermined_tiny_dataset() {
+    // 3 rows, 22 features: posterior exists only through the prior.
+    let mut rng = Rng::new(4);
+    let mut data = Dataset::new(6);
+    for _ in 0..3 {
+        data.push(rng.spins(6), rng.normal());
+    }
+    let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+    let model = blr.fit_model(&data, &mut rng);
+    assert!(model.energy(&vec![1i8; 6]).is_finite());
+}
+
+#[test]
+fn blr_duplicate_rows_only() {
+    // Rank-1 Φ: heavy collinearity, jitter ladder must cope.
+    let mut rng = Rng::new(5);
+    let mut data = Dataset::new(5);
+    let x = rng.spins(5);
+    for _ in 0..30 {
+        data.push(x.clone(), 2.0);
+    }
+    let mut blr = Blr::new(Prior::Horseshoe);
+    let a = blr.sample_alpha(&data, &mut rng);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+// ------------------------------------------------------------ problems --
+
+#[test]
+fn extreme_problem_shapes() {
+    let mut rng = Rng::new(6);
+    // K = 1 and D = 1.
+    for (n, d, k) in [(8usize, 1usize, 1usize), (2, 5, 1), (4, 3, 4)] {
+        let w = Matrix::from_vec(n, d, rng.normals(n * d));
+        let p = Problem::new(w, k);
+        let m = BinMatrix::new(n, k, rng.spins(n * k));
+        let c = p.cost(&m);
+        assert!(c.is_finite() && c >= 0.0, "({n},{d},{k})");
+        let explicit = p.cost_explicit(&m);
+        assert!((c - explicit).abs() < 1e-6 * (1.0 + explicit));
+    }
+}
+
+#[test]
+fn zero_matrix_problem() {
+    let p = Problem::new(Matrix::zeros(6, 10), 2);
+    let m = BinMatrix::ones(6, 2);
+    assert_eq!(p.cost(&m), 0.0);
+    assert_eq!(p.w_norm_sq, 0.0);
+}
+
+#[test]
+fn bbo_on_constant_oracle_terminates() {
+    struct Flat;
+    impl intdecomp::minlp::Oracle for Flat {
+        fn n_bits(&self) -> usize {
+            6
+        }
+        fn eval(&self, _x: &[i8]) -> f64 {
+            3.0
+        }
+    }
+    let sa = solvers::sa::SimulatedAnnealing {
+        sweeps: 5,
+        ..Default::default()
+    };
+    let cfg = BboConfig::smoke_scale(6, 10);
+    let run = bbo::run(
+        &Flat,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa,
+        &cfg,
+        &Backends::default(),
+        7,
+    );
+    assert_eq!(run.best_y, 3.0);
+    assert_eq!(run.ys.len(), 16);
+}
+
+#[test]
+fn rfmqa_explores_more_than_fmqa() {
+    // ε-greedy must inject random (typically fresh) candidates.
+    let p = generate(
+        &InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 11 },
+        0,
+    );
+    let sa = solvers::sa::SimulatedAnnealing {
+        sweeps: 10,
+        ..Default::default()
+    };
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 60);
+    let distinct = |algo: &Algorithm| -> usize {
+        let run = bbo::run(&p, algo, &sa, &cfg, &Backends::default(), 3);
+        let set: std::collections::HashSet<Vec<i8>> =
+            run.xs.into_iter().collect();
+        set.len()
+    };
+    let plain = distinct(&Algorithm::Fmqa { k_fm: 4 });
+    let rand = distinct(&Algorithm::Rfmqa { k_fm: 4, eps: 0.5 });
+    assert!(
+        rand >= plain,
+        "rFMQA sampled {rand} distinct vs FMQA {plain}"
+    );
+}
+
+// ---------------------------------------------------------------- cli --
+
+#[test]
+fn cli_rejects_malformed_flags() {
+    assert!(Args::parse(["--".to_string()]).is_err());
+    let a = Args::parse(["x".into(), "--runs".into(), "nan".into()])
+        .unwrap();
+    assert!(a.usize_flag("runs", 1).is_err());
+}
+
+#[test]
+fn config_rejects_bad_numbers() {
+    let a = Args::parse(["exp".into(), "--iters=abc".into()]).unwrap();
+    assert!(intdecomp::config::ExpConfig::from_args(&a).is_err());
+}

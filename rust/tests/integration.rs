@@ -1,0 +1,233 @@
+//! Cross-module integration tests: instance → cost → baselines → BBO →
+//! clustering, on problem sizes small enough to be exhaustively checked.
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::bruteforce::{brute_force, full_scan_gray};
+use intdecomp::cluster::{cut, hamming, ward};
+use intdecomp::cost::BinMatrix;
+use intdecomp::greedy::greedy;
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::minlp::{LinearLsqMinlp, Oracle};
+use intdecomp::solvers::{self, sa::SimulatedAnnealing, IsingSolver};
+use intdecomp::surrogate::{blr::{Blr, Prior}, Dataset, Surrogate};
+use intdecomp::util::rng::Rng;
+
+fn tiny_cfg() -> InstanceConfig {
+    InstanceConfig { n: 5, d: 12, k: 2, gamma: 0.8, seed: 42 }
+}
+
+#[test]
+fn pipeline_exactness_chain() {
+    // brute force == gray scan; greedy >= exact; BBO ends >= exact.
+    let p = generate(&tiny_cfg(), 0);
+    let bf = brute_force(&p);
+    let (gray_best, _, _) = full_scan_gray(&p);
+    assert!((bf.best_cost - gray_best).abs() < 1e-9);
+
+    let g = greedy(&p, 1);
+    assert!(g.cost_refit >= bf.best_cost - 1e-9);
+
+    let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 60);
+    let run = bbo::run(
+        &p,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa,
+        &cfg,
+        &Backends::default(),
+        3,
+    );
+    assert!(run.best_y >= bf.best_cost - 1e-9);
+}
+
+#[test]
+fn bbo_beats_greedy_on_most_tiny_instances() {
+    // The paper's headline: BBO reaches (near-)exact solutions the greedy
+    // can't.  On 10-bit problems nBOCS should never be worse than greedy
+    // and strictly better on instances where greedy is suboptimal.
+    let cfg = tiny_cfg();
+    let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+    let mut bbo_wins_or_ties = 0;
+    let total = 5;
+    for idx in 0..total {
+        let p = generate(&cfg, idx);
+        let g = greedy(&p, 1);
+        let bcfg = BboConfig::smoke_scale(p.n_bits(), 100);
+        let run = bbo::run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &bcfg,
+            &Backends::default(),
+            idx as u64,
+        );
+        if run.best_y <= g.cost_refit + 1e-9 {
+            bbo_wins_or_ties += 1;
+        }
+    }
+    assert!(
+        bbo_wins_or_ties >= total - 1,
+        "BBO matched/beat greedy on only {bbo_wins_or_ties}/{total}"
+    );
+}
+
+#[test]
+fn all_solvers_agree_with_exhaustive_on_surrogate_models() {
+    // Fit a BLR surrogate on real data, then check SA/SQA find the same
+    // minimum as exhaustive enumeration (the paper's Fig. 2 claim that
+    // solver choice doesn't matter on these landscapes).
+    let p = generate(&tiny_cfg(), 1);
+    let mut rng = Rng::new(11);
+    let mut data = Dataset::new(p.n_bits());
+    for _ in 0..80 {
+        let x = rng.spins(p.n_bits());
+        let y = p.cost_spins(&x);
+        data.push(x, y);
+    }
+    let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+    let model = blr.fit_model(&data, &mut rng);
+
+    let exact = solvers::exhaustive::Exhaustive.solve(&model, &mut rng);
+    let e_exact = model.energy(&exact);
+    for name in ["sa", "sqa"] {
+        let solver = solvers::by_name(name).unwrap();
+        let (_, e) = solver.solve_best(&model, &mut rng, 10);
+        assert!(
+            e <= e_exact + 1e-6,
+            "{name} missed surrogate optimum: {e} vs {e_exact}"
+        );
+    }
+}
+
+#[test]
+fn augmented_runs_find_equivalent_cost_data() {
+    let p = generate(&tiny_cfg(), 2);
+    let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+    let mut cfg = BboConfig::smoke_scale(p.n_bits(), 8);
+    cfg.augment = true;
+    let run = bbo::run(
+        &p,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa,
+        &cfg,
+        &Backends::default(),
+        5,
+    );
+    // All orbit members of the best x evaluate to the best y.
+    let m = BinMatrix::from_spins(p.n(), p.k, &run.best_x);
+    for eq in Oracle::equivalents(&p, m.as_spins()) {
+        assert!((p.cost_spins(&eq) - run.best_y).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn clustering_separates_sign_classes_of_solutions() {
+    let p = generate(&tiny_cfg(), 3);
+    let bf = brute_force(&p);
+    let pts: Vec<Vec<i8>> =
+        bf.orbit.iter().map(|m| m.data.clone()).collect();
+    if pts.len() < 4 {
+        return; // degenerate instance; nothing to check
+    }
+    let merges = ward(&pts);
+    let labels = cut(&merges, pts.len(), 4);
+    // Points in the same cluster are closer to each other than the
+    // global diameter.
+    let diam = pts
+        .iter()
+        .flat_map(|a| pts.iter().map(move |b| hamming(a, b)))
+        .max()
+        .unwrap();
+    for i in 0..pts.len() {
+        for j in (i + 1)..pts.len() {
+            if labels[i] == labels[j] {
+                assert!(hamming(&pts[i], &pts[j]) <= diam);
+            }
+        }
+    }
+}
+
+#[test]
+fn fmqa_loop_runs_and_improves_over_init() {
+    let p = generate(&tiny_cfg(), 4);
+    let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 40);
+    let run = bbo::run(
+        &p,
+        &Algorithm::Fmqa { k_fm: 4 },
+        &sa,
+        &cfg,
+        &Backends::default(),
+        6,
+    );
+    let init_best = run.best_curve[cfg.n_init - 1];
+    assert!(run.best_y <= init_best);
+}
+
+#[test]
+fn minlp_front_end_with_bbo_recovers_support() {
+    // The generalisation claim: BBO solves a subset-selection MINLP.
+    let mut rng = Rng::new(21);
+    let m = 40;
+    let n = 8;
+    let a = intdecomp::linalg::Matrix::from_vec(m, n, rng.normals(m * n));
+    let z: Vec<f64> = (0..n)
+        .map(|i| if i == 2 || i == 5 { 1.5 } else { 0.0 })
+        .collect();
+    let b = a.matvec(&z);
+    // rho well above the surrogate's resolution at this y scale (the
+    // paper tunes sigma^2 per problem class for the same reason).
+    let problem = LinearLsqMinlp::new(a, b, 0.5);
+    let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+    let cfg = BboConfig::smoke_scale(n, 80);
+    let want: Vec<i8> = (0..n)
+        .map(|i| if i == 2 || i == 5 { 1 } else { -1 })
+        .collect();
+    let want_cost = problem.eval(&want);
+    // BBO is stochastic; within a few seeds it must reach the exhaustive
+    // optimum (the true support on this noiseless planted problem).
+    let mut recovered = 0;
+    for seed in 1..=3 {
+        let run = bbo::run(
+            &problem,
+            &Algorithm::Nbocs { sigma2: 10.0 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            seed,
+        );
+        if run.best_y <= want_cost + 1e-9 {
+            assert_eq!(run.best_x, want, "cost tie with wrong support");
+            recovered += 1;
+        }
+    }
+    assert!(recovered >= 2, "support recovered in only {recovered}/3 seeds");
+}
+
+#[test]
+fn paper_scale_instance_statistics() {
+    // The synthetic "shrunk VGG" instances land in the paper's band of
+    // exact-solution residuals (0.37..0.54 reported; we allow slack).
+    let cfg = InstanceConfig::default();
+    for idx in 0..3 {
+        let p = generate(&cfg, idx);
+        let bf = brute_force(&p);
+        let nerr = p.normalised_error(bf.best_cost);
+        assert!(
+            (0.25..0.65).contains(&nerr),
+            "instance {idx}: normalised exact residual {nerr}"
+        );
+        assert_eq!(bf.orbit.len(), 48);
+    }
+}
+
+#[test]
+fn problem_cost_agrees_between_spin_and_matrix_interfaces() {
+    let p = generate(&InstanceConfig::default(), 0);
+    let mut rng = Rng::new(31);
+    for _ in 0..20 {
+        let x = rng.spins(p.n_bits());
+        let m = BinMatrix::from_spins(p.n(), p.k, &x);
+        assert_eq!(p.cost_spins(&x), p.cost(&m));
+    }
+}

@@ -1,0 +1,200 @@
+//! Property-based tests (in-tree `util::prop` substrate): invariants of
+//! the cost function, solvers, surrogate features and clustering under
+//! randomly generated inputs.
+
+use intdecomp::cost::{BinMatrix, Problem};
+use intdecomp::linalg::{cholesky, cho_solve, householder_qr, Matrix};
+use intdecomp::solvers::{greedy_descent, QuadModel};
+use intdecomp::surrogate::features::{alpha_to_quad, n_features, phi};
+use intdecomp::util::prop::for_all;
+use intdecomp::util::rng::Rng;
+
+fn rand_problem(rng: &mut Rng) -> Problem {
+    let n = 2 + rng.below(6);
+    let d = 1 + rng.below(15);
+    let k = 1 + rng.below(n.min(4));
+    let w = Matrix::from_vec(n, d, rng.normals(n * d));
+    Problem::new(w, k)
+}
+
+fn rand_bin(rng: &mut Rng, n: usize, k: usize) -> BinMatrix {
+    BinMatrix::new(n, k, rng.spins(n * k))
+}
+
+#[test]
+fn prop_cost_in_bounds_and_matches_explicit() {
+    for_all(60, |rng| {
+        let p = rand_problem(rng);
+        let m = rand_bin(rng, p.n(), p.k);
+        let fast = p.cost(&m);
+        assert!(fast >= 0.0);
+        assert!(fast <= p.w_norm_sq + 1e-9);
+        let slow = p.cost_explicit(&m);
+        assert!(
+            (fast - slow).abs() < 1e-6 * (1.0 + slow),
+            "fast {fast} explicit {slow}"
+        );
+    });
+}
+
+#[test]
+fn prop_cost_invariant_under_random_orbit_element() {
+    for_all(60, |rng| {
+        let p = rand_problem(rng);
+        let m = rand_bin(rng, p.n(), p.k);
+        let mut perm: Vec<usize> = (0..p.k).collect();
+        rng.shuffle(&mut perm);
+        let signs: Vec<i8> = (0..p.k).map(|_| rng.spin()).collect();
+        let t = m.transformed(&perm, &signs);
+        let (a, b) = (p.cost(&m), p.cost(&t));
+        assert!((a - b).abs() < 1e-9 * (1.0 + a));
+        assert_eq!(m.canonical(), t.canonical());
+    });
+}
+
+#[test]
+fn prop_adding_a_column_never_increases_cost() {
+    // Monotonicity in K: col(M) ⊆ col([M m']) ⇒ projection residual
+    // cannot grow.
+    for_all(50, |rng| {
+        let n = 3 + rng.below(5);
+        let d = 2 + rng.below(10);
+        let k = 1 + rng.below(3.min(n - 1));
+        let w = Matrix::from_vec(n, d, rng.normals(n * d));
+        let pk = Problem::new(w.clone(), k);
+        let pk1 = Problem::new(w, k + 1);
+        let m = rand_bin(rng, n, k);
+        let mut data = m.data.clone();
+        data.extend(rng.spins(n));
+        let m1 = BinMatrix::new(n, k + 1, data);
+        assert!(pk1.cost(&m1) <= pk.cost(&m) + 1e-9);
+    });
+}
+
+#[test]
+fn prop_delta_e_consistency_random_models() {
+    for_all(80, |rng| {
+        let n = 2 + rng.below(12);
+        let mut model = QuadModel::new(n);
+        for i in 0..n {
+            model.h[i] = rng.normal();
+            for j in (i + 1)..n {
+                model.set_pair(i, j, rng.normal());
+            }
+        }
+        let x = rng.spins(n);
+        let i = rng.below(n);
+        let mut xf = x.clone();
+        xf[i] = -xf[i];
+        let de = model.delta_e(&x, i);
+        assert!(
+            (de - (model.energy(&xf) - model.energy(&x))).abs() < 1e-9
+        );
+        // Greedy descent never increases energy.
+        let mut y = x.clone();
+        let before = model.energy(&y);
+        greedy_descent(&model, &mut y);
+        assert!(model.energy(&y) <= before + 1e-12);
+    });
+}
+
+#[test]
+fn prop_feature_map_energy_identity() {
+    for_all(60, |rng| {
+        let n = 2 + rng.below(10);
+        let alpha = rng.normals(n_features(n));
+        let model = alpha_to_quad(&alpha, n);
+        let x = rng.spins(n);
+        let via_phi: f64 =
+            alpha.iter().zip(phi(&x)).map(|(a, p)| a * p).sum();
+        assert!((model.energy(&x) - via_phi).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_roundtrip() {
+    for_all(40, |rng| {
+        let n = 2 + rng.below(12);
+        let a = Matrix::from_vec(n + 2, n, rng.normals((n + 2) * n));
+        let mut g = a.gram();
+        for i in 0..n {
+            g[(i, i)] += 0.3;
+        }
+        let l = cholesky(&g, 1e-12).expect("SPD");
+        let x_true = rng.normals(n);
+        let b = g.matvec(&x_true);
+        let x = cho_solve(&l, &b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_qr_orthonormal_and_reconstructs() {
+    for_all(40, |rng| {
+        let n = 2 + rng.below(6);
+        let m = n + rng.below(20);
+        let a = Matrix::from_vec(m, n, rng.normals(m * n));
+        let (q, r) = householder_qr(&a);
+        let qr = q.matmul(&r);
+        for (x, y) in qr.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-7);
+        }
+        let qtq = q.gram();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_orbit_expansion_size_divides_group_order() {
+    for_all(40, |rng| {
+        let n = 2 + rng.below(5);
+        let k = 1 + rng.below(3);
+        let m = rand_bin(rng, n, k);
+        let orbit = intdecomp::bruteforce::expand_orbit(&[m]);
+        let group = (1..=k).product::<usize>() * (1 << k);
+        assert!(group % orbit.len() == 0, "orbit {} group {group}",
+                orbit.len());
+    });
+}
+
+#[test]
+fn prop_dataset_moments_track_pushes() {
+    for_all(30, |rng| {
+        let n = 2 + rng.below(6);
+        let mut data = intdecomp::surrogate::Dataset::new(n);
+        let rows = 1 + rng.below(25);
+        for _ in 0..rows {
+            data.push(rng.spins(n), rng.normal());
+        }
+        let phi_m = data.phi_matrix();
+        let g = phi_m.gram();
+        for (a, b) in g.data.iter().zip(&data.g.data) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    });
+}
+
+#[test]
+fn prop_smooth_preserves_mean_of_constant_and_range() {
+    for_all(30, |rng| {
+        let len = 5 + rng.below(200);
+        let w = 1 + rng.below(30);
+        let xs: Vec<f64> = (0..len).map(|_| rng.f64()).collect();
+        let s = intdecomp::util::smooth(&xs, w);
+        assert_eq!(s.len(), xs.len());
+        let (lo, hi) = xs.iter().fold(
+            (f64::INFINITY, f64::NEG_INFINITY),
+            |(l, h), &x| (l.min(x), h.max(x)),
+        );
+        for &v in &s {
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12);
+        }
+    });
+}

@@ -1,0 +1,211 @@
+//! PJRT artifact integration tests: every artifact vs its native twin.
+//!
+//! These need `make artifacts` to have run; when `artifacts/` is missing
+//! the tests are skipped (so `cargo test` works in a fresh checkout) —
+//! `make test` always builds artifacts first.
+
+use std::sync::Arc;
+
+use intdecomp::cost::BinMatrix;
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::minlp::Oracle;
+use intdecomp::runtime::{XlaCostOracle, XlaFmTrainer, XlaPosterior, XlaRuntime};
+use intdecomp::surrogate::blr::{NativePosterior, PosteriorBackend};
+use intdecomp::surrogate::fm::{FactorizationMachine, FmTrainer};
+use intdecomp::surrogate::Dataset;
+use intdecomp::util::rng::Rng;
+
+fn runtime() -> Option<Arc<XlaRuntime>> {
+    XlaRuntime::load_default().map(Arc::new)
+}
+
+macro_rules! need_rt {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn cost_artifact_matches_native_cost() {
+    let rt = need_rt!();
+    let p = generate(&InstanceConfig::default(), 0);
+    let mut rng = Rng::new(1);
+    let ms: Vec<BinMatrix> = (0..rt.meta.batch + 7)
+        .map(|_| BinMatrix::new(p.n(), p.k, rng.spins(p.n_bits())))
+        .collect();
+    let xla = rt.cost_batch(&p.w, &ms).expect("cost_batch");
+    assert_eq!(xla.len(), ms.len());
+    for (m, &xc) in ms.iter().zip(&xla) {
+        let nc = p.cost(m);
+        assert!(
+            (nc - xc).abs() < 1e-4 * (1.0 + nc),
+            "native {nc} vs xla {xc}"
+        );
+    }
+}
+
+#[test]
+fn cost_artifact_handles_rank_deficient_candidates() {
+    let rt = need_rt!();
+    let p = generate(&InstanceConfig::default(), 1);
+    let mut rng = Rng::new(2);
+    let mut ms = Vec::new();
+    for _ in 0..8 {
+        let mut m = BinMatrix::new(p.n(), p.k, rng.spins(p.n_bits()));
+        // Force a duplicate / sign-flipped column.
+        let c0: Vec<i8> = m.col(0).to_vec();
+        let flip = rng.spin();
+        for i in 0..p.n() {
+            m.set(i, 2, c0[i] * flip);
+        }
+        ms.push(m);
+    }
+    let xla = rt.cost_batch(&p.w, &ms).expect("cost_batch");
+    for (m, &xc) in ms.iter().zip(&xla) {
+        let nc = p.cost(m);
+        assert!((nc - xc).abs() < 1e-4 * (1.0 + nc));
+    }
+}
+
+#[test]
+fn gram_artifact_matches_incremental_moments() {
+    let rt = need_rt!();
+    let mut rng = Rng::new(3);
+    let mut data = Dataset::new(rt.meta.nbits);
+    for _ in 0..77 {
+        data.push(rng.spins(rt.meta.nbits), rng.normal());
+    }
+    let phi = data.phi_matrix();
+    let (g, gv, yty) = rt.gram(&phi, &data.ys).expect("gram");
+    for (a, b) in g.data.iter().zip(&data.g.data) {
+        assert!((a - b).abs() < 5e-3, "gram entry {a} vs {b}");
+    }
+    for (a, b) in gv.iter().zip(&data.gv) {
+        assert!((a - b).abs() < 5e-3);
+    }
+    assert!((yty - data.yty).abs() < 5e-3 * (1.0 + data.yty.abs()));
+}
+
+#[test]
+fn posterior_artifact_matches_native_backend() {
+    let rt = need_rt!();
+    let mut rng = Rng::new(4);
+    let mut data = Dataset::new(rt.meta.nbits);
+    for _ in 0..200 {
+        let x = rng.spins(rt.meta.nbits);
+        let y = rng.normal();
+        data.push(x, y);
+    }
+    let lam = vec![2.0; rt.meta.p];
+    // Deterministic comparison at z = 0 (posterior mean).
+    let z = vec![0.0; rt.meta.p];
+    let xp = XlaPosterior { rt: rt.clone() };
+    let (a_xla, _) = xp.draw(&data.g, &data.gv, &lam, 0.7, &z);
+    let (a_nat, _) = NativePosterior.draw(&data.g, &data.gv, &lam, 0.7, &z);
+    let max_err = a_xla
+        .iter()
+        .zip(&a_nat)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 5e-3, "posterior mean disagreement {max_err}");
+}
+
+#[test]
+fn fm_artifact_trains_comparably_to_native() {
+    let rt = need_rt!();
+    let mut rng = Rng::new(5);
+    let n = rt.meta.nbits;
+    let k_fm = rt.meta.kfms[0];
+    // Planted FM data.
+    let mut truth = FactorizationMachine::new(n, 2, &mut rng);
+    truth.w = rng.normals(n);
+    truth.v = intdecomp::linalg::Matrix::from_vec(
+        n,
+        2,
+        rng.normals(n * 2),
+    );
+    let xs: Vec<Vec<i8>> = (0..120).map(|_| rng.spins(n)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| truth.predict(x)).collect();
+
+    let mse = |fm: &FactorizationMachine| -> f64 {
+        xs.iter()
+            .zip(&ys)
+            .map(|(x, &y)| {
+                let e = fm.predict(x) - y;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    };
+
+    // Native training.
+    let mut fm_native = FactorizationMachine::new(n, k_fm, &mut rng);
+    fm_native.steps = 300;
+    fm_native.lr = 0.05;
+    fm_native.train(&xs, &ys);
+    // XLA training (same step budget: 3 bundles x fm_steps=100).
+    let mut fm_xla = FactorizationMachine::new(n, k_fm, &mut rng);
+    let trainer = XlaFmTrainer { rt: rt.clone(), bundles: 3 };
+    let mut w0 = fm_xla.w0;
+    let mut w = fm_xla.w.clone();
+    let mut v = fm_xla.v.clone();
+    trainer.train_epoch(&xs, &ys, &mut w0, &mut w, &mut v, 0.05);
+    fm_xla.w0 = w0;
+    fm_xla.w = w;
+    fm_xla.v = v;
+
+    let var = {
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>()
+            / ys.len() as f64
+    };
+    let (ln, lx) = (mse(&fm_native), mse(&fm_xla));
+    assert!(ln < 0.5 * var, "native FM did not learn: {ln} vs var {var}");
+    assert!(lx < 0.5 * var, "xla FM did not learn: {lx} vs var {var}");
+}
+
+#[test]
+fn xla_cost_oracle_equivalents_preserve_cost() {
+    let rt = need_rt!();
+    let p = generate(&InstanceConfig::default(), 0);
+    let oracle = XlaCostOracle { rt, problem: p.clone() };
+    let mut rng = Rng::new(6);
+    let x = rng.spins(p.n_bits());
+    let y = oracle.eval(&x);
+    assert!((y - p.cost_spins(&x)).abs() < 1e-4 * (1.0 + y));
+    for eq in oracle.equivalents(&x).into_iter().take(5) {
+        assert!((oracle.eval(&eq) - y).abs() < 1e-4 * (1.0 + y));
+    }
+}
+
+#[test]
+fn bbo_through_xla_cost_path_runs() {
+    let rt = need_rt!();
+    let p = generate(&InstanceConfig::default(), 0);
+    let oracle = XlaCostOracle { rt, problem: p.clone() };
+    let sa = intdecomp::solvers::sa::SimulatedAnnealing {
+        sweeps: 10,
+        ..Default::default()
+    };
+    let cfg = intdecomp::bbo::BboConfig::smoke_scale(p.n_bits(), 6);
+    let run = intdecomp::bbo::run(
+        &oracle,
+        &intdecomp::bbo::Algorithm::Nbocs { sigma2: 0.1 },
+        &sa,
+        &cfg,
+        &intdecomp::bbo::Backends::default(),
+        9,
+    );
+    assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+    // Best-so-far from XLA costs must match a native re-evaluation.
+    assert!(
+        (p.cost_spins(&run.best_x) - run.best_y).abs()
+            < 1e-4 * (1.0 + run.best_y)
+    );
+}
