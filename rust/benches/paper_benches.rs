@@ -8,11 +8,14 @@
 //!   solvers     — Fig. 2 back-ends on a 24-spin surrogate
 //!   surrogate   — per-iteration surrogate fits (Table 2 decomposition)
 //!   bbo         — end-to-end iterations per algorithm (Tables 1/2 engine)
+//!   engine      — restart fan-out vs the serial restart loop, and
+//!                 batched multi-layer compression (workers 1 vs many)
 
 use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
 use intdecomp::bench::Bencher;
 use intdecomp::bruteforce::{brute_force, full_scan_gray};
 use intdecomp::cost::BinMatrix;
+use intdecomp::engine::{CompressionJob, Engine};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::{generate, InstanceConfig};
 use intdecomp::runtime::XlaRuntime;
@@ -142,6 +145,65 @@ fn main() {
         let s = b.run("baseline/greedy (Table 2 row)", 1, || {
             greedy(&p, 1).cost_refit
         });
+        println!("{}", s.report());
+    }
+
+    println!("\n== engine: restart fan-out + batched compression jobs ==");
+    let workers = intdecomp::util::threadpool::default_workers();
+    {
+        // Same forked-stream semantics in both rows, so the only variable
+        // is the thread fan-out; throughput is restarts/s.
+        let sa = solvers::sa::SimulatedAnnealing::default();
+        let mut r = Rng::new(17);
+        let s = b.run("engine/restarts x10 serial", 10, || {
+            solvers::solve_best_parallel(&sa, &model, &mut r, 10, 1).1
+        });
+        println!("{}", s.report());
+        let s = b.run(
+            &format!("engine/restarts x10 fan-out ({workers} workers)"),
+            10,
+            || solvers::solve_best_parallel(&sa, &model, &mut r, 10, workers).1,
+        );
+        println!("{}", s.report());
+    }
+    {
+        let n_jobs = 4;
+        let jiters = if quick { 6 } else { 15 };
+        let make_jobs = || -> Vec<CompressionJob> {
+            (0..n_jobs)
+                .map(|i| {
+                    let icfg = InstanceConfig {
+                        n: 6,
+                        d: 30,
+                        k: 2,
+                        gamma: 0.7,
+                        seed: 11,
+                    };
+                    CompressionJob::new(
+                        format!("layer{i}"),
+                        generate(&icfg, i),
+                        jiters,
+                        1000 + i as u64,
+                    )
+                })
+                .collect()
+        };
+        let s = b.run("engine/compress_all 4 jobs serial", n_jobs, || {
+            Engine::with_workers(1).compress_all(make_jobs()).len()
+        });
+        println!("{}", s.report());
+        let s = b.run(
+            &format!(
+                "engine/compress_all 4 jobs ({} workers)",
+                workers.min(n_jobs)
+            ),
+            n_jobs,
+            || {
+                Engine::with_workers(workers.min(n_jobs))
+                    .compress_all(make_jobs())
+                    .len()
+            },
+        );
         println!("{}", s.report());
     }
 }

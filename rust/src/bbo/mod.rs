@@ -84,6 +84,13 @@ pub struct BboConfig {
     pub restarts: usize,
     /// Add the symmetry orbit of each evaluation (nBOCSa / Fig. 3).
     pub augment: bool,
+    /// Worker threads for the restart fan-out.  `1` (the default)
+    /// reproduces the legacy serial restart loop bit-for-bit (one RNG
+    /// threaded through all restarts); any value `> 1` switches to
+    /// per-restart RNG streams forked from the loop RNG
+    /// ([`crate::solvers::solve_best_parallel`]), whose result is
+    /// bit-identical for every worker count `> 1`.
+    pub restart_workers: usize,
 }
 
 impl BboConfig {
@@ -94,12 +101,19 @@ impl BboConfig {
             iters: 2 * n_bits * n_bits,
             restarts: 10,
             augment: false,
+            restart_workers: 1,
         }
     }
 
     /// Reduced smoke scale for tests / default CLI runs.
     pub fn smoke_scale(n_bits: usize, iters: usize) -> Self {
-        BboConfig { n_init: n_bits, iters, restarts: 10, augment: false }
+        BboConfig {
+            n_init: n_bits,
+            iters,
+            restarts: 10,
+            augment: false,
+            restart_workers: 1,
+        }
     }
 }
 
@@ -235,7 +249,17 @@ pub fn run(
                 let model = sur.fit_model(&data, &mut rng);
                 t_sur += t.seconds();
                 let t = Timer::start();
-                let (x, _) = solver.solve_best(&model, &mut rng, cfg.restarts);
+                let (x, _) = if cfg.restart_workers > 1 {
+                    crate::solvers::solve_best_parallel(
+                        solver,
+                        &model,
+                        &mut rng,
+                        cfg.restarts,
+                        cfg.restart_workers,
+                    )
+                } else {
+                    solver.solve_best(&model, &mut rng, cfg.restarts)
+                };
                 t_sol += t.seconds();
                 if eps > 0.0 && rng.f64() < eps {
                     rng.spins(n) // randomised-FMQA exploration step
@@ -374,6 +398,24 @@ mod tests {
             assert_eq!(r.ys.len(), cfg.n_init + cfg.iters, "{name}");
             assert!(r.best_y.is_finite(), "{name}");
         }
+    }
+
+    #[test]
+    fn restart_fanout_is_worker_count_invariant() {
+        // restart_workers > 1 uses forked per-restart streams, so the
+        // whole run is bit-identical for any worker count > 1.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        cfg.restart_workers = 2;
+        let a = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 11);
+        cfg.restart_workers = 6;
+        let b = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 11);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.best_x, b.best_x);
+        assert_eq!(a.best_y, b.best_y);
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Memoised black-box evaluation.
+//!
+//! The BBO loop re-proposes candidates — across solver restarts, across
+//! iterations (FMQA's deterministic trap re-acquires the same `x` for many
+//! consecutive steps), and across the symmetry orbit — and every repeat
+//! pays the `O(K·N²)` masked-Gram–Schmidt cost evaluation again.
+//! [`CostCache`] memoises costs keyed on [`BinMatrix`] (`Hash + Eq`), and
+//! [`CachedOracle`] wraps any [`Oracle`] with it transparently.
+//!
+//! The cache is thread-safe (a `Mutex` map plus atomic hit/miss counters)
+//! so a single instance can back concurrent evaluations; values are pure
+//! functions of the key, so a racing duplicate evaluation inserts the same
+//! value and costs only the wasted work.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cost::BinMatrix;
+use crate::minlp::Oracle;
+
+/// Hit/miss accounting snapshot of a [`CostCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Total lookups (one per `eval` call routed through the cache).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.lookups();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Memoised cost table keyed on the binary candidate matrix.
+#[derive(Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<BinMatrix, f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    canonical: bool,
+}
+
+impl CostCache {
+    /// Exact-key cache: a candidate hits only if the very same `M` was
+    /// evaluated before.  This never changes any numeric result, so runs
+    /// through the cache stay bit-identical to uncached runs.
+    pub fn new() -> Self {
+        CostCache::default()
+    }
+
+    /// Orbit-folding cache: keys are canonicalised
+    /// ([`BinMatrix::canonical`]), so all `K!·2^K` symmetry-equivalent
+    /// candidates share one entry.  Mathematically exact (the cost is
+    /// orbit-invariant) but the returned value is the representative's
+    /// float, which can differ from a direct evaluation in the last ulps —
+    /// opt in where bit-identical replay doesn't matter.
+    pub fn with_canonical_keys() -> Self {
+        CostCache { canonical: true, ..Default::default() }
+    }
+
+    /// Look `m` up; on a miss, evaluate (outside the lock) and insert.
+    /// The hit path allocates nothing with exact keys: the candidate is
+    /// only cloned when it has to be stored.
+    pub fn get_or_eval(
+        &self,
+        m: &BinMatrix,
+        eval: impl FnOnce() -> f64,
+    ) -> f64 {
+        if self.canonical {
+            let key = m.canonical();
+            if let Some(&c) = self.map.lock().unwrap().get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return c;
+            }
+            let c = eval();
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.map.lock().unwrap().insert(key, c);
+            return c;
+        }
+        if let Some(&c) = self.map.lock().unwrap().get(m) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return c;
+        }
+        let c = eval();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(m.clone(), c);
+        c
+    }
+
+    /// Distinct keys stored.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An [`Oracle`] adaptor that routes every evaluation through a
+/// [`CostCache`].  Purely transparent with exact keys: same values, same
+/// call order, just no duplicate work.
+pub struct CachedOracle<'a> {
+    inner: &'a dyn Oracle,
+    cache: &'a CostCache,
+    n: usize,
+    k: usize,
+}
+
+impl<'a> CachedOracle<'a> {
+    /// `n`/`k` give the `BinMatrix` shape of the flat spin vectors
+    /// (`n_bits = n * k`).
+    pub fn new(
+        inner: &'a dyn Oracle,
+        cache: &'a CostCache,
+        n: usize,
+        k: usize,
+    ) -> Self {
+        assert_eq!(inner.n_bits(), n * k, "oracle bits != n * k");
+        CachedOracle { inner, cache, n, k }
+    }
+}
+
+impl Oracle for CachedOracle<'_> {
+    fn n_bits(&self) -> usize {
+        self.inner.n_bits()
+    }
+
+    fn eval(&self, x: &[i8]) -> f64 {
+        let m = BinMatrix::from_spins(self.n, self.k, x);
+        self.cache.get_or_eval(&m, || self.inner.eval(x))
+    }
+
+    fn equivalents(&self, x: &[i8]) -> Vec<Vec<i8>> {
+        self.inner.equivalents(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::{generate, InstanceConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny() -> crate::cost::Problem {
+        let cfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 12 };
+        generate(&cfg, 0)
+    }
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let p = tiny();
+        let cache = CostCache::new();
+        let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+        let mut rng = Rng::new(1);
+        let x = rng.spins(p.n_bits());
+        let y1 = oracle.eval(&x);
+        let y2 = oracle.eval(&x);
+        assert_eq!(y1, y2);
+        assert_eq!(y1, p.cost_spins(&x));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        // A guaranteed-distinct candidate: flip one entry.
+        let mut x2 = x.clone();
+        x2[0] = -x2[0];
+        let _ = oracle.eval(&x2);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn exact_keys_distinguish_orbit_members() {
+        let p = tiny();
+        let cache = CostCache::new();
+        let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+        let mut rng = Rng::new(2);
+        let m = crate::cost::BinMatrix::new(4, 2, rng.spins(8));
+        let t = m.transformed(&[1, 0], &[1, -1]);
+        let _ = oracle.eval(m.as_spins());
+        let _ = oracle.eval(t.as_spins());
+        // Orbit member is a different exact key -> two misses.
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn canonical_keys_fold_the_orbit() {
+        let p = tiny();
+        let cache = CostCache::with_canonical_keys();
+        let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+        let mut rng = Rng::new(3);
+        let m = crate::cost::BinMatrix::new(4, 2, rng.spins(8));
+        let t = m.transformed(&[1, 0], &[1, -1]);
+        let y1 = oracle.eval(m.as_spins());
+        let y2 = oracle.eval(t.as_spins());
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        // Same stored float, and orbit-invariance says it's the true cost.
+        assert_eq!(y1, y2);
+        assert!((y2 - p.cost(&t)).abs() < 1e-9 * (1.0 + y2));
+    }
+
+    #[test]
+    fn concurrent_use_is_consistent() {
+        let p = tiny();
+        let cache = CostCache::new();
+        let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+        // 8 guaranteed-distinct candidates (bit patterns), each queried 4
+        // times, across workers.
+        let cands: Vec<Vec<i8>> = (0..8u32)
+            .map(|i| {
+                (0..p.n_bits())
+                    .map(|b| if (i >> b) & 1 == 1 { 1 } else { -1 })
+                    .collect()
+            })
+            .collect();
+        let queries: Vec<Vec<i8>> = (0..32)
+            .map(|i| cands[i % 8].clone())
+            .collect();
+        let got = crate::util::threadpool::parallel_map(
+            queries.clone(),
+            4,
+            |x| oracle.eval(&x),
+        );
+        for (x, y) in queries.iter().zip(&got) {
+            assert_eq!(*y, p.cost_spins(x));
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups(), 32);
+        assert_eq!(cache.len(), 8);
+        // Racing first evaluations may double-miss, but never more than
+        // one extra miss per key per worker overlap.
+        assert!(s.misses >= 8 && s.misses <= 32);
+    }
+}

@@ -1,0 +1,346 @@
+//! Parallel batched compression engine — the multi-layer, multi-core
+//! driver the edge-computing scenario needs.
+//!
+//! The BBO pipeline is embarrassingly parallel at three levels, and this
+//! module wires all three through `util::threadpool`:
+//!
+//! 1. **Solver restarts** within one BBO iteration —
+//!    [`crate::solvers::solve_best_parallel`], enabled per run via
+//!    [`crate::bbo::BboConfig::restart_workers`].
+//! 2. **Candidate evaluation** — repeated candidates are memoised by
+//!    [`cache::CostCache`] / [`cache::CachedOracle`], so re-acquired `M`s
+//!    never re-pay the `O(K·N²)` cost evaluation.
+//! 3. **Whole-model compression** — [`Engine::compress_all`] fans a batch
+//!    of [`CompressionJob`]s (one per layer matrix) across workers pulling
+//!    from a shared queue, with per-job seeds.
+//!
+//! Determinism contract: results are a pure function of each job's seed
+//! and config — independent of `workers`, job interleaving, and (for
+//! `restart_workers > 1`) the fan-out width.  With the default
+//! `restart_workers = 1` every job is bit-identical to a plain serial
+//! [`bbo::run`] with the same seed, which the engine regression tests
+//! assert.
+
+pub mod cache;
+
+pub use cache::{CacheStats, CachedOracle, CostCache};
+
+use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun};
+use crate::cost::{compression_ratio, BinMatrix, Problem};
+use crate::report;
+use crate::solvers::{self, IsingSolver};
+use crate::util::threadpool::{default_workers, parallel_map};
+
+/// Float width used for all size/ratio reporting (the paper's f32 layers).
+const FLOAT_BITS: usize = 32;
+
+/// Engine-level parallelism knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Concurrent compression jobs.
+    pub workers: usize,
+    /// Restart fan-out *within* each job (`1` = legacy serial restarts,
+    /// bit-identical to `bbo::run`; `> 1` = forked per-restart streams).
+    pub restart_workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: default_workers(), restart_workers: 1 }
+    }
+}
+
+/// One layer matrix to compress: problem + algorithm + budget + seed.
+pub struct CompressionJob {
+    /// Display name, e.g. the layer label.
+    pub name: String,
+    pub problem: Problem,
+    pub algo: Algorithm,
+    pub solver: Box<dyn IsingSolver>,
+    pub cfg: BboConfig,
+    pub seed: u64,
+}
+
+impl CompressionJob {
+    /// Job with the paper-default algorithm (nBOCS, σ² = 0.1) and SA
+    /// solver, at `iters` acquisition iterations.
+    pub fn new(
+        name: impl Into<String>,
+        problem: Problem,
+        iters: usize,
+        seed: u64,
+    ) -> Self {
+        let cfg = BboConfig::smoke_scale(problem.n_bits(), iters);
+        CompressionJob {
+            name: name.into(),
+            problem,
+            algo: Algorithm::Nbocs { sigma2: 0.1 },
+            solver: Box::new(solvers::sa::SimulatedAnnealing::default()),
+            cfg,
+            seed,
+        }
+    }
+
+    pub fn with_algo(mut self, algo: Algorithm) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: Box<dyn IsingSolver>) -> Self {
+        self.solver = solver;
+        self
+    }
+}
+
+/// Output of one job: the full BBO trace plus compression metrics and
+/// cache accounting.
+pub struct JobResult {
+    pub name: String,
+    /// Layer shape (N×D) and decomposition rank K.
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub run: BboRun,
+    /// The winning binary factor M.
+    pub best_m: BinMatrix,
+    pub cache: CacheStats,
+    /// Compressed/original size at 32-bit floats.
+    pub ratio: f64,
+    /// `||f(M)|| / ||W||` of the winner.
+    pub normalised_error: f64,
+}
+
+/// The compression engine: a configuration plus `compress_all`.
+pub struct Engine {
+    pub cfg: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Engine { cfg }
+    }
+
+    /// `workers` concurrent jobs, serial restarts inside each.
+    pub fn with_workers(workers: usize) -> Self {
+        Engine { cfg: EngineConfig { workers, restart_workers: 1 } }
+    }
+
+    /// Compress every job, fanning jobs across `cfg.workers` threads.
+    /// Results come back in job order regardless of scheduling, and each
+    /// is a pure function of the job (see module docs), so any worker
+    /// count yields identical output.
+    pub fn compress_all(&self, jobs: Vec<CompressionJob>) -> Vec<JobResult> {
+        let restart_workers = self.cfg.restart_workers;
+        parallel_map(jobs, self.cfg.workers, move |job| {
+            run_job(job, restart_workers)
+        })
+    }
+}
+
+fn run_job(job: CompressionJob, restart_workers: usize) -> JobResult {
+    let cache = CostCache::new();
+    let oracle =
+        CachedOracle::new(&job.problem, &cache, job.problem.n(), job.problem.k);
+    let mut cfg = job.cfg.clone();
+    if restart_workers > 1 {
+        cfg.restart_workers = restart_workers;
+    }
+    let run = bbo::run(
+        &oracle,
+        &job.algo,
+        job.solver.as_ref(),
+        &cfg,
+        &Backends::default(),
+        job.seed,
+    );
+    let best_m =
+        BinMatrix::from_spins(job.problem.n(), job.problem.k, &run.best_x);
+    let normalised_error = job.problem.normalised_error(run.best_y);
+    JobResult {
+        name: job.name,
+        n: job.problem.n(),
+        d: job.problem.d(),
+        k: job.problem.k,
+        best_m,
+        cache: cache.stats(),
+        ratio: compression_ratio(
+            job.problem.n(),
+            job.problem.d(),
+            job.problem.k,
+            FLOAT_BITS,
+        ),
+        normalised_error,
+        run,
+    }
+}
+
+/// Aggregate compressed/original size over all jobs: each layer's
+/// [`compression_ratio`] weighted by its original size, so the per-layer
+/// and whole-model numbers share one formula.
+pub fn overall_ratio(results: &[JobResult]) -> f64 {
+    let mut orig = 0.0;
+    let mut comp = 0.0;
+    for r in results {
+        let o = (r.n * r.d * FLOAT_BITS) as f64;
+        orig += o;
+        comp += o * compression_ratio(r.n, r.d, r.k, FLOAT_BITS);
+    }
+    if orig == 0.0 {
+        0.0
+    } else {
+        comp / orig
+    }
+}
+
+/// Per-layer ASCII summary (the aggregated `report::` output).
+pub fn summary_table(results: &[JobResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{}x{}", r.n, r.d),
+                r.k.to_string(),
+                r.run.algo.clone(),
+                r.run.ys.len().to_string(),
+                report::fmt(r.run.best_y),
+                format!("{:.4}", r.normalised_error),
+                format!("{:.1}%", 100.0 * r.ratio),
+                format!(
+                    "{}/{} ({:.0}%)",
+                    r.cache.hits,
+                    r.cache.lookups(),
+                    100.0 * r.cache.hit_rate()
+                ),
+                format!("{:.2}", r.run.time_total),
+            ]
+        })
+        .collect();
+    report::ascii_table(
+        &[
+            "layer", "shape", "K", "algo", "evals", "best cost", "err",
+            "size", "cache hits", "time s",
+        ],
+        &rows,
+    )
+}
+
+/// Machine-readable per-layer results (CSV, `report::write_csv`).
+pub fn write_results_csv(
+    path: impl AsRef<std::path::Path>,
+    results: &[JobResult],
+) -> std::io::Result<()> {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.n.to_string(),
+                r.d.to_string(),
+                r.k.to_string(),
+                r.run.algo.clone(),
+                r.run.solver.clone(),
+                r.run.ys.len().to_string(),
+                format!("{:.12e}", r.run.best_y),
+                format!("{:.6}", r.normalised_error),
+                format!("{:.6}", r.ratio),
+                r.cache.hits.to_string(),
+                r.cache.misses.to_string(),
+                format!("{:.4}", r.run.time_total),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        path,
+        &[
+            "layer",
+            "n",
+            "d",
+            "k",
+            "algo",
+            "solver",
+            "evals",
+            "best_cost",
+            "normalised_error",
+            "compression_ratio",
+            "cache_hits",
+            "cache_misses",
+            "time_s",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::{generate, InstanceConfig};
+
+    fn tiny_job(idx: usize, iters: usize) -> CompressionJob {
+        let cfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 9 };
+        CompressionJob::new(
+            format!("l{idx}"),
+            generate(&cfg, idx),
+            iters,
+            idx as u64,
+        )
+        .with_solver(Box::new(crate::solvers::sa::SimulatedAnnealing {
+            sweeps: 10,
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn empty_jobs_give_empty_results() {
+        assert!(Engine::with_workers(4).compress_all(Vec::new()).is_empty());
+        assert_eq!(overall_ratio(&[]), 0.0);
+    }
+
+    #[test]
+    fn results_preserve_job_order_and_account_the_cache() {
+        let r = Engine::with_workers(2)
+            .compress_all((0..3).map(|i| tiny_job(i, 6)).collect());
+        assert_eq!(r.len(), 3);
+        for (i, jr) in r.iter().enumerate() {
+            assert_eq!(jr.name, format!("l{i}"));
+            assert_eq!((jr.n, jr.d, jr.k), (4, 8, 2));
+            assert_eq!(jr.best_m.n, 4);
+            assert_eq!(jr.best_m.k, 2);
+            // n_init (8 bits) + 6 iterations, one cache lookup each.
+            assert_eq!(jr.run.ys.len(), 8 + 6);
+            assert_eq!(jr.cache.lookups() as usize, jr.run.ys.len());
+            assert!(jr.ratio > 0.0 && jr.ratio < 1.0);
+            assert!(jr.normalised_error.is_finite());
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let a = Engine::with_workers(1)
+            .compress_all((0..3).map(|i| tiny_job(i, 8)).collect());
+        let b = Engine::with_workers(8)
+            .compress_all((0..3).map(|i| tiny_job(i, 8)).collect());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.run.ys, y.run.ys);
+            assert_eq!(x.run.best_x, y.run.best_x);
+            assert_eq!(x.run.best_y, y.run.best_y);
+            assert_eq!(x.cache, y.cache);
+        }
+    }
+
+    #[test]
+    fn summary_and_csv_render() {
+        let r = Engine::with_workers(1).compress_all(vec![tiny_job(0, 5)]);
+        let table = summary_table(&r);
+        assert!(table.contains("l0"));
+        assert!(table.contains("cache hits"));
+        assert!(overall_ratio(&r) > 0.0);
+        let dir = std::env::temp_dir().join("intdecomp_engine_csv");
+        let path = dir.join("out.csv");
+        write_results_csv(&path, &r).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("layer,"));
+        assert!(text.contains("l0"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

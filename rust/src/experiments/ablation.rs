@@ -26,6 +26,7 @@ fn run_with(
         iters: ctx.cfg.iters,
         restarts,
         augment: false,
+        restart_workers: 1,
     };
     let results: Vec<_> = (0..runs)
         .map(|r| {

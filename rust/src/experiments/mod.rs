@@ -157,6 +157,7 @@ impl Ctx {
             iters: self.cfg.iters,
             restarts: self.cfg.restarts,
             augment: false,
+            restart_workers: 1,
         }
     }
 

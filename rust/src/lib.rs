@@ -22,6 +22,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod cost;
+pub mod engine;
 pub mod experiments;
 pub mod greedy;
 pub mod instance;

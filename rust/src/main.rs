@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   decompose                 compress one instance end-to-end (greedy vs BBO)
 //!   run                       single BBO run, full trace to stdout/CSV
+//!   compress-model            compress all layers of a synthetic model
+//!                             concurrently (the parallel batched engine)
 //!   brute-force               exact search of an instance
 //!   greedy                    original SPADE baseline
 //!   exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|table1|table2|all
@@ -10,7 +12,8 @@
 //!
 //! Common flags: --full (paper scale), --runs N, --iters N, --instances N,
 //! --seed S, --n/--d/--k (problem shape), --solver sa|sqa|sq, --algo NAME,
-//! --augment, --no-xla, --out DIR.
+//! --augment, --no-xla, --out DIR, --layers N (compress-model),
+//! --workers N, --restart-workers N (Ising-restart fan-out).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -19,6 +22,7 @@ use intdecomp::bruteforce::brute_force;
 use intdecomp::cli::Args;
 use intdecomp::config::ExpConfig;
 use intdecomp::cost::BinMatrix;
+use intdecomp::engine::{self, CompressionJob, Engine, EngineConfig};
 use intdecomp::experiments::{self as exp, Ctx};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::generate;
@@ -46,6 +50,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match cmd {
         "decompose" => cmd_decompose(args),
         "run" => cmd_run(args),
+        "compress-model" => cmd_compress_model(args),
         "brute-force" | "bruteforce" => cmd_brute_force(args),
         "greedy" => cmd_greedy(args),
         "exp" => cmd_exp(args),
@@ -66,6 +71,8 @@ USAGE: intdecomp <subcommand> [flags]
 
   decompose        end-to-end compression of one instance (greedy vs BBO)
   run              one BBO run with trace output
+  compress-model   compress every layer of a synthetic model concurrently
+                   (the parallel batched engine; see --layers/--workers)
   brute-force      exact search (best / second-best / solution orbit)
   greedy           the original SPADE baseline
   exp <fig|table>  reproduce a paper figure/table:
@@ -85,6 +92,12 @@ FLAGS (defaults in parens):
   --augment         data augmentation (nBOCSa)
   --no-xla          skip PJRT artifacts, native math only
   --out DIR         results directory (results)
+  --layers N        compress-model: number of layer matrices (4)
+  --workers N       concurrent jobs / runs (all cores)
+  --restart-workers N
+                    Ising-restart fan-out per BBO iteration (1 = legacy
+                    serial restarts; >1 = forked per-restart RNG streams,
+                    bit-identical for any worker count)
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -130,6 +143,9 @@ fn cmd_decompose(args: &Args) -> Result<()> {
         iters: cfg.iters,
         restarts: cfg.restarts,
         augment: args.bool_flag("augment"),
+        restart_workers: args
+            .usize_flag("restart-workers", 1)
+            .map_err(|e| anyhow!(e))?,
     };
     let run = bbo::run(
         &p,
@@ -171,6 +187,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         iters: cfg.iters,
         restarts: cfg.restarts,
         augment: args.bool_flag("augment"),
+        restart_workers: args
+            .usize_flag("restart-workers", 1)
+            .map_err(|e| anyhow!(e))?,
     };
     let run = bbo::run(
         &p,
@@ -193,6 +212,80 @@ fn cmd_run(args: &Args) -> Result<()> {
         "time: total {:.3}s  surrogate {:.3}s  solver {:.3}s  eval {:.3}s",
         run.time_total, run.time_surrogate, run.time_solver, run.time_eval
     );
+    Ok(())
+}
+
+/// Compress a whole synthetic model — one instance per layer — through the
+/// parallel batched engine, and print the aggregated per-layer report.
+fn cmd_compress_model(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let layers = args.usize_flag("layers", 4).map_err(|e| anyhow!(e))?;
+    if layers == 0 {
+        bail!("--layers must be >= 1");
+    }
+    let restart_workers = args
+        .usize_flag("restart-workers", 1)
+        .map_err(|e| anyhow!(e))?;
+    let algo = Algorithm::by_name(&args.str_flag("algo", "nbocs"))
+        .ok_or_else(|| anyhow!("unknown --algo"))?;
+    let solver_name = args.str_flag("solver", "sa");
+
+    let mut jobs = Vec::with_capacity(layers);
+    for i in 0..layers {
+        let p = generate(&cfg.instance, i);
+        let solver = solvers::by_name(&solver_name)
+            .ok_or_else(|| anyhow!("unknown --solver"))?;
+        jobs.push(CompressionJob {
+            name: format!("layer{}", i + 1),
+            cfg: BboConfig {
+                n_init: p.n_bits(),
+                iters: cfg.iters,
+                restarts: cfg.restarts,
+                augment: args.bool_flag("augment"),
+                restart_workers: 1,
+            },
+            problem: p,
+            algo: algo.clone(),
+            solver,
+            seed: cfg.seed.wrapping_add(i as u64),
+        });
+    }
+
+    println!(
+        "compress-model: {layers} layers ({}x{}, K={}) on {} workers \
+         (restart fan-out: {restart_workers})",
+        cfg.instance.n, cfg.instance.d, cfg.instance.k, cfg.workers
+    );
+    let t = intdecomp::util::timer::Timer::start();
+    let eng = Engine::new(EngineConfig {
+        workers: cfg.workers,
+        restart_workers,
+    });
+    let results = eng.compress_all(jobs);
+    let wall = t.seconds();
+
+    print!("{}", engine::summary_table(&results));
+    let (mut hits, mut lookups, mut evals) = (0u64, 0u64, 0usize);
+    let mut serial_time = 0.0;
+    for r in &results {
+        hits += r.cache.hits;
+        lookups += r.cache.lookups();
+        evals += r.run.ys.len();
+        serial_time += r.run.time_total;
+    }
+    println!(
+        "total: {evals} evaluations, cache {hits}/{lookups} hits, \
+         overall size {:.1}% of original",
+        100.0 * engine::overall_ratio(&results)
+    );
+    println!(
+        "wall {wall:.2}s vs per-job sum {serial_time:.2}s  \
+         ({:.2}x concurrency)",
+        serial_time / wall.max(1e-9)
+    );
+    let csv = std::path::Path::new(&cfg.out_dir).join("compress_model.csv");
+    engine::write_results_csv(&csv, &results)?;
+    println!("wrote {}", csv.display());
     Ok(())
 }
 

@@ -1,0 +1,286 @@
+//! The real PJRT-backed runtime (requires the `xla` bindings; compiled
+//! only with `--features xla`).  See `runtime/stub.rs` for the default
+//! native stand-in.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ArtifactMeta;
+use crate::cost::BinMatrix;
+use crate::linalg::Matrix;
+
+struct Executables {
+    client: xla::PjRtClient,
+    cost: xla::PjRtLoadedExecutable,
+    gram: xla::PjRtLoadedExecutable,
+    bocs: xla::PjRtLoadedExecutable,
+    fms: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+/// Compiled-artifact runtime.
+///
+/// Safety note on `Send`/`Sync`: the underlying PJRT CPU client is
+/// thread-safe for compilation and execution (it serialises through its own
+/// task runtime); the raw pointers in the `xla` wrapper types are what stop
+/// the auto-traits.  We additionally serialise all `execute` calls through
+/// a `Mutex`, so exposing the wrapper across threads is sound.
+pub struct XlaRuntime {
+    exes: Mutex<Executables>,
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+}
+
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .with_context(|| format!("loading {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+fn f32s(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+impl XlaRuntime {
+    /// Load and compile all artifacts from a directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let cost = load_exe(&client, &dir, "cost_batch")?;
+        let gram = load_exe(&client, &dir, "gram")?;
+        let bocs = load_exe(&client, &dir, "bocs_sample")?;
+        let mut fms = Vec::new();
+        for &kfm in &meta.kfms {
+            fms.push((kfm, load_exe(&client, &dir, &format!("fm_epoch_k{kfm}"))?));
+        }
+        Ok(XlaRuntime {
+            exes: Mutex::new(Executables { client, cost, gram, bocs, fms }),
+            meta,
+            dir,
+        })
+    }
+
+    /// Try the conventional location, else None (native fallback).
+    pub fn load_default() -> Option<Self> {
+        for dir in ["artifacts", "../artifacts"] {
+            if Path::new(dir).join("meta.json").exists() {
+                match Self::load(dir) {
+                    Ok(rt) => return Some(rt),
+                    Err(e) => {
+                        eprintln!("warn: artifacts at {dir} unusable: {e:#}");
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    pub fn platform(&self) -> String {
+        self.exes.lock().unwrap().client.platform_name()
+    }
+
+    /// Batched cost evaluation through the Pallas cost kernel.  Any number
+    /// of candidates; internally padded to multiples of `meta.batch`.
+    pub fn cost_batch(
+        &self,
+        w: &Matrix,
+        ms: &[BinMatrix],
+    ) -> Result<Vec<f64>> {
+        let meta = &self.meta;
+        if w.rows != meta.n || w.cols != meta.d {
+            bail!(
+                "artifact compiled for W {}x{}, got {}x{}",
+                meta.n, meta.d, w.rows, w.cols
+            );
+        }
+        let w_lit = literal_2d(&f32s(&w.data), w.rows, w.cols)?;
+        let b = meta.batch;
+        let mut out = Vec::with_capacity(ms.len());
+        let exes = self.exes.lock().unwrap();
+        for chunk in ms.chunks(b) {
+            let mut data = vec![1.0f32; b * meta.n * meta.k];
+            for (bi, m) in chunk.iter().enumerate() {
+                assert_eq!(m.n, meta.n);
+                assert_eq!(m.k, meta.k);
+                // Artifact layout is (B, N, K) row-major; BinMatrix is
+                // column-major.
+                for i in 0..meta.n {
+                    for j in 0..meta.k {
+                        data[bi * meta.n * meta.k + i * meta.k + j] =
+                            m.get(i, j) as f32;
+                    }
+                }
+            }
+            let m_lit = xla::Literal::vec1(&data).reshape(&[
+                b as i64,
+                meta.n as i64,
+                meta.k as i64,
+            ])?;
+            let result = exes.cost.execute::<xla::Literal>(&[
+                w_lit.clone(),
+                m_lit,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let costs = result.to_tuple1()?.to_vec::<f32>()?;
+            out.extend(
+                costs[..chunk.len()].iter().map(|&c| c as f64),
+            );
+        }
+        Ok(out)
+    }
+
+    /// Gram moments (Φ^T Φ, Φ^T y, y^T y) through the Pallas Gram kernel.
+    /// Rows beyond `phi.rows` are zero-padded (inert).
+    pub fn gram(&self, phi: &Matrix, y: &[f64]) -> Result<(Matrix, Vec<f64>, f64)> {
+        let meta = &self.meta;
+        if phi.cols != meta.p {
+            bail!("artifact P={} vs phi cols {}", meta.p, phi.cols);
+        }
+        if phi.rows > meta.nmax {
+            bail!("dataset rows {} exceed artifact nmax {}", phi.rows, meta.nmax);
+        }
+        let mut phi_pad = vec![0.0f32; meta.nmax * meta.p];
+        for r in 0..phi.rows {
+            for c in 0..meta.p {
+                phi_pad[r * meta.p + c] = phi[(r, c)] as f32;
+            }
+        }
+        let mut y_pad = vec![0.0f32; meta.nmax];
+        for (dst, &v) in y_pad.iter_mut().zip(y) {
+            *dst = v as f32;
+        }
+        let phi_lit = literal_2d(&phi_pad, meta.nmax, meta.p)?;
+        let y_lit = literal_2d(&y_pad, meta.nmax, 1)?;
+        let exes = self.exes.lock().unwrap();
+        let result = exes.gram.execute::<xla::Literal>(&[phi_lit, y_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        let (g_l, gv_l, yy_l) = result.to_tuple3()?;
+        let g_v: Vec<f32> = g_l.to_vec()?;
+        let gv_v: Vec<f32> = gv_l.to_vec()?;
+        let yy_v: Vec<f32> = yy_l.to_vec()?;
+        let g = Matrix::from_vec(
+            meta.p,
+            meta.p,
+            g_v.into_iter().map(|x| x as f64).collect(),
+        );
+        let gv = gv_v.into_iter().map(|x| x as f64).collect();
+        Ok((g, gv, yy_v[0] as f64))
+    }
+
+    /// One BOCS Thompson draw through the `bocs_sample` artifact.
+    pub fn bocs_draw(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+    ) -> Result<(Vec<f64>, f64)> {
+        let meta = &self.meta;
+        if g.rows != meta.p {
+            bail!("artifact P={} vs G dim {}", meta.p, g.rows);
+        }
+        let g_lit = literal_2d(&f32s(&g.data), meta.p, meta.p)?;
+        let gv_lit = literal_2d(&f32s(gv), meta.p, 1)?;
+        let lam_lit = xla::Literal::vec1(&f32s(lam));
+        let s2_lit = xla::Literal::scalar(sigma_n2 as f32);
+        let z_lit = xla::Literal::vec1(&f32s(z));
+        let exes = self.exes.lock().unwrap();
+        let result = exes.bocs.execute::<xla::Literal>(&[
+            g_lit, gv_lit, lam_lit, s2_lit, z_lit,
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (alpha_l, hld_l) = result.to_tuple2()?;
+        let alpha: Vec<f32> = alpha_l.to_vec()?;
+        let hld: Vec<f32> = hld_l.to_vec()?;
+        Ok((
+            alpha.into_iter().map(|x| x as f64).collect(),
+            hld[0] as f64,
+        ))
+    }
+
+    /// FM training bundle (`fm_steps` Adam steps) through the artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fm_epoch(
+        &self,
+        k_fm: usize,
+        xs: &[Vec<i8>],
+        ys: &[f64],
+        w0: f64,
+        w: &[f64],
+        v: &Matrix,
+        lr: f64,
+    ) -> Result<(f64, Vec<f64>, Matrix)> {
+        let meta = &self.meta;
+        if xs.len() > meta.nmax {
+            bail!("dataset rows {} exceed artifact nmax {}", xs.len(), meta.nmax);
+        }
+        if w.len() != meta.nbits || v.rows != meta.nbits || v.cols != k_fm {
+            bail!("fm shape mismatch");
+        }
+        let mut x_pad = vec![0.0f32; meta.nmax * meta.nbits];
+        for (r, x) in xs.iter().enumerate() {
+            for (c, &s) in x.iter().enumerate() {
+                x_pad[r * meta.nbits + c] = s as f32;
+            }
+        }
+        let mut y_pad = vec![0.0f32; meta.nmax];
+        let mut mask = vec![0.0f32; meta.nmax];
+        for (i, &yv) in ys.iter().enumerate() {
+            y_pad[i] = yv as f32;
+            mask[i] = 1.0;
+        }
+        let exes = self.exes.lock().unwrap();
+        let exe = exes
+            .fms
+            .iter()
+            .find(|(k, _)| *k == k_fm)
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow!("no fm artifact for k_fm={k_fm}"))?;
+        let result = exe.execute::<xla::Literal>(&[
+            literal_2d(&x_pad, meta.nmax, meta.nbits)?,
+            xla::Literal::vec1(&y_pad),
+            xla::Literal::vec1(&mask),
+            xla::Literal::vec1(&[w0 as f32]),
+            xla::Literal::vec1(&f32s(w)),
+            literal_2d(&f32s(&v.data), meta.nbits, k_fm)?,
+            xla::Literal::vec1(&[lr as f32]),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (w0_l, w_l, v_l) = result.to_tuple3()?;
+        let w0_v: Vec<f32> = w0_l.to_vec()?;
+        let w_v: Vec<f32> = w_l.to_vec()?;
+        let v_v: Vec<f32> = v_l.to_vec()?;
+        Ok((
+            w0_v[0] as f64,
+            w_v.into_iter().map(|x| x as f64).collect(),
+            Matrix::from_vec(
+                meta.nbits,
+                k_fm,
+                v_v.into_iter().map(|x| x as f64).collect(),
+            ),
+        ))
+    }
+}

@@ -1,0 +1,101 @@
+//! Native stand-in for the PJRT runtime, compiled when the `xla` feature
+//! is off (the default: the native bindings are not vendored in the
+//! offline build image).
+//!
+//! `load` still reads and validates `meta.json` so the failure-injection
+//! tests exercise the same error paths, then reports the runtime as
+//! unavailable; `load_default` returns `None`.  Every caller already has a
+//! native fallback (`cost::Problem::cost`, `surrogate::blr::NativePosterior`,
+//! the native FM Adam trainer), so the system degrades to pure-native math
+//! rather than failing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::ArtifactMeta;
+use crate::cost::BinMatrix;
+use crate::linalg::Matrix;
+
+/// Compiled-artifact runtime (stub: artifacts are never available).
+pub struct XlaRuntime {
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Validate the artifact directory, then report the missing backend.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+        let _meta = ArtifactMeta::parse(&meta_text)?;
+        bail!(
+            "artifacts at {} look valid, but intdecomp was built without \
+             the `xla` feature (the PJRT bindings are not vendored); \
+             rebuild with `--features xla` or use the native math path",
+            dir.display()
+        )
+    }
+
+    /// The stub never loads artifacts; callers fall back to native math.
+    /// If artifacts *are* present on disk, say why they're being ignored
+    /// (the real runtime warns on unusable artifacts too).
+    pub fn load_default() -> Option<Self> {
+        for dir in ["artifacts", "../artifacts"] {
+            if Path::new(dir).join("meta.json").exists() {
+                eprintln!(
+                    "warn: artifacts at {dir} ignored: built without the \
+                     `xla` feature — using the native math path"
+                );
+                break;
+            }
+        }
+        None
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `xla` feature)".into()
+    }
+
+    pub fn cost_batch(
+        &self,
+        _w: &Matrix,
+        _ms: &[BinMatrix],
+    ) -> Result<Vec<f64>> {
+        bail!("built without the `xla` feature")
+    }
+
+    pub fn gram(
+        &self,
+        _phi: &Matrix,
+        _y: &[f64],
+    ) -> Result<(Matrix, Vec<f64>, f64)> {
+        bail!("built without the `xla` feature")
+    }
+
+    pub fn bocs_draw(
+        &self,
+        _g: &Matrix,
+        _gv: &[f64],
+        _lam: &[f64],
+        _sigma_n2: f64,
+        _z: &[f64],
+    ) -> Result<(Vec<f64>, f64)> {
+        bail!("built without the `xla` feature")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn fm_epoch(
+        &self,
+        _k_fm: usize,
+        _xs: &[Vec<i8>],
+        _ys: &[f64],
+        _w0: f64,
+        _w: &[f64],
+        _v: &Matrix,
+        _lr: f64,
+    ) -> Result<(f64, Vec<f64>, Matrix)> {
+        bail!("built without the `xla` feature")
+    }
+}

@@ -25,6 +25,7 @@ pub mod sq;
 pub mod sqa;
 
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
 
 /// Dense symmetric quadratic model over ±1 spins.
 #[derive(Clone, Debug)]
@@ -171,6 +172,45 @@ pub trait IsingSolver: Send + Sync {
     }
 }
 
+/// Best of `restarts` attempts with per-restart RNG streams, fanned across
+/// `workers` threads (`util::threadpool::parallel_map`).
+///
+/// Unlike [`IsingSolver::solve_best`], which threads one RNG sequentially
+/// through the restarts (so each restart's stream depends on how much
+/// entropy the previous ones consumed), every restart here gets an
+/// independent child stream forked from `rng`'s current state and the
+/// restart index only.  The result is therefore bit-identical for *any*
+/// `workers` value — 1 included — which is what makes the engine's
+/// parallel path reproducible.  Ties are broken toward the lowest restart
+/// index, matching the serial first-strictly-better rule.
+///
+/// `rng` is advanced by exactly `restarts` draws regardless of `workers`.
+pub fn solve_best_parallel(
+    solver: &dyn IsingSolver,
+    model: &QuadModel,
+    rng: &mut Rng,
+    restarts: usize,
+    workers: usize,
+) -> (Vec<i8>, f64) {
+    let restarts = restarts.max(1);
+    let streams: Vec<Rng> =
+        (0..restarts).map(|i| rng.fork(i as u64)).collect();
+    let results = parallel_map(streams, workers, |mut child| {
+        let x = solver.solve(model, &mut child);
+        let e = model.energy(&x);
+        (x, e)
+    });
+    let mut best_x = Vec::new();
+    let mut best_e = f64::INFINITY;
+    for (x, e) in results {
+        if e < best_e {
+            best_e = e;
+            best_x = x;
+        }
+    }
+    (best_x, best_e)
+}
+
 /// Incrementally maintained local fields `f_i = h_i + Σ_k J_ik x_k` for
 /// Metropolis sweeps: O(n) refresh per accepted flip instead of an O(n)
 /// scan per *proposed* flip (≈2× on the SA/SQ/SQA inner loops —
@@ -295,6 +335,45 @@ mod tests {
         let (max_f, min_f) = m.field_bounds();
         assert!(max_f >= min_f);
         assert!(min_f > 0.0);
+    }
+
+    #[test]
+    fn solve_best_parallel_is_worker_count_invariant() {
+        let mut rng = Rng::new(210);
+        let m = random_model(&mut rng, 12);
+        let solver = sa::SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let (x1, e1) = solve_best_parallel(&solver, &m, &mut Rng::new(4), 8, 1);
+        let (x4, e4) = solve_best_parallel(&solver, &m, &mut Rng::new(4), 8, 4);
+        assert_eq!(x1, x4);
+        assert_eq!(e1, e4);
+        assert!((m.energy(&x1) - e1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_best_parallel_monotone_in_restarts() {
+        // The first child stream of a k-restart call coincides with the
+        // single-restart call's stream, so more restarts can only help.
+        let mut rng = Rng::new(211);
+        let m = random_model(&mut rng, 10);
+        let solver = sa::SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let (_, e1) = solve_best_parallel(&solver, &m, &mut Rng::new(3), 1, 2);
+        let (_, e10) = solve_best_parallel(&solver, &m, &mut Rng::new(3), 10, 2);
+        assert!(e10 <= e1 + 1e-12);
+    }
+
+    #[test]
+    fn solve_best_parallel_advances_rng_deterministically() {
+        let m = {
+            let mut rng = Rng::new(212);
+            random_model(&mut rng, 8)
+        };
+        let solver = sa::SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let _ = solve_best_parallel(&solver, &m, &mut a, 6, 1);
+        let _ = solve_best_parallel(&solver, &m, &mut b, 6, 3);
+        // Caller-side stream state is independent of the worker count.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -1,8 +1,19 @@
 //! Scoped parallel-map over std threads.
 //!
-//! The experiment harness fans independent BBO runs across workers; on this
-//! single-core testbed the win is overlap with PJRT-internal threads, but
-//! the structure is what a multi-core deployment would use.
+//! The experiment harness and the compression engine fan independent work
+//! (BBO runs, Ising-solver restarts, whole-layer compression jobs) across
+//! workers pulling from a shared queue, preserving input order in the
+//! output.
+//!
+//! Panic policy: a panicking worker does not poison unrelated work — the
+//! first panic payload is captured, the remaining queue is drained so the
+//! other workers wind down, and the payload is re-raised on the calling
+//! thread with `std::panic::resume_unwind`, exactly as if the closure had
+//! panicked inline.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
 
 /// Map `f` over `items` using up to `workers` OS threads, preserving order.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
@@ -16,10 +27,10 @@ where
         return items.into_iter().map(f).collect();
     }
     let n = items.len();
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = std::sync::Mutex::new(work);
-    let slots_mx = std::sync::Mutex::new(&mut slots);
+    let queue = Mutex::new(work);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    let first_panic: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
         for _ in 0..workers.min(n) {
@@ -27,8 +38,24 @@ where
                 let job = queue.lock().unwrap().pop();
                 match job {
                     Some((idx, item)) => {
-                        let out = f(item);
-                        slots_mx.lock().unwrap()[idx] = Some(out);
+                        // Catch panics outside any lock so no mutex is
+                        // ever poisoned by user code.
+                        match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                            Ok(out) => {
+                                done.lock().unwrap().push((idx, out));
+                            }
+                            Err(payload) => {
+                                let mut first =
+                                    first_panic.lock().unwrap();
+                                if first.is_none() {
+                                    *first = Some(payload);
+                                }
+                                // Stop handing out work; in-flight items
+                                // on other workers finish normally.
+                                queue.lock().unwrap().clear();
+                                break;
+                            }
+                        }
                     }
                     None => break,
                 }
@@ -36,7 +63,13 @@ where
         }
     });
 
-    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
+    let mut done = done.into_inner().unwrap();
+    debug_assert_eq!(done.len(), n);
+    done.sort_by_key(|&(idx, _)| idx);
+    done.into_iter().map(|(_, r)| r).collect()
 }
 
 /// Number of workers to use by default (leave one core for the runtime).
@@ -75,5 +108,45 @@ mod tests {
         let out = parallel_map(items, 8, |x| x % 7);
         assert_eq!(out.len(), 1000);
         assert_eq!(out[700], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom 13")]
+    fn worker_panic_propagates_payload() {
+        let _ = parallel_map((0..64).collect::<Vec<i32>>(), 4, |x| {
+            if x == 13 {
+                panic!("boom {x}");
+            }
+            x * 2
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "inline boom")]
+    fn inline_path_panic_propagates_too() {
+        // workers == 1 takes the inline map; the panic must look the same.
+        let _ = parallel_map(vec![1, 2], 1, |x| {
+            if x == 2 {
+                panic!("inline boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn survives_after_a_previous_panicked_call() {
+        // A panicked parallel_map must not leave behind state that breaks
+        // the next call (no poisoned shared mutexes).
+        let r = catch_unwind(|| {
+            parallel_map(vec![1, 2, 3, 4], 2, |x| {
+                if x == 3 {
+                    panic!("once");
+                }
+                x
+            })
+        });
+        assert!(r.is_err());
+        let ok = parallel_map(vec![1, 2, 3, 4], 2, |x| x + 1);
+        assert_eq!(ok, vec![2, 3, 4, 5]);
     }
 }

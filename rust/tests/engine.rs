@@ -1,0 +1,150 @@
+//! Engine integration tests: the parallel-determinism regression
+//! (compress_all == serial bbo::run, bit for bit), cache accounting
+//! through a full run, restart fan-out invariance, and edge cases.
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::engine::{
+    self, CachedOracle, CompressionJob, CostCache, Engine, EngineConfig,
+};
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::minlp::Oracle;
+use intdecomp::solvers::sa::SimulatedAnnealing;
+use intdecomp::util::rng::Rng;
+
+fn tiny(idx: usize) -> intdecomp::cost::Problem {
+    let cfg = InstanceConfig { n: 4, d: 10, k: 2, gamma: 0.8, seed: 77 };
+    generate(&cfg, idx)
+}
+
+fn job(idx: usize) -> CompressionJob {
+    CompressionJob::new(
+        format!("layer{idx}"),
+        tiny(idx),
+        25,
+        100 + idx as u64,
+    )
+    .with_solver(Box::new(SimulatedAnnealing {
+        sweeps: 20,
+        ..Default::default()
+    }))
+}
+
+#[test]
+fn compress_all_matches_serial_bbo_runs_bit_for_bit() {
+    // 4 small instances through the engine on 4 workers must return the
+    // same costs as 4 plain serial bbo::run calls with the same seeds.
+    let results =
+        Engine::with_workers(4).compress_all((0..4).map(job).collect());
+    assert_eq!(results.len(), 4);
+    for (idx, r) in results.iter().enumerate() {
+        let p = tiny(idx);
+        let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 25);
+        let serial = bbo::run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            100 + idx as u64,
+        );
+        assert_eq!(r.name, format!("layer{idx}"));
+        assert_eq!(r.run.ys, serial.ys, "layer {idx}: costs diverged");
+        assert_eq!(r.run.xs, serial.xs, "layer {idx}: candidates diverged");
+        assert_eq!(r.run.best_x, serial.best_x);
+        assert_eq!(r.run.best_y, serial.best_y);
+    }
+}
+
+#[test]
+fn worker_counts_agree() {
+    let a = Engine::with_workers(1)
+        .compress_all((0..3).map(job).collect());
+    let b = Engine::with_workers(8)
+        .compress_all((0..3).map(job).collect());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.run.ys, y.run.ys);
+        assert_eq!(x.run.best_x, y.run.best_x);
+        assert_eq!(x.cache, y.cache);
+    }
+}
+
+#[test]
+fn restart_fanout_is_deterministic_across_widths() {
+    let p = tiny(0);
+    let mk = |rw: usize| {
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 20);
+        cfg.restart_workers = rw;
+        bbo::run(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            7,
+        )
+    };
+    let two = mk(2);
+    let eight = mk(8);
+    assert_eq!(two.ys, eight.ys);
+    assert_eq!(two.best_x, eight.best_x);
+    assert_eq!(two.best_y, eight.best_y);
+}
+
+#[test]
+fn engine_restart_fanout_is_deterministic_too() {
+    let mk = |rw: usize| {
+        Engine::new(EngineConfig { workers: 2, restart_workers: rw })
+            .compress_all((0..2).map(job).collect())
+    };
+    let a = mk(2);
+    let b = mk(8);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.run.ys, y.run.ys);
+        assert_eq!(x.run.best_x, y.run.best_x);
+    }
+}
+
+#[test]
+fn empty_job_list_is_fine() {
+    let results =
+        Engine::new(EngineConfig::default()).compress_all(Vec::new());
+    assert!(results.is_empty());
+}
+
+#[test]
+fn cache_accounting_hits_and_misses() {
+    let p = tiny(1);
+    let cache = CostCache::new();
+    let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+    let mut rng = Rng::new(1);
+    let x = rng.spins(p.n_bits());
+    let y1 = oracle.eval(&x);
+    let y2 = oracle.eval(&x);
+    assert_eq!(y1, y2);
+    assert_eq!(y1, p.cost_spins(&x));
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+    // A guaranteed-distinct second candidate.
+    let mut x2 = x.clone();
+    x2[0] = -x2[0];
+    let _ = oracle.eval(&x2);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 2));
+    assert_eq!(cache.len(), 2);
+    assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+}
+
+#[test]
+fn engine_results_carry_cache_stats() {
+    let r = Engine::with_workers(2).compress_all(vec![job(0)]);
+    let s = &r[0].cache;
+    // Every black-box evaluation goes through the cache, once per step.
+    assert_eq!(s.lookups() as usize, r[0].run.ys.len());
+    // Distinct candidates stored == misses; hits are the repeats.
+    assert!(s.misses >= 1);
+    assert!(s.misses <= s.lookups());
+    let table = engine::summary_table(&r);
+    assert!(table.contains("layer0"));
+}
