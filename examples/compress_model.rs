@@ -36,16 +36,23 @@ fn main() {
                 42 + i as u64,
             )
             .with_algo(Algorithm::Nbocs { sigma2: 0.1 })
+            // Batched acquisition: one surrogate fit per 4 candidates.
+            .with_batch_size(4)
         })
         .collect();
 
     println!(
-        "compressing {} layers concurrently on {workers} workers...",
+        "compressing {} layers concurrently on {workers} workers \
+         (batch size 4)...",
         jobs.len()
     );
     let t = Timer::start();
-    let results = Engine::new(EngineConfig { workers, restart_workers: 1 })
-        .compress_all(jobs);
+    let results = Engine::new(EngineConfig {
+        workers,
+        restart_workers: 1,
+        batch_size: 1, // per-job batch size above wins
+    })
+    .compress_all(jobs);
     let wall = t.seconds();
 
     print!("{}", engine::summary_table(&results));

@@ -8,8 +8,10 @@
 //!   solvers     — Fig. 2 back-ends on a 24-spin surrogate
 //!   surrogate   — per-iteration surrogate fits (Table 2 decomposition)
 //!   bbo         — end-to-end iterations per algorithm (Tables 1/2 engine)
-//!   engine      — restart fan-out vs the serial restart loop, and
-//!                 batched multi-layer compression (workers 1 vs many)
+//!   engine      — restart fan-out vs the serial restart loop, batched
+//!                 acquisition (batch_size 1 vs ≥4 at a fixed evaluation
+//!                 budget on the paper-scale instance), and batched
+//!                 multi-layer compression (workers 1 vs many)
 
 use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
 use intdecomp::bench::Bencher;
@@ -165,6 +167,29 @@ fn main() {
             || solvers::solve_best_parallel(&sa, &model, &mut r, 10, workers).1,
         );
         println!("{}", s.report());
+    }
+    {
+        // Batched acquisition on the paper-scale instance (8x100, K=3,
+        // 24 bits): identical evaluation budget and identical (serial)
+        // restart fan-out in every row, so the whole gap is batching
+        // itself — amortised surrogate fits (one per batch instead of
+        // one per evaluation) plus the concurrent candidate evaluation.
+        let evals = if quick { 16 } else { 48 };
+        for batch in [1usize, 4, 8] {
+            let sa = solvers::sa::SimulatedAnnealing::default();
+            let mut cfg = BboConfig::smoke_scale(p.n_bits(), evals);
+            cfg.batch_size = batch;
+            let algo = Algorithm::Nbocs { sigma2: 0.1 };
+            let s = b.run(
+                &format!("engine/bbo batch={batch} ({evals} evals)"),
+                evals,
+                || {
+                    bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 5)
+                        .best_y
+                },
+            );
+            println!("{}", s.report());
+        }
     }
     {
         let n_jobs = 4;

@@ -11,6 +11,14 @@
 //!
 //! Algorithms (paper labels): RS, vBOCS, nBOCS, gBOCS, FMQA08, FMQA12,
 //! nBOCSqa / nBOCSsq (solver swaps) and nBOCSa (data augmentation).
+//!
+//! **Batched acquisition** ([`BboConfig::batch_size`] > 1, FMQA-style,
+//! arXiv:2209.01016) amortises the expensive surrogate fit: one fit per
+//! iteration feeds [`crate::solvers::solve_batch`], the top-k distinct
+//! restart minima are all evaluated concurrently on the persistent
+//! worker pool, and the dataset ingests the whole batch in one update.
+//! The total evaluation budget ([`BboConfig::iters`]) is unchanged —
+//! batching only divides the number of surrogate fits by k.
 
 use crate::minlp::Oracle;
 use crate::solvers::IsingSolver;
@@ -19,6 +27,7 @@ use crate::surrogate::{
     fm::{FactorizationMachine, FmTrainer},
     Dataset, Surrogate,
 };
+use crate::util::threadpool::parallel_map;
 use crate::util::{rng::Rng, timer::Timer};
 
 /// Paper algorithm selector.
@@ -42,6 +51,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// The paper's label for this algorithm (e.g. "nBOCS", "FMQA08").
     pub fn label(&self) -> String {
         match self {
             Algorithm::Rs => "RS".into(),
@@ -74,6 +84,15 @@ impl Algorithm {
 }
 
 /// Loop configuration.
+///
+/// ```
+/// use intdecomp::bbo::BboConfig;
+///
+/// let cfg = BboConfig::paper_scale(24);
+/// assert_eq!((cfg.n_init, cfg.iters, cfg.restarts), (24, 1152, 10));
+/// // Serial, single-threaded defaults — the paper's exact protocol.
+/// assert_eq!((cfg.restart_workers, cfg.batch_size), (1, 1));
+/// ```
 #[derive(Clone, Debug)]
 pub struct BboConfig {
     /// Initial random design size (paper: n).
@@ -91,6 +110,17 @@ pub struct BboConfig {
     /// ([`crate::solvers::solve_best_parallel`]), whose result is
     /// bit-identical for every worker count `> 1`.
     pub restart_workers: usize,
+    /// Candidates acquired per surrogate fit (batched acquisition,
+    /// FMQA-style).  `1` (the default) is the paper's serial loop,
+    /// bit-for-bit identical to the legacy stream when
+    /// `restart_workers` is also 1.  Any value `> 1` fits the surrogate
+    /// once per iteration, takes the top-k distinct restart minima from
+    /// [`crate::solvers::solve_batch`] (padding with random candidates
+    /// when the restarts found fewer distinct minima), evaluates them
+    /// concurrently, and ingests all of them in one dataset update.
+    /// The total evaluation budget `iters` is unchanged; results are
+    /// deterministic for any worker count.
+    pub batch_size: usize,
 }
 
 impl BboConfig {
@@ -102,6 +132,7 @@ impl BboConfig {
             restarts: 10,
             augment: false,
             restart_workers: 1,
+            batch_size: 1,
         }
     }
 
@@ -113,6 +144,7 @@ impl BboConfig {
             restarts: 10,
             augment: false,
             restart_workers: 1,
+            batch_size: 1,
         }
     }
 }
@@ -120,20 +152,27 @@ impl BboConfig {
 /// Per-run output: everything the figures need.
 #[derive(Clone, Debug)]
 pub struct BboRun {
+    /// Algorithm label (with the augmentation suffix when enabled).
     pub algo: String,
+    /// Ising-solver name used for the acquisition minimisations.
     pub solver: String,
     /// Black-box evaluations in acquisition order (init design first).
     pub xs: Vec<Vec<i8>>,
+    /// Observed costs, aligned with `xs`.
     pub ys: Vec<f64>,
     /// Best-so-far cost after each evaluation.
     pub best_curve: Vec<f64>,
     /// Final best (x, y).
     pub best_x: Vec<i8>,
+    /// Cost of `best_x` — the run's final result.
     pub best_y: f64,
-    /// Wall-clock breakdown (seconds).
+    /// Total wall-clock of the run (seconds).
     pub time_total: f64,
+    /// Seconds spent fitting / drawing from the surrogate.
     pub time_surrogate: f64,
+    /// Seconds spent in Ising-solver restarts.
     pub time_solver: f64,
+    /// Seconds spent in black-box evaluations.
     pub time_eval: f64,
 }
 
@@ -147,7 +186,9 @@ impl BboRun {
 /// Hooks for routing heavy steps through the PJRT artifacts.
 #[derive(Default)]
 pub struct Backends {
+    /// Factory for the BLR posterior-draw backend (None = native).
     pub posterior: Option<Box<dyn Fn() -> Box<dyn PosteriorBackend>>>,
+    /// Factory for the FM trainer backend, keyed on k_FM (None = native).
     pub fm_trainer: Option<Box<dyn Fn(usize) -> Box<dyn FmTrainer>>>,
 }
 
@@ -182,7 +223,94 @@ fn build_surrogate(
     }
 }
 
+/// Rolling per-evaluation bookkeeping shared by the serial and batched
+/// acquisition paths: best-so-far tracking plus the xs/ys/best-curve
+/// traces the figures need.
+struct Trace {
+    xs: Vec<Vec<i8>>,
+    ys: Vec<f64>,
+    best_curve: Vec<f64>,
+    best_x: Vec<i8>,
+    best_y: f64,
+}
+
+impl Trace {
+    fn new() -> Self {
+        Trace {
+            xs: Vec::new(),
+            ys: Vec::new(),
+            best_curve: Vec::new(),
+            best_x: Vec::new(),
+            best_y: f64::INFINITY,
+        }
+    }
+
+    /// Record one evaluation (in acquisition order).
+    fn note(&mut self, x: Vec<i8>, y: f64) {
+        if y < self.best_y {
+            self.best_y = y;
+            self.best_x = x.clone();
+        }
+        self.best_curve.push(self.best_y);
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+}
+
+/// Expand one evaluation into the dataset rows it contributes: the
+/// symmetry orbit first when augmenting (nBOCSa), then the point itself
+/// — the same push order the legacy serial loop used.
+fn expand_pairs(
+    oracle: &dyn Oracle,
+    augment: bool,
+    x: &[i8],
+    y: f64,
+    out: &mut Vec<(Vec<i8>, f64)>,
+) {
+    if augment {
+        for eq in oracle.equivalents(x) {
+            out.push((eq, y));
+        }
+    }
+    out.push((x.to_vec(), y));
+}
+
 /// Run one BBO optimisation.
+///
+/// With `cfg.batch_size == 1` this is the paper's serial loop: one
+/// surrogate fit, one solver fan-out and one black-box evaluation per
+/// iteration (bit-for-bit the legacy stream when `restart_workers` is
+/// also 1).  With `cfg.batch_size = k > 1` each iteration fits the
+/// surrogate once, acquires the top-k distinct candidates from
+/// [`crate::solvers::solve_batch`], evaluates all of them concurrently
+/// on the persistent worker pool, and ingests the whole batch into the
+/// dataset in one update ([`Dataset::push_batch`]); the total number of
+/// black-box evaluations stays `cfg.n_init + cfg.iters` either way.
+///
+/// Every run is a pure function of `(oracle, algo, solver, cfg, seed)`:
+/// worker counts never change the result.
+///
+/// ```
+/// use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+/// use intdecomp::instance::{generate, InstanceConfig};
+/// use intdecomp::solvers::sa::SimulatedAnnealing;
+///
+/// let icfg = InstanceConfig { n: 4, d: 10, k: 2, gamma: 0.8, seed: 7 };
+/// let p = generate(&icfg, 0);
+/// let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+/// let mut cfg = BboConfig::smoke_scale(p.n_bits(), 8);
+/// cfg.batch_size = 4; // 2 surrogate fits instead of 8
+/// let run = bbo::run(
+///     &p,
+///     &Algorithm::Nbocs { sigma2: 0.1 },
+///     &sa,
+///     &cfg,
+///     &Backends::default(),
+///     1,
+/// );
+/// assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+/// assert!(run.best_y.is_finite());
+/// ```
 pub fn run(
     oracle: &dyn Oracle,
     algo: &Algorithm,
@@ -196,34 +324,9 @@ pub fn run(
     let n = oracle.n_bits();
     let mut data = Dataset::new(n);
     let mut surrogate = build_surrogate(algo, n, backends, &mut rng);
-
-    let mut xs = Vec::new();
-    let mut ys = Vec::new();
-    let mut best_curve = Vec::new();
-    let mut best_x: Vec<i8> = Vec::new();
-    let mut best_y = f64::INFINITY;
+    let mut trace = Trace::new();
     let (mut t_sur, mut t_sol, mut t_eval) = (0.0, 0.0, 0.0);
-
-    let mut record = |x: Vec<i8>,
-                      y: f64,
-                      data: &mut Dataset,
-                      xs: &mut Vec<Vec<i8>>,
-                      ys: &mut Vec<f64>,
-                      best_curve: &mut Vec<f64>| {
-        if y < best_y {
-            best_y = y;
-            best_x = x.clone();
-        }
-        best_curve.push(best_y);
-        if cfg.augment {
-            for eq in oracle.equivalents(&x) {
-                data.push(eq, y);
-            }
-        }
-        data.push(x.clone(), y);
-        xs.push(x);
-        ys.push(y);
-    };
+    let mut pairs: Vec<(Vec<i8>, f64)> = Vec::new();
 
     // Initial design.
     for _ in 0..cfg.n_init {
@@ -231,7 +334,9 @@ pub fn run(
         let t = Timer::start();
         let y = oracle.eval(&x);
         t_eval += t.seconds();
-        record(x, y, &mut data, &mut xs, &mut ys, &mut best_curve);
+        expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+        data.push_batch(pairs.drain(..));
+        trace.note(x, y);
     }
 
     // ε-greedy exploration rate (rFMQA only).
@@ -240,48 +345,121 @@ pub fn run(
         _ => 0.0,
     };
 
-    // Acquisition loop.
-    for _ in 0..cfg.iters {
-        let x = match surrogate.as_mut() {
-            None => rng.spins(n), // RS
+    // Acquisition loop: `cfg.iters` evaluations total, acquired
+    // `batch_size` at a time.
+    let batch = cfg.batch_size.max(1);
+    let mut acquired = 0;
+    while acquired < cfg.iters {
+        if batch == 1 {
+            // Serial path — bit-for-bit the legacy stream.
+            let x = match surrogate.as_mut() {
+                None => rng.spins(n), // RS
+                Some(sur) => {
+                    let t = Timer::start();
+                    let model = sur.fit_model(&data, &mut rng);
+                    t_sur += t.seconds();
+                    let t = Timer::start();
+                    let (x, _) = if cfg.restart_workers > 1 {
+                        crate::solvers::solve_best_parallel(
+                            solver,
+                            &model,
+                            &mut rng,
+                            cfg.restarts,
+                            cfg.restart_workers,
+                        )
+                    } else {
+                        solver.solve_best(&model, &mut rng, cfg.restarts)
+                    };
+                    t_sol += t.seconds();
+                    if eps > 0.0 && rng.f64() < eps {
+                        rng.spins(n) // randomised-FMQA exploration step
+                    } else {
+                        x
+                    }
+                }
+            };
+            let t = Timer::start();
+            let y = oracle.eval(&x);
+            t_eval += t.seconds();
+            expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+            data.push_batch(pairs.drain(..));
+            trace.note(x, y);
+            acquired += 1;
+            continue;
+        }
+
+        // Batched path: one fit, k candidates, concurrent evaluation,
+        // one dataset update.  The tail batch shrinks so the total
+        // evaluation budget is exactly `cfg.iters`.
+        let k_step = batch.min(cfg.iters - acquired);
+        let xs_batch: Vec<Vec<i8>> = match surrogate.as_mut() {
+            // RS acquires candidates independently of the data, so a
+            // "batch" is simply the next k draws of the same stream.
+            None => (0..k_step).map(|_| rng.spins(n)).collect(),
             Some(sur) => {
                 let t = Timer::start();
                 let model = sur.fit_model(&data, &mut rng);
                 t_sur += t.seconds();
                 let t = Timer::start();
-                let (x, _) = if cfg.restart_workers > 1 {
-                    crate::solvers::solve_best_parallel(
-                        solver,
-                        &model,
-                        &mut rng,
-                        cfg.restarts,
-                        cfg.restart_workers,
-                    )
-                } else {
-                    solver.solve_best(&model, &mut rng, cfg.restarts)
-                };
+                let cands = crate::solvers::solve_batch(
+                    solver,
+                    &model,
+                    &mut rng,
+                    cfg.restarts,
+                    k_step,
+                    cfg.restart_workers,
+                );
                 t_sol += t.seconds();
-                if eps > 0.0 && rng.f64() < eps {
-                    rng.spins(n) // randomised-FMQA exploration step
-                } else {
-                    x
+                let mut xs: Vec<Vec<i8>> =
+                    cands.into_iter().map(|(x, _)| x).collect();
+                // Fewer distinct restart minima than the batch asks
+                // for: pad with random exploration candidates so the
+                // evaluation budget is spent either way.
+                while xs.len() < k_step {
+                    xs.push(rng.spins(n));
                 }
+                if eps > 0.0 {
+                    // Per-slot ε-greedy replacement, decided on the
+                    // main stream in candidate order (deterministic
+                    // for any worker count).
+                    for x in xs.iter_mut() {
+                        if rng.f64() < eps {
+                            *x = rng.spins(n);
+                        }
+                    }
+                }
+                xs
             }
         };
+        // Evaluate the whole batch concurrently through the oracle.
+        // Results come back in candidate order, so recording below is
+        // deterministic regardless of the evaluation interleaving.
         let t = Timer::start();
-        let y = oracle.eval(&x);
+        let ys_batch: Vec<f64> = parallel_map(
+            xs_batch.iter().collect::<Vec<_>>(),
+            k_step,
+            |x| oracle.eval(x),
+        );
         t_eval += t.seconds();
-        record(x, y, &mut data, &mut xs, &mut ys, &mut best_curve);
+        for (x, &y) in xs_batch.iter().zip(&ys_batch) {
+            expand_pairs(oracle, cfg.augment, x, y, &mut pairs);
+        }
+        // One surrogate-dataset update for the whole batch.
+        data.push_batch(pairs.drain(..));
+        for (x, y) in xs_batch.into_iter().zip(ys_batch) {
+            trace.note(x, y);
+        }
+        acquired += k_step;
     }
 
     BboRun {
         algo: algo.label() + if cfg.augment { "a" } else { "" },
         solver: solver.name().into(),
-        xs,
-        ys,
-        best_curve,
-        best_x,
-        best_y,
+        xs: trace.xs,
+        ys: trace.ys,
+        best_curve: trace.best_curve,
+        best_x: trace.best_x,
+        best_y: trace.best_y,
         time_total: total_timer.seconds(),
         time_surrogate: t_sur,
         time_solver: t_sol,
@@ -416,6 +594,126 @@ mod tests {
         assert_eq!(a.ys, b.ys);
         assert_eq!(a.best_x, b.best_x);
         assert_eq!(a.best_y, b.best_y);
+    }
+
+    #[test]
+    fn batched_run_spends_exact_eval_budget() {
+        // Whatever the batch size (dividing iters or not), the total
+        // evaluation budget and the monotone best-curve are unchanged.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        for batch in [2usize, 3, 4, 7] {
+            let mut cfg = BboConfig::smoke_scale(p.n_bits(), 10);
+            cfg.batch_size = batch;
+            let r = run(
+                &p,
+                &Algorithm::Nbocs { sigma2: 0.1 },
+                &sa,
+                &cfg,
+                &Backends::default(),
+                4,
+            );
+            assert_eq!(r.ys.len(), cfg.n_init + cfg.iters, "batch {batch}");
+            assert_eq!(r.best_curve.len(), r.ys.len());
+            for w in r.best_curve.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_run_is_worker_count_invariant() {
+        // Batched acquisition uses forked per-restart streams and
+        // order-preserving concurrent evaluation, so ANY worker count
+        // (1 included) gives the identical run.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        cfg.batch_size = 4;
+        cfg.restart_workers = 2;
+        let a = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 8);
+        cfg.restart_workers = 6;
+        let b = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 8);
+        cfg.restart_workers = 1;
+        let c = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 8);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.ys, c.ys);
+        assert_eq!(a.best_x, b.best_x);
+        assert_eq!(a.best_x, c.best_x);
+        assert_eq!(a.best_y, b.best_y);
+    }
+
+    #[test]
+    fn rs_batched_matches_rs_serial_bit_for_bit() {
+        // RS draws candidates straight off the main stream, so the
+        // batched path must reproduce the serial path exactly — a
+        // cross-path determinism check of the whole batching plumbing.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 9);
+        let serial = run(&p, &Algorithm::Rs, &sa, &cfg,
+                         &Backends::default(), 3);
+        let mut bcfg = cfg.clone();
+        bcfg.batch_size = 4; // 9 = 4 + 4 + 1: exercises the tail batch
+        let batched = run(&p, &Algorithm::Rs, &sa, &bcfg,
+                          &Backends::default(), 3);
+        assert_eq!(serial.xs, batched.xs);
+        assert_eq!(serial.ys, batched.ys);
+        assert_eq!(serial.best_curve, batched.best_curve);
+        assert_eq!(serial.best_x, batched.best_x);
+    }
+
+    #[test]
+    fn batch_size_one_is_the_legacy_serial_stream() {
+        // The constructors default to batch_size = 1, and setting it
+        // explicitly must change nothing: the k = 1 path IS the legacy
+        // serial loop (same branch, same RNG stream).  The seed-pinned
+        // tests above (exact-hit, beats-RS) guard the stream itself.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 15);
+        assert_eq!(cfg.batch_size, 1);
+        assert_eq!(BboConfig::paper_scale(8).batch_size, 1);
+        let a = run(&p, &Algorithm::Gbocs { beta: 0.001 }, &sa, &cfg,
+                    &Backends::default(), 9);
+        let mut explicit = cfg.clone();
+        explicit.batch_size = 1;
+        let b = run(&p, &Algorithm::Gbocs { beta: 0.001 }, &sa, &explicit,
+                    &Backends::default(), 9);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.best_x, b.best_x);
+    }
+
+    #[test]
+    fn all_algorithms_run_batched() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 6);
+        cfg.batch_size = 3;
+        for name in
+            ["rs", "vbocs", "nbocs", "gbocs", "fmqa08", "rfmqa08"]
+        {
+            let algo = Algorithm::by_name(name).unwrap();
+            let r = run(&p, &algo, &sa, &cfg, &Backends::default(), 3);
+            assert_eq!(r.ys.len(), cfg.n_init + cfg.iters, "{name}");
+            assert!(r.best_y.is_finite(), "{name}");
+        }
+    }
+
+    #[test]
+    fn batched_augmentation_multiplies_dataset_not_evaluations() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 8);
+        cfg.augment = true;
+        cfg.batch_size = 4;
+        let r = run(&p, &Algorithm::Nbocs { sigma2: 0.1 }, &sa, &cfg,
+                    &Backends::default(), 2);
+        assert_eq!(r.xs.len(), cfg.n_init + cfg.iters);
+        assert!(r.algo.ends_with('a'));
     }
 
     #[test]

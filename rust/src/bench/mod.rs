@@ -9,17 +9,24 @@ use crate::util::timer::Timer;
 /// Statistics of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Timed repetitions.
     pub reps: usize,
+    /// Mean seconds per rep.
     pub mean_s: f64,
+    /// Fastest rep (seconds).
     pub min_s: f64,
+    /// Slowest rep (seconds).
     pub max_s: f64,
+    /// Standard deviation across reps (seconds).
     pub stddev_s: f64,
     /// Work items per rep, for throughput reporting (0 = n/a).
     pub items_per_rep: usize,
 }
 
 impl BenchStats {
+    /// Work items per second (None when items_per_rep is 0).
     pub fn throughput(&self) -> Option<f64> {
         if self.items_per_rep > 0 && self.mean_s > 0.0 {
             Some(self.items_per_rep as f64 / self.mean_s)
@@ -28,6 +35,7 @@ impl BenchStats {
         }
     }
 
+    /// One formatted report line.
     pub fn report(&self) -> String {
         let tput = match self.throughput() {
             Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
@@ -49,7 +57,9 @@ impl BenchStats {
 
 /// Benchmark runner: warms up, then times `reps` calls of `f`.
 pub struct Bencher {
+    /// Untimed warmup calls before measuring.
     pub warmup: usize,
+    /// Timed repetitions.
     pub reps: usize,
 }
 
@@ -60,6 +70,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Harness with the given warmup and repetition counts.
     pub fn new(warmup: usize, reps: usize) -> Self {
         Bencher { warmup, reps: reps.max(1) }
     }

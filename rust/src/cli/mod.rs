@@ -45,14 +45,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Result<Args, String> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// String flag value, or `default` when absent.
     pub fn str_flag(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.into())
     }
 
+    /// Integer flag value, or `default` when absent.
     pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -62,6 +65,7 @@ impl Args {
         }
     }
 
+    /// Float flag value, or `default` when absent.
     pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -71,6 +75,7 @@ impl Args {
         }
     }
 
+    /// u64 flag value (seeds), or `default` when absent.
     pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -80,6 +85,7 @@ impl Args {
         }
     }
 
+    /// True when the switch was given (`--x`, `--x=true/1/yes`).
     pub fn bool_flag(&self, key: &str) -> bool {
         matches!(
             self.flags.get(key).map(String::as_str),

@@ -14,7 +14,9 @@ use crate::util::smooth;
 /// into a new cluster at the given Ward distance.
 #[derive(Clone, Debug)]
 pub struct Merge {
+    /// First merged cluster id.
     pub a: usize,
+    /// Second merged cluster id.
     pub b: usize,
     /// Ward linkage distance (squared-Euclidean scale).
     pub dist: f64,

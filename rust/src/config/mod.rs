@@ -17,7 +17,9 @@ pub enum Scale {
 /// Everything the experiment harness needs.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
+    /// Synthetic instance shape (N, D, K, γ) and generator seed.
     pub instance: InstanceConfig,
+    /// Smoke or full (paper) scale.
     pub scale: Scale,
     /// BBO runs per (algorithm, instance).
     pub runs: usize,
@@ -37,6 +39,8 @@ pub struct ExpConfig {
     pub use_xla: bool,
     /// Worker threads for independent runs.
     pub workers: usize,
+    /// Acquisition batch size per BBO iteration (1 = serial loop).
+    pub batch_size: usize,
 }
 
 impl ExpConfig {
@@ -75,6 +79,7 @@ impl ExpConfig {
                 "workers",
                 crate::util::threadpool::default_workers(),
             )?,
+            batch_size: args.usize_flag("batch-size", 1)?.max(1),
         })
     }
 }
@@ -95,6 +100,17 @@ mod tests {
         assert_eq!(c.instances, 3);
         assert_eq!(c.instance.n, 8);
         assert!(c.iters < 2 * 24 * 24);
+        assert_eq!(c.batch_size, 1);
+    }
+
+    #[test]
+    fn batch_size_flag_parses_and_clamps() {
+        let c =
+            ExpConfig::from_args(&args(&["--batch-size", "8"])).unwrap();
+        assert_eq!(c.batch_size, 8);
+        let c =
+            ExpConfig::from_args(&args(&["--batch-size", "0"])).unwrap();
+        assert_eq!(c.batch_size, 1);
     }
 
     #[test]

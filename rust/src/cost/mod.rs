@@ -31,13 +31,16 @@ pub const EPS_RANK: f64 = 1e-9;
 /// Binary matrix M (N×K), column-major storage of ±1 entries.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BinMatrix {
+    /// Rows N.
     pub n: usize,
+    /// Columns K.
     pub k: usize,
     /// Column-major: entry (i, j) at `data[j * n + i]`.
     pub data: Vec<i8>,
 }
 
 impl BinMatrix {
+    /// From column-major ±1 entries (length must be n·k).
     pub fn new(n: usize, k: usize, data: Vec<i8>) -> Self {
         assert_eq!(data.len(), n * k);
         debug_assert!(data.iter().all(|&s| s == 1 || s == -1));
@@ -54,20 +57,24 @@ impl BinMatrix {
         BinMatrix::new(n, k, x.to_vec())
     }
 
+    /// The flat ±1 spin vector view (column-major).
     pub fn as_spins(&self) -> &[i8] {
         &self.data
     }
 
+    /// Column j as a slice.
     #[inline]
     pub fn col(&self, j: usize) -> &[i8] {
         &self.data[j * self.n..(j + 1) * self.n]
     }
 
+    /// Entry (i, j).
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> i8 {
         self.data[j * self.n + i]
     }
 
+    /// Set entry (i, j).
     pub fn set(&mut self, i: usize, j: usize, v: i8) {
         self.data[j * self.n + i] = v;
     }
@@ -141,6 +148,7 @@ pub struct Problem {
 }
 
 impl Problem {
+    /// Problem for target `w` at rank `k` (precomputes S = W Wᵀ).
     pub fn new(w: Matrix, k: usize) -> Self {
         assert!(k >= 1 && k <= w.rows);
         let wt = w.transpose();
@@ -149,11 +157,13 @@ impl Problem {
         Problem { w, k, s, w_norm_sq }
     }
 
+    /// Target rows N.
     #[inline]
     pub fn n(&self) -> usize {
         self.w.rows
     }
 
+    /// Target columns D.
     #[inline]
     pub fn d(&self) -> usize {
         self.w.cols

@@ -22,7 +22,9 @@ use crate::minlp::Oracle;
 /// Hit/miss accounting snapshot of a [`CostCache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that had to evaluate (racing duplicates both count).
     pub misses: u64,
 }
 
@@ -44,6 +46,23 @@ impl CacheStats {
 }
 
 /// Memoised cost table keyed on the binary candidate matrix.
+///
+/// ```
+/// use intdecomp::engine::{CachedOracle, CostCache};
+/// use intdecomp::instance::{generate, InstanceConfig};
+/// use intdecomp::minlp::Oracle;
+///
+/// let icfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 3 };
+/// let p = generate(&icfg, 0);
+/// let cache = CostCache::new();
+/// let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+/// let x = vec![1i8; p.n_bits()];
+/// let y1 = oracle.eval(&x);
+/// let y2 = oracle.eval(&x); // served from the cache
+/// assert_eq!(y1, y2);
+/// let s = cache.stats();
+/// assert_eq!((s.hits, s.misses), (1, 1));
+/// ```
 #[derive(Default)]
 pub struct CostCache {
     map: Mutex<HashMap<BinMatrix, f64>>,
@@ -104,10 +123,12 @@ impl CostCache {
         self.map.lock().unwrap().len()
     }
 
+    /// True when nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),

@@ -7,19 +7,27 @@
 //! 1. **Solver restarts** within one BBO iteration —
 //!    [`crate::solvers::solve_best_parallel`], enabled per run via
 //!    [`crate::bbo::BboConfig::restart_workers`].
-//! 2. **Candidate evaluation** — repeated candidates are memoised by
+//! 2. **Batched acquisition + candidate evaluation** —
+//!    [`crate::bbo::BboConfig::batch_size`] acquires the top-k distinct
+//!    candidates per surrogate fit ([`crate::solvers::solve_batch`]) and
+//!    evaluates them concurrently; repeated candidates are memoised by
 //!    [`cache::CostCache`] / [`cache::CachedOracle`], so re-acquired `M`s
 //!    never re-pay the `O(K·N²)` cost evaluation.
 //! 3. **Whole-model compression** — [`Engine::compress_all`] fans a batch
 //!    of [`CompressionJob`]s (one per layer matrix) across workers pulling
 //!    from a shared queue, with per-job seeds.
 //!
+//! All three levels share one set of long-lived threads: the process-wide
+//! [`crate::util::threadpool::WorkerPool`], reused across every BBO
+//! iteration and every `compress_all` call, so per-iteration fan-outs pay
+//! a queue push instead of a thread spawn.
+//!
 //! Determinism contract: results are a pure function of each job's seed
-//! and config — independent of `workers`, job interleaving, and (for
-//! `restart_workers > 1`) the fan-out width.  With the default
-//! `restart_workers = 1` every job is bit-identical to a plain serial
-//! [`bbo::run`] with the same seed, which the engine regression tests
-//! assert.
+//! and config — independent of `workers`, job interleaving, the restart
+//! fan-out width and the batched-evaluation interleaving.  With the
+//! default `restart_workers = 1` and `batch_size = 1` every job is
+//! bit-identical to a plain serial [`bbo::run`] with the same seed, which
+//! the engine regression tests assert.
 
 pub mod cache;
 
@@ -42,11 +50,21 @@ pub struct EngineConfig {
     /// Restart fan-out *within* each job (`1` = legacy serial restarts,
     /// bit-identical to `bbo::run`; `> 1` = forked per-restart streams).
     pub restart_workers: usize,
+    /// Acquisition batch size *within* each job (`1` = the paper's
+    /// serial loop; `k > 1` = one surrogate fit per k candidates, all
+    /// evaluated concurrently — see
+    /// [`crate::bbo::BboConfig::batch_size`]).  Values `> 1` override
+    /// the per-job [`crate::bbo::BboConfig`].
+    pub batch_size: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: default_workers(), restart_workers: 1 }
+        EngineConfig {
+            workers: default_workers(),
+            restart_workers: 1,
+            batch_size: 1,
+        }
     }
 }
 
@@ -54,10 +72,15 @@ impl Default for EngineConfig {
 pub struct CompressionJob {
     /// Display name, e.g. the layer label.
     pub name: String,
+    /// The layer's compression instance (W, K and the cost oracle).
     pub problem: Problem,
+    /// BBO algorithm to optimise the binary factor with.
     pub algo: Algorithm,
+    /// Ising solver minimising the surrogate each iteration.
     pub solver: Box<dyn IsingSolver>,
+    /// Loop budget and parallelism knobs for this job.
     pub cfg: BboConfig,
+    /// Seed making the job's result reproducible.
     pub seed: u64,
 }
 
@@ -81,13 +104,21 @@ impl CompressionJob {
         }
     }
 
+    /// Replace the BBO algorithm (builder style).
     pub fn with_algo(mut self, algo: Algorithm) -> Self {
         self.algo = algo;
         self
     }
 
+    /// Replace the Ising solver (builder style).
     pub fn with_solver(mut self, solver: Box<dyn IsingSolver>) -> Self {
         self.solver = solver;
+        self
+    }
+
+    /// Set the acquisition batch size for this job (builder style).
+    pub fn with_batch_size(mut self, batch_size: usize) -> Self {
+        self.cfg.batch_size = batch_size.max(1);
         self
     }
 }
@@ -95,14 +126,19 @@ impl CompressionJob {
 /// Output of one job: the full BBO trace plus compression metrics and
 /// cache accounting.
 pub struct JobResult {
+    /// Job display name (the layer label).
     pub name: String,
-    /// Layer shape (N×D) and decomposition rank K.
+    /// Layer rows N.
     pub n: usize,
+    /// Layer columns D.
     pub d: usize,
+    /// Decomposition rank K.
     pub k: usize,
+    /// Full BBO trace of the job.
     pub run: BboRun,
     /// The winning binary factor M.
     pub best_m: BinMatrix,
+    /// Hit/miss accounting of the job's evaluation cache.
     pub cache: CacheStats,
     /// Compressed/original size at 32-bit floats.
     pub ratio: f64,
@@ -111,18 +147,53 @@ pub struct JobResult {
 }
 
 /// The compression engine: a configuration plus `compress_all`.
+///
+/// ```
+/// use intdecomp::engine::{CompressionJob, Engine, EngineConfig};
+/// use intdecomp::instance::{generate, InstanceConfig};
+///
+/// let icfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 9 };
+/// let jobs: Vec<CompressionJob> = (0..2)
+///     .map(|i| {
+///         CompressionJob::new(
+///             format!("layer{i}"),
+///             generate(&icfg, i),
+///             6,          // acquisition iterations
+///             42 + i as u64,
+///         )
+///         .with_batch_size(3)
+///     })
+///     .collect();
+/// let eng = Engine::new(EngineConfig {
+///     workers: 2,
+///     restart_workers: 1,
+///     batch_size: 1, // per-job cfg (3, above) wins
+/// });
+/// let results = eng.compress_all(jobs);
+/// assert_eq!(results.len(), 2);
+/// assert!(results.iter().all(|r| r.ratio > 0.0 && r.ratio < 1.0));
+/// ```
 pub struct Engine {
+    /// Parallelism configuration applied to every `compress_all` call.
     pub cfg: EngineConfig,
 }
 
 impl Engine {
+    /// Engine with an explicit configuration.
     pub fn new(cfg: EngineConfig) -> Self {
         Engine { cfg }
     }
 
-    /// `workers` concurrent jobs, serial restarts inside each.
+    /// `workers` concurrent jobs, serial restarts and serial (k = 1)
+    /// acquisition inside each.
     pub fn with_workers(workers: usize) -> Self {
-        Engine { cfg: EngineConfig { workers, restart_workers: 1 } }
+        Engine {
+            cfg: EngineConfig {
+                workers,
+                restart_workers: 1,
+                batch_size: 1,
+            },
+        }
     }
 
     /// Compress every job, fanning jobs across `cfg.workers` threads.
@@ -131,19 +202,27 @@ impl Engine {
     /// count yields identical output.
     pub fn compress_all(&self, jobs: Vec<CompressionJob>) -> Vec<JobResult> {
         let restart_workers = self.cfg.restart_workers;
+        let batch_size = self.cfg.batch_size;
         parallel_map(jobs, self.cfg.workers, move |job| {
-            run_job(job, restart_workers)
+            run_job(job, restart_workers, batch_size)
         })
     }
 }
 
-fn run_job(job: CompressionJob, restart_workers: usize) -> JobResult {
+fn run_job(
+    job: CompressionJob,
+    restart_workers: usize,
+    batch_size: usize,
+) -> JobResult {
     let cache = CostCache::new();
     let oracle =
         CachedOracle::new(&job.problem, &cache, job.problem.n(), job.problem.k);
     let mut cfg = job.cfg.clone();
     if restart_workers > 1 {
         cfg.restart_workers = restart_workers;
+    }
+    if batch_size > 1 {
+        cfg.batch_size = batch_size;
     }
     let run = bbo::run(
         &oracle,

@@ -27,6 +27,7 @@ fn run_with(
         restarts,
         augment: false,
         restart_workers: 1,
+        batch_size: 1,
     };
     let results: Vec<_> = (0..runs)
         .map(|r| {
@@ -39,6 +40,7 @@ fn run_with(
     (mean(&finals), hits)
 }
 
+/// Run every design-choice sweep and print/CSV the results.
 pub fn ablation(ctx: &Ctx) {
     let runs = ctx.cfg.runs.max(1);
     let nbocs = Algorithm::Nbocs { sigma2: 0.1 };

@@ -4,6 +4,7 @@ use super::{count_exact_hits, Ctx, RunSpec};
 use crate::bbo::Algorithm;
 use crate::report::{ascii_table, write_csv};
 
+/// Table 1: exact-hit counts per algorithm across the instance suite.
 pub fn table1(ctx: &Ctx) {
     let specs = RunSpec::table_nine();
     let n_inst = ctx.problems.len();

@@ -9,6 +9,7 @@ use crate::report::{fmt, write_csv};
 const N_DOMAINS: usize = 4;
 const WINDOW: usize = 100;
 
+/// Fig. 4: convergence on the alternative problem domains.
 pub fn fig4(ctx: &Ctx) {
     let inst = 0;
     let bf = &ctx.exact[inst];

@@ -5,6 +5,7 @@ use super::{Ctx, RunSpec};
 use crate::bbo::Algorithm;
 use crate::report::{ascii_table, fmt, write_csv};
 
+/// Fig. 6: hyperparameter grid searches for the tuned algorithms.
 pub fn fig6(ctx: &Ctx) {
     let inst = 0;
     let sigma2_grid = [1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];

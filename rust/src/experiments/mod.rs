@@ -29,22 +29,27 @@ use crate::util::threadpool::parallel_map;
 /// One (algorithm, solver, augmentation) combination with its paper label.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
+    /// BBO algorithm of the run.
     pub algo: Algorithm,
     /// Ising solver name: "sa", "sqa" (the QA stand-in), "sq".
     pub solver: String,
+    /// Whether to add the symmetry orbit of each evaluation (nBOCSa).
     pub augment: bool,
 }
 
 impl RunSpec {
+    /// Spec with the SA solver and no augmentation.
     pub fn new(algo: Algorithm) -> Self {
         RunSpec { algo, solver: "sa".into(), augment: false }
     }
 
+    /// Swap the Ising solver (builder style).
     pub fn with_solver(mut self, solver: &str) -> Self {
         self.solver = solver.into();
         self
     }
 
+    /// Enable data augmentation (builder style).
     pub fn augmented(mut self) -> Self {
         self.augment = true;
         self
@@ -94,13 +99,19 @@ impl RunSpec {
 
 /// Shared experiment state: instances, cached exact solutions, runtime.
 pub struct Ctx {
+    /// The run's configuration (scale, budgets, seeds, output dir).
     pub cfg: ExpConfig,
+    /// The synthetic instance suite.
     pub problems: Vec<Problem>,
+    /// Exact (brute-forced) solution of each instance.
     pub exact: Vec<BruteForceResult>,
+    /// PJRT artifact runtime when loaded (None = native math).
     pub rt: Option<Arc<XlaRuntime>>,
 }
 
 impl Ctx {
+    /// Generate the instance suite, brute-force the exact solutions and
+    /// (optionally) load the PJRT artifacts.
     pub fn new(cfg: ExpConfig) -> Ctx {
         let problems = generate_suite(&cfg.instance, cfg.instances);
         eprintln!(
@@ -158,6 +169,7 @@ impl Ctx {
             restarts: self.cfg.restarts,
             augment: false,
             restart_workers: 1,
+            batch_size: self.cfg.batch_size,
         }
     }
 

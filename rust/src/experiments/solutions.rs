@@ -5,6 +5,7 @@ use super::Ctx;
 use crate::cluster::{cut, ward};
 use crate::report::write_csv;
 
+/// Fig. 5: the exact solutions and their symmetry orbits.
 pub fn fig5(ctx: &Ctx) {
     let inst = 0;
     let bf = &ctx.exact[inst];

@@ -6,6 +6,7 @@ use super::{Ctx, RunSpec};
 use crate::report::{ascii_table, fmt, write_csv};
 use crate::util::timer::Timer;
 
+/// Table 2: wall-clock decomposition per algorithm.
 pub fn table2(ctx: &Ctx) {
     let inst = 0;
     let specs = RunSpec::table_nine();

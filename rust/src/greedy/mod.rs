@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 /// Result of the greedy decomposition.
 #[derive(Clone, Debug)]
 pub struct GreedyResult {
+    /// The greedy binary factor M.
     pub m: BinMatrix,
     /// C from the greedy series (c_i of each rank-one step).
     pub c_series: Matrix,

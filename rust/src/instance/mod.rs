@@ -22,8 +22,11 @@ use crate::util::rng::Rng;
 /// Generator configuration.
 #[derive(Clone, Debug)]
 pub struct InstanceConfig {
+    /// Target rows N.
     pub n: usize,
+    /// Target columns D.
     pub d: usize,
+    /// Decomposition rank K.
     pub k: usize,
     /// Power-law exponent of the singular spectrum.
     pub gamma: f64,

@@ -13,7 +13,25 @@
 //! Architecture (see DESIGN.md): this crate is the L3 coordinator; the
 //! numeric hot paths are AOT-compiled JAX/Pallas artifacts loaded through
 //! PJRT (`runtime`), each with a native Rust twin for fallback and
-//! cross-checking.
+//! cross-checking.  `docs/ARCHITECTURE.md` maps every module to the
+//! paper's sections and walks one batched BBO iteration through the
+//! system.
+//!
+//! Quick start — compress one synthetic layer with batched acquisition:
+//!
+//! ```
+//! use intdecomp::engine::{CompressionJob, Engine};
+//! use intdecomp::instance::{generate, InstanceConfig};
+//!
+//! let icfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 1 };
+//! let job = CompressionJob::new("fc1", generate(&icfg, 0), 8, 42)
+//!     .with_batch_size(4);
+//! let results = Engine::with_workers(2).compress_all(vec![job]);
+//! assert_eq!(results.len(), 1);
+//! assert!(results[0].normalised_error.is_finite());
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod bbo;
 pub mod bench;

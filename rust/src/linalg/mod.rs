@@ -14,16 +14,21 @@ pub use qr::householder_qr;
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major entries, length `rows * cols`.
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Identity matrix of order n.
     pub fn identity(n: usize) -> Self {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -32,6 +37,7 @@ impl Matrix {
         m
     }
 
+    /// Matrix from row vectors (all must share one length).
     pub fn from_rows(rows: &[Vec<f64>]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
@@ -43,21 +49,25 @@ impl Matrix {
         Matrix { rows: r, cols: c, data }
     }
 
+    /// Matrix from flat row-major data.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
+    /// Row i as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row i as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -138,10 +148,12 @@ impl Matrix {
         out
     }
 
+    /// Squared Frobenius norm.
     pub fn frob_norm_sq(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum()
     }
 
+    /// Scalar multiple `s * self`.
     pub fn scale(&self, s: f64) -> Matrix {
         Matrix {
             rows: self.rows,
@@ -150,6 +162,7 @@ impl Matrix {
         }
     }
 
+    /// Elementwise difference `self - other`.
     pub fn sub(&self, other: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Matrix {

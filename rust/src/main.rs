@@ -13,7 +13,8 @@
 //! Common flags: --full (paper scale), --runs N, --iters N, --instances N,
 //! --seed S, --n/--d/--k (problem shape), --solver sa|sqa|sq, --algo NAME,
 //! --augment, --no-xla, --out DIR, --layers N (compress-model),
-//! --workers N, --restart-workers N (Ising-restart fan-out).
+//! --workers N, --restart-workers N (Ising-restart fan-out),
+//! --batch-size K (batched acquisition: candidates per surrogate fit).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -98,6 +99,11 @@ FLAGS (defaults in parens):
                     Ising-restart fan-out per BBO iteration (1 = legacy
                     serial restarts; >1 = forked per-restart RNG streams,
                     bit-identical for any worker count)
+  --batch-size K    batched acquisition: candidates acquired per
+                    surrogate fit (1 = the paper's serial loop; K>1 =
+                    one fit per K candidates, top-K distinct restart
+                    minima evaluated concurrently — same evaluation
+                    budget, ~K-fold fewer surrogate fits)
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -146,6 +152,7 @@ fn cmd_decompose(args: &Args) -> Result<()> {
         restart_workers: args
             .usize_flag("restart-workers", 1)
             .map_err(|e| anyhow!(e))?,
+        batch_size: cfg.batch_size,
     };
     let run = bbo::run(
         &p,
@@ -190,6 +197,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         restart_workers: args
             .usize_flag("restart-workers", 1)
             .map_err(|e| anyhow!(e))?,
+        batch_size: cfg.batch_size,
     };
     let run = bbo::run(
         &p,
@@ -243,6 +251,7 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
                 restarts: cfg.restarts,
                 augment: args.bool_flag("augment"),
                 restart_workers: 1,
+                batch_size: cfg.batch_size,
             },
             problem: p,
             algo: algo.clone(),
@@ -253,13 +262,18 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
 
     println!(
         "compress-model: {layers} layers ({}x{}, K={}) on {} workers \
-         (restart fan-out: {restart_workers})",
-        cfg.instance.n, cfg.instance.d, cfg.instance.k, cfg.workers
+         (restart fan-out: {restart_workers}, batch size: {})",
+        cfg.instance.n,
+        cfg.instance.d,
+        cfg.instance.k,
+        cfg.workers,
+        cfg.batch_size
     );
     let t = intdecomp::util::timer::Timer::start();
     let eng = Engine::new(EngineConfig {
         workers: cfg.workers,
         restart_workers,
+        batch_size: 1, // per-job cfg above carries the batch size
     });
     let results = eng.compress_all(jobs);
     let wall = t.seconds();

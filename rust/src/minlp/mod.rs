@@ -14,6 +14,7 @@ use crate::linalg::{lu_solve, Matrix};
 
 /// A pseudo-Boolean black-box objective over spins x ∈ {-1,+1}^n.
 pub trait Oracle: Sync {
+    /// Number of binary variables of the problem.
     fn n_bits(&self) -> usize;
 
     /// The black-box evaluation y = f(x).
@@ -66,6 +67,7 @@ pub struct LinearLsqMinlp {
 }
 
 impl LinearLsqMinlp {
+    /// Problem `min ||A diag(gate(x)) z - b||² + ρ·|active|`.
     pub fn new(a: Matrix, b: Vec<f64>, rho: f64) -> Self {
         assert_eq!(a.rows, b.len());
         LinearLsqMinlp { a, b, rho }

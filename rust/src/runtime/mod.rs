@@ -41,18 +41,28 @@ use crate::util::json::Json;
 /// Shape contract recorded by `aot.py` in `artifacts/meta.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Target rows N the cost artifact was compiled for.
     pub n: usize,
+    /// Target columns D.
     pub d: usize,
+    /// Decomposition rank K.
     pub k: usize,
+    /// Binary variables n = N·K.
     pub nbits: usize,
+    /// Surrogate feature dimension P.
     pub p: usize,
+    /// Cost-artifact batch width.
     pub batch: usize,
+    /// Max dataset rows of the gram/FM artifacts.
     pub nmax: usize,
+    /// FM factor counts with compiled trainers.
     pub kfms: Vec<usize>,
+    /// Adam steps per fm_epoch artifact call.
     pub fm_steps: usize,
 }
 
 impl ArtifactMeta {
+    /// Parse `artifacts/meta.json` text.
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
         let get = |k: &str| -> Result<usize> {
@@ -84,6 +94,7 @@ impl ArtifactMeta {
 /// BOCS posterior backend routed through the artifact ("fast Gaussian
 /// sampler" on the XLA side).
 pub struct XlaPosterior {
+    /// The loaded artifact runtime.
     pub rt: std::sync::Arc<XlaRuntime>,
 }
 
@@ -115,6 +126,7 @@ impl PosteriorBackend for XlaPosterior {
 
 /// FM trainer routed through the `fm_epoch` artifact.
 pub struct XlaFmTrainer {
+    /// The loaded artifact runtime.
     pub rt: std::sync::Arc<XlaRuntime>,
     /// Artifact calls per `train_epoch` (each is `meta.fm_steps` Adam
     /// steps with moments re-initialised, warm-started parameters).
@@ -155,7 +167,9 @@ impl FmTrainer for XlaFmTrainer {
 /// artifact (the paper's f(M) on the XLA side), keeping symmetry metadata
 /// from the native problem.
 pub struct XlaCostOracle {
+    /// The loaded artifact runtime.
     pub rt: std::sync::Arc<XlaRuntime>,
+    /// The native problem (shape, symmetry orbit, fallback math).
     pub problem: crate::cost::Problem,
 }
 

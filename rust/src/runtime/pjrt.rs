@@ -28,7 +28,9 @@ struct Executables {
 /// a `Mutex`, so exposing the wrapper across threads is sound.
 pub struct XlaRuntime {
     exes: Mutex<Executables>,
+    /// Shape contract parsed from `meta.json`.
     pub meta: ArtifactMeta,
+    /// Artifact directory the runtime was loaded from.
     pub dir: PathBuf,
 }
 
@@ -96,6 +98,7 @@ impl XlaRuntime {
         None
     }
 
+    /// PJRT platform description of the loaded client.
     pub fn platform(&self) -> String {
         self.exes.lock().unwrap().client.platform_name()
     }

@@ -19,7 +19,9 @@ use crate::linalg::Matrix;
 
 /// Compiled-artifact runtime (stub: artifacts are never available).
 pub struct XlaRuntime {
+    /// Shape contract parsed from `meta.json`.
     pub meta: ArtifactMeta,
+    /// Artifact directory the runtime was loaded from.
     pub dir: PathBuf,
 }
 
@@ -54,10 +56,12 @@ impl XlaRuntime {
         None
     }
 
+    /// PJRT platform description (stub: always unavailable).
     pub fn platform(&self) -> String {
         "unavailable (built without the `xla` feature)".into()
     }
 
+    /// Batched cost evaluation (stub: always errors).
     pub fn cost_batch(
         &self,
         _w: &Matrix,
@@ -66,6 +70,7 @@ impl XlaRuntime {
         bail!("built without the `xla` feature")
     }
 
+    /// Gram-moment computation (stub: always errors).
     pub fn gram(
         &self,
         _phi: &Matrix,
@@ -74,6 +79,7 @@ impl XlaRuntime {
         bail!("built without the `xla` feature")
     }
 
+    /// BOCS posterior draw (stub: always errors).
     pub fn bocs_draw(
         &self,
         _g: &Matrix,
@@ -85,6 +91,7 @@ impl XlaRuntime {
         bail!("built without the `xla` feature")
     }
 
+    /// One FM training epoch (stub: always errors).
     #[allow(clippy::too_many_arguments)]
     pub fn fm_epoch(
         &self,

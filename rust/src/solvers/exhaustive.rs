@@ -4,6 +4,7 @@
 use super::{IsingSolver, QuadModel};
 use crate::util::rng::Rng;
 
+/// Exact minimiser: Gray-code scan of all 2^n configurations.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Exhaustive;
 

@@ -18,6 +18,12 @@
 //! * [`sq::SimulatedQuenching`] — SA with the temperature pinned at 0.1
 //!   (the paper's SQ variant: no global exploration).
 //! * [`exhaustive::Exhaustive`] — exact 2^n minimisation via Gray code.
+//!
+//! On top of the single-solve interface sit two fan-out helpers that run
+//! restarts on forked RNG streams across the persistent worker pool:
+//! [`solve_best_parallel`] (best of k restarts) and [`solve_batch`] (the
+//! top-k *distinct* restart minima, feeding the engine's batched
+//! acquisition).
 
 pub mod exhaustive;
 pub mod sa;
@@ -28,8 +34,19 @@ use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
 
 /// Dense symmetric quadratic model over ±1 spins.
+///
+/// ```
+/// use intdecomp::solvers::QuadModel;
+///
+/// let mut m = QuadModel::new(2);
+/// m.h = vec![0.5, -1.0];
+/// m.set_pair(0, 1, 2.0);
+/// m.c = 3.0;
+/// assert_eq!(m.energy(&[1, -1]), 3.0 + 0.5 + 1.0 - 2.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct QuadModel {
+    /// Number of spins.
     pub n: usize,
     /// Pair couplings, symmetric with zero diagonal; the energy counts each
     /// unordered pair once (J\[i\]\[j\] stored in both triangles, summed as
@@ -42,10 +59,12 @@ pub struct QuadModel {
 }
 
 impl QuadModel {
+    /// Zero model over `n` spins (all couplings, fields and offset 0).
     pub fn new(n: usize) -> Self {
         QuadModel { n, j: vec![0.0; n * n], h: vec![0.0; n], c: 0.0 }
     }
 
+    /// Coupling of pair (i, k) (symmetric storage).
     #[inline]
     pub fn j_at(&self, i: usize, k: usize) -> f64 {
         self.j[i * self.n + k]
@@ -173,7 +192,8 @@ pub trait IsingSolver: Send + Sync {
 }
 
 /// Best of `restarts` attempts with per-restart RNG streams, fanned across
-/// `workers` threads (`util::threadpool::parallel_map`).
+/// `workers` threads of the persistent pool
+/// ([`crate::util::threadpool::parallel_map`]).
 ///
 /// Unlike [`IsingSolver::solve_best`], which threads one RNG sequentially
 /// through the restarts (so each restart's stream depends on how much
@@ -185,6 +205,21 @@ pub trait IsingSolver: Send + Sync {
 /// index, matching the serial first-strictly-better rule.
 ///
 /// `rng` is advanced by exactly `restarts` draws regardless of `workers`.
+///
+/// ```
+/// use intdecomp::solvers::{self, sa::SimulatedAnnealing};
+/// use intdecomp::util::rng::Rng;
+///
+/// let mut m = solvers::QuadModel::new(2);
+/// m.h = vec![1.0, -2.0];
+/// let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+/// let serial =
+///     solvers::solve_best_parallel(&sa, &m, &mut Rng::new(1), 4, 1);
+/// let fanned =
+///     solvers::solve_best_parallel(&sa, &m, &mut Rng::new(1), 4, 4);
+/// assert_eq!(serial, fanned); // bit-identical for any worker count
+/// assert_eq!(serial.1, m.energy(&serial.0));
+/// ```
 pub fn solve_best_parallel(
     solver: &dyn IsingSolver,
     model: &QuadModel,
@@ -192,7 +227,62 @@ pub fn solve_best_parallel(
     restarts: usize,
     workers: usize,
 ) -> (Vec<i8>, f64) {
+    solve_batch(solver, model, rng, restarts, 1, workers)
+        .pop()
+        .expect("restarts >= 1 always yields a candidate")
+}
+
+/// Batched acquisition back-end: the `k` best *distinct* configurations
+/// found by `restarts` independent solver attempts, fanned across
+/// `workers` threads of the persistent pool.
+///
+/// This is the FMQA-style batched-acquisition primitive (arXiv:2209.01016):
+/// one surrogate fit per iteration feeds the solver fan-out, and instead
+/// of keeping only the single best restart, the top `k` distinct local
+/// minima are all returned for concurrent black-box evaluation.
+///
+/// Semantics:
+///
+/// * candidates come back sorted by energy, best first;
+/// * duplicate configurations are folded (only the first, i.e. the
+///   lowest-restart-index copy, survives), so the result may hold fewer
+///   than `k` entries when the restarts found fewer distinct minima;
+/// * ties in energy are broken toward the lowest restart index;
+/// * each restart runs on its own RNG stream forked from `rng`'s current
+///   state and the restart index, so the result is bit-identical for any
+///   `workers` value, and `rng` is advanced by exactly `restarts` draws.
+///
+/// With `k == 1` this degenerates to [`solve_best_parallel`].
+///
+/// ```
+/// use intdecomp::solvers::{self, sa::SimulatedAnnealing};
+/// use intdecomp::util::rng::Rng;
+///
+/// let mut m = solvers::QuadModel::new(3);
+/// m.h = vec![0.5, -1.0, 2.0];
+/// let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+/// let top =
+///     solvers::solve_batch(&sa, &m, &mut Rng::new(7), 8, 3, 2);
+/// assert!(!top.is_empty() && top.len() <= 3);
+/// // Best first; every candidate distinct, energies consistent.
+/// for pair in top.windows(2) {
+///     assert!(pair[0].1 <= pair[1].1);
+///     assert_ne!(pair[0].0, pair[1].0);
+/// }
+/// for (x, e) in &top {
+///     assert_eq!(*e, m.energy(x));
+/// }
+/// ```
+pub fn solve_batch(
+    solver: &dyn IsingSolver,
+    model: &QuadModel,
+    rng: &mut Rng,
+    restarts: usize,
+    k: usize,
+    workers: usize,
+) -> Vec<(Vec<i8>, f64)> {
     let restarts = restarts.max(1);
+    let k = k.max(1);
     let streams: Vec<Rng> =
         (0..restarts).map(|i| rng.fork(i as u64)).collect();
     let results = parallel_map(streams, workers, |mut child| {
@@ -200,15 +290,30 @@ pub fn solve_best_parallel(
         let e = model.energy(&x);
         (x, e)
     });
-    let mut best_x = Vec::new();
-    let mut best_e = f64::INFINITY;
-    for (x, e) in results {
-        if e < best_e {
-            best_e = e;
-            best_x = x;
+    // Stable sort with NaN explicitly ordered last: on non-NaN values
+    // `partial_cmp` is total and treats -0.0 == +0.0, so IEEE-equal
+    // energies keep restart order (the serial first-strictly-better
+    // tie-break, matching the old `e < best_e` scan exactly), the
+    // comparator is a valid total order (no sort panic), and a NaN
+    // energy from a degenerate surrogate can never rank as best.
+    let mut ranked = results;
+    ranked.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+        (false, false) => a.1.partial_cmp(&b.1).unwrap(),
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+    });
+    let mut out: Vec<(Vec<i8>, f64)> = Vec::with_capacity(k);
+    for (x, e) in ranked {
+        if out.iter().any(|(seen, _)| *seen == x) {
+            continue;
+        }
+        out.push((x, e));
+        if out.len() == k {
+            break;
         }
     }
-    (best_x, best_e)
+    out
 }
 
 /// Incrementally maintained local fields `f_i = h_i + Σ_k J_ik x_k` for
@@ -216,10 +321,12 @@ pub fn solve_best_parallel(
 /// scan per *proposed* flip (≈2× on the SA/SQ/SQA inner loops —
 /// EXPERIMENTS.md §Perf).
 pub struct LocalFields {
+    /// Current field value per site.
     pub f: Vec<f64>,
 }
 
 impl LocalFields {
+    /// Fields of configuration `x` under `model` (O(n²) full refresh).
     pub fn new(model: &QuadModel, x: &[i8]) -> Self {
         let f = (0..model.n).map(|i| model.local_field(x, i)).collect();
         LocalFields { f }
@@ -374,6 +481,52 @@ mod tests {
         let _ = solve_best_parallel(&solver, &m, &mut b, 6, 3);
         // Caller-side stream state is independent of the worker count.
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn solve_batch_candidates_are_distinct_and_sorted() {
+        let mut rng = Rng::new(213);
+        let m = random_model(&mut rng, 10);
+        let solver =
+            sa::SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let top = solve_batch(&solver, &m, &mut Rng::new(9), 12, 5, 3);
+        assert!(!top.is_empty() && top.len() <= 5);
+        for w in top.windows(2) {
+            assert!(w[0].1 <= w[1].1, "not sorted by energy");
+            assert_ne!(w[0].0, w[1].0);
+        }
+        // All pairwise distinct, not just neighbours.
+        for i in 0..top.len() {
+            for j in (i + 1)..top.len() {
+                assert_ne!(top[i].0, top[j].0, "duplicate candidate");
+            }
+            assert!((m.energy(&top[i].0) - top[i].1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solve_batch_is_worker_count_invariant() {
+        let mut rng = Rng::new(214);
+        let m = random_model(&mut rng, 9);
+        let solver =
+            sa::SimulatedAnnealing { sweeps: 8, ..Default::default() };
+        let a = solve_batch(&solver, &m, &mut Rng::new(2), 10, 4, 1);
+        let b = solve_batch(&solver, &m, &mut Rng::new(2), 10, 4, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn solve_batch_k1_matches_solve_best_parallel() {
+        let mut rng = Rng::new(215);
+        let m = random_model(&mut rng, 8);
+        let solver =
+            sa::SimulatedAnnealing { sweeps: 6, ..Default::default() };
+        let batch = solve_batch(&solver, &m, &mut Rng::new(4), 7, 1, 2);
+        let (bx, be) =
+            solve_best_parallel(&solver, &m, &mut Rng::new(4), 7, 2);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].0, bx);
+        assert_eq!(batch[0].1, be);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 use super::{IsingSolver, QuadModel};
 use crate::util::rng::Rng;
 
+/// Metropolis simulated annealing with the neal-style geometric
+/// schedule (the paper's default back-end).
 #[derive(Clone, Debug)]
 pub struct SimulatedAnnealing {
     /// Full sweeps over all spins.

@@ -6,8 +6,10 @@
 use super::{IsingSolver, QuadModel};
 use crate::util::rng::Rng;
 
+/// Fixed-temperature Metropolis (the paper's SQ variant).
 #[derive(Clone, Debug)]
 pub struct SimulatedQuenching {
+    /// Full sweeps over all spins.
     pub sweeps: usize,
     /// Constant temperature (paper: 0.1).
     pub temperature: f64,

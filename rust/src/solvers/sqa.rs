@@ -18,6 +18,7 @@
 use super::{greedy_descent, IsingSolver, QuadModel};
 use crate::util::rng::Rng;
 
+/// Path-integral Monte Carlo of the transverse-field Ising model.
 #[derive(Clone, Debug)]
 pub struct SimulatedQuantumAnnealing {
     /// Trotter slices P.

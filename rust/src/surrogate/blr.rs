@@ -53,6 +53,7 @@ pub enum Prior {
 }
 
 impl Prior {
+    /// The paper's label for the BOCS variant this prior selects.
     pub fn label(&self) -> String {
         match self {
             Prior::Normal { .. } => "nBOCS".into(),
@@ -75,6 +76,7 @@ pub trait PosteriorBackend: Send {
         z: &[f64],
     ) -> (Vec<f64>, f64);
 
+    /// Short identifier for reports ("native" / "xla").
     fn backend_name(&self) -> &'static str;
 }
 
@@ -129,7 +131,9 @@ struct HorseshoeState {
 
 /// BOCS surrogate: Bayesian linear regression + Thompson sampling.
 pub struct Blr {
+    /// Coefficient prior (selects vBOCS / nBOCS / gBOCS).
     pub prior: Prior,
+    /// Gibbs sweeps per fit (hyperparameter resampling).
     pub gibbs_sweeps: usize,
     backend: Box<dyn PosteriorBackend>,
     /// Noise variance carried across BBO iterations (warm start).
@@ -138,10 +142,12 @@ pub struct Blr {
 }
 
 impl Blr {
+    /// BLR surrogate with the native Cholesky posterior backend.
     pub fn new(prior: Prior) -> Self {
         Blr::with_backend(prior, Box::new(NativePosterior))
     }
 
+    /// BLR surrogate with an explicit posterior backend (PJRT path).
     pub fn with_backend(
         prior: Prior,
         backend: Box<dyn PosteriorBackend>,

@@ -38,19 +38,25 @@ pub trait FmTrainer: Send {
         lr: f64,
     );
 
+    /// Short identifier for reports ("native" / "xla").
     fn trainer_name(&self) -> &'static str;
 }
 
 /// Factorisation-machine surrogate with warm-started parameters.
 pub struct FactorizationMachine {
+    /// Number of binary variables.
     pub n: usize,
+    /// Latent factor count (the paper tests 8 and 12).
     pub k_fm: usize,
+    /// Bias term.
     pub w0: f64,
+    /// Linear weights.
     pub w: Vec<f64>,
     /// Latent factors, n × k_fm.
     pub v: Matrix,
     /// Adam steps per fit call.
     pub steps: usize,
+    /// Adam learning rate.
     pub lr: f64,
     trainer: Option<Box<dyn FmTrainer>>,
     adam_t: usize,
@@ -63,6 +69,7 @@ pub struct FactorizationMachine {
 }
 
 impl FactorizationMachine {
+    /// Fresh FM with small random latent factors.
     pub fn new(n: usize, k_fm: usize, rng: &mut Rng) -> Self {
         let v = Matrix::from_vec(
             n,

@@ -24,12 +24,26 @@ use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
 
 /// Growing dataset of (spin vector, cost) pairs with incremental moments.
+///
+/// ```
+/// use intdecomp::surrogate::Dataset;
+///
+/// let mut data = Dataset::new(3);
+/// data.push(vec![1, -1, 1], 2.0);
+/// data.push_batch(vec![(vec![1, 1, 1], 0.5), (vec![-1, 1, -1], 1.0)]);
+/// assert_eq!(data.len(), 3);
+/// let (best_x, best_y) = data.best().unwrap();
+/// assert_eq!((best_x, best_y), (&[1i8, 1, 1][..], 0.5));
+/// ```
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Spin-vector length n (the problem's bit count).
     pub n_bits: usize,
     /// Feature dimension P = 1 + n + n(n-1)/2.
     pub p: usize,
+    /// Evaluated spin vectors, in insertion order.
     pub xs: Vec<Vec<i8>>,
+    /// Observed costs, aligned with `xs`.
     pub ys: Vec<f64>,
     /// Φ^T Φ, maintained incrementally.
     pub g: Matrix,
@@ -40,6 +54,7 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Empty dataset over `n_bits`-spin vectors.
     pub fn new(n_bits: usize) -> Self {
         let p = features::n_features(n_bits);
         Dataset {
@@ -53,10 +68,12 @@ impl Dataset {
         }
     }
 
+    /// Number of evaluations stored.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// True when no evaluation has been stored yet.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
@@ -79,6 +96,21 @@ impl Dataset {
         self.yty += y * y;
         self.xs.push(x);
         self.ys.push(y);
+    }
+
+    /// Ingest a whole acquisition batch in one update.
+    ///
+    /// The moments are additive rank-1 updates, so the result is
+    /// bit-identical to pushing the pairs one by one in order — this is
+    /// the single-ingestion point the batched BBO loop uses after
+    /// evaluating all `batch_size` candidates of an iteration.
+    pub fn push_batch(
+        &mut self,
+        pairs: impl IntoIterator<Item = (Vec<i8>, f64)>,
+    ) {
+        for (x, y) in pairs {
+            self.push(x, y);
+        }
     }
 
     /// Best (lowest) observed cost and its argmin.
@@ -105,7 +137,12 @@ impl Dataset {
 
 /// Common interface: fit on the data seen so far, emit a QUBO to minimise.
 pub trait Surrogate: Send {
+    /// Fit the surrogate on `data` and return the quadratic model the
+    /// Ising solver should minimise (a Thompson draw for BLR, the FM
+    /// parameters themselves for FMQA).
     fn fit_model(&mut self, data: &Dataset, rng: &mut Rng) -> QuadModel;
+
+    /// Short identifier for reports (e.g. "nBOCS", "FMQA08").
     fn name(&self) -> String;
 }
 

@@ -1,78 +1,500 @@
-//! Scoped parallel-map over std threads.
+//! Persistent worker pool and the `parallel_map` fan-out built on it.
 //!
-//! The experiment harness and the compression engine fan independent work
-//! (BBO runs, Ising-solver restarts, whole-layer compression jobs) across
-//! workers pulling from a shared queue, preserving input order in the
-//! output.
+//! PR 1 fanned work out with per-call scoped threads; at paper scale the
+//! BBO loop performs thousands of iterations, each spawning (and joining)
+//! a fresh set of OS threads for the Ising-restart fan-out.  This module
+//! replaces that with one long-lived [`WorkerPool`]: threads are spawned
+//! once, jobs are pushed onto a shared queue, and every layer of the
+//! engine — Ising-solver restarts, batched candidate evaluation, and
+//! whole-model [`crate::engine::Engine::compress_all`] jobs — reuses the
+//! same pool across all BBO iterations through [`parallel_map`] /
+//! [`WorkerPool::map`].
 //!
-//! Panic policy: a panicking worker does not poison unrelated work — the
-//! first panic payload is captured, the remaining queue is drained so the
-//! other workers wind down, and the payload is re-raised on the calling
-//! thread with `std::panic::resume_unwind`, exactly as if the closure had
-//! panicked inline.
+//! Deadlock freedom: `map` calls nest (a compression job running on the
+//! pool fans its solver restarts back onto the same pool).  Two rules
+//! keep that safe on a bounded pool: the calling thread always works
+//! through its own batch alongside the workers, and while it waits for
+//! in-flight items it *reclaims its own* still-queued runner tickets
+//! (tagged with the batch's identity) and runs them inline instead of
+//! blocking idle.  Every batch therefore drains through threads that are
+//! already committed to it, so a `map` completes even when every pool
+//! thread is busy — by induction over the nesting depth — and a waiting
+//! caller never executes unrelated work (a queued `submit` job can block
+//! without hanging anyone, and foreign batches never run inside a
+//! caller's timing window).
+//!
+//! Panic policy (same contract as the PR 1 scoped version): a panicking
+//! item does not poison unrelated work — the first panic payload is
+//! captured, the batch's remaining items are skipped, and the payload is
+//! re-raised on the calling thread with `std::panic::resume_unwind`,
+//! exactly as if the closure had panicked inline.  The pool itself
+//! survives: no worker thread ever unwinds.
 
 use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
-/// Map `f` over `items` using up to `workers` OS threads, preserving order.
+/// A type-erased job on the pool's shared queue.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued job plus the identity of the `map` batch it serves
+/// (`0` for standalone `submit`/`run` jobs, which are never reclaimed
+/// by waiting `map` callers).
+struct QueueTask {
+    batch: usize,
+    run: Task,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    /// FIFO job queue workers pull from.
+    queue: Mutex<VecDeque<QueueTask>>,
+    /// Signalled when a job is pushed or the pool shuts down.
+    work_cv: Condvar,
+    /// Set once by `Drop`; workers drain the queue and exit.
+    shutdown: AtomicBool,
+}
+
+/// A persistent pool of worker threads with job submission and result
+/// channels.
+///
+/// Threads are spawned once in [`WorkerPool::new`] and live until the
+/// pool is dropped, so per-iteration fan-outs pay a queue push instead
+/// of a thread spawn.  Three entry points:
+///
+/// * [`WorkerPool::submit`] — fire-and-forget job submission;
+/// * [`WorkerPool::run`] — job submission with an
+///   [`std::sync::mpsc`] result channel;
+/// * [`WorkerPool::map`] — ordered parallel map over owned items with
+///   borrowed closures (the engine's workhorse; [`parallel_map`] is this
+///   on the [`WorkerPool::global`] pool).
+///
+/// # Examples
+///
+/// ```
+/// use intdecomp::util::threadpool::WorkerPool;
+///
+/// let pool = WorkerPool::new(4);
+/// // Ordered map: results come back in input order.
+/// let squares = pool.map((0..8).collect::<Vec<u64>>(), 4, |x| x * x);
+/// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+/// // Result channel: receive the job's output when it finishes.
+/// let rx = pool.run(|| 21 * 2);
+/// assert_eq!(rx.recv().unwrap(), 42);
+/// ```
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` (at least 1) persistent threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("intdecomp-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers, handles }
+    }
+
+    /// The process-wide pool, created on first use and reused for the
+    /// rest of the process — this is the pool all BBO iterations and
+    /// engine jobs share.  Sized at [`default_workers`]` - 1` threads
+    /// (minimum 1): a `map` caller always participates in its own
+    /// batch, so pool threads + caller saturate the cores without
+    /// oversubscribing them.
+    ///
+    /// ```
+    /// use intdecomp::util::threadpool::WorkerPool;
+    ///
+    /// let doubled =
+    ///     WorkerPool::global().map(vec![1, 2, 3], 2, |x: i32| 2 * x);
+    /// assert_eq!(doubled, vec![2, 4, 6]);
+    /// ```
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            WorkerPool::new(default_workers().saturating_sub(1).max(1))
+        })
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Fire-and-forget job submission.  The job runs on some worker
+    /// thread; a panicking job is caught and discarded so the worker
+    /// survives (use [`WorkerPool::run`] to observe failures).
+    ///
+    /// ```
+    /// use intdecomp::util::threadpool::WorkerPool;
+    /// use std::sync::mpsc::channel;
+    ///
+    /// let (tx, rx) = channel();
+    /// WorkerPool::global().submit(move || tx.send(7).unwrap());
+    /// assert_eq!(rx.recv().unwrap(), 7);
+    /// ```
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.enqueue(
+            0,
+            Box::new(move || {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }),
+        );
+    }
+
+    /// Submit a job and get a result channel: the receiver yields the
+    /// job's output when it completes.  If the job panics the sender is
+    /// dropped without sending, so `recv()` returns `Err` instead of
+    /// hanging.
+    ///
+    /// ```
+    /// use intdecomp::util::threadpool::WorkerPool;
+    ///
+    /// let pool = WorkerPool::new(2);
+    /// let rx = pool.run(|| "done");
+    /// assert_eq!(rx.recv().unwrap(), "done");
+    /// ```
+    pub fn run<R, F>(&self, job: F) -> Receiver<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.submit(move || {
+            let _ = tx.send(job());
+        });
+        rx
+    }
+
+    /// Map `f` over `items` with up to `cap` of them in flight at once,
+    /// preserving input order in the output.
+    ///
+    /// The closure may borrow from the caller's stack (the call blocks
+    /// until every spawned task has finished with it).  The calling
+    /// thread participates as one of the runners and, while waiting,
+    /// reclaims its own still-queued runner tickets, so the call makes
+    /// progress even when the pool is saturated, nested `map` calls
+    /// from inside `f` cannot deadlock, and no unrelated queued work
+    /// ever runs on the calling thread.  Effective parallelism is
+    /// `min(cap, items.len(), pool workers + 1)`.
+    ///
+    /// `cap == 1` (or fewer than two items) short-circuits to a plain
+    /// inline `map` on the calling thread — bit-for-bit the legacy
+    /// serial path, with no queue traffic at all.
+    ///
+    /// ```
+    /// use intdecomp::util::threadpool::WorkerPool;
+    ///
+    /// let pool = WorkerPool::new(3);
+    /// let sum: i64 = pool
+    ///     .map((0..100).collect::<Vec<i64>>(), 8, |x| x + 1)
+    ///     .into_iter()
+    ///     .sum();
+    /// assert_eq!(sum, 5050);
+    /// ```
+    pub fn map<T, R, F>(&self, items: Vec<T>, cap: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let cap = cap.max(1);
+        let n = items.len();
+        if cap == 1 || n <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        // The caller is one runner; the rest are tickets on the pool.
+        let extra = cap.min(n) - 1;
+        let gate = Arc::new(Gate {
+            remaining: AtomicUsize::new(n),
+            live_runners: AtomicUsize::new(extra),
+            queued: AtomicUsize::new(extra),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let batch = Batch {
+            items: Mutex::new(items.into_iter().enumerate().collect()),
+            results: Mutex::new(slots),
+            f: &f,
+            cancelled: AtomicBool::new(false),
+            panic: Mutex::new(None),
+        };
+        // The batch's address tags its tickets on the queue; tickets
+        // are always fully consumed before `map` returns, so the tag
+        // cannot outlive the batch it names.
+        let batch_id = &batch as *const Batch<'_, T, R, F> as usize;
+        for _ in 0..extra {
+            let b: &Batch<'_, T, R, F> = &batch;
+            let g = Arc::clone(&gate);
+            let ticket: Box<dyn FnOnce() + Send + '_> =
+                Box::new(move || {
+                    g.queued.fetch_sub(1, Ordering::SeqCst);
+                    run_items(b, &g);
+                    g.finish_runner();
+                });
+            // SAFETY: the ticket borrows `batch` and `f` from this
+            // stack frame; the gate it signals through is its own Arc
+            // clone, never reached via the borrow.  Inside the ticket,
+            // every access to the borrowed data happens strictly before
+            // the gate decrement that accounts for it (items/results/f
+            // before each `finish_item`, nothing after `finish_runner`),
+            // and `map` does not return until `remaining == 0` AND
+            // `live_runners == 0` (SeqCst RMW chain, so those accesses
+            // happen-before the caller's exit).  The erased lifetime
+            // therefore never outlives the borrowed data.  No code
+            // between here and the wait loop can panic: every mutex in
+            // the pool is only ever locked around plain queue/slot
+            // operations (user closures run outside all locks), so the
+            // `.unwrap()`s on lock results never fire.
+            let ticket: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Task>(
+                    ticket,
+                )
+            };
+            self.enqueue(batch_id, ticket);
+        }
+        // Work through the batch on this thread too.
+        run_items(&batch, &gate);
+        // Wait for in-flight items and for every ticket to finish.
+        // Tickets of THIS batch that are still queued are reclaimed and
+        // run inline — that alone guarantees liveness under nesting
+        // (every batch drains through threads already committed to it),
+        // without ever pulling unrelated work into this call.
+        loop {
+            if gate.done() {
+                break;
+            }
+            // Scan the queue only while some of our tickets may still
+            // be sitting on it; afterwards every wait iteration is a
+            // pair of atomic loads plus the condvar.
+            if gate.queued.load(Ordering::SeqCst) > 0 {
+                let own = {
+                    let mut q = self.shared.queue.lock().unwrap();
+                    match q.iter().position(|t| t.batch == batch_id) {
+                        Some(i) => q.remove(i),
+                        None => None,
+                    }
+                };
+                if let Some(task) = own {
+                    (task.run)();
+                    continue;
+                }
+            }
+            let guard = gate.lock.lock().unwrap();
+            if gate.done() {
+                break;
+            }
+            // Timeout as a belt-and-braces liveness guard; the normal
+            // wake-up is the notify in `finish_item`/`finish_runner`.
+            let _ = gate
+                .cv
+                .wait_timeout(guard, Duration::from_millis(5))
+                .unwrap();
+        }
+        if let Some(payload) = batch.panic.into_inner().unwrap() {
+            resume_unwind(payload);
+        }
+        let slots = batch.results.into_inner().unwrap();
+        slots
+            .into_iter()
+            .map(|r| r.expect("every mapped item produced a result"))
+            .collect()
+    }
+
+    /// Push a task tagged with its batch identity (`0` = standalone
+    /// job) and wake one worker.  Notifying while the queue lock is
+    /// held closes the race with a worker that is between its
+    /// empty-queue check and its `wait`.
+    fn enqueue(&self, batch: usize, run: Task) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(QueueTask { batch, run });
+        self.shared.work_cv.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Drains the queue, then joins every worker.  Jobs already
+    /// submitted still run to completion before the pool goes away.
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            // Lock before notifying so no worker is between its
+            // shutdown check and its wait when the signal fires.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker thread body: pop and run tasks until shutdown drains the
+/// queue.  Tasks are pre-wrapped so they never unwind into this loop.
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => (t.run)(),
+            None => return,
+        }
+    }
+}
+
+/// Completion gate of one `map` call.  Lives in an `Arc` so every
+/// ticket owns a strong reference: the decrement that releases the
+/// waiting caller, and the notify that follows it, only ever touch
+/// reference-counted memory — never the stack-allocated [`Batch`] the
+/// caller is about to destroy.
+struct Gate {
+    /// Items not yet finished (started or not).
+    remaining: AtomicUsize,
+    /// Pool tickets that have not yet run to completion.
+    live_runners: AtomicUsize,
+    /// Tickets still sitting on the pool queue (decremented when a
+    /// ticket starts running); lets the waiter skip the queue scan once
+    /// all of its tickets are running or done.
+    queued: AtomicUsize,
+    /// Lock/condvar pair the caller waits on for completion.
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Gate {
+    /// All items finished and all pool tickets done with the batch.
+    fn done(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) == 0
+            && self.live_runners.load(Ordering::SeqCst) == 0
+    }
+
+    /// Mark one item finished; wake the waiting caller only on the
+    /// zero transition (earlier wakes can't change its `done` check).
+    fn finish_item(&self) {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Mark one pool ticket finished; wake the waiting caller only on
+    /// the zero transition.
+    fn finish_runner(&self) {
+        if self.live_runners.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// One `map` call's borrowed state: its private item queue, result
+/// slots and panic bookkeeping.  Only touched *before* the gate
+/// decrement that accounts for the touching runner, so the caller can
+/// safely destroy it once [`Gate::done`] holds.
+struct Batch<'a, T, R, F> {
+    /// Items not yet started, with their output index.
+    items: Mutex<VecDeque<(usize, T)>>,
+    /// One slot per item, filled in input order.
+    results: Mutex<Vec<Option<R>>>,
+    /// The map closure, shared by every runner.
+    f: &'a F,
+    /// Set on the first panic; remaining items are then skipped.
+    cancelled: AtomicBool,
+    /// First panic payload, re-raised by the caller.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Runner body shared by the caller and the pool tickets: pull items
+/// from the batch queue until it is empty.  `gate` is the runner's own
+/// (owned or caller-held) handle, NOT reached through `batch`, so the
+/// wake-up after the final item decrement never dereferences the batch.
+fn run_items<T, R, F>(batch: &Batch<'_, T, R, F>, gate: &Gate)
+where
+    F: Fn(T) -> R,
+{
+    loop {
+        let next = batch.items.lock().unwrap().pop_front();
+        let Some((idx, item)) = next else { break };
+        if batch.cancelled.load(Ordering::SeqCst) {
+            // A sibling panicked: count the item done without running.
+            gate.finish_item();
+            continue;
+        }
+        // Catch panics outside any lock so no mutex is ever poisoned
+        // by user code.
+        match catch_unwind(AssertUnwindSafe(|| (batch.f)(item))) {
+            Ok(out) => {
+                batch.results.lock().unwrap()[idx] = Some(out);
+            }
+            Err(payload) => {
+                let mut first = batch.panic.lock().unwrap();
+                if first.is_none() {
+                    *first = Some(payload);
+                }
+                batch.cancelled.store(true, Ordering::SeqCst);
+            }
+        }
+        gate.finish_item();
+    }
+}
+
+/// Map `f` over `items` using up to `workers` threads of the
+/// process-wide [`WorkerPool::global`] pool, preserving input order.
+///
+/// This is the crate-wide fan-out primitive: solver restarts, batched
+/// candidate evaluation, per-run experiment fan-outs and engine
+/// compression jobs all route through it, so they all share one set of
+/// long-lived threads instead of spawning their own.
+///
+/// `workers == 1` (or a single item) runs inline on the calling thread
+/// and is bit-for-bit the legacy serial path.
+///
+/// ```
+/// use intdecomp::util::threadpool::parallel_map;
+///
+/// let tripled = parallel_map(vec![1, 2, 3], 4, |x: i32| x * 3);
+/// assert_eq!(tripled, vec![3, 6, 9]);
+/// ```
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let workers = workers.max(1);
-    if workers == 1 || items.len() <= 1 {
-        return items.into_iter().map(f).collect();
-    }
-    let n = items.len();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = Mutex::new(work);
-    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
-    let first_panic: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
-                let job = queue.lock().unwrap().pop();
-                match job {
-                    Some((idx, item)) => {
-                        // Catch panics outside any lock so no mutex is
-                        // ever poisoned by user code.
-                        match catch_unwind(AssertUnwindSafe(|| f(item))) {
-                            Ok(out) => {
-                                done.lock().unwrap().push((idx, out));
-                            }
-                            Err(payload) => {
-                                let mut first =
-                                    first_panic.lock().unwrap();
-                                if first.is_none() {
-                                    *first = Some(payload);
-                                }
-                                // Stop handing out work; in-flight items
-                                // on other workers finish normally.
-                                queue.lock().unwrap().clear();
-                                break;
-                            }
-                        }
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
-
-    if let Some(payload) = first_panic.into_inner().unwrap() {
-        resume_unwind(payload);
-    }
-    let mut done = done.into_inner().unwrap();
-    debug_assert_eq!(done.len(), n);
-    done.sort_by_key(|&(idx, _)| idx);
-    done.into_iter().map(|(_, r)| r).collect()
+    WorkerPool::global().map(items, workers, f)
 }
 
-/// Number of workers to use by default (leave one core for the runtime).
+/// Number of workers to use by default (all available cores).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -135,8 +557,8 @@ mod tests {
 
     #[test]
     fn survives_after_a_previous_panicked_call() {
-        // A panicked parallel_map must not leave behind state that breaks
-        // the next call (no poisoned shared mutexes).
+        // A panicked map must not leave behind state that breaks the
+        // next call on the same (global) pool.
         let r = catch_unwind(|| {
             parallel_map(vec![1, 2, 3, 4], 2, |x| {
                 if x == 3 {
@@ -148,5 +570,128 @@ mod tests {
         assert!(r.is_err());
         let ok = parallel_map(vec![1, 2, 3, 4], 2, |x| x + 1);
         assert_eq!(ok, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_maps() {
+        // Thousands of fan-outs on one pool: the per-iteration pattern
+        // of the BBO loop.  With per-call thread spawning this test is
+        // painfully slow; on the persistent pool it is instant.
+        let pool = WorkerPool::new(4);
+        let mut acc = 0u64;
+        for round in 0..2000u64 {
+            let out =
+                pool.map((0..8).collect::<Vec<u64>>(), 4, |x| x + round);
+            acc += out.iter().sum::<u64>();
+        }
+        assert_eq!(acc, (0..2000u64).map(|r| 8 * r + 28).sum::<u64>());
+    }
+
+    #[test]
+    fn caller_participates_when_pool_is_saturated() {
+        // A 1-thread pool whose only worker is parked on a slow job:
+        // map still completes because the caller runs items itself.
+        let pool = WorkerPool::new(1);
+        let (started_tx, started_rx) = channel();
+        let (tx, rx) = channel::<()>();
+        pool.submit(move || {
+            // Hold the worker until the map below has finished.
+            started_tx.send(()).unwrap();
+            let _ = rx.recv();
+        });
+        // Make sure the worker really is parked on the blocking job
+        // before mapping, so the pool is guaranteed saturated.
+        started_rx.recv().unwrap();
+        let out = pool.map(vec![1, 2, 3, 4], 4, |x: i32| x * x);
+        assert_eq!(out, vec![1, 4, 9, 16]);
+        tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn map_never_reclaims_unrelated_submit_jobs() {
+        // A *queued* (not yet running) submit job that blocks must not
+        // be pulled inline by a waiting map call — the map completes
+        // and the job stays queued for a worker.
+        let pool = WorkerPool::new(1);
+        let (hold_tx, hold_rx) = channel::<()>();
+        let (started_tx, started_rx) = channel();
+        let (blocked_tx, blocked_rx) = channel::<()>();
+        let (done_tx, done_rx) = channel();
+        // Occupy the only worker...
+        pool.submit(move || {
+            started_tx.send(()).unwrap();
+            let _ = hold_rx.recv();
+        });
+        started_rx.recv().unwrap();
+        // ...then queue a second blocking job behind it.
+        pool.submit(move || {
+            let _ = blocked_rx.recv();
+            done_tx.send(()).unwrap();
+        });
+        // The map must finish on the caller thread alone, without
+        // touching either submit job.
+        let out = pool.map(vec![5, 6, 7], 3, |x: i32| x - 5);
+        assert_eq!(out, vec![0, 1, 2]);
+        // Unblock both jobs; the queued one still runs to completion.
+        hold_tx.send(()).unwrap();
+        blocked_tx.send(()).unwrap();
+        done_rx.recv().unwrap();
+    }
+
+    #[test]
+    fn nested_maps_do_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let out = pool.map((0..6).collect::<Vec<u64>>(), 6, |i| {
+            pool.map((0..5).collect::<Vec<u64>>(), 5, |j| 10 * i + j)
+                .into_iter()
+                .sum::<u64>()
+        });
+        assert_eq!(out[2], 20 + 21 + 22 + 23 + 24);
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn run_returns_result_over_channel() {
+        let pool = WorkerPool::new(2);
+        let rx = pool.run(|| 6 * 7);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn run_panic_surfaces_as_recv_error() {
+        let pool = WorkerPool::new(2);
+        let rx = pool.run(|| -> i32 { panic!("job failed") });
+        assert!(rx.recv().is_err());
+        // The worker survived the panic and keeps serving jobs.
+        assert_eq!(pool.run(|| 1).recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn drop_completes_submitted_jobs() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = channel();
+        for i in 0..16 {
+            let tx = tx.clone();
+            pool.submit(move || tx.send(i).unwrap());
+        }
+        drop(tx);
+        drop(pool); // joins workers after the queue drains
+        let got: Vec<i32> = rx.iter().collect();
+        assert_eq!(got.len(), 16);
+    }
+
+    #[test]
+    fn map_results_are_worker_count_invariant() {
+        let serial = parallel_map((0..50).collect::<Vec<i64>>(), 1, |x| {
+            x * x - 3 * x
+        });
+        for workers in [2, 3, 8] {
+            let par = parallel_map(
+                (0..50).collect::<Vec<i64>>(),
+                workers,
+                |x| x * x - 3 * x,
+            );
+            assert_eq!(par, serial, "workers = {workers}");
+        }
     }
 }

@@ -8,14 +8,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds elapsed since `start`.
     pub fn seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds elapsed since `start`.
     pub fn millis(&self) -> f64 {
         self.seconds() * 1e3
     }

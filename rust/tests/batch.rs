@@ -1,0 +1,195 @@
+//! Batched-acquisition integration tests (ISSUE 2): the `batch_size = 1`
+//! legacy contract, worker-count invariance of batched runs, distinctness
+//! of `solve_batch` candidates inside a real run, and cache accounting
+//! under concurrent candidate evaluation.
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::engine::{
+    CachedOracle, CompressionJob, CostCache, Engine, EngineConfig,
+};
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::solvers::{self, sa::SimulatedAnnealing};
+use intdecomp::surrogate::{
+    blr::{Blr, Prior},
+    Dataset, Surrogate,
+};
+use intdecomp::util::rng::Rng;
+
+fn tiny(idx: usize) -> intdecomp::cost::Problem {
+    let cfg = InstanceConfig { n: 4, d: 10, k: 2, gamma: 0.8, seed: 55 };
+    generate(&cfg, idx)
+}
+
+fn sa(sweeps: usize) -> SimulatedAnnealing {
+    SimulatedAnnealing { sweeps, ..Default::default() }
+}
+
+#[test]
+fn batch_one_is_bit_identical_to_the_legacy_serial_stream() {
+    // The engine regression (compress_all == serial bbo::run) plus this:
+    // a config that only sets batch_size = 1 explicitly must reproduce
+    // the default-config run exactly, for every algorithm family.
+    let p = tiny(0);
+    for name in ["nbocs", "fmqa08", "rs"] {
+        let algo = Algorithm::by_name(name).unwrap();
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 20);
+        let a = bbo::run(&p, &algo, &sa(15), &cfg, &Backends::default(), 3);
+        let mut explicit = cfg.clone();
+        explicit.batch_size = 1;
+        let b = bbo::run(
+            &p,
+            &algo,
+            &sa(15),
+            &explicit,
+            &Backends::default(),
+            3,
+        );
+        assert_eq!(a.xs, b.xs, "{name}");
+        assert_eq!(a.ys, b.ys, "{name}");
+        assert_eq!(a.best_curve, b.best_curve, "{name}");
+    }
+}
+
+#[test]
+fn batched_runs_are_invariant_to_every_worker_knob() {
+    // batch_size > 1 must give one fixed result no matter how the work
+    // is spread: restart fan-out width and engine job workers included.
+    let p = tiny(1);
+    let algo = Algorithm::Nbocs { sigma2: 0.1 };
+    let run_with = |restart_workers: usize| {
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), 16);
+        cfg.batch_size = 4;
+        cfg.restart_workers = restart_workers;
+        bbo::run(&p, &algo, &sa(12), &cfg, &Backends::default(), 21)
+    };
+    let reference = run_with(1);
+    for rw in [2, 3, 8] {
+        let r = run_with(rw);
+        assert_eq!(reference.ys, r.ys, "restart_workers {rw}");
+        assert_eq!(reference.xs, r.xs, "restart_workers {rw}");
+        assert_eq!(reference.best_x, r.best_x);
+    }
+}
+
+#[test]
+fn solve_batch_candidates_are_distinct_on_a_fitted_surrogate() {
+    // Distinctness on a *realistic* model: fit a BLR surrogate on real
+    // evaluations of a paper-shaped instance, then batch-solve it.
+    let p = generate(&InstanceConfig::default(), 0);
+    let mut rng = Rng::new(11);
+    let mut data = Dataset::new(p.n_bits());
+    for _ in 0..60 {
+        let x = rng.spins(p.n_bits());
+        let y = p.cost_spins(&x);
+        data.push(x, y);
+    }
+    let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+    let model = blr.fit_model(&data, &mut rng);
+    let top = solvers::solve_batch(
+        &sa(30),
+        &model,
+        &mut Rng::new(5),
+        12,
+        6,
+        4,
+    );
+    assert!(!top.is_empty() && top.len() <= 6);
+    for i in 0..top.len() {
+        for j in (i + 1)..top.len() {
+            assert_ne!(top[i].0, top[j].0, "duplicate candidate {i}/{j}");
+        }
+    }
+    for w in top.windows(2) {
+        assert!(w[0].1 <= w[1].1, "candidates not sorted by energy");
+    }
+}
+
+#[test]
+fn cache_accounting_is_exact_under_concurrent_batched_evaluation() {
+    // Concurrent evaluation of a batch must neither lose nor invent
+    // lookups: hits + misses == one lookup per black-box evaluation,
+    // and the cached values stay correct.
+    let p = tiny(2);
+    let cache = CostCache::new();
+    let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+    let mut cfg = BboConfig::smoke_scale(p.n_bits(), 24);
+    cfg.batch_size = 6;
+    let run = bbo::run(
+        &oracle,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa(15),
+        &cfg,
+        &Backends::default(),
+        13,
+    );
+    let s = cache.stats();
+    assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+    assert_eq!(s.lookups() as usize, run.ys.len());
+    assert!(s.misses >= 1 && s.misses <= s.lookups());
+    // Distinct keys can never exceed misses (racing duplicates may
+    // double-miss, never double-insert a new key).
+    assert!(cache.len() as u64 <= s.misses);
+    // Every recorded y is the true cost of its x (cache returned the
+    // right values under concurrency).
+    for (x, &y) in run.xs.iter().zip(&run.ys) {
+        assert_eq!(y, p.cost_spins(x));
+    }
+}
+
+#[test]
+fn engine_batch_size_override_applies_to_all_jobs() {
+    let jobs = |batch: usize| -> Vec<CompressionJob> {
+        (0..3)
+            .map(|i| {
+                CompressionJob::new(
+                    format!("l{i}"),
+                    tiny(i),
+                    12,
+                    40 + i as u64,
+                )
+                .with_solver(Box::new(sa(10)))
+                .with_batch_size(batch)
+            })
+            .collect()
+    };
+    // Per-job batch config and the engine-level override must agree.
+    let via_jobs = Engine::with_workers(2).compress_all(jobs(3));
+    let via_engine = Engine::new(EngineConfig {
+        workers: 2,
+        restart_workers: 1,
+        batch_size: 3,
+    })
+    .compress_all(jobs(1));
+    for (a, b) in via_jobs.iter().zip(&via_engine) {
+        assert_eq!(a.run.ys, b.run.ys);
+        assert_eq!(a.run.best_x, b.run.best_x);
+        assert_eq!(a.cache.lookups(), b.cache.lookups());
+    }
+    // And the budget is unchanged by batching.
+    for r in &via_jobs {
+        assert_eq!(r.run.ys.len(), 8 + 12);
+    }
+}
+
+#[test]
+fn batched_and_serial_runs_agree_on_the_oracle_values() {
+    // Batching changes *which* candidates are acquired (one fit per k),
+    // but every recorded (x, y) must still satisfy y = f(x).
+    let p = tiny(3);
+    let mut cfg = BboConfig::smoke_scale(p.n_bits(), 15);
+    cfg.batch_size = 5;
+    let run = bbo::run(
+        &p,
+        &Algorithm::Fmqa { k_fm: 8 },
+        &sa(10),
+        &cfg,
+        &Backends::default(),
+        2,
+    );
+    for (x, &y) in run.xs.iter().zip(&run.ys) {
+        assert_eq!(y, p.cost_spins(x));
+    }
+    for w in run.best_curve.windows(2) {
+        assert!(w[1] <= w[0] + 1e-12);
+    }
+}

@@ -95,8 +95,12 @@ fn restart_fanout_is_deterministic_across_widths() {
 #[test]
 fn engine_restart_fanout_is_deterministic_too() {
     let mk = |rw: usize| {
-        Engine::new(EngineConfig { workers: 2, restart_workers: rw })
-            .compress_all((0..2).map(job).collect())
+        Engine::new(EngineConfig {
+            workers: 2,
+            restart_workers: rw,
+            batch_size: 1,
+        })
+        .compress_all((0..2).map(job).collect())
     };
     let a = mk(2);
     let b = mk(8);
