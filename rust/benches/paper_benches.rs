@@ -3,6 +3,7 @@
 //! vendored; DESIGN.md §6).
 //!
 //! Groups:
+//!   linalg      — blocked numeric-core kernels at posterior scale (P=301)
 //!   cost        — black-box evaluation: native vs XLA artifact (L1 path)
 //!   bruteforce  — Table 2 "brute force" row workloads
 //!   solvers     — Fig. 2 back-ends on a 24-spin surrogate
@@ -12,64 +13,146 @@
 //!                 acquisition (batch_size 1 vs ≥4 at a fixed evaluation
 //!                 budget on the paper-scale instance), and batched
 //!                 multi-layer compression (workers 1 vs many)
+//!
+//! Every run writes `BENCH_<label>.json` at the repo root
+//! (`--label NAME`, default "local"; `--quick` for short iterations) so
+//! the perf trajectory is tracked in-tree — see README "Benchmarks".
 
 use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
-use intdecomp::bench::Bencher;
+use intdecomp::bench::{self, Bencher, BenchStats};
 use intdecomp::bruteforce::{brute_force, full_scan_gray};
 use intdecomp::cost::BinMatrix;
 use intdecomp::engine::{CompressionJob, Engine};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::linalg::{cholesky_scaled, Matrix};
 use intdecomp::runtime::XlaRuntime;
 use intdecomp::solvers::{self};
 use intdecomp::surrogate::{
-    blr::{Blr, Prior},
+    blr::{Blr, NativePosterior, PosteriorBackend, PosteriorScratch, Prior},
     fm::FactorizationMachine,
     Dataset, Surrogate,
 };
 use intdecomp::util::rng::Rng;
 
+fn note(all: &mut Vec<BenchStats>, s: BenchStats) {
+    println!("{}", s.report());
+    all.push(s);
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let label = argv
+        .iter()
+        .position(|a| a == "--label")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .or_else(|| {
+            argv.iter().find_map(|a| {
+                a.strip_prefix("--label=").map(str::to_string)
+            })
+        })
+        .unwrap_or_else(|| "local".into());
     let b = if quick {
         Bencher::new(1, 3)
     } else {
         Bencher::new(2, 8)
     };
+    let mut all: Vec<BenchStats> = Vec::new();
     let p = generate(&InstanceConfig::default(), 0);
     let mut rng = Rng::new(99);
+    let workers = intdecomp::util::threadpool::default_workers();
 
-    println!("== cost: black-box evaluation (8x100, K=3) ==");
+    println!("== linalg: blocked kernels at posterior scale (P = 301) ==");
+    {
+        let p_dim = 301;
+        let a = Matrix::from_vec(320, p_dim, rng.normals(320 * p_dim));
+        note(
+            &mut all,
+            b.run("linalg/gram 320x301", 320, || a.gram().data[0]),
+        );
+        let g = {
+            let mut g = a.gram();
+            for i in 0..p_dim {
+                g[(i, i)] += 5.0;
+            }
+            g
+        };
+        let lam = vec![1.0; p_dim];
+        note(
+            &mut all,
+            b.run("linalg/cholesky_scaled P=301", 1, || {
+                cholesky_scaled(&g, 1.0, &lam, 0.0, 0.0)
+                    .map(|l| l[(0, 0)])
+                    .unwrap_or(0.0)
+            }),
+        );
+        let be = NativePosterior;
+        let gv = rng.normals(p_dim);
+        let z = rng.normals(p_dim);
+        let mut scratch = PosteriorScratch::new();
+        note(
+            &mut all,
+            b.run("linalg/posterior draw (scratch reuse)", 1, || {
+                be.draw_into(&g, &gv, &lam, 0.5, &z, &mut scratch)
+            }),
+        );
+        note(
+            &mut all,
+            b.run("linalg/posterior draw (fresh alloc)", 1, || {
+                be.draw(&g, &gv, &lam, 0.5, &z).1
+            }),
+        );
+    }
+
+    println!("\n== cost: black-box evaluation (8x100, K=3) ==");
     let batch: Vec<BinMatrix> = (0..256)
         .map(|_| BinMatrix::new(p.n(), p.k, rng.spins(p.n_bits())))
         .collect();
-    let s = b.run("cost/native x256", 256, || {
-        batch.iter().map(|m| p.cost(m)).sum::<f64>()
-    });
-    println!("{}", s.report());
+    note(
+        &mut all,
+        b.run("cost/native x256", 256, || {
+            batch.iter().map(|m| p.cost(m)).sum::<f64>()
+        }),
+    );
+    note(
+        &mut all,
+        b.run(
+            &format!("cost/native cost_batch x256 ({workers} workers)"),
+            256,
+            || p.cost_batch(&batch, workers).iter().sum::<f64>(),
+        ),
+    );
     if let Some(rt) = XlaRuntime::load_default() {
-        let s = b.run("cost/xla-artifact x256", 256, || {
-            rt.cost_batch(&p.w, &batch).unwrap().iter().sum::<f64>()
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run("cost/xla-artifact x256", 256, || {
+                rt.cost_batch(&p.w, &batch).unwrap().iter().sum::<f64>()
+            }),
+        );
     } else {
         println!("cost/xla-artifact: skipped (no artifacts/)");
     }
 
     println!("\n== bruteforce: exact search (Table 2 reference row) ==");
-    let s = b.run("bruteforce/canonical 357760", 357_760, || {
-        brute_force(&p).best_cost
-    });
-    println!("{}", s.report());
+    note(
+        &mut all,
+        b.run("bruteforce/canonical 357760", 357_760, || {
+            brute_force(&p).best_cost
+        }),
+    );
     if !quick {
         let small = generate(
             &InstanceConfig { n: 6, d: 40, k: 3, gamma: 0.7, seed: 5 },
             0,
         );
-        let s = b.run("bruteforce/gray 2^18", 1 << 18, || {
-            full_scan_gray(&small).0
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run("bruteforce/gray 2^18", 1 << 18, || {
+                full_scan_gray(&small).0
+            }),
+        );
     }
 
     println!("\n== solvers: 24-spin surrogate minimisation (Fig. 2) ==");
@@ -86,10 +169,12 @@ fn main() {
     for name in ["sa", "sqa", "sq"] {
         let solver = solvers::by_name(name).unwrap();
         let mut r = Rng::new(7);
-        let s = b.run(&format!("solver/{name} best-of-10"), 10, || {
-            solver.solve_best(&model, &mut r, 10).1
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run(&format!("solver/{name} best-of-10"), 10, || {
+                solver.solve_best(&model, &mut r, 10).1
+            }),
+        );
     }
 
     println!("\n== surrogate: per-iteration fit at paper scale (Table 2) ==");
@@ -106,26 +191,40 @@ fn main() {
         ("vBOCS", Prior::Horseshoe),
     ] {
         let mut blr = Blr::new(prior);
-        let s = b.run(&format!("surrogate/{label} fit+draw"), 1, || {
-            blr.fit_model(&data, &mut r2).energy(&vec![1i8; 24])
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run(&format!("surrogate/{label} fit+draw"), 1, || {
+                blr.fit_model(&data, &mut r2).energy(&[1i8; 24])
+            }),
+        );
     }
     {
         let mut fm = FactorizationMachine::new(p.n_bits(), 8, &mut r2);
         fm.steps = 200;
-        let s = b.run("surrogate/FMQA08 train (200 adam)", 200, || {
-            fm.fit_model(&data, &mut r2).energy(&vec![1i8; 24])
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run("surrogate/FMQA08 train (200 adam)", 200, || {
+                fm.fit_model(&data, &mut r2).energy(&[1i8; 24])
+            }),
+        );
     }
     {
-        let s = b.run("surrogate/dataset push (rank-1 moments)", 1, || {
-            let mut d2 = data.clone();
-            d2.push(r2.spins(24), 0.5);
-            d2.len()
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run("surrogate/dataset push (rank-1 moments)", 1, || {
+                let mut d2 = data.clone();
+                d2.push(r2.spins(24), 0.5);
+                d2.len()
+            }),
+        );
+        note(
+            &mut all,
+            b.run("surrogate/dataset push_batch k=8 (rank-k)", 8, || {
+                let mut d2 = data.clone();
+                d2.push_batch((0..8).map(|_| (r2.spins(24), 0.5)));
+                d2.len()
+            }),
+        );
     }
 
     println!("\n== bbo: end-to-end iterations (Tables 1/2 engine) ==");
@@ -138,35 +237,46 @@ fn main() {
     ] {
         let sa = solvers::sa::SimulatedAnnealing::default();
         let cfg = BboConfig::smoke_scale(p.n_bits(), iters);
-        let s = b.run(&format!("bbo/{label} {iters} iters"), iters, || {
-            bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 3).best_y
-        });
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run(&format!("bbo/{label} {iters} iters"), iters, || {
+                bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 3)
+                    .best_y
+            }),
+        );
     }
-    {
-        let s = b.run("baseline/greedy (Table 2 row)", 1, || {
+    note(
+        &mut all,
+        b.run("baseline/greedy (Table 2 row)", 1, || {
             greedy(&p, 1).cost_refit
-        });
-        println!("{}", s.report());
-    }
+        }),
+    );
 
     println!("\n== engine: restart fan-out + batched compression jobs ==");
-    let workers = intdecomp::util::threadpool::default_workers();
     {
         // Same forked-stream semantics in both rows, so the only variable
         // is the thread fan-out; throughput is restarts/s.
         let sa = solvers::sa::SimulatedAnnealing::default();
         let mut r = Rng::new(17);
-        let s = b.run("engine/restarts x10 serial", 10, || {
-            solvers::solve_best_parallel(&sa, &model, &mut r, 10, 1).1
-        });
-        println!("{}", s.report());
-        let s = b.run(
-            &format!("engine/restarts x10 fan-out ({workers} workers)"),
-            10,
-            || solvers::solve_best_parallel(&sa, &model, &mut r, 10, workers).1,
+        note(
+            &mut all,
+            b.run("engine/restarts x10 serial", 10, || {
+                solvers::solve_best_parallel(&sa, &model, &mut r, 10, 1).1
+            }),
         );
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run(
+                &format!("engine/restarts x10 fan-out ({workers} workers)"),
+                10,
+                || {
+                    solvers::solve_best_parallel(
+                        &sa, &model, &mut r, 10, workers,
+                    )
+                    .1
+                },
+            ),
+        );
     }
     {
         // Batched acquisition on the paper-scale instance (8x100, K=3,
@@ -174,21 +284,31 @@ fn main() {
         // restart fan-out in every row, so the whole gap is batching
         // itself — amortised surrogate fits (one per batch instead of
         // one per evaluation) plus the concurrent candidate evaluation.
+        // This is the acceptance row of ISSUE 3 (`bbo batch=8`).
         let evals = if quick { 16 } else { 48 };
         for batch in [1usize, 4, 8] {
             let sa = solvers::sa::SimulatedAnnealing::default();
             let mut cfg = BboConfig::smoke_scale(p.n_bits(), evals);
             cfg.batch_size = batch;
             let algo = Algorithm::Nbocs { sigma2: 0.1 };
-            let s = b.run(
-                &format!("engine/bbo batch={batch} ({evals} evals)"),
-                evals,
-                || {
-                    bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 5)
+            note(
+                &mut all,
+                b.run(
+                    &format!("engine/bbo batch={batch} ({evals} evals)"),
+                    evals,
+                    || {
+                        bbo::run(
+                            &p,
+                            &algo,
+                            &sa,
+                            &cfg,
+                            &Backends::default(),
+                            5,
+                        )
                         .best_y
-                },
+                    },
+                ),
             );
-            println!("{}", s.report());
         }
     }
     {
@@ -213,22 +333,31 @@ fn main() {
                 })
                 .collect()
         };
-        let s = b.run("engine/compress_all 4 jobs serial", n_jobs, || {
-            Engine::with_workers(1).compress_all(make_jobs()).len()
-        });
-        println!("{}", s.report());
-        let s = b.run(
-            &format!(
-                "engine/compress_all 4 jobs ({} workers)",
-                workers.min(n_jobs)
-            ),
-            n_jobs,
-            || {
-                Engine::with_workers(workers.min(n_jobs))
-                    .compress_all(make_jobs())
-                    .len()
-            },
+        note(
+            &mut all,
+            b.run("engine/compress_all 4 jobs serial", n_jobs, || {
+                Engine::with_workers(1).compress_all(make_jobs()).len()
+            }),
         );
-        println!("{}", s.report());
+        note(
+            &mut all,
+            b.run(
+                &format!(
+                    "engine/compress_all 4 jobs ({} workers)",
+                    workers.min(n_jobs)
+                ),
+                n_jobs,
+                || {
+                    Engine::with_workers(workers.min(n_jobs))
+                        .compress_all(make_jobs())
+                        .len()
+                },
+            ),
+        );
     }
+
+    let path = bench::default_json_path(&label);
+    bench::write_json(&path, &label, quick, &all)
+        .expect("write BENCH json");
+    println!("\nwrote {} ({} rows)", path.display(), all.len());
 }

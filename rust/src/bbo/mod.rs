@@ -27,7 +27,6 @@ use crate::surrogate::{
     fm::{FactorizationMachine, FmTrainer},
     Dataset, Surrogate,
 };
-use crate::util::threadpool::parallel_map;
 use crate::util::{rng::Rng, timer::Timer};
 
 /// Paper algorithm selector.
@@ -431,15 +430,13 @@ pub fn run(
                 xs
             }
         };
-        // Evaluate the whole batch concurrently through the oracle.
-        // Results come back in candidate order, so recording below is
-        // deterministic regardless of the evaluation interleaving.
+        // Evaluate the whole batch concurrently through the oracle's
+        // batched entry point (scratch-reusing `cost_batch` for native
+        // problems, a pool fan-out of `eval` otherwise).  Results come
+        // back in candidate order, so recording below is deterministic
+        // regardless of the evaluation interleaving.
         let t = Timer::start();
-        let ys_batch: Vec<f64> = parallel_map(
-            xs_batch.iter().collect::<Vec<_>>(),
-            k_step,
-            |x| oracle.eval(x),
-        );
+        let ys_batch: Vec<f64> = oracle.eval_batch(&xs_batch, k_step);
         t_eval += t.seconds();
         for (x, &y) in xs_batch.iter().zip(&ys_batch) {
             expand_pairs(oracle, cfg.augment, x, y, &mut pairs);

@@ -1,10 +1,21 @@
 //! Micro-benchmark substrate (criterion is not vendored; DESIGN.md §6).
 //!
 //! Wall-clock harness with warmup, repetition and robust statistics; used
-//! by `rust/benches/paper_benches.rs` (`cargo bench`) and the Table-2
-//! experiment.
+//! by `rust/benches/paper_benches.rs` (`cargo bench`), the `intdecomp
+//! bench` CLI subcommand and the Table-2 experiment.
+//!
+//! Results serialise to `BENCH_<label>.json` at the repository root
+//! ([`write_json`] / [`validate_json`], schema [`BENCH_SCHEMA`]) so the
+//! perf trajectory is tracked in-tree from ISSUE 3 onward: run the bench
+//! before and after a change and commit both files.
 
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
 use crate::util::timer::Timer;
+
+/// Schema tag written into every `BENCH_*.json`; bump on layout changes.
+pub const BENCH_SCHEMA: &str = "intdecomp-bench-v1";
 
 /// Statistics of one benchmark.
 #[derive(Clone, Debug)]
@@ -33,6 +44,27 @@ impl BenchStats {
         } else {
             None
         }
+    }
+
+    /// JSON object of this row (one `results[]` element of the
+    /// `BENCH_*.json` schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("reps", Json::Num(self.reps as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("min_s", Json::Num(self.min_s)),
+            ("max_s", Json::Num(self.max_s)),
+            ("stddev_s", Json::Num(self.stddev_s)),
+            ("items_per_rep", Json::Num(self.items_per_rep as f64)),
+            (
+                "throughput_per_s",
+                match self.throughput() {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
     }
 
     /// One formatted report line.
@@ -104,6 +136,79 @@ impl Bencher {
     }
 }
 
+/// `BENCH_<label>.json` at the repository root (one level above the
+/// crate manifest) — the canonical location the perf trajectory lives
+/// at, shared by `cargo bench` and the `bench` CLI subcommand.  When the
+/// binary runs outside its build checkout (the compile-time manifest
+/// path no longer exists), falls back to the current directory.
+pub fn default_json_path(label: &str) -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .filter(|p| p.is_dir())
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    root.join(format!("BENCH_{label}.json"))
+}
+
+/// Serialise one bench run (all its [`BenchStats`] rows) to `path` in
+/// the [`BENCH_SCHEMA`] layout.  Key order is deterministic (BTreeMap
+/// underneath), so diffs between trajectory snapshots stay readable.
+pub fn write_json(
+    path: impl AsRef<Path>,
+    label: &str,
+    quick: bool,
+    stats: &[BenchStats],
+) -> std::io::Result<()> {
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let j = Json::obj(vec![
+        ("schema", Json::Str(BENCH_SCHEMA.into())),
+        ("label", Json::Str(label.into())),
+        ("quick", Json::Bool(quick)),
+        ("created_unix", Json::Num(created as f64)),
+        (
+            "results",
+            Json::Arr(stats.iter().map(BenchStats::to_json).collect()),
+        ),
+    ]);
+    std::fs::write(path, j.to_string() + "\n")
+}
+
+/// Validate `BENCH_*.json` text against the [`BENCH_SCHEMA`] layout;
+/// returns the result-row count.  The CI bench smoke runs this on its
+/// own output so the schema cannot rot silently.
+pub fn validate_json(text: &str) -> Result<usize, String> {
+    let j = Json::parse(text)?;
+    match j.get("schema").and_then(Json::as_str) {
+        Some(s) if s == BENCH_SCHEMA => {}
+        other => return Err(format!("bad schema tag {other:?}")),
+    }
+    if j.get("label").and_then(Json::as_str).is_none() {
+        return Err("missing string 'label'".into());
+    }
+    let rows = j
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or("missing array 'results'")?;
+    for (i, r) in rows.iter().enumerate() {
+        if r.get("name").and_then(Json::as_str).is_none() {
+            return Err(format!("results[{i}]: missing string 'name'"));
+        }
+        for key in
+            ["reps", "mean_s", "min_s", "max_s", "stddev_s", "items_per_rep"]
+        {
+            if r.get(key).and_then(Json::as_f64).is_none() {
+                return Err(format!(
+                    "results[{i}]: missing numeric '{key}'"
+                ));
+            }
+        }
+    }
+    Ok(rows.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +234,46 @@ mod tests {
         let b = Bencher::new(0, 2);
         let s = b.run("noop", 0, || 1);
         assert!(s.throughput().is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_validates() {
+        let b = Bencher::new(0, 2);
+        let s1 = b.run("row-a", 10, || 1);
+        let s2 = b.run("row-b", 0, || 2);
+        let dir = std::env::temp_dir().join("intdecomp_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, "test", true, &[s1, s2]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_json(&text), Ok(2));
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("test"));
+        assert_eq!(j.get("quick"), Some(&Json::Bool(true)));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_json("not json").is_err());
+        assert!(validate_json("{}").is_err());
+        assert!(validate_json(
+            r#"{"schema":"intdecomp-bench-v1","label":"x","results":[{}]}"#
+        )
+        .is_err());
+        assert_eq!(
+            validate_json(
+                r#"{"schema":"intdecomp-bench-v1","label":"x","results":[]}"#
+            ),
+            Ok(0)
+        );
+    }
+
+    #[test]
+    fn default_path_targets_repo_root() {
+        let p = default_json_path("x");
+        assert!(p.ends_with("BENCH_x.json"));
+        // One level above the crate manifest (rust/..).
+        assert!(!p.to_string_lossy().contains("rust/BENCH"));
     }
 }

@@ -41,6 +41,10 @@ pub struct ExpConfig {
     pub workers: usize,
     /// Acquisition batch size per BBO iteration (1 = serial loop).
     pub batch_size: usize,
+    /// Use raw (exact) evaluation-cache keys instead of the default
+    /// canonical-orbit folding (`--cache-key raw`): bit-identical to an
+    /// uncached run, at the price of re-evaluating orbit members.
+    pub cache_key_raw: bool,
 }
 
 impl ExpConfig {
@@ -64,6 +68,16 @@ impl ExpConfig {
         } else {
             (5, 10, 2 * n_bits * n_bits / 4, 3)
         };
+        let cache_key_raw =
+            match args.str_flag("cache-key", "canonical").as_str() {
+                "canonical" | "orbit" => false,
+                "raw" | "exact" => true,
+                other => {
+                    return Err(format!(
+                        "--cache-key expects raw|canonical, got '{other}'"
+                    ))
+                }
+            };
         Ok(ExpConfig {
             instance,
             scale: if full { Scale::Full } else { Scale::Smoke },
@@ -80,6 +94,7 @@ impl ExpConfig {
                 crate::util::threadpool::default_workers(),
             )?,
             batch_size: args.usize_flag("batch-size", 1)?.max(1),
+            cache_key_raw,
         })
     }
 }
@@ -101,6 +116,20 @@ mod tests {
         assert_eq!(c.instance.n, 8);
         assert!(c.iters < 2 * 24 * 24);
         assert_eq!(c.batch_size, 1);
+        assert!(!c.cache_key_raw, "canonical cache keys are the default");
+    }
+
+    #[test]
+    fn cache_key_flag_parses_and_rejects_garbage() {
+        let c =
+            ExpConfig::from_args(&args(&["--cache-key", "raw"])).unwrap();
+        assert!(c.cache_key_raw);
+        let c = ExpConfig::from_args(&args(&["--cache-key", "canonical"]))
+            .unwrap();
+        assert!(!c.cache_key_raw);
+        assert!(
+            ExpConfig::from_args(&args(&["--cache-key", "bogus"])).is_err()
+        );
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! candidates get exact pseudoinverse semantics (a dependent column simply
 //! contributes nothing), matching `ref.py` / the Pallas kernel.
 
+use std::cell::RefCell;
+
 use crate::linalg::{dot, lu_solve, Matrix};
+use crate::util::threadpool::parallel_map;
 
 /// Rank threshold for the masked Gram–Schmidt.  For integer columns the
 /// Gram determinant is a non-negative integer, so independent residual
@@ -133,6 +136,41 @@ impl BinMatrix {
     }
 }
 
+/// Reusable buffers for the masked-Gram–Schmidt cost evaluation: the
+/// accepted orthonormal basis (flattened K×N), the working column and
+/// the `S·q` product.  [`Problem::cost`] keeps one per thread; pass your
+/// own to [`Problem::cost_with`] for explicit control.
+pub struct CostScratch {
+    /// Accepted orthonormal columns, flattened (up to K rows of N).
+    basis: Vec<f64>,
+    /// The column currently being orthogonalised.
+    v: Vec<f64>,
+    /// `S · v` buffer.
+    sq: Vec<f64>,
+}
+
+impl CostScratch {
+    /// Empty scratch; buffers warm up on the first evaluation.
+    pub fn new() -> Self {
+        CostScratch { basis: Vec::new(), v: Vec::new(), sq: Vec::new() }
+    }
+}
+
+impl Default for CostScratch {
+    fn default() -> Self {
+        CostScratch::new()
+    }
+}
+
+thread_local! {
+    /// Per-thread cost scratch: the oracle is evaluated from the main
+    /// BBO thread and from pool workers (batched acquisition,
+    /// `compress_all` jobs), and each such thread reuses one scratch
+    /// across all of its evaluations.
+    static COST_SCRATCH: RefCell<CostScratch> =
+        RefCell::new(CostScratch::new());
+}
+
 /// A compression problem instance: the target matrix plus precomputed
 /// quantities for fast cost evaluation.
 #[derive(Clone, Debug)]
@@ -176,36 +214,63 @@ impl Problem {
     }
 
     /// Black-box cost of a candidate (Eq. 8), pseudoinverse semantics.
+    ///
+    /// Runs through a per-thread [`CostScratch`], so repeated
+    /// evaluations on one thread (the BBO loop, a pool worker in a
+    /// batched sweep) allocate nothing after warm-up.
     pub fn cost(&self, m: &BinMatrix) -> f64 {
+        COST_SCRATCH.with(|s| self.cost_with(m, &mut s.borrow_mut()))
+    }
+
+    /// [`Problem::cost`] with a caller-owned scratch (the explicit
+    /// zero-allocation entry point; `cost` itself reuses a thread-local
+    /// one).
+    pub fn cost_with(&self, m: &BinMatrix, scratch: &mut CostScratch) -> f64 {
         assert_eq!(m.n, self.n());
         assert_eq!(m.k, self.k);
-        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(self.k);
+        let n = self.n();
+        scratch.basis.clear();
+        scratch.v.resize(n, 0.0);
+        scratch.sq.resize(n, 0.0);
         let mut captured = 0.0;
+        let mut nb = 0usize;
         for j in 0..self.k {
-            let mut v: Vec<f64> =
-                m.col(j).iter().map(|&s| s as f64).collect();
+            for (vi, &sp) in scratch.v.iter_mut().zip(m.col(j)) {
+                *vi = sp as f64;
+            }
             // Two MGS passes for numerical robustness.
             for _ in 0..2 {
-                for q in &basis {
-                    let c = dot(q, &v);
-                    for (vi, qi) in v.iter_mut().zip(q) {
+                for q in 0..nb {
+                    let qrow = &scratch.basis[q * n..(q + 1) * n];
+                    let c = dot(qrow, &scratch.v);
+                    for (vi, qi) in scratch.v.iter_mut().zip(qrow) {
                         *vi -= c * qi;
                     }
                 }
             }
-            let nrm2 = dot(&v, &v);
+            let nrm2 = dot(&scratch.v, &scratch.v);
             if nrm2 > EPS_RANK {
                 let inv = 1.0 / nrm2.sqrt();
-                for vi in v.iter_mut() {
+                for vi in scratch.v.iter_mut() {
                     *vi *= inv;
                 }
                 // captured += q^T S q.
-                let sq = self.s.matvec(&v);
-                captured += dot(&v, &sq);
-                basis.push(v);
+                self.s.matvec_into(&scratch.v, &mut scratch.sq);
+                captured += dot(&scratch.v, &scratch.sq);
+                scratch.basis.extend_from_slice(&scratch.v);
+                nb += 1;
             }
         }
         (self.w_norm_sq - captured).max(0.0)
+    }
+
+    /// Costs of a whole candidate batch, evaluated concurrently across
+    /// `workers` threads of the shared pool in input order — each worker
+    /// reuses its thread-local [`CostScratch`], so the sweep is
+    /// allocation-free after warm-up.  This is the batched-oracle entry
+    /// point behind [`crate::minlp::Oracle::eval_batch`] for [`Problem`].
+    pub fn cost_batch(&self, ms: &[BinMatrix], workers: usize) -> Vec<f64> {
+        parallel_map(ms.iter().collect(), workers, |m| self.cost(m))
     }
 
     /// Cost from a flat spin vector (column-major), the BBO interface.
@@ -418,6 +483,34 @@ mod tests {
         // 8x100 f32 -> K=3: (3*100*32 + 8*3) / (8*100*32)
         let r = compression_ratio(8, 100, 3, 32);
         assert!((r - (9600.0 + 24.0) / 25600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_with_scratch_matches_thread_local_path_bit_for_bit() {
+        let mut rng = Rng::new(109);
+        let p = rand_problem(&mut rng, 8, 20, 3);
+        let mut scratch = CostScratch::new();
+        for _ in 0..20 {
+            let m = rand_bin(&mut rng, 8, 3);
+            let a = p.cost(&m);
+            let b = p.cost_with(&m, &mut scratch);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn cost_batch_matches_serial_costs() {
+        let mut rng = Rng::new(110);
+        let p = rand_problem(&mut rng, 8, 20, 3);
+        let ms: Vec<BinMatrix> =
+            (0..17).map(|_| rand_bin(&mut rng, 8, 3)).collect();
+        let serial: Vec<f64> = ms.iter().map(|m| p.cost(m)).collect();
+        for workers in [1usize, 2, 4] {
+            let batch = p.cost_batch(&ms, workers);
+            for (a, b) in serial.iter().zip(&batch) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers {workers}");
+            }
+        }
     }
 
     #[test]

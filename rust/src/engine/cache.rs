@@ -79,23 +79,30 @@ impl CostCache {
         CostCache::default()
     }
 
-    /// Orbit-folding cache: keys are canonicalised
-    /// ([`BinMatrix::canonical`]), so all `K!·2^K` symmetry-equivalent
-    /// candidates share one entry.  Mathematically exact (the cost is
-    /// orbit-invariant) but the returned value is the representative's
-    /// float, which can differ from a direct evaluation in the last ulps —
-    /// opt in where bit-identical replay doesn't matter.
+    /// Orbit-folding cache (the engine's default key mode): keys are
+    /// canonicalised ([`BinMatrix::canonical`]), so all `K!·2^K`
+    /// symmetry-equivalent candidates share one entry.  The stored value
+    /// is the cost of the canonical *representative* — mathematically
+    /// exact (the cost is orbit-invariant) and a pure function of the
+    /// key, so racing duplicate evaluations and worker counts can never
+    /// change a result; it can differ from a direct evaluation of the
+    /// queried member in the last ulps, so opt out
+    /// ([`CostCache::new`] / `CacheKeyMode::Exact`) where bit-identical
+    /// replay of the uncached run matters.
     pub fn with_canonical_keys() -> Self {
         CostCache { canonical: true, ..Default::default() }
     }
 
     /// Look `m` up; on a miss, evaluate (outside the lock) and insert.
-    /// The hit path allocates nothing with exact keys: the candidate is
-    /// only cloned when it has to be stored.
+    /// The closure receives the *key* to evaluate: `m` itself with exact
+    /// keys, the orbit's canonical representative with canonical keys —
+    /// which keeps every stored value a pure function of its key.  The
+    /// hit path allocates nothing with exact keys: the candidate is only
+    /// cloned when it has to be stored.
     pub fn get_or_eval(
         &self,
         m: &BinMatrix,
-        eval: impl FnOnce() -> f64,
+        eval: impl FnOnce(&BinMatrix) -> f64,
     ) -> f64 {
         if self.canonical {
             let key = m.canonical();
@@ -103,7 +110,7 @@ impl CostCache {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return c;
             }
-            let c = eval();
+            let c = eval(&key);
             self.misses.fetch_add(1, Ordering::Relaxed);
             self.map.lock().unwrap().insert(key, c);
             return c;
@@ -112,7 +119,7 @@ impl CostCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return c;
         }
-        let c = eval();
+        let c = eval(m);
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.map.lock().unwrap().insert(m.clone(), c);
         c
@@ -168,7 +175,8 @@ impl Oracle for CachedOracle<'_> {
 
     fn eval(&self, x: &[i8]) -> f64 {
         let m = BinMatrix::from_spins(self.n, self.k, x);
-        self.cache.get_or_eval(&m, || self.inner.eval(x))
+        self.cache
+            .get_or_eval(&m, |key| self.inner.eval(key.as_spins()))
     }
 
     fn equivalents(&self, x: &[i8]) -> Vec<Vec<i8>> {

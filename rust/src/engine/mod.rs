@@ -24,10 +24,14 @@
 //!
 //! Determinism contract: results are a pure function of each job's seed
 //! and config — independent of `workers`, job interleaving, the restart
-//! fan-out width and the batched-evaluation interleaving.  With the
-//! default `restart_workers = 1` and `batch_size = 1` every job is
-//! bit-identical to a plain serial [`bbo::run`] with the same seed, which
-//! the engine regression tests assert.
+//! fan-out width and the batched-evaluation interleaving.  Jobs default
+//! to the orbit-folding cache ([`CacheKeyMode::Canonical`], the ROADMAP
+//! open item): every stored cost is the canonical representative's, so
+//! results stay deterministic but can differ from an uncached run in the
+//! last ulps.  With [`CacheKeyMode::Exact`] plus the default
+//! `restart_workers = 1` and `batch_size = 1` every job is bit-identical
+//! to a plain serial [`bbo::run`] with the same seed, which the engine
+//! regression tests assert.
 
 pub mod cache;
 
@@ -41,6 +45,19 @@ use crate::util::threadpool::{default_workers, parallel_map};
 
 /// Float width used for all size/ratio reporting (the paper's f32 layers).
 const FLOAT_BITS: usize = 32;
+
+/// Cache-key policy of a job's memoised oracle ([`CachedOracle`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKeyMode {
+    /// Exact keys: a candidate hits only if the very same `M` was seen.
+    /// Bit-identical replay of the uncached serial run.
+    Exact,
+    /// Canonical-orbit keys (the jobs' default): all `K!·2^K`
+    /// symmetry-equivalent candidates share one entry holding the
+    /// canonical representative's cost — deterministic, orbit-exact,
+    /// but last-ulp different from a raw run.
+    Canonical,
+}
 
 /// Engine-level parallelism knobs.
 #[derive(Clone, Copy, Debug)]
@@ -82,6 +99,9 @@ pub struct CompressionJob {
     pub cfg: BboConfig,
     /// Seed making the job's result reproducible.
     pub seed: u64,
+    /// Cache-key policy of the job's memoised oracle (default:
+    /// [`CacheKeyMode::Canonical`] — orbit folding).
+    pub cache_mode: CacheKeyMode,
 }
 
 impl CompressionJob {
@@ -101,6 +121,7 @@ impl CompressionJob {
             solver: Box::new(solvers::sa::SimulatedAnnealing::default()),
             cfg,
             seed,
+            cache_mode: CacheKeyMode::Canonical,
         }
     }
 
@@ -119,6 +140,14 @@ impl CompressionJob {
     /// Set the acquisition batch size for this job (builder style).
     pub fn with_batch_size(mut self, batch_size: usize) -> Self {
         self.cfg.batch_size = batch_size.max(1);
+        self
+    }
+
+    /// Select the evaluation-cache key policy (builder style);
+    /// [`CacheKeyMode::Exact`] restores bit-identical replay of the
+    /// uncached serial run.
+    pub fn with_cache_mode(mut self, mode: CacheKeyMode) -> Self {
+        self.cache_mode = mode;
         self
     }
 }
@@ -214,7 +243,10 @@ fn run_job(
     restart_workers: usize,
     batch_size: usize,
 ) -> JobResult {
-    let cache = CostCache::new();
+    let cache = match job.cache_mode {
+        CacheKeyMode::Exact => CostCache::new(),
+        CacheKeyMode::Canonical => CostCache::with_canonical_keys(),
+    };
     let oracle =
         CachedOracle::new(&job.problem, &cache, job.problem.n(), job.problem.k);
     let mut cfg = job.cfg.clone();
@@ -405,6 +437,29 @@ mod tests {
             assert_eq!(x.run.best_y, y.run.best_y);
             assert_eq!(x.cache, y.cache);
         }
+    }
+
+    #[test]
+    fn cache_modes_share_exact_hit_accounting() {
+        // Canonical (the default) vs exact keys: the acquisition
+        // sequences may differ in last-ulp costs, but both modes do one
+        // cache lookup per black-box evaluation, stay deterministic,
+        // and the canonical map can only be the smaller of the two.
+        let run_mode = |mode: CacheKeyMode| {
+            Engine::with_workers(2).compress_all(vec![
+                tiny_job(0, 10).with_cache_mode(mode),
+            ])
+        };
+        let canon = run_mode(CacheKeyMode::Canonical);
+        let canon2 = run_mode(CacheKeyMode::Canonical);
+        let exact = run_mode(CacheKeyMode::Exact);
+        assert_eq!(canon[0].run.ys, canon2[0].run.ys, "nondeterministic");
+        assert_eq!(canon[0].cache, canon2[0].cache);
+        for r in [&canon[0], &exact[0]] {
+            assert_eq!(r.cache.lookups() as usize, r.run.ys.len());
+            assert!(r.cache.misses >= 1);
+        }
+        assert_eq!(canon[0].run.ys.len(), exact[0].run.ys.len());
     }
 
     #[test]

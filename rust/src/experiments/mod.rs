@@ -20,6 +20,7 @@ use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun};
 use crate::bruteforce::{brute_force, BruteForceResult};
 use crate::config::ExpConfig;
 use crate::cost::Problem;
+use crate::engine::{CachedOracle, CostCache};
 use crate::instance::generate_suite;
 use crate::minlp::Oracle;
 use crate::runtime::{XlaCostOracle, XlaRuntime};
@@ -174,6 +175,13 @@ impl Ctx {
     }
 
     /// Run `runs` independent BBO runs of `spec` on instance `inst`.
+    ///
+    /// Every run evaluates through a fresh [`CachedOracle`] with
+    /// canonical-orbit keys by default (the ROADMAP flip for
+    /// orbit-heavy workloads — augmentation and FMQA re-acquisition hit
+    /// the same orbit constantly); `--cache-key raw`
+    /// ([`ExpConfig::cache_key_raw`]) restores exact keys and with them
+    /// bit-identical replay of the uncached legacy runs.
     pub fn run_spec(
         &self,
         spec: &RunSpec,
@@ -204,19 +212,28 @@ impl Ctx {
             .collect();
         let spec = spec.clone();
         let rt = self.rt.clone();
+        let canonical = !self.cfg.cache_key_raw;
+        let (n, k) = (problem.n(), problem.k);
         parallel_map(seeds, self.cfg.workers, move |seed| {
             let solver = solvers::by_name(&spec.solver)
                 .unwrap_or_else(|| panic!("unknown solver {}", spec.solver));
             let backends = Backends::default();
+            let cache = if canonical {
+                CostCache::with_canonical_keys()
+            } else {
+                CostCache::new()
+            };
             if use_xla_cost {
                 let oracle = XlaCostOracle {
                     rt: rt.as_ref().unwrap().clone(),
                     problem: problem.clone(),
                 };
-                bbo::run(&oracle, &spec.algo, solver.as_ref(), &cfg,
+                let cached = CachedOracle::new(&oracle, &cache, n, k);
+                bbo::run(&cached, &spec.algo, solver.as_ref(), &cfg,
                          &backends, seed)
             } else {
-                bbo::run(problem, &spec.algo, solver.as_ref(), &cfg,
+                let cached = CachedOracle::new(problem, &cache, n, k);
+                bbo::run(&cached, &spec.algo, solver.as_ref(), &cfg,
                          &backends, seed)
             }
         })

@@ -4,12 +4,81 @@
 //! (DESIGN.md §6).  Provides exactly what the coordinator needs: matmul,
 //! Cholesky (for the BOCS posterior samplers), triangular and LU solves,
 //! and thin Householder QR (random orthogonal factors for the instance
-//! generator).  Shapes are small (≤ a few hundred), so the implementations
-//! favour clarity + cache-friendly loop order over blocking.
+//! generator).
+//!
+//! ## Blocking and parallelism (ISSUE 3)
+//!
+//! The hot kernels — [`Matrix::matmul`], [`Matrix::gram`],
+//! [`Matrix::matvec`] and the right-looking [`cholesky_into`] /
+//! [`cholesky_scaled_into`] — are blocked for cache locality and fan
+//! fixed-size row panels across the process-wide
+//! [`crate::util::threadpool::WorkerPool`] once a call crosses the
+//! `PAR_FLOPS` work threshold.  The panel partition is a pure function
+//! of the shape (never of the worker count), and every output element is
+//! accumulated in a fixed order, so results are bit-identical for any
+//! pool width — the determinism contract the engine tests pin down.
+//! `*_into` variants write into caller-owned buffers so the posterior
+//! hot loop allocates nothing after warm-up (see
+//! [`crate::surrogate::blr::PosteriorScratch`]).
 
 mod qr;
 
 pub use qr::householder_qr;
+
+use crate::util::threadpool::{default_workers, WorkerPool};
+
+/// Row height of one parallel panel: small enough to load-balance the
+/// trailing Cholesky updates on a few cores, big enough that the queue
+/// push is amortised over ~10⁵ flops at posterior scale (P ≈ 300).
+const PANEL_ROWS: usize = 16;
+
+/// Column-block width of the right-looking Cholesky: 48×48 diagonal
+/// blocks (18 KiB) stay L1-resident alongside one trailing row panel.
+const CHOL_BLOCK: usize = 48;
+
+/// Flop count above which a kernel fans its row panels across the pool.
+/// Below it the queue round-trip costs more than it buys (measured on
+/// the P = 301 posterior shapes; see BENCH_*.json).
+const PAR_FLOPS: usize = 1 << 20;
+
+/// True when `flops` of independent row-panel work is worth fanning out
+/// over the shared pool (used by the kernels here and by the rank-k
+/// moment ingestion in `surrogate::Dataset::push_batch`).
+pub(crate) fn parallel_worthwhile(flops: usize) -> bool {
+    flops >= PAR_FLOPS
+}
+
+/// Apply `f(first_row, rows)` to consecutive `panel_rows`-high horizontal
+/// panels of a row-major buffer, fanning the panels across the global
+/// worker pool when `parallel` is set.
+///
+/// Each panel is a disjoint `&mut` slice, the partition depends only on
+/// the shape, and `f` must touch nothing but its own panel (plus shared
+/// read-only state), so serial and parallel execution are bit-identical.
+pub(crate) fn for_each_row_panel<F>(
+    data: &mut [f64],
+    row_len: usize,
+    parallel: bool,
+    f: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    if data.is_empty() || row_len == 0 {
+        return;
+    }
+    let chunk = PANEL_ROWS * row_len;
+    if !parallel {
+        for (ci, rows) in data.chunks_mut(chunk).enumerate() {
+            f(ci * PANEL_ROWS, rows);
+        }
+        return;
+    }
+    let panels: Vec<(usize, &mut [f64])> =
+        data.chunks_mut(chunk).enumerate().collect();
+    WorkerPool::global().map(panels, default_workers(), |(ci, rows)| {
+        f(ci * PANEL_ROWS, rows);
+    });
+}
 
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,42 +147,61 @@ impl Matrix {
         t
     }
 
-    /// `self * other` with ikj loop order (streams rows of `other`).
+    /// `self * other` with ikj loop order (streams rows of `other`),
+    /// row panels fanned across the worker pool above `PAR_FLOPS`.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = other.row(k);
-                let out_row = out.row_mut(i);
-                for j in 0..other.cols {
-                    out_row[j] += a * orow[j];
+        let n_cols = other.cols;
+        let flops = self
+            .rows
+            .saturating_mul(self.cols)
+            .saturating_mul(n_cols);
+        let parallel = self.rows > 1 && parallel_worthwhile(flops);
+        for_each_row_panel(&mut out.data, n_cols, parallel, |i0, rows| {
+            for (li, out_row) in rows.chunks_mut(n_cols).enumerate() {
+                let arow = self.row(i0 + li);
+                for (k, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = other.row(k);
+                    for (o, &b) in out_row.iter_mut().zip(orow) {
+                        *o += a * b;
+                    }
                 }
             }
-        }
+        });
         out
     }
 
-    /// `self^T * self` exploiting symmetry (Gram matrix).
+    /// `self^T * self` exploiting symmetry (Gram matrix): the upper
+    /// triangle is accumulated row-streamed (each row of `self` read
+    /// once per output panel), panels fanned across the worker pool
+    /// above `PAR_FLOPS`, then mirrored.
     pub fn gram(&self) -> Matrix {
         let p = self.cols;
+        let rows = self.rows;
         let mut g = Matrix::zeros(p, p);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..p {
-                let xi = row[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                for j in i..p {
-                    g[(i, j)] += xi * row[j];
+        let flops = rows.saturating_mul(p).saturating_mul(p) / 2;
+        let parallel = p > 1 && parallel_worthwhile(flops);
+        for_each_row_panel(&mut g.data, p, parallel, |i0, grows| {
+            for r in 0..rows {
+                let arow = self.row(r);
+                for (li, grow) in grows.chunks_mut(p).enumerate() {
+                    let i = i0 + li;
+                    let xi = arow[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for (gj, &aj) in
+                        grow[i..].iter_mut().zip(&arow[i..])
+                    {
+                        *gj += xi * aj;
+                    }
                 }
             }
-        }
+        });
         for i in 0..p {
             for j in 0..i {
                 g[(i, j)] = g[(j, i)];
@@ -124,12 +212,23 @@ impl Matrix {
 
     /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// `out = self * x` without allocating once `out` has warmed up to
+    /// `rows` capacity; rows fanned across the pool above `PAR_FLOPS`.
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                self.row(i).iter().zip(x).map(|(a, b)| a * b).sum::<f64>()
-            })
-            .collect()
+        out.resize(self.rows, 0.0);
+        let flops = self.rows.saturating_mul(self.cols);
+        let parallel = self.rows > 1 && parallel_worthwhile(flops);
+        for_each_row_panel(&mut out[..], 1, parallel, |i0, outs| {
+            for (li, o) in outs.iter_mut().enumerate() {
+                *o = dot(self.row(i0 + li), x);
+            }
+        });
     }
 
     /// `self^T * x`.
@@ -193,41 +292,66 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
-/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+thread_local! {
+    /// Per-thread scratch for the blocked Cholesky (diagonal-block +
+    /// solved-panel copies).  Reused across factorisations so the
+    /// posterior hot loop allocates nothing after warm-up.  The borrow
+    /// is held by the factor across its inner pool fan-out, which is
+    /// safe: a waiting `WorkerPool::map` caller only ever reclaims its
+    /// own batch's tickets (never unrelated work that could re-enter
+    /// this factor on the same thread).
+    static CHOL_SCRATCH: std::cell::RefCell<Vec<f64>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
+/// Resize `l` to an n×n zero matrix only when the shape is wrong
+/// (keeping the allocation on the hot path).
+fn resize_square(l: &mut Matrix, n: usize) {
+    if l.rows != n || l.cols != n {
+        *l = Matrix::zeros(n, n);
+    }
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix.
 ///
 /// Returns `None` when a pivot drops below `tol` (not SPD / numerically
-/// singular) — callers either jitter the diagonal or treat it as an error.
+/// singular) — callers either jitter the diagonal or treat it as an
+/// error.  Allocating wrapper around [`cholesky_into`].
 pub fn cholesky(a: &Matrix, tol: f64) -> Option<Matrix> {
+    let mut l = Matrix::zeros(a.rows, a.rows);
+    if cholesky_into(a, tol, &mut l) {
+        Some(l)
+    } else {
+        None
+    }
+}
+
+/// Blocked right-looking Cholesky of `a` written into the caller-owned
+/// `l` (resized if its shape is wrong, reused otherwise — the zero-alloc
+/// path of the posterior scratch).  Returns `false` when a pivot drops
+/// to `tol` or below; `l` then holds partial garbage and the caller must
+/// retry (e.g. with diagonal jitter) or bail.
+pub fn cholesky_into(a: &Matrix, tol: f64, l: &mut Matrix) -> bool {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
-    let mut l = Matrix::zeros(n, n);
-    for j in 0..n {
-        // d = a_jj - l_j[..j] . l_j[..j]  — contiguous row-prefix slices,
-        // no per-element bounds checks (hot path; EXPERIMENTS.md §Perf).
-        let row_j = &l.data[j * n..j * n + j];
-        let d = a[(j, j)] - dot(row_j, row_j);
-        if d <= tol {
-            return None;
-        }
-        let dj = d.sqrt();
-        let inv_dj = 1.0 / dj;
-        let mut col = Vec::with_capacity(n - j - 1);
-        for i in (j + 1)..n {
-            let row_i = &l.data[i * n..i * n + j];
-            col.push((a[(i, j)] - dot(row_i, row_j)) * inv_dj);
-        }
-        l.data[j * n + j] = dj;
-        for (off, v) in col.into_iter().enumerate() {
-            l.data[(j + 1 + off) * n + j] = v;
+    resize_square(l, n);
+    for i in 0..n {
+        let src = a.row(i);
+        let dst = &mut l.data[i * n..(i + 1) * n];
+        dst[..=i].copy_from_slice(&src[..=i]);
+        for v in &mut dst[i + 1..] {
+            *v = 0.0;
         }
     }
-    Some(l)
+    factor_lower_in_place(l, tol)
 }
 
 /// Cholesky of `A = G * scale + diag(lam) (+ jitter I)` without
-/// materialising A — the posterior-precision factorisation is the hottest
-/// O(P³) loop in the BOCS surrogate (EXPERIMENTS.md §Perf), and G's
-/// entries are each read exactly once here.
+/// materialising A separately — the posterior-precision factorisation is
+/// the hottest O(P³) loop in the BOCS surrogate (EXPERIMENTS.md §Perf),
+/// and G's entries are each read exactly once here.  Allocating wrapper
+/// around [`cholesky_scaled_into`].
 pub fn cholesky_scaled(
     g: &Matrix,
     scale: f64,
@@ -235,67 +359,199 @@ pub fn cholesky_scaled(
     jitter: f64,
     tol: f64,
 ) -> Option<Matrix> {
+    let mut l = Matrix::zeros(g.rows, g.rows);
+    if cholesky_scaled_into(g, scale, lam, jitter, tol, &mut l) {
+        Some(l)
+    } else {
+        None
+    }
+}
+
+/// [`cholesky_scaled`] into a caller-owned factor buffer (the scratch
+/// path): `l`'s lower triangle is filled with `G·scale + diag(lam) +
+/// jitter·I` and factored in place by the blocked right-looking
+/// algorithm, its strict upper triangle zeroed.  Returns `false` on a
+/// non-positive pivot (retry with more jitter).
+pub fn cholesky_scaled_into(
+    g: &Matrix,
+    scale: f64,
+    lam: &[f64],
+    jitter: f64,
+    tol: f64,
+    l: &mut Matrix,
+) -> bool {
     assert_eq!(g.rows, g.cols);
     let n = g.rows;
     assert_eq!(lam.len(), n);
-    let mut l = Matrix::zeros(n, n);
-    for j in 0..n {
-        let row_j = &l.data[j * n..j * n + j];
-        let ajj = g.data[j * n + j] * scale + lam[j] + jitter;
-        let d = ajj - dot(row_j, row_j);
-        if d <= tol {
-            return None;
+    resize_square(l, n);
+    for i in 0..n {
+        let src = &g.data[i * n..(i + 1) * n];
+        let dst = &mut l.data[i * n..(i + 1) * n];
+        for j in 0..i {
+            dst[j] = src[j] * scale;
         }
-        let dj = d.sqrt();
-        let inv_dj = 1.0 / dj;
-        let mut col = Vec::with_capacity(n - j - 1);
-        for i in (j + 1)..n {
-            let row_i = &l.data[i * n..i * n + j];
-            let aij = g.data[i * n + j] * scale;
-            col.push((aij - dot(row_i, row_j)) * inv_dj);
-        }
-        l.data[j * n + j] = dj;
-        for (off, v) in col.into_iter().enumerate() {
-            l.data[(j + 1 + off) * n + j] = v;
+        dst[i] = src[i] * scale + lam[i] + jitter;
+        for v in &mut dst[i + 1..] {
+            *v = 0.0;
         }
     }
-    Some(l)
+    factor_lower_in_place(l, tol)
+}
+
+/// Blocked right-looking Cholesky on the lower triangle of `l` (strict
+/// upper triangle must already be zero).  Per block step: unblocked
+/// factor of the diagonal block, triangular solve of the panel below it,
+/// then the rank-`CHOL_BLOCK` symmetric trailing update — the O(n³)
+/// bulk, row panels fanned across the pool above `PAR_FLOPS`.  The
+/// diagonal block and the solved panel are copied into a thread-local
+/// scratch first, so parallel panel workers only ever read shared copies
+/// and write their own rows (bit-identical for any worker count).
+fn factor_lower_in_place(l: &mut Matrix, tol: f64) -> bool {
+    let n = l.rows;
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = CHOL_BLOCK.min(n - j0);
+        // 1. Diagonal block, unblocked: row-prefix dots over the block's
+        //    own columns (previous panels already applied their trailing
+        //    updates).  `rowj` is a stack copy of the pivot row's block
+        //    prefix, so the column update below can read it while
+        //    writing other rows.
+        let mut rowj = [0.0f64; CHOL_BLOCK];
+        for j in j0..j0 + jb {
+            let w = j - j0;
+            rowj[..w].copy_from_slice(&l.data[j * n + j0..j * n + j]);
+            let d = l.data[j * n + j] - dot(&rowj[..w], &rowj[..w]);
+            if d <= tol {
+                return false;
+            }
+            let dj = d.sqrt();
+            let inv = 1.0 / dj;
+            l.data[j * n + j] = dj;
+            for i in j + 1..j0 + jb {
+                let s = dot(&l.data[i * n + j0..i * n + j], &rowj[..w]);
+                l.data[i * n + j] = (l.data[i * n + j] - s) * inv;
+            }
+        }
+        let t0 = j0 + jb;
+        if t0 == n {
+            break;
+        }
+        let trail = n - t0;
+        CHOL_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            buf.resize(jb * jb + trail * jb, 0.0);
+            let (diag, panel) = buf.split_at_mut(jb * jb);
+            for j in 0..jb {
+                let row = (j0 + j) * n + j0;
+                diag[j * jb..(j + 1) * jb]
+                    .copy_from_slice(&l.data[row..row + jb]);
+            }
+            // 2. Panel solve: L21 <- A21 * L11^{-T}, row by row (each
+            //    row reads only itself and the diag copy).
+            let par2 = parallel_worthwhile(
+                trail.saturating_mul(jb).saturating_mul(jb) / 2,
+            );
+            let diag_ref: &[f64] = diag;
+            for_each_row_panel(
+                &mut l.data[t0 * n..],
+                n,
+                par2,
+                |_r0, rows| {
+                    for row in rows.chunks_mut(n) {
+                        for j in 0..jb {
+                            let s = dot(
+                                &row[j0..j0 + j],
+                                &diag_ref[j * jb..j * jb + j],
+                            );
+                            row[j0 + j] =
+                                (row[j0 + j] - s) / diag_ref[j * jb + j];
+                        }
+                    }
+                },
+            );
+            // Copy the solved panel so the trailing update can read any
+            // row's panel while writing its own trailing columns.
+            for r in 0..trail {
+                let row = (t0 + r) * n + j0;
+                panel[r * jb..(r + 1) * jb]
+                    .copy_from_slice(&l.data[row..row + jb]);
+            }
+            // 3. Trailing update: A22 <- A22 - L21 * L21^T (lower
+            //    triangle only), one dot per element.
+            let par3 = parallel_worthwhile(
+                trail.saturating_mul(trail).saturating_mul(jb) / 2,
+            );
+            let panel_ref: &[f64] = panel;
+            for_each_row_panel(
+                &mut l.data[t0 * n..],
+                n,
+                par3,
+                |r0, rows| {
+                    for (lr, row) in rows.chunks_mut(n).enumerate() {
+                        let r = r0 + lr;
+                        let pr = &panel_ref[r * jb..(r + 1) * jb];
+                        for c in 0..=r {
+                            let pc = &panel_ref[c * jb..(c + 1) * jb];
+                            row[t0 + c] -= dot(pr, pc);
+                        }
+                    }
+                },
+            );
+        });
+        j0 = t0;
+    }
+    true
 }
 
 /// Solve `L x = b` for lower-triangular L.
 pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    solve_lower_into(l, b, &mut out);
+    out
+}
+
+/// Forward substitution `L out = b` into a caller-owned buffer
+/// (resized to n; zero-alloc once warmed up).
+pub fn solve_lower_into(l: &Matrix, b: &[f64], out: &mut Vec<f64>) {
     let n = l.rows;
     assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
+    out.resize(n, 0.0);
     for i in 0..n {
-        let mut s = b[i];
         let row = l.row(i);
-        for k in 0..i {
-            s -= row[k] * x[k];
-        }
-        x[i] = s / row[i];
+        let s = b[i] - dot(&row[..i], &out[..i]);
+        out[i] = s / row[i];
     }
-    x
 }
 
 /// Solve `L^T x = b` for lower-triangular L.
 pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
-    let n = l.rows;
-    assert_eq!(b.len(), n);
     let mut x = b.to_vec();
+    solve_lower_t_in_place(l, &mut x);
+    x
+}
+
+/// Back substitution `L^T x = x` in place (the allocation-free sibling
+/// of [`solve_lower_t`]).
+pub fn solve_lower_t_in_place(l: &Matrix, x: &mut [f64]) {
+    let n = l.rows;
+    assert_eq!(x.len(), n);
     for i in (0..n).rev() {
         x[i] /= l[(i, i)];
         let xi = x[i];
+        let row = l.row(i);
         for k in 0..i {
-            x[k] -= l[(i, k)] * xi;
+            x[k] -= row[k] * xi;
         }
     }
-    x
 }
 
 /// Solve `A x = b` through an existing Cholesky factor `L` (A = L L^T).
 pub fn cho_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
-    solve_lower_t(l, &solve_lower(l, b))
+    let mut x = Vec::new();
+    solve_lower_into(l, b, &mut x);
+    solve_lower_t_in_place(l, &mut x);
+    x
 }
 
 /// Solve `A x = b` by LU with partial pivoting. Returns `None` if singular.
@@ -434,9 +690,46 @@ mod tests {
     }
 
     #[test]
+    fn blocked_cholesky_roundtrip_past_one_block() {
+        // n > CHOL_BLOCK exercises the panel solve + trailing update.
+        let mut rng = Rng::new(33);
+        let n = CHOL_BLOCK + 19;
+        let a = spd(&mut rng, n);
+        let l = cholesky(&a, 1e-12).unwrap();
+        let llt = l.matmul(&l.transpose());
+        let scale = a.frob_norm_sq().sqrt();
+        for (x, y) in llt.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-10 * scale);
+        }
+        // Strict upper triangle stays zero.
+        for i in 0..n {
+            for j in i + 1..n {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
     fn cholesky_rejects_indefinite() {
         let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
         assert!(cholesky(&a, 1e-12).is_none());
+    }
+
+    #[test]
+    fn cholesky_into_reuses_oversized_buffer() {
+        // A wrong-shaped scratch is resized; a right-shaped one is
+        // reused and fully overwritten (same bits as a fresh factor).
+        let mut rng = Rng::new(34);
+        let a = spd(&mut rng, 9);
+        let fresh = cholesky(&a, 1e-12).unwrap();
+        let mut l = Matrix::zeros(3, 3);
+        assert!(cholesky_into(&a, 1e-12, &mut l));
+        assert_eq!(l.data, fresh.data);
+        // Second factorisation into the now-right-shaped buffer.
+        let b = spd(&mut rng, 9);
+        let fresh_b = cholesky(&b, 1e-12).unwrap();
+        assert!(cholesky_into(&b, 1e-12, &mut l));
+        assert_eq!(l.data, fresh_b.data);
     }
 
     #[test]
@@ -468,6 +761,16 @@ mod tests {
         for (u, v) in xt.iter().zip(&x_true) {
             assert!((u - v).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn matvec_into_reuses_buffer() {
+        let mut rng = Rng::new(35);
+        let a = rand_matrix(&mut rng, 5, 9);
+        let x = rng.normals(9);
+        let mut out = vec![7.0; 2]; // wrong size, stale values
+        a.matvec_into(&x, &mut out);
+        assert_eq!(out, a.matvec(&x));
     }
 
     #[test]

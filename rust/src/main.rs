@@ -7,6 +7,8 @@
 //!                             concurrently (the parallel batched engine)
 //!   brute-force               exact search of an instance
 //!   greedy                    original SPADE baseline
+//!   bench                     hot-path micro-benchmarks; --json writes
+//!                             BENCH_<label>.json at the repo root
 //!   exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|table1|table2|all
 //!   artifacts-check           verify the PJRT artifacts against native math
 //!
@@ -14,7 +16,8 @@
 //! --seed S, --n/--d/--k (problem shape), --solver sa|sqa|sq, --algo NAME,
 //! --augment, --no-xla, --out DIR, --layers N (compress-model),
 //! --workers N, --restart-workers N (Ising-restart fan-out),
-//! --batch-size K (batched acquisition: candidates per surrogate fit).
+//! --batch-size K (batched acquisition: candidates per surrogate fit),
+//! --cache-key raw|canonical (evaluation-cache key policy).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -23,7 +26,9 @@ use intdecomp::bruteforce::brute_force;
 use intdecomp::cli::Args;
 use intdecomp::config::ExpConfig;
 use intdecomp::cost::BinMatrix;
-use intdecomp::engine::{self, CompressionJob, Engine, EngineConfig};
+use intdecomp::engine::{
+    self, CacheKeyMode, CompressionJob, Engine, EngineConfig,
+};
 use intdecomp::experiments::{self as exp, Ctx};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::generate;
@@ -54,6 +59,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "compress-model" => cmd_compress_model(args),
         "brute-force" | "bruteforce" => cmd_brute_force(args),
         "greedy" => cmd_greedy(args),
+        "bench" => cmd_bench(args),
         "exp" => cmd_exp(args),
         "artifacts-check" => cmd_artifacts_check(args),
         "help" | "--help" => {
@@ -76,6 +82,9 @@ USAGE: intdecomp <subcommand> [flags]
                    (the parallel batched engine; see --layers/--workers)
   brute-force      exact search (best / second-best / solution orbit)
   greedy           the original SPADE baseline
+  bench            hot-path micro-benchmarks (--quick, --json, --label L:
+                   --json writes schema-checked BENCH_<L>.json at the
+                   repo root — the tracked perf trajectory)
   exp <fig|table>  reproduce a paper figure/table:
                    fig1 fig2 fig3 fig4 fig5 fig6 fig7 table1 table2
                    ablation all
@@ -104,6 +113,10 @@ FLAGS (defaults in parens):
                     one fit per K candidates, top-K distinct restart
                     minima evaluated concurrently — same evaluation
                     budget, ~K-fold fewer surrogate fits)
+  --cache-key MODE  evaluation-cache keys: 'canonical' (default; folds
+                    the K!*2^K symmetry orbit into one entry holding
+                    the canonical representative's cost) or 'raw'
+                    (exact keys, bit-identical to an uncached run)
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -238,6 +251,11 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown --algo"))?;
     let solver_name = args.str_flag("solver", "sa");
 
+    let cache_mode = if cfg.cache_key_raw {
+        CacheKeyMode::Exact
+    } else {
+        CacheKeyMode::Canonical
+    };
     let mut jobs = Vec::with_capacity(layers);
     for i in 0..layers {
         let p = generate(&cfg.instance, i);
@@ -257,6 +275,7 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
             algo: algo.clone(),
             solver,
             seed: cfg.seed.wrapping_add(i as u64),
+            cache_mode,
         });
     }
 
@@ -347,6 +366,141 @@ fn cmd_greedy(args: &Args) -> Result<()> {
         t.seconds(),
         p.normalised_error(g.cost_refit)
     );
+    Ok(())
+}
+
+/// Hot-path micro-benchmarks on the in-tree harness: the numeric-core
+/// kernels (blocked Cholesky / gram / posterior draw), the scratch-reusing
+/// surrogate refit, dataset ingestion and the batched BBO rows.  With
+/// `--json`, writes schema-validated `BENCH_<label>.json` at the repo
+/// root — the same trajectory format `cargo bench` emits (CI runs this
+/// as its bench smoke).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use intdecomp::bench::{self, Bencher, BenchStats};
+    use intdecomp::linalg::{cholesky_scaled, Matrix};
+    use intdecomp::surrogate::{
+        blr::{Blr, NativePosterior, PosteriorBackend, PosteriorScratch,
+              Prior},
+        Dataset, Surrogate,
+    };
+
+    let quick = args.bool_flag("quick");
+    let label = args.str_flag("label", "local");
+    let b = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 8) };
+    let mut all: Vec<BenchStats> = Vec::new();
+    let note = |s: BenchStats, all: &mut Vec<BenchStats>| {
+        println!("{}", s.report());
+        all.push(s);
+    };
+    let mut rng = Rng::new(99);
+    let p = generate(&intdecomp::instance::InstanceConfig::default(), 0);
+    let workers = intdecomp::util::threadpool::default_workers();
+
+    // Numeric-core kernels at posterior scale (P = 301).
+    let p_dim = 301;
+    let a = Matrix::from_vec(320, p_dim, rng.normals(320 * p_dim));
+    note(b.run("linalg/gram 320x301", 320, || a.gram().data[0]), &mut all);
+    let g = {
+        let mut g = a.gram();
+        for i in 0..p_dim {
+            g[(i, i)] += 5.0;
+        }
+        g
+    };
+    let lam = vec![1.0; p_dim];
+    note(
+        b.run("linalg/cholesky_scaled P=301", 1, || {
+            cholesky_scaled(&g, 1.0, &lam, 0.0, 0.0)
+                .map(|l| l[(0, 0)])
+                .unwrap_or(0.0)
+        }),
+        &mut all,
+    );
+    let be = NativePosterior;
+    let gv = rng.normals(p_dim);
+    let z = rng.normals(p_dim);
+    let mut scratch = PosteriorScratch::new();
+    note(
+        b.run("linalg/posterior draw (scratch reuse)", 1, || {
+            be.draw_into(&g, &gv, &lam, 0.5, &z, &mut scratch)
+        }),
+        &mut all,
+    );
+
+    // Surrogate refit + dataset ingestion at paper scale.
+    let mut data = Dataset::new(p.n_bits());
+    for _ in 0..300 {
+        let x = rng.spins(p.n_bits());
+        let y = p.cost_spins(&x);
+        data.push(x, y);
+    }
+    let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+    note(
+        b.run("surrogate/nBOCS fit+draw", 1, || {
+            blr.fit_model(&data, &mut rng).energy(&[1i8; 24])
+        }),
+        &mut all,
+    );
+    note(
+        b.run("surrogate/dataset push_batch k=8", 8, || {
+            let mut d2 = data.clone();
+            d2.push_batch((0..8).map(|_| (rng.spins(24), 0.5)));
+            d2.len()
+        }),
+        &mut all,
+    );
+
+    // Cost oracle, single and batched.
+    let cands: Vec<intdecomp::cost::BinMatrix> = (0..256)
+        .map(|_| {
+            intdecomp::cost::BinMatrix::new(
+                p.n(),
+                p.k,
+                rng.spins(p.n_bits()),
+            )
+        })
+        .collect();
+    note(
+        b.run("cost/native x256", 256, || {
+            cands.iter().map(|m| p.cost(m)).sum::<f64>()
+        }),
+        &mut all,
+    );
+    note(
+        b.run("cost/native cost_batch x256", 256, || {
+            p.cost_batch(&cands, workers).iter().sum::<f64>()
+        }),
+        &mut all,
+    );
+
+    // The ISSUE 3 acceptance rows: batched BBO at a fixed eval budget.
+    let evals = if quick { 16 } else { 48 };
+    for batch in [1usize, 8] {
+        let sa = solvers::sa::SimulatedAnnealing::default();
+        let mut cfg = BboConfig::smoke_scale(p.n_bits(), evals);
+        cfg.batch_size = batch;
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        note(
+            b.run(
+                &format!("engine/bbo batch={batch} ({evals} evals)"),
+                evals,
+                || {
+                    bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 5)
+                        .best_y
+                },
+            ),
+            &mut all,
+        );
+    }
+
+    if args.bool_flag("json") {
+        let path = bench::default_json_path(&label);
+        bench::write_json(&path, &label, quick, &all)?;
+        let text = std::fs::read_to_string(&path)?;
+        let rows = bench::validate_json(&text)
+            .map_err(|e| anyhow!("BENCH json failed validation: {e}"))?;
+        println!("wrote {} ({rows} rows, schema ok)", path.display());
+    }
     Ok(())
 }
 

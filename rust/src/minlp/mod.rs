@@ -20,6 +20,22 @@ pub trait Oracle: Sync {
     /// The black-box evaluation y = f(x).
     fn eval(&self, x: &[i8]) -> f64;
 
+    /// Evaluate a whole acquisition batch concurrently across `workers`
+    /// threads of the shared pool, preserving input order — the entry
+    /// point the batched BBO loop uses.  The default fans
+    /// [`Oracle::eval`] over
+    /// [`crate::util::threadpool::parallel_map`] (each pool thread
+    /// reuses its own evaluation scratch); implementors with a cheaper
+    /// native batch path (e.g. [`crate::cost::Problem::cost_batch`])
+    /// override it.
+    fn eval_batch(&self, xs: &[Vec<i8>], workers: usize) -> Vec<f64> {
+        crate::util::threadpool::parallel_map(
+            xs.iter().map(|x| x.as_slice()).collect(),
+            workers,
+            |x| self.eval(x),
+        )
+    }
+
     /// Known symmetry orbit of x (same objective value), excluding x
     /// itself — used by the data-augmentation variant (paper Fig. 3).
     fn equivalents(&self, _x: &[i8]) -> Vec<Vec<i8>> {
@@ -34,6 +50,14 @@ impl Oracle for Problem {
 
     fn eval(&self, x: &[i8]) -> f64 {
         self.cost_spins(x)
+    }
+
+    fn eval_batch(&self, xs: &[Vec<i8>], workers: usize) -> Vec<f64> {
+        let ms: Vec<BinMatrix> = xs
+            .iter()
+            .map(|x| BinMatrix::from_spins(self.n(), self.k, x))
+            .collect();
+        self.cost_batch(&ms, workers)
     }
 
     /// All K!·2^K − 1 column permutation / sign-flip variants.

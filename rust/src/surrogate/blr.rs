@@ -20,12 +20,24 @@
 //!
 //! The Gaussian draw `alpha ~ N(A⁻¹ b, A⁻¹)`, `A = G/σ_n² + diag(lam)`,
 //! is delegated to a [`PosteriorBackend`]: [`NativePosterior`] (in-tree
-//! Cholesky) or the PJRT `bocs_sample` artifact (`runtime::XlaPosterior`)
-//! — the "fast Gaussian sampler" of the paper, sharing the Gram moments
-//! across Gibbs sweeps so the O(rows·P²) work is never repeated.
+//! blocked Cholesky) or the PJRT `bocs_sample` artifact
+//! (`runtime::XlaPosterior`) — the "fast Gaussian sampler" of the paper,
+//! sharing the Gram moments across Gibbs sweeps so the O(rows·P²) work is
+//! never repeated.
+//!
+//! **Scratch reuse (ISSUE 3):** every [`Blr`] owns a [`PosteriorScratch`]
+//! (the P×P factor plus the b/μ/u solve buffers) and a set of
+//! lam/z/G·alpha work vectors, all threaded through the Gibbs sweeps via
+//! [`PosteriorBackend::draw_into`].  After the first fit at a given P the
+//! whole sweep performs zero heap allocation (one clone of the final
+//! coefficient vector aside), which is what keeps the per-iteration
+//! surrogate refit flat at paper scale.
 
 use super::{features, Dataset, Surrogate};
-use crate::linalg::{cho_solve, dot, solve_lower_t, Matrix};
+use crate::linalg::{
+    cholesky_scaled_into, dot, solve_lower_into, solve_lower_t_in_place,
+    Matrix,
+};
 use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
 
@@ -45,9 +57,17 @@ fn clamp_scale(v: f64) -> f64 {
 #[derive(Clone, Debug)]
 pub enum Prior {
     /// nBOCS: fixed prior variance (paper-tuned value: 0.1).
-    Normal { sigma2: f64 },
+    Normal {
+        /// Prior variance σ²_prior of every non-intercept coefficient.
+        sigma2: f64,
+    },
     /// gBOCS: NormalGamma(0, 1, a, beta) (paper: a = 1, beta = 0.001).
-    NormalGamma { a: f64, beta: f64 },
+    NormalGamma {
+        /// Gamma shape a.
+        a: f64,
+        /// Gamma rate β.
+        beta: f64,
+    },
     /// vBOCS: horseshoe, hyperparameter-free.
     Horseshoe,
 }
@@ -60,6 +80,51 @@ impl Prior {
             Prior::NormalGamma { .. } => "gBOCS".into(),
             Prior::Horseshoe => "vBOCS".into(),
         }
+    }
+}
+
+/// Reusable buffers of one posterior draw: the Cholesky factor `L` of
+/// the posterior precision plus the `b`/`u`/draw solve vectors.  Sized
+/// lazily on first use and reused afterwards, so a warm draw performs
+/// zero heap allocation ([`PosteriorBackend::draw_into`]).
+pub struct PosteriorScratch {
+    /// Factor of `A = G/σ_n² + diag(lam)` (lower triangular).
+    l: Matrix,
+    /// Scaled right-hand side `gv / σ_n²`.
+    b: Vec<f64>,
+    /// `L⁻ᵀ z` — the zero-mean N(0, A⁻¹) component.
+    u: Vec<f64>,
+    /// `μ + L⁻ᵀ z` — the finished draw.
+    draw: Vec<f64>,
+}
+
+impl PosteriorScratch {
+    /// Empty scratch; buffers warm up on the first draw.
+    pub fn new() -> Self {
+        PosteriorScratch {
+            l: Matrix::zeros(0, 0),
+            b: Vec::new(),
+            u: Vec::new(),
+            draw: Vec::new(),
+        }
+    }
+
+    /// Coefficients of the most recent draw.
+    pub fn draw(&self) -> &[f64] {
+        &self.draw
+    }
+
+    fn ensure(&mut self, p: usize) {
+        self.b.resize(p, 0.0);
+        self.u.resize(p, 0.0);
+        self.draw.resize(p, 0.0);
+        // `l` is (re)sized by the factorisation itself.
+    }
+}
+
+impl Default for PosteriorScratch {
+    fn default() -> Self {
+        PosteriorScratch::new()
     }
 }
 
@@ -76,11 +141,33 @@ pub trait PosteriorBackend: Send {
         z: &[f64],
     ) -> (Vec<f64>, f64);
 
+    /// Scratch-reusing draw: identical output to
+    /// [`PosteriorBackend::draw`], written into `scratch` (read it back
+    /// through [`PosteriorScratch::draw`]); returns Σ ln diag L.  The
+    /// default delegates to `draw` and copies — the PJRT backend keeps
+    /// its API shape untouched — while [`NativePosterior`] overrides it
+    /// with a zero-allocation implementation.  For any one backend the
+    /// two entry points are bit-identical.
+    fn draw_into(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+        scratch: &mut PosteriorScratch,
+    ) -> f64 {
+        let (d, half_logdet) = self.draw(g, gv, lam, sigma_n2, z);
+        scratch.ensure(g.rows);
+        scratch.draw.copy_from_slice(&d);
+        half_logdet
+    }
+
     /// Short identifier for reports ("native" / "xla").
     fn backend_name(&self) -> &'static str;
 }
 
-/// In-tree Cholesky backend.
+/// In-tree blocked-Cholesky backend.
 pub struct NativePosterior;
 
 impl PosteriorBackend for NativePosterior {
@@ -92,27 +179,54 @@ impl PosteriorBackend for NativePosterior {
         sigma_n2: f64,
         z: &[f64],
     ) -> (Vec<f64>, f64) {
+        let mut scratch = PosteriorScratch::new();
+        let half_logdet =
+            self.draw_into(g, gv, lam, sigma_n2, z, &mut scratch);
+        (scratch.draw, half_logdet)
+    }
+
+    fn draw_into(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+        scratch: &mut PosteriorScratch,
+    ) -> f64 {
         let p = g.rows;
+        scratch.ensure(p);
         let inv_s2 = 1.0 / sigma_n2;
-        // Fused scale+diag factorisation; jitter ladder for the (rare)
-        // borderline case.
+        // Fused scale+diag factorisation into the reused factor buffer;
+        // jitter ladder for the (rare) borderline case.
         let mut jitter = 0.0;
-        let l = loop {
-            match crate::linalg::cholesky_scaled(g, inv_s2, lam, jitter, 0.0)
-            {
-                Some(l) => break l,
-                None => {
-                    jitter = if jitter == 0.0 { 1e-10 } else { jitter * 100.0 };
-                    assert!(jitter < 1.0, "posterior matrix not SPD");
-                }
+        loop {
+            if cholesky_scaled_into(
+                g,
+                inv_s2,
+                lam,
+                jitter,
+                0.0,
+                &mut scratch.l,
+            ) {
+                break;
             }
-        };
-        let b: Vec<f64> = gv.iter().map(|v| v * inv_s2).collect();
-        let mu = cho_solve(&l, &b);
-        let u = solve_lower_t(&l, z);
-        let draw: Vec<f64> = mu.iter().zip(&u).map(|(m, d)| m + d).collect();
-        let half_logdet = (0..p).map(|i| l[(i, i)].ln()).sum();
-        (draw, half_logdet)
+            jitter = if jitter == 0.0 { 1e-10 } else { jitter * 100.0 };
+            assert!(jitter < 1.0, "posterior matrix not SPD");
+        }
+        for (b, v) in scratch.b.iter_mut().zip(gv) {
+            *b = v * inv_s2;
+        }
+        // μ = A⁻¹ b through the factor, accumulated in the draw buffer.
+        solve_lower_into(&scratch.l, &scratch.b, &mut scratch.draw);
+        solve_lower_t_in_place(&scratch.l, &mut scratch.draw);
+        // The N(0, A⁻¹) component L⁻ᵀ z, added on top.
+        scratch.u.copy_from_slice(z);
+        solve_lower_t_in_place(&scratch.l, &mut scratch.u);
+        for (d, u) in scratch.draw.iter_mut().zip(&scratch.u) {
+            *d += *u;
+        }
+        (0..p).map(|i| scratch.l[(i, i)].ln()).sum()
     }
 
     fn backend_name(&self) -> &'static str {
@@ -139,6 +253,14 @@ pub struct Blr {
     /// Noise variance carried across BBO iterations (warm start).
     sigma_n2: f64,
     hs: Option<HorseshoeState>,
+    /// Posterior-draw scratch, reused across sweeps and fits.
+    scratch: PosteriorScratch,
+    /// Prior precision diag(lam), rebuilt in place every sweep.
+    lam: Vec<f64>,
+    /// Standard-normal buffer for the Thompson draw.
+    z: Vec<f64>,
+    /// G·alpha buffer for the SSR computation.
+    ga: Vec<f64>,
 }
 
 impl Blr {
@@ -156,25 +278,44 @@ impl Blr {
             Prior::Horseshoe => 5,
             _ => 2,
         };
-        Blr { prior, gibbs_sweeps: sweeps, backend, sigma_n2: 1.0, hs: None }
+        Blr {
+            prior,
+            gibbs_sweeps: sweeps,
+            backend,
+            sigma_n2: 1.0,
+            hs: None,
+            scratch: PosteriorScratch::new(),
+            lam: Vec::new(),
+            z: Vec::new(),
+            ga: Vec::new(),
+        }
     }
 
     /// Residual sum of squares from the moments:
-    /// `SSR = y^T y - 2 a^T gv + a^T G a`.
-    fn ssr(data: &Dataset, alpha: &[f64]) -> f64 {
-        let ga = data.g.matvec(alpha);
-        (data.yty - 2.0 * dot(alpha, &data.gv) + dot(alpha, &ga)).max(0.0)
+    /// `SSR = y^T y - 2 a^T gv + a^T G a` (G·a lands in the reused `ga`).
+    fn ssr(data: &Dataset, alpha: &[f64], ga: &mut Vec<f64>) -> f64 {
+        data.g.matvec_into(alpha, ga);
+        (data.yty - 2.0 * dot(alpha, &data.gv) + dot(alpha, ga)).max(0.0)
     }
 
-    fn draw_alpha(
-        &self,
+    /// One posterior draw with the current `self.lam` into the scratch
+    /// (fresh normals off `rng`, same stream the allocating path used).
+    fn draw_into_scratch(
+        &mut self,
         data: &Dataset,
-        lam: &[f64],
         sigma_n2: f64,
         rng: &mut Rng,
-    ) -> Vec<f64> {
-        let z = rng.normals(data.p);
-        self.backend.draw(&data.g, &data.gv, lam, sigma_n2, &z).0
+    ) {
+        self.z.resize(data.p, 0.0);
+        rng.fill_normals(&mut self.z);
+        self.backend.draw_into(
+            &data.g,
+            &data.gv,
+            &self.lam,
+            sigma_n2,
+            &self.z,
+            &mut self.scratch,
+        );
     }
 
     /// One Thompson sample of the coefficient vector.
@@ -183,34 +324,44 @@ impl Blr {
         let rows = data.len().max(1) as f64;
         match self.prior.clone() {
             Prior::Normal { sigma2 } => {
-                let mut lam = vec![1.0 / sigma2.max(SCALE_MIN); p];
-                lam[0] = BIAS_PRECISION;
-                let mut alpha = Vec::new();
+                self.lam.clear();
+                self.lam.resize(p, 1.0 / sigma2.max(SCALE_MIN));
+                self.lam[0] = BIAS_PRECISION;
                 for _ in 0..self.gibbs_sweeps {
-                    alpha = self.draw_alpha(data, &lam, self.sigma_n2, rng);
+                    let s2 = self.sigma_n2;
+                    self.draw_into_scratch(data, s2, rng);
                     // Jeffreys conditional: σ_n² ~ IG(rows/2, SSR/2).
-                    let ssr = Self::ssr(data, &alpha);
+                    let ssr =
+                        Self::ssr(data, &self.scratch.draw, &mut self.ga);
                     self.sigma_n2 = clamp_scale(
                         rng.inv_gamma(rows / 2.0, (ssr / 2.0).max(SCALE_MIN)),
                     );
                 }
-                alpha
+                self.scratch.draw.clone()
             }
             Prior::NormalGamma { a, beta } => {
                 // Conjugate: draw σ² from the marginal, then alpha | σ².
                 // A0 = G + λ0 I (λ0 = 1), μ = A0⁻¹ gv.
-                let mut lam0 = vec![1.0; p];
-                lam0[0] = BIAS_PRECISION;
-                // μ via a native solve on A0 (σ_n² = 1, lam = lam0).
-                let zeros = vec![0.0; p];
-                let (mu, _) = self
-                    .backend
-                    .draw(&data.g, &data.gv, &lam0, 1.0, &zeros);
+                self.lam.clear();
+                self.lam.resize(p, 1.0);
+                self.lam[0] = BIAS_PRECISION;
+                // μ via a native solve on A0 (σ_n² = 1, z = 0).
+                self.z.clear();
+                self.z.resize(p, 0.0);
+                self.backend.draw_into(
+                    &data.g,
+                    &data.gv,
+                    &self.lam,
+                    1.0,
+                    &self.z,
+                    &mut self.scratch,
+                );
                 // β_post = β + (y^T y - μ^T (G + λ0) μ)/2, guarded >= β.
-                let gmu = data.g.matvec(&mu);
-                let quad = dot(&mu, &gmu)
+                data.g.matvec_into(&self.scratch.draw, &mut self.ga);
+                let mu = &self.scratch.draw;
+                let quad = dot(mu, &self.ga)
                     + mu.iter()
-                        .zip(&lam0)
+                        .zip(&self.lam)
                         .map(|(m, l)| l * m * m)
                         .sum::<f64>();
                 let beta_post = beta + ((data.yty - quad) / 2.0).max(0.0);
@@ -219,9 +370,11 @@ impl Blr {
                 self.sigma_n2 = sigma2;
                 // alpha ~ N(μ, σ² (G + λ0)⁻¹): backend with σ_n² = σ²,
                 // lam = λ0/σ² gives A = (G + λ0)/σ².
-                let lam: Vec<f64> =
-                    lam0.iter().map(|l| l / sigma2).collect();
-                self.draw_alpha(data, &lam, sigma2, rng)
+                for l in self.lam.iter_mut() {
+                    *l /= sigma2;
+                }
+                self.draw_into_scratch(data, sigma2, rng);
+                self.scratch.draw.clone()
             }
             Prior::Horseshoe => {
                 if self.hs.is_none() {
@@ -232,24 +385,23 @@ impl Blr {
                         xi: 1.0,
                     });
                 }
-                let mut alpha = Vec::new();
                 for _ in 0..self.gibbs_sweeps {
-                    let (lam, s2) = {
+                    let s2 = self.sigma_n2;
+                    {
                         let hs = self.hs.as_ref().unwrap();
-                        let mut lam: Vec<f64> = hs
-                            .beta2
-                            .iter()
-                            .map(|b2| {
-                                1.0 / clamp_scale(
-                                    b2 * hs.tau2 * self.sigma_n2,
-                                )
-                            })
-                            .collect();
-                        lam[0] = BIAS_PRECISION;
-                        (lam, self.sigma_n2)
-                    };
-                    alpha = self.draw_alpha(data, &lam, s2, rng);
-                    let ssr = Self::ssr(data, &alpha);
+                        self.lam.clear();
+                        self.lam.reserve(p);
+                        for b2 in &hs.beta2 {
+                            self.lam.push(
+                                1.0 / clamp_scale(*b2 * hs.tau2 * s2),
+                            );
+                        }
+                        self.lam[0] = BIAS_PRECISION;
+                    }
+                    self.draw_into_scratch(data, s2, rng);
+                    let ssr =
+                        Self::ssr(data, &self.scratch.draw, &mut self.ga);
+                    let alpha = &self.scratch.draw;
                     let hs = self.hs.as_mut().unwrap();
                     // Local scales (skip the intercept at k = 0).
                     let mut shrink_sum = 0.0;
@@ -257,8 +409,7 @@ impl Blr {
                         let ak2 = alpha[k] * alpha[k];
                         hs.beta2[k] = clamp_scale(rng.inv_gamma(
                             1.0,
-                            1.0 / hs.nu[k]
-                                + ak2 / (2.0 * hs.tau2 * self.sigma_n2),
+                            1.0 / hs.nu[k] + ak2 / (2.0 * hs.tau2 * s2),
                         ));
                         hs.nu[k] = clamp_scale(
                             rng.inv_gamma(1.0, 1.0 + 1.0 / hs.beta2[k]),
@@ -268,7 +419,7 @@ impl Blr {
                     // Global scale.
                     hs.tau2 = clamp_scale(rng.inv_gamma(
                         (p as f64) / 2.0,
-                        1.0 / hs.xi + shrink_sum / (2.0 * self.sigma_n2),
+                        1.0 / hs.xi + shrink_sum / (2.0 * s2),
                     ));
                     hs.xi = clamp_scale(
                         rng.inv_gamma(1.0, 1.0 + 1.0 / hs.tau2),
@@ -280,7 +431,7 @@ impl Blr {
                             .max(SCALE_MIN),
                     ));
                 }
-                alpha
+                self.scratch.draw.clone()
             }
         }
     }
@@ -462,6 +613,36 @@ mod tests {
         }
         for v in m2 {
             assert!((v - 0.5).abs() < 0.05, "variance {v} != 0.5");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation_bit_for_bit() {
+        // draw() (fresh buffers) and draw_into() (reused scratch, warm
+        // across calls) must agree to the last bit on a fixed seed.
+        let mut rng = Rng::new(505);
+        let p = 37; // not a multiple of the Cholesky block
+        let a = Matrix::from_vec(p + 5, p, rng.normals((p + 5) * p));
+        let mut g = a.gram();
+        for i in 0..p {
+            g[(i, i)] += 2.0;
+        }
+        let gv = rng.normals(p);
+        let lam: Vec<f64> =
+            rng.normals(p).iter().map(|v| v.abs() + 0.1).collect();
+        let be = NativePosterior;
+        let mut scratch = PosteriorScratch::new();
+        for trial in 0..4 {
+            let z = rng.normals(p);
+            let s2 = 0.3 + 0.2 * trial as f64;
+            let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z);
+            let hld_warm =
+                be.draw_into(&g, &gv, &lam, s2, &z, &mut scratch);
+            assert_eq!(hld_fresh.to_bits(), hld_warm.to_bits());
+            assert_eq!(fresh.len(), scratch.draw().len());
+            for (a, b) in fresh.iter().zip(scratch.draw()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial}");
+            }
         }
     }
 }

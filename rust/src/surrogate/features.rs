@@ -22,19 +22,29 @@ pub fn pair_index(n: usize, i: usize, j: usize) -> usize {
 
 /// Feature vector of a spin configuration.
 pub fn phi(x: &[i8]) -> Vec<f64> {
+    let mut out = vec![0.0; n_features(x.len())];
+    phi_into(x, &mut out);
+    out
+}
+
+/// Write the feature vector of `x` into `out` (length must be
+/// [`n_features`]`(x.len())`) — the allocation-free sibling of [`phi`],
+/// used by the rank-k moment ingestion to fill a batch's Φ panel.
+pub fn phi_into(x: &[i8], out: &mut [f64]) {
     let n = x.len();
-    let mut out = Vec::with_capacity(n_features(n));
-    out.push(1.0);
-    for &xi in x {
-        out.push(xi as f64);
+    assert_eq!(out.len(), n_features(n));
+    out[0] = 1.0;
+    for (o, &xi) in out[1..1 + n].iter_mut().zip(x) {
+        *o = xi as f64;
     }
+    let mut idx = 1 + n;
     for i in 0..n {
         let xi = x[i] as f64;
         for &xj in &x[i + 1..] {
-            out.push(xi * xj as f64);
+            out[idx] = xi * xj as f64;
+            idx += 1;
         }
     }
-    out
 }
 
 /// Interpret a regression coefficient vector as a quadratic spin model:

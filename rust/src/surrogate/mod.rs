@@ -51,6 +51,12 @@ pub struct Dataset {
     pub gv: Vec<f64>,
     /// y^T y.
     pub yty: f64,
+    /// Running argmin of `ys`, maintained by `push`/`push_batch` so
+    /// [`Dataset::best`] is O(1) (the BBO loop calls it every
+    /// iteration).  Mutating `xs`/`ys` directly bypasses the tracking.
+    best_idx: Option<usize>,
+    /// Running minimum of `ys` (`f64::INFINITY` while empty).
+    best_y: f64,
 }
 
 impl Dataset {
@@ -65,6 +71,8 @@ impl Dataset {
             g: Matrix::zeros(p, p),
             gv: vec![0.0; p],
             yty: 0.0,
+            best_idx: None,
+            best_y: f64::INFINITY,
         }
     }
 
@@ -76,6 +84,18 @@ impl Dataset {
     /// True when no evaluation has been stored yet.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
+    }
+
+    /// Record the (x, y) trace entry and keep the running argmin in
+    /// sync (the strictly-lower rule keeps the earliest minimiser, the
+    /// same winner the old full rescan produced).
+    fn record(&mut self, x: Vec<i8>, y: f64) {
+        if y < self.best_y {
+            self.best_y = y;
+            self.best_idx = Some(self.xs.len());
+        }
+        self.xs.push(x);
+        self.ys.push(y);
     }
 
     /// Append one evaluation; rank-1 update of the moments.
@@ -94,36 +114,79 @@ impl Dataset {
             self.gv[i] += pi * y;
         }
         self.yty += y * y;
-        self.xs.push(x);
-        self.ys.push(y);
+        self.record(x, y);
     }
 
-    /// Ingest a whole acquisition batch in one update.
+    /// Ingest a whole acquisition batch in one rank-k update: the
+    /// batch's Φ panel is built once, G absorbs it in a single
+    /// syrk-style streaming pass (one traversal of the P×P moment
+    /// matrix instead of one per pair, row panels fanned across the
+    /// worker pool at paper scale), and Φᵀy / yᵀy are accumulated in
+    /// pair order.  This is the single-ingestion point the batched BBO
+    /// loop uses after evaluating all `batch_size` candidates of an
+    /// iteration.
     ///
-    /// The moments are additive rank-1 updates, so the result is
-    /// bit-identical to pushing the pairs one by one in order — this is
-    /// the single-ingestion point the batched BBO loop uses after
-    /// evaluating all `batch_size` candidates of an iteration.
+    /// Bit-identity with sequential [`Dataset::push`] is preserved: the
+    /// feature map is ±1-valued, so every G entry is a sum of exact
+    /// f64 integers (order-independent), and the Φᵀy / yᵀy updates run
+    /// in the exact per-pair order `push` uses.
     pub fn push_batch(
         &mut self,
         pairs: impl IntoIterator<Item = (Vec<i8>, f64)>,
     ) {
-        for (x, y) in pairs {
-            self.push(x, y);
+        let pairs: Vec<(Vec<i8>, f64)> = pairs.into_iter().collect();
+        let kb = pairs.len();
+        if kb <= 1 {
+            for (x, y) in pairs {
+                self.push(x, y);
+            }
+            return;
+        }
+        let p = self.p;
+        let mut panel = vec![0.0; kb * p];
+        for (r, (x, _)) in pairs.iter().enumerate() {
+            debug_assert_eq!(x.len(), self.n_bits);
+            features::phi_into(x, &mut panel[r * p..(r + 1) * p]);
+        }
+        let parallel = crate::linalg::parallel_worthwhile(
+            kb.saturating_mul(p).saturating_mul(p),
+        );
+        crate::linalg::for_each_row_panel(
+            &mut self.g.data,
+            p,
+            parallel,
+            |i0, grows| {
+                for (li, grow) in grows.chunks_mut(p).enumerate() {
+                    let i = i0 + li;
+                    for r in 0..kb {
+                        let prow = &panel[r * p..(r + 1) * p];
+                        let pi = prow[i];
+                        for (gj, &pj) in grow.iter_mut().zip(prow) {
+                            *gj += pi * pj;
+                        }
+                    }
+                }
+            },
+        );
+        for (r, (x, y)) in pairs.into_iter().enumerate() {
+            let prow = &panel[r * p..(r + 1) * p];
+            for (gvi, &pi) in self.gv.iter_mut().zip(prow) {
+                *gvi += pi * y;
+            }
+            self.yty += y * y;
+            self.record(x, y);
         }
     }
 
-    /// Best (lowest) observed cost and its argmin.
+    /// Best (lowest) observed cost and its argmin — O(1), served from
+    /// the running minimum maintained by `push`/`push_batch`.  Mutating
+    /// `xs`/`ys` directly (rather than through the push methods) leaves
+    /// the tracked minimum stale; a truncated `xs` yields `None` rather
+    /// than panicking.
     pub fn best(&self) -> Option<(&[i8], f64)> {
-        let mut bi = None;
-        let mut be = f64::INFINITY;
-        for (i, &y) in self.ys.iter().enumerate() {
-            if y < be {
-                be = y;
-                bi = Some(i);
-            }
-        }
-        bi.map(|i| (self.xs[i].as_slice(), be))
+        self.best_idx
+            .and_then(|i| self.xs.get(i))
+            .map(|x| (x.as_slice(), self.best_y))
     }
 
     /// Dense feature matrix Φ (rows × P) — the XLA gram-artifact path and
@@ -169,6 +232,30 @@ mod tests {
         }
         let yty: f64 = data.ys.iter().map(|y| y * y).sum();
         assert!((yty - data.yty).abs() < 1e-9);
+    }
+
+    #[test]
+    fn push_batch_is_bit_identical_to_sequential_push() {
+        let mut rng = Rng::new(401);
+        let n = 5;
+        let mut seq = Dataset::new(n);
+        let mut bat = Dataset::new(n);
+        for kb in [2usize, 3, 8] {
+            let pairs: Vec<(Vec<i8>, f64)> =
+                (0..kb).map(|_| (rng.spins(n), rng.normal())).collect();
+            for (x, y) in pairs.clone() {
+                seq.push(x, y);
+            }
+            bat.push_batch(pairs);
+            for (a, b) in seq.g.data.iter().zip(&bat.g.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in seq.gv.iter().zip(&bat.gv) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(seq.yty.to_bits(), bat.yty.to_bits());
+            assert_eq!(seq.best(), bat.best());
+        }
     }
 
     #[test]

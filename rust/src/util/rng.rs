@@ -115,7 +115,18 @@ impl Rng {
 
     /// Vector of n standard normals.
     pub fn normals(&mut self, n: usize) -> Vec<f64> {
-        (0..n).map(|_| self.normal()).collect()
+        let mut out = vec![0.0; n];
+        self.fill_normals(&mut out);
+        out
+    }
+
+    /// Fill `out` with standard normals — the allocation-free sibling of
+    /// [`Rng::normals`], consuming the identical stream (the posterior
+    /// scratch path relies on that equivalence).
+    pub fn fill_normals(&mut self, out: &mut [f64]) {
+        for o in out.iter_mut() {
+            *o = self.normal();
+        }
     }
 
     /// Exponential with rate 1.

@@ -4,7 +4,8 @@
 
 use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
 use intdecomp::engine::{
-    self, CachedOracle, CompressionJob, CostCache, Engine, EngineConfig,
+    self, CacheKeyMode, CachedOracle, CompressionJob, CostCache, Engine,
+    EngineConfig,
 };
 use intdecomp::instance::{generate, InstanceConfig};
 use intdecomp::minlp::Oracle;
@@ -16,6 +17,9 @@ fn tiny(idx: usize) -> intdecomp::cost::Problem {
     generate(&cfg, idx)
 }
 
+/// Exact-key job: canonical orbit folding is the engine default, but the
+/// bit-for-bit regressions below compare against uncached serial
+/// `bbo::run`, which only the exact-key mode reproduces.
 fn job(idx: usize) -> CompressionJob {
     CompressionJob::new(
         format!("layer{idx}"),
@@ -27,6 +31,7 @@ fn job(idx: usize) -> CompressionJob {
         sweeps: 20,
         ..Default::default()
     }))
+    .with_cache_mode(CacheKeyMode::Exact)
 }
 
 #[test]
@@ -151,4 +156,30 @@ fn engine_results_carry_cache_stats() {
     assert!(s.misses <= s.lookups());
     let table = engine::summary_table(&r);
     assert!(table.contains("layer0"));
+}
+
+#[test]
+fn canonical_default_is_deterministic_and_orbit_consistent() {
+    // CompressionJob::new defaults to canonical-orbit cache keys (the
+    // ROADMAP flip): results must be reproducible across worker counts,
+    // keep exact one-lookup-per-evaluation accounting, and every
+    // recorded y must equal the cost of some orbit member of its x
+    // (the canonical representative's, by construction).
+    let mk = || {
+        CompressionJob::new("canon", tiny(1), 20, 31).with_solver(
+            Box::new(SimulatedAnnealing { sweeps: 15, ..Default::default() }),
+        )
+    };
+    assert_eq!(mk().cache_mode, CacheKeyMode::Canonical);
+    let a = Engine::with_workers(1).compress_all(vec![mk()]);
+    let b = Engine::with_workers(8).compress_all(vec![mk()]);
+    assert_eq!(a[0].run.ys, b[0].run.ys);
+    assert_eq!(a[0].cache, b[0].cache);
+    assert_eq!(a[0].cache.lookups() as usize, a[0].run.ys.len());
+    let p = tiny(1);
+    for (x, &y) in a[0].run.xs.iter().zip(&a[0].run.ys) {
+        let m = intdecomp::cost::BinMatrix::from_spins(p.n(), p.k, x);
+        let canon_cost = p.cost(&m.canonical());
+        assert_eq!(y, canon_cost, "stored value not the representative's");
+    }
 }

@@ -1,0 +1,298 @@
+//! Property tests for the blocked numeric core (ISSUE 3): the blocked /
+//! row-panel-parallel `matmul`/`gram`/`cholesky` against naive references
+//! across shapes (including non-multiples of the block size), bit-identity
+//! of the scratch-reusing posterior draw and of rank-k dataset ingestion,
+//! and the O(1) running-minimum bookkeeping of `Dataset::best`.
+
+use intdecomp::linalg::{
+    cholesky, cholesky_into, cholesky_scaled, Matrix,
+};
+use intdecomp::surrogate::blr::{
+    NativePosterior, PosteriorBackend, PosteriorScratch,
+};
+use intdecomp::surrogate::Dataset;
+use intdecomp::util::rng::Rng;
+
+fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::from_vec(r, c, rng.normals(r * c))
+}
+
+fn spd(rng: &mut Rng, n: usize) -> Matrix {
+    let a = rand_matrix(rng, n + 4, n);
+    let mut g = naive_gram(&a);
+    for i in 0..n {
+        g[(i, i)] += 1.0 + n as f64 / 8.0;
+    }
+    g
+}
+
+/// Reference jik triple loop, no blocking, no parallelism.
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+/// Reference Gram matrix via the naive product.
+fn naive_gram(a: &Matrix) -> Matrix {
+    naive_matmul(&a.transpose(), a)
+}
+
+/// Reference left-looking unblocked Cholesky (the pre-ISSUE-3 kernel).
+fn naive_cholesky(a: &Matrix, tol: f64) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= tol {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / dj;
+        }
+    }
+    Some(l)
+}
+
+/// Shapes straddling the internal 16-row panels and 48-column blocks.
+const DIMS: [usize; 10] = [1, 2, 3, 7, 15, 16, 17, 48, 49, 97];
+
+#[test]
+fn blocked_matmul_matches_naive_reference() {
+    let mut rng = Rng::new(900);
+    for &(r, k, c) in &[
+        (1, 1, 1),
+        (2, 3, 4),
+        (7, 5, 9),
+        (16, 16, 16),
+        (17, 31, 23),
+        (48, 48, 48),
+        (64, 65, 63),
+        (100, 30, 70),
+    ] {
+        let a = rand_matrix(&mut rng, r, k);
+        let b = rand_matrix(&mut rng, k, c);
+        let got = a.matmul(&b);
+        let want = naive_matmul(&a, &b);
+        let scale = 1.0 + want.frob_norm_sq().sqrt();
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!(
+                (x - y).abs() < 1e-12 * scale,
+                "matmul {r}x{k}x{c}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_gram_matches_naive_reference() {
+    let mut rng = Rng::new(901);
+    for &rows in &[1usize, 5, 33, 64] {
+        for &cols in &DIMS {
+            let a = rand_matrix(&mut rng, rows, cols);
+            let got = a.gram();
+            let want = naive_gram(&a);
+            let scale = 1.0 + want.frob_norm_sq().sqrt();
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!(
+                    (x - y).abs() < 1e-12 * scale,
+                    "gram {rows}x{cols}: {x} vs {y}"
+                );
+            }
+            // Exactly symmetric (mirrored, not recomputed).
+            for i in 0..cols {
+                for j in 0..i {
+                    assert_eq!(got[(i, j)].to_bits(), got[(j, i)].to_bits());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_naive_reference() {
+    let mut rng = Rng::new(902);
+    for &n in &DIMS {
+        let a = spd(&mut rng, n);
+        let got = cholesky(&a, 1e-12)
+            .unwrap_or_else(|| panic!("blocked factor failed at n={n}"));
+        let want = naive_cholesky(&a, 1e-12).expect("naive factor");
+        let scale = 1.0 + a.frob_norm_sq().sqrt();
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!(
+                (x - y).abs() < 1e-11 * scale,
+                "cholesky n={n}: {x} vs {y}"
+            );
+        }
+        // Round trip L Lᵀ = A.
+        let llt = got.matmul(&got.transpose());
+        for (x, y) in llt.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-10 * scale, "roundtrip n={n}");
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_scaled_matches_materialised_matrix() {
+    let mut rng = Rng::new(903);
+    for &n in &[3usize, 17, 49, 97] {
+        let g = spd(&mut rng, n);
+        let lam: Vec<f64> =
+            rng.normals(n).iter().map(|v| v.abs() + 0.2).collect();
+        let scale = 0.7;
+        let jitter = 1e-9;
+        let mut a = g.scale(scale);
+        for i in 0..n {
+            // Same addition order as the fused fill:
+            // (g·scale + lam) + jitter.
+            a[(i, i)] += lam[i];
+            a[(i, i)] += jitter;
+        }
+        let fused = cholesky_scaled(&g, scale, &lam, jitter, 0.0)
+            .expect("fused factor");
+        let plain = cholesky(&a, 0.0).expect("plain factor");
+        for (x, y) in fused.data.iter().zip(&plain.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_rejects_non_spd_past_one_block() {
+    // Indefinite matrix whose leading 59×59 minor is still SPD: the
+    // failure surfaces in the *second* 48-column block's diagonal
+    // factor, exercising the blocked bail-out path.
+    let mut rng = Rng::new(904);
+    let n = 60;
+    let mut a = spd(&mut rng, n);
+    a[(n - 1, n - 1)] -= 1e4;
+    assert!(cholesky(&a, 1e-12).is_none());
+    assert!(naive_cholesky(&a, 1e-12).is_none());
+}
+
+#[test]
+fn cholesky_into_scratch_reuse_is_bit_identical_to_fresh() {
+    let mut rng = Rng::new(905);
+    let mut l = Matrix::zeros(0, 0);
+    for &n in &[5usize, 49, 33, 97, 16] {
+        // Deliberately varying n so the scratch is resized up AND down.
+        let a = spd(&mut rng, n);
+        assert!(cholesky_into(&a, 1e-12, &mut l));
+        let fresh = cholesky(&a, 1e-12).unwrap();
+        assert_eq!(l.data.len(), fresh.data.len());
+        for (x, y) in l.data.iter().zip(&fresh.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+        }
+    }
+}
+
+#[test]
+fn posterior_scratch_draws_match_fresh_allocation_bit_for_bit() {
+    // The acceptance property of the PosteriorScratch plumbing: warm
+    // scratch reuse across draws of different hyperparameters equals
+    // the allocating draw bit for bit on a fixed seed.
+    let mut rng = Rng::new(906);
+    let p = 67; // spans one full Cholesky block + remainder
+    let a = rand_matrix(&mut rng, p + 6, p);
+    let mut g = a.gram();
+    for i in 0..p {
+        g[(i, i)] += 3.0;
+    }
+    let gv = rng.normals(p);
+    let be = NativePosterior;
+    let mut scratch = PosteriorScratch::new();
+    for trial in 0..5 {
+        let lam: Vec<f64> =
+            rng.normals(p).iter().map(|v| v.abs() + 0.05).collect();
+        let z = rng.normals(p);
+        let s2 = 0.2 + 0.3 * trial as f64;
+        let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z);
+        let hld_warm = be.draw_into(&g, &gv, &lam, s2, &z, &mut scratch);
+        assert_eq!(hld_fresh.to_bits(), hld_warm.to_bits(), "trial {trial}");
+        for (x, y) in fresh.iter().zip(scratch.draw()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn push_batch_is_bit_identical_to_sequential_push() {
+    let mut rng = Rng::new(907);
+    let n = 24; // paper scale: P = 301
+    let mut seq = Dataset::new(n);
+    let mut bat = Dataset::new(n);
+    for kb in [1usize, 2, 5, 8, 17] {
+        let pairs: Vec<(Vec<i8>, f64)> = (0..kb)
+            .map(|_| (rng.spins(n), rng.normal() * 100.0))
+            .collect();
+        for (x, y) in pairs.clone() {
+            seq.push(x, y);
+        }
+        bat.push_batch(pairs);
+        assert_eq!(seq.len(), bat.len());
+        for (a, b) in seq.g.data.iter().zip(&bat.g.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "G diverged at kb={kb}");
+        }
+        for (a, b) in seq.gv.iter().zip(&bat.gv) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gv diverged at kb={kb}");
+        }
+        assert_eq!(seq.yty.to_bits(), bat.yty.to_bits());
+        assert_eq!(seq.xs, bat.xs);
+        assert_eq!(seq.ys, bat.ys);
+        assert_eq!(seq.best(), bat.best());
+    }
+}
+
+#[test]
+fn dataset_best_tracks_running_minimum_incrementally() {
+    // best() is O(1) now; cross-check against a full rescan, including
+    // tie handling (first minimiser wins) and batch ingestion.
+    let mut rng = Rng::new(908);
+    let n = 6;
+    let mut data = Dataset::new(n);
+    let check = |data: &Dataset| {
+        let mut bi = None;
+        let mut be = f64::INFINITY;
+        for (i, &y) in data.ys.iter().enumerate() {
+            if y < be {
+                be = y;
+                bi = Some(i);
+            }
+        }
+        let want = bi.map(|i| (data.xs[i].as_slice(), be));
+        assert_eq!(data.best(), want);
+    };
+    check(&data);
+    for round in 0..30 {
+        // Quantised ys force frequent exact ties.
+        let y = (rng.normal() * 4.0).round();
+        data.push(rng.spins(n), y);
+        check(&data);
+        if round % 5 == 0 {
+            let pairs: Vec<(Vec<i8>, f64)> = (0..3)
+                .map(|_| (rng.spins(n), (rng.normal() * 4.0).round()))
+                .collect();
+            data.push_batch(pairs);
+            check(&data);
+        }
+    }
+}
