@@ -7,6 +7,11 @@
 //!   cost        — black-box evaluation: native vs XLA artifact (L1 path)
 //!   bruteforce  — Table 2 "brute force" row workloads
 //!   solvers     — Fig. 2 back-ends on a 24-spin surrogate
+//!   solver-throughput — replica-major lockstep engine sweeps/sec per
+//!                 algorithm at n ∈ {32, 64}, restarts ∈ {1, 8, 32},
+//!                 plus same-build per-chain reference rows (the legacy
+//!                 execution model) at n = 64, r = 32 — the ISSUE 4
+//!                 acceptance comparison lives inside one BENCH file
 //!   surrogate   — per-iteration surrogate fits (Table 2 decomposition)
 //!   bbo         — end-to-end iterations per algorithm (Tables 1/2 engine)
 //!   engine      — restart fan-out vs the serial restart loop, batched
@@ -175,6 +180,69 @@ fn main() {
                 solver.solve_best(&model, &mut r, 10).1
             }),
         );
+    }
+
+    println!("\n== solver-throughput: replica-major lockstep engine ==");
+    for n in [32usize, 64] {
+        let m = solvers::QuadModel::random(n, &mut Rng::new(40 + n as u64));
+        for name in ["sa", "sq", "sqa"] {
+            let solver = solvers::by_name(name).unwrap();
+            let unit_sweeps = solver
+                .lockstep_plan(&m, &m.stats())
+                .expect("stochastic solvers have lockstep plans")
+                .row_sweeps_per_unit();
+            for restarts in [1usize, 8, 32] {
+                let mut r = Rng::new(23);
+                note(
+                    &mut all,
+                    b.run_sweeps(
+                        &format!("solver/{name} sweeps n={n} r={restarts}"),
+                        restarts,
+                        unit_sweeps * restarts,
+                        || {
+                            solvers::solve_batch(
+                                solver.as_ref(),
+                                &m,
+                                &mut r,
+                                restarts,
+                                1,
+                                workers,
+                            )[0]
+                            .1
+                        },
+                    ),
+                );
+            }
+            if n == 64 {
+                // Same forked streams and worker fan-out, legacy
+                // per-chain execution (scalar chains, per-restart
+                // schedule scans): the ISSUE 4 acceptance row compares
+                // this against `solver/{name} sweeps n=64 r=32` above.
+                let mut r = Rng::new(23);
+                note(
+                    &mut all,
+                    b.run_sweeps(
+                        &format!("solver/{name} sweeps n=64 r=32 per-chain"),
+                        32,
+                        unit_sweeps * 32,
+                        || {
+                            let streams: Vec<Rng> =
+                                (0..32).map(|i| r.fork(i)).collect();
+                            intdecomp::util::threadpool::parallel_map(
+                                streams,
+                                workers,
+                                |mut c| {
+                                    solvers::reference::solve_by_name(
+                                        name, &m, &mut c,
+                                    )
+                                },
+                            )
+                            .len()
+                        },
+                    ),
+                );
+            }
+        }
     }
 
     println!("\n== surrogate: per-iteration fit at paper scale (Table 2) ==");

@@ -19,6 +19,13 @@
 //! worker pool, and the dataset ingests the whole batch in one update.
 //! The total evaluation budget ([`BboConfig::iters`]) is unchanged —
 //! batching only divides the number of surrogate fits by k.
+//!
+//! **Solver execution** (ISSUE 4): every acquisition's restart fan-out —
+//! serial `solve_best`, [`crate::solvers::solve_best_parallel`] and
+//! [`crate::solvers::solve_batch`] alike — runs on the replica-major
+//! lockstep engine ([`crate::solvers::replica`]), with the per-model
+//! schedule scan hoisted out of the restart loop.  Results are
+//! bit-identical to the legacy per-chain execution on every path.
 
 use crate::minlp::Oracle;
 use crate::solvers::IsingSolver;

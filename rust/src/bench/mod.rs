@@ -15,7 +15,10 @@ use crate::util::json::Json;
 use crate::util::timer::Timer;
 
 /// Schema tag written into every `BENCH_*.json`; bump on layout changes.
-pub const BENCH_SCHEMA: &str = "intdecomp-bench-v1";
+/// v2 (ISSUE 4) adds the `sweeps_per_rep` / `sweeps_per_sec` pair to
+/// every result row — the solver-throughput metric of the replica-major
+/// engine rows (`solver/... sweeps ...`).
+pub const BENCH_SCHEMA: &str = "intdecomp-bench-v2";
 
 /// Statistics of one benchmark.
 #[derive(Clone, Debug)]
@@ -34,6 +37,9 @@ pub struct BenchStats {
     pub stddev_s: f64,
     /// Work items per rep, for throughput reporting (0 = n/a).
     pub items_per_rep: usize,
+    /// Solver panel-row sweeps per rep, for `sweeps_per_sec` reporting
+    /// (0 = not a solver-throughput row).
+    pub sweeps_per_rep: usize,
 }
 
 impl BenchStats {
@@ -41,6 +47,17 @@ impl BenchStats {
     pub fn throughput(&self) -> Option<f64> {
         if self.items_per_rep > 0 && self.mean_s > 0.0 {
             Some(self.items_per_rep as f64 / self.mean_s)
+        } else {
+            None
+        }
+    }
+
+    /// Solver panel-row sweeps per second (None when `sweeps_per_rep`
+    /// is 0) — the replica-engine throughput metric of the
+    /// `solver/... sweeps ...` rows.
+    pub fn sweeps_per_sec(&self) -> Option<f64> {
+        if self.sweeps_per_rep > 0 && self.mean_s > 0.0 {
+            Some(self.sweeps_per_rep as f64 / self.mean_s)
         } else {
             None
         }
@@ -64,16 +81,35 @@ impl BenchStats {
                     None => Json::Null,
                 },
             ),
+            ("sweeps_per_rep", Json::Num(self.sweeps_per_rep as f64)),
+            (
+                "sweeps_per_sec",
+                match self.sweeps_per_sec() {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
     /// One formatted report line.
     pub fn report(&self) -> String {
-        let tput = match self.throughput() {
-            Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
-            Some(t) if t >= 1e3 => format!("  {:.2} k items/s", t / 1e3),
-            Some(t) => format!("  {t:.2} items/s"),
-            None => String::new(),
+        let tput = match (self.sweeps_per_sec(), self.throughput()) {
+            (Some(s), _) if s >= 1e6 => {
+                format!("  {:.2} M sweeps/s", s / 1e6)
+            }
+            (Some(s), _) if s >= 1e3 => {
+                format!("  {:.2} k sweeps/s", s / 1e3)
+            }
+            (Some(s), _) => format!("  {s:.2} sweeps/s"),
+            (None, Some(t)) if t >= 1e6 => {
+                format!("  {:.2} M items/s", t / 1e6)
+            }
+            (None, Some(t)) if t >= 1e3 => {
+                format!("  {:.2} k items/s", t / 1e3)
+            }
+            (None, Some(t)) => format!("  {t:.2} items/s"),
+            (None, None) => String::new(),
         };
         format!(
             "{:<40} mean {:>10.4} ms  min {:>10.4} ms  ±{:>8.4} ms  ({} reps){}",
@@ -132,7 +168,23 @@ impl Bencher {
             max_s: times.iter().cloned().fold(0.0, f64::max),
             stddev_s: crate::util::stddev(&times),
             items_per_rep: items,
+            sweeps_per_rep: 0,
         }
+    }
+
+    /// Time `f` like [`Bencher::run`], additionally recording
+    /// `sweeps` solver panel-row sweeps per rep so the row reports
+    /// `sweeps_per_sec` (the replica-engine throughput rows).
+    pub fn run_sweeps<T>(
+        &self,
+        name: &str,
+        items: usize,
+        sweeps: usize,
+        f: impl FnMut() -> T,
+    ) -> BenchStats {
+        let mut s = self.run(name, items, f);
+        s.sweeps_per_rep = sweeps;
+        s
     }
 }
 
@@ -179,6 +231,10 @@ pub fn write_json(
 /// Validate `BENCH_*.json` text against the [`BENCH_SCHEMA`] layout;
 /// returns the result-row count.  The CI bench smoke runs this on its
 /// own output so the schema cannot rot silently.
+///
+/// v2 checks: every row carries a numeric `sweeps_per_rep`, and every
+/// row with `sweeps_per_rep > 0` (the solver-throughput rows) carries a
+/// numeric `sweeps_per_sec`.
 pub fn validate_json(text: &str) -> Result<usize, String> {
     let j = Json::parse(text)?;
     match j.get("schema").and_then(Json::as_str) {
@@ -196,14 +252,32 @@ pub fn validate_json(text: &str) -> Result<usize, String> {
         if r.get("name").and_then(Json::as_str).is_none() {
             return Err(format!("results[{i}]: missing string 'name'"));
         }
-        for key in
-            ["reps", "mean_s", "min_s", "max_s", "stddev_s", "items_per_rep"]
-        {
+        for key in [
+            "reps",
+            "mean_s",
+            "min_s",
+            "max_s",
+            "stddev_s",
+            "items_per_rep",
+            "sweeps_per_rep",
+        ] {
             if r.get(key).and_then(Json::as_f64).is_none() {
                 return Err(format!(
                     "results[{i}]: missing numeric '{key}'"
                 ));
             }
+        }
+        let sweeps = r
+            .get("sweeps_per_rep")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if sweeps > 0.0
+            && r.get("sweeps_per_sec").and_then(Json::as_f64).is_none()
+        {
+            return Err(format!(
+                "results[{i}]: solver-throughput row lacks numeric \
+                 'sweeps_per_sec'"
+            ));
         }
     }
     Ok(rows.len())
@@ -234,6 +308,22 @@ mod tests {
         let b = Bencher::new(0, 2);
         let s = b.run("noop", 0, || 1);
         assert!(s.throughput().is_none());
+        assert!(s.sweeps_per_sec().is_none());
+    }
+
+    #[test]
+    fn sweeps_rows_report_sweeps_per_sec() {
+        let b = Bencher::new(0, 3);
+        let s = b.run_sweeps("solver/sa sweeps n=32 r=8", 8, 800, || {
+            std::hint::black_box(1 + 1)
+        });
+        assert_eq!(s.sweeps_per_rep, 800);
+        let sps = s.sweeps_per_sec().unwrap();
+        assert!(sps > 0.0);
+        assert!(s.report().contains("sweeps/s"));
+        let j = s.to_json();
+        assert_eq!(j.get("sweeps_per_rep").and_then(Json::as_f64), Some(800.0));
+        assert!(j.get("sweeps_per_sec").and_then(Json::as_f64).is_some());
     }
 
     #[test]
@@ -257,16 +347,33 @@ mod tests {
     fn validate_rejects_malformed_documents() {
         assert!(validate_json("not json").is_err());
         assert!(validate_json("{}").is_err());
+        // Pre-v2 documents (no sweeps_per_rep) are rejected.
         assert!(validate_json(
-            r#"{"schema":"intdecomp-bench-v1","label":"x","results":[{}]}"#
+            r#"{"schema":"intdecomp-bench-v1","label":"x","results":[]}"#
+        )
+        .is_err());
+        assert!(validate_json(
+            r#"{"schema":"intdecomp-bench-v2","label":"x","results":[{}]}"#
         )
         .is_err());
         assert_eq!(
             validate_json(
-                r#"{"schema":"intdecomp-bench-v1","label":"x","results":[]}"#
+                r#"{"schema":"intdecomp-bench-v2","label":"x","results":[]}"#
             ),
             Ok(0)
         );
+    }
+
+    #[test]
+    fn validate_requires_sweeps_per_sec_on_solver_rows() {
+        let row = r#"{"name":"solver/sa sweeps n=32 r=1","reps":1,
+            "mean_s":0.1,"min_s":0.1,"max_s":0.1,"stddev_s":0.0,
+            "items_per_rep":1,"sweeps_per_rep":100}"#;
+        let doc = format!(
+            r#"{{"schema":"intdecomp-bench-v2","label":"x","results":[{row}]}}"#
+        );
+        let err = validate_json(&doc).unwrap_err();
+        assert!(err.contains("sweeps_per_sec"), "{err}");
     }
 
     #[test]

@@ -371,10 +371,11 @@ fn cmd_greedy(args: &Args) -> Result<()> {
 
 /// Hot-path micro-benchmarks on the in-tree harness: the numeric-core
 /// kernels (blocked Cholesky / gram / posterior draw), the scratch-reusing
-/// surrogate refit, dataset ingestion and the batched BBO rows.  With
-/// `--json`, writes schema-validated `BENCH_<label>.json` at the repo
-/// root — the same trajectory format `cargo bench` emits (CI runs this
-/// as its bench smoke).
+/// surrogate refit, dataset ingestion, the replica-engine solver
+/// throughput rows (`solver/... sweeps ...`, reported as sweeps/sec) and
+/// the batched BBO rows.  With `--json`, writes schema-validated
+/// `BENCH_<label>.json` at the repo root — the same trajectory format
+/// `cargo bench` emits (CI runs this as its bench smoke).
 fn cmd_bench(args: &Args) -> Result<()> {
     use intdecomp::bench::{self, Bencher, BenchStats};
     use intdecomp::linalg::{cholesky_scaled, Matrix};
@@ -472,6 +473,68 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }),
         &mut all,
     );
+
+    // Replica-engine solver throughput (ISSUE 4): lockstep sweeps/sec
+    // per algorithm and restart fan-out, plus the same-build per-chain
+    // reference row (legacy execution model) at n = 64, r = 32.
+    for n in [32usize, 64] {
+        let m = solvers::QuadModel::random(n, &mut Rng::new(40 + n as u64));
+        for name in ["sa", "sq", "sqa"] {
+            let solver = solvers::by_name(name)
+                .ok_or_else(|| anyhow!("unknown solver {name}"))?;
+            let unit_sweeps = solver
+                .lockstep_plan(&m, &m.stats())
+                .expect("stochastic solvers have lockstep plans")
+                .row_sweeps_per_unit();
+            for restarts in [1usize, 8, 32] {
+                let mut r = Rng::new(23);
+                note(
+                    b.run_sweeps(
+                        &format!("solver/{name} sweeps n={n} r={restarts}"),
+                        restarts,
+                        unit_sweeps * restarts,
+                        || {
+                            solvers::solve_batch(
+                                solver.as_ref(),
+                                &m,
+                                &mut r,
+                                restarts,
+                                1,
+                                workers,
+                            )[0]
+                            .1
+                        },
+                    ),
+                    &mut all,
+                );
+            }
+            if n == 64 {
+                let mut r = Rng::new(23);
+                note(
+                    b.run_sweeps(
+                        &format!("solver/{name} sweeps n=64 r=32 per-chain"),
+                        32,
+                        unit_sweeps * 32,
+                        || {
+                            let streams: Vec<Rng> =
+                                (0..32).map(|i| r.fork(i)).collect();
+                            intdecomp::util::threadpool::parallel_map(
+                                streams,
+                                workers,
+                                |mut c| {
+                                    solvers::reference::solve_by_name(
+                                        name, &m, &mut c,
+                                    )
+                                },
+                            )
+                            .len()
+                        },
+                    ),
+                    &mut all,
+                );
+            }
+        }
+    }
 
     // The ISSUE 3 acceptance rows: batched BBO at a fixed eval budget.
     let evals = if quick { 16 } else { 48 };

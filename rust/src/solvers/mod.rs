@@ -24,8 +24,19 @@
 //! [`solve_best_parallel`] (best of k restarts) and [`solve_batch`] (the
 //! top-k *distinct* restart minima, feeding the engine's batched
 //! acquisition).
+//!
+//! Since ISSUE 4 the stochastic solvers execute on the replica-major
+//! lockstep engine ([`replica`]): all restarts of one `solve_batch` call
+//! (and all SQA Trotter slices) are rows of a replicas×n spin panel swept
+//! in lockstep, so each coupling row `J[i,·]` is loaded once per proposal
+//! site and applied to every replica.  Each replica consumes its forked
+//! RNG stream in exactly the legacy per-chain order, so per-replica
+//! output is bit-identical to the serial reference implementations kept
+//! in [`reference`] (pinned by `rust/tests/replica_engine.rs`).
 
 pub mod exhaustive;
+pub mod reference;
+pub mod replica;
 pub mod sa;
 pub mod sq;
 pub mod sqa;
@@ -115,50 +126,107 @@ impl QuadModel {
     /// of the SA schedule (the smallest energy scale that must freeze).
     /// Using the per-site field bound here instead leaves SA finishing
     /// hot on BOCS-surrogate-shaped models (EXPERIMENTS.md §Perf note).
+    ///
+    /// Convenience wrapper over the fused [`QuadModel::stats`] scan;
+    /// schedule-building hot paths should call `stats` once and reuse it.
     pub fn min_nonzero_gap(&self) -> f64 {
-        let mut m = f64::INFINITY;
-        for &h in &self.h {
-            if h != 0.0 {
-                m = m.min(h.abs());
-            }
-        }
-        for i in 0..self.n {
-            for k in (i + 1)..self.n {
-                let j = self.j_at(i, k);
-                if j != 0.0 {
-                    m = m.min(j.abs());
-                }
-            }
-        }
-        if m.is_finite() {
-            m
-        } else {
-            1.0
-        }
+        self.stats().min_gap
     }
 
     /// Per-site maximum effective field magnitudes (|h_i| + Σ_k |J_ik|),
     /// used to derive default temperature schedules (neal-style).
+    ///
+    /// Convenience wrapper over the fused [`QuadModel::stats`] scan;
+    /// schedule-building hot paths should call `stats` once and reuse it.
     pub fn field_bounds(&self) -> (f64, f64) {
+        let s = self.stats();
+        (s.max_field, s.min_field)
+    }
+
+    /// All schedule-relevant model statistics in one fused O(n²) pass:
+    /// the per-site effective-field bounds and the minimum nonzero
+    /// energy gap.  The values are bit-identical to the legacy separate
+    /// [`QuadModel::field_bounds`] / [`QuadModel::min_nonzero_gap`]
+    /// scans (same accumulation order); hoisting the scan to once per
+    /// model per solve call is what removes the per-restart O(n²)
+    /// schedule recomputation the serial solvers used to pay.
+    pub fn stats(&self) -> ModelStats {
         let mut max_f: f64 = 0.0;
         let mut min_f = f64::INFINITY;
+        let mut gap = f64::INFINITY;
+        for &h in &self.h {
+            if h != 0.0 {
+                gap = gap.min(h.abs());
+            }
+        }
         for i in 0..self.n {
             let row = &self.j[i * self.n..(i + 1) * self.n];
             let mut f = self.h[i].abs();
             for &v in row {
                 f += v.abs();
             }
+            for &j in &row[(i + 1)..] {
+                if j != 0.0 {
+                    gap = gap.min(j.abs());
+                }
+            }
             if f > 0.0 {
                 max_f = max_f.max(f);
                 min_f = min_f.min(f);
             }
         }
+        if !gap.is_finite() {
+            gap = 1.0;
+        }
         if !min_f.is_finite() {
             min_f = 1.0;
             max_f = 1.0;
         }
-        (max_f.max(1e-12), min_f.max(1e-12))
+        ModelStats {
+            max_field: max_f.max(1e-12),
+            min_field: min_f.max(1e-12),
+            min_gap: gap,
+        }
     }
+
+    /// Random dense model with standard-normal fields, couplings and
+    /// offset — the bench / test instance generator.  Stream order is
+    /// fixed (per site: `h_i`, then its upper-triangle couplings; the
+    /// offset last), so a seeded [`Rng`] always yields the same model.
+    ///
+    /// ```
+    /// use intdecomp::solvers::QuadModel;
+    /// use intdecomp::util::rng::Rng;
+    ///
+    /// let m = QuadModel::random(8, &mut Rng::new(1));
+    /// assert_eq!(m.n, 8);
+    /// assert_eq!(m.j_at(2, 5), m.j_at(5, 2));
+    /// ```
+    pub fn random(n: usize, rng: &mut Rng) -> Self {
+        let mut m = QuadModel::new(n);
+        for i in 0..n {
+            m.h[i] = rng.normal();
+            for k in (i + 1)..n {
+                m.set_pair(i, k, rng.normal());
+            }
+        }
+        m.c = rng.normal();
+        m
+    }
+}
+
+/// Schedule-relevant statistics of one [`QuadModel`], computed by the
+/// fused [`QuadModel::stats`] scan and shared by every replica of a
+/// solve call (the legacy solvers recomputed the underlying O(n²) scans
+/// inside every restart).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelStats {
+    /// Largest per-site effective field |h_i| + Σ_k |J_ik| (≥ 1e-12).
+    pub max_field: f64,
+    /// Smallest positive per-site effective field (≥ 1e-12).
+    pub min_field: f64,
+    /// Smallest nonzero |h_i| / |J_ik| magnitude (1.0 for a zero model).
+    pub min_gap: f64,
 }
 
 /// Common interface: minimise the model from a random start.
@@ -169,18 +237,42 @@ pub trait IsingSolver: Send + Sync {
     /// Short identifier for reports.
     fn name(&self) -> &'static str;
 
+    /// Lockstep sweep plan for the replica-major engine: solvers that
+    /// can run as rows of a spin panel return their schedule here
+    /// (derived from the hoisted per-model [`ModelStats`]), and
+    /// [`solve_batch`] / [`solve_best_parallel`] then execute all
+    /// restarts in lockstep via [`replica::run_replicas`].  `None` (the
+    /// default) keeps the per-chain [`IsingSolver::solve`] fan-out —
+    /// the exact enumerator, for instance, has no sweep structure.
+    fn lockstep_plan(
+        &self,
+        model: &QuadModel,
+        stats: &ModelStats,
+    ) -> Option<replica::SweepPlan> {
+        let _ = (model, stats);
+        None
+    }
+
     /// Best of `restarts` independent attempts (the paper re-optimises the
-    /// surrogate 10 times per iteration).
+    /// surrogate 10 times per iteration), threading one RNG sequentially
+    /// through the restarts.  The per-model schedule scan is hoisted out
+    /// of the restart loop; each restart's stream consumption and output
+    /// are bit-identical to calling [`IsingSolver::solve`] in a loop.
     fn solve_best(
         &self,
         model: &QuadModel,
         rng: &mut Rng,
         restarts: usize,
     ) -> (Vec<i8>, f64) {
+        let stats = model.stats();
+        let plan = self.lockstep_plan(model, &stats);
         let mut best_x = Vec::new();
         let mut best_e = f64::INFINITY;
         for _ in 0..restarts.max(1) {
-            let x = self.solve(model, rng);
+            let x = match &plan {
+                Some(p) => replica::solve_one(model, p, rng),
+                None => self.solve(model, rng),
+            };
             let e = model.energy(&x);
             if e < best_e {
                 best_e = e;
@@ -285,11 +377,20 @@ pub fn solve_batch(
     let k = k.max(1);
     let streams: Vec<Rng> =
         (0..restarts).map(|i| rng.fork(i as u64)).collect();
-    let results = parallel_map(streams, workers, |mut child| {
-        let x = solver.solve(model, &mut child);
-        let e = model.energy(&x);
-        (x, e)
-    });
+    // One O(n²) schedule scan per call, shared by every replica (the
+    // legacy path recomputed it inside every restart).
+    let stats = model.stats();
+    let results = match solver.lockstep_plan(model, &stats) {
+        // Replica-major lockstep engine: all restarts swept as rows of
+        // one spin panel, fanned over the pool in replica blocks.
+        Some(plan) => replica::run_replicas(model, &plan, streams, workers),
+        // Solvers without a lockstep kernel keep the per-chain fan-out.
+        None => parallel_map(streams, workers, |mut child| {
+            let x = solver.solve(model, &mut child);
+            let e = model.energy(&x);
+            (x, e)
+        }),
+    };
     // Stable sort with NaN explicitly ordered last: on non-NaN values
     // `partial_cmp` is total and treats -0.0 == +0.0, so IEEE-equal
     // energies keep restart order (the serial first-strictly-better
@@ -382,15 +483,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn IsingSolver>> {
 
 #[cfg(test)]
 pub(crate) fn random_model(rng: &mut Rng, n: usize) -> QuadModel {
-    let mut m = QuadModel::new(n);
-    for i in 0..n {
-        m.h[i] = rng.normal();
-        for k in (i + 1)..n {
-            m.set_pair(i, k, rng.normal());
-        }
-    }
-    m.c = rng.normal();
-    m
+    QuadModel::random(n, rng)
 }
 
 #[cfg(test)]

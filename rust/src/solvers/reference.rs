@@ -1,0 +1,164 @@
+//! Legacy serial solver implementations — the executable specification
+//! of the replica engine's RNG-stream contract.
+//!
+//! These are the pre-ISSUE-4 scalar chain loops, kept verbatim: one
+//! configuration, one incrementally maintained [`super::LocalFields`],
+//! one RNG consumed in proposal order (the Metropolis uniform is drawn
+//! *only* when ΔE > 0).  The replica-major engine
+//! ([`super::replica`]) is pinned bit-identical to these per replica on
+//! the same stream by `rust/tests/replica_engine.rs`; any change to the
+//! engine's stream consumption or float op order shows up there as a
+//! spin-vector diff against this module.
+//!
+//! They are reference kernels, not production paths — the trait solvers
+//! ([`super::sa`], [`super::sq`], [`super::sqa`]) all route through the
+//! lockstep engine.
+
+use super::{greedy_descent, LocalFields, QuadModel};
+use crate::util::rng::Rng;
+
+/// Legacy scalar-chain solve by solver name ("sa" / "sq" / anything
+/// else = "sqa"), using each solver's `Default` configuration — the
+/// single dispatch point for the benches' `per-chain` comparator rows,
+/// so `cargo bench` and `intdecomp bench` cannot drift apart.
+pub fn solve_by_name(name: &str, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
+    match name {
+        "sa" => sa(&super::sa::SimulatedAnnealing::default(), model, rng),
+        "sq" => sq(&super::sq::SimulatedQuenching::default(), model, rng),
+        _ => sqa(
+            &super::sqa::SimulatedQuantumAnnealing::default(),
+            model,
+            rng,
+        ),
+    }
+}
+
+/// Legacy scalar simulated-annealing chain (the pre-ISSUE-4
+/// [`super::sa::SimulatedAnnealing`] solve body, verbatim).
+pub fn sa(
+    solver: &super::sa::SimulatedAnnealing,
+    model: &QuadModel,
+    rng: &mut Rng,
+) -> Vec<i8> {
+    let n = model.n;
+    let mut x = rng.spins(n);
+    let mut best = x.clone();
+    let mut e = model.energy(&x);
+    let mut best_e = e;
+    let mut fields = LocalFields::new(model, &x);
+
+    let (beta_hot, beta_cold) = solver.beta_range(model);
+    let ratio = (beta_cold / beta_hot)
+        .powf(1.0 / (solver.sweeps.max(2) - 1) as f64);
+    let mut beta = beta_hot;
+
+    for _ in 0..solver.sweeps {
+        for i in 0..n {
+            let de = fields.delta_e(&x, i);
+            if de <= 0.0 || rng.f64() < (-beta * de).exp() {
+                fields.flip(model, &mut x, i);
+                e += de;
+                if e < best_e {
+                    best_e = e;
+                    best.copy_from_slice(&x);
+                }
+            }
+        }
+        beta *= ratio;
+    }
+    best
+}
+
+/// Legacy scalar simulated-quenching chain (the pre-ISSUE-4
+/// [`super::sq::SimulatedQuenching`] solve body, verbatim).
+pub fn sq(
+    solver: &super::sq::SimulatedQuenching,
+    model: &QuadModel,
+    rng: &mut Rng,
+) -> Vec<i8> {
+    let n = model.n;
+    let beta = 1.0 / solver.temperature.max(1e-12);
+    let mut x = rng.spins(n);
+    let mut e = model.energy(&x);
+    let mut best = x.clone();
+    let mut best_e = e;
+    let mut fields = LocalFields::new(model, &x);
+    for _ in 0..solver.sweeps {
+        for i in 0..n {
+            let de = fields.delta_e(&x, i);
+            if de <= 0.0 || rng.f64() < (-beta * de).exp() {
+                fields.flip(model, &mut x, i);
+                e += de;
+                if e < best_e {
+                    best_e = e;
+                    best.copy_from_slice(&x);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Legacy scalar path-integral SQA run (the pre-ISSUE-4
+/// [`super::sqa::SimulatedQuantumAnnealing`] solve body, verbatim):
+/// all P Trotter slices of one restart share `rng`, swept slice-major.
+pub fn sqa(
+    solver: &super::sqa::SimulatedQuantumAnnealing,
+    model: &QuadModel,
+    rng: &mut Rng,
+) -> Vec<i8> {
+    let n = model.n;
+    let p = solver.slices.max(2);
+    let (max_f, _) = model.field_bounds();
+    let t = solver.temperature_factor * 2.0 * max_f;
+    let pt = p as f64 * t;
+    let beta_slice = 1.0 / pt.max(1e-12);
+    let gamma0 = solver.gamma0_factor * 2.0 * max_f;
+
+    // Replica spins, slice-major, with incrementally maintained
+    // classical local fields per slice.
+    let mut x: Vec<Vec<i8>> = (0..p).map(|_| rng.spins(n)).collect();
+    let mut fields: Vec<LocalFields> =
+        x.iter().map(|xs| LocalFields::new(model, xs)).collect();
+
+    for sweep in 0..solver.sweeps {
+        let s = (sweep + 1) as f64 / solver.sweeps as f64;
+        let gamma = gamma0 * (1.0 - s);
+        // Replica coupling; clamped to keep exp() sane at gamma -> 0.
+        let tanh_arg = (gamma / pt).max(1e-12);
+        let j_perp = -0.5 * pt * tanh_arg.tanh().ln();
+
+        for slice in 0..p {
+            let up = (slice + 1) % p;
+            let down = (slice + p - 1) % p;
+            for i in 0..n {
+                // Classical ΔE within the slice (scaled by 1/P in the
+                // Trotter action) + replica-coupling ΔE.
+                let de_classical =
+                    fields[slice].delta_e(&x[slice], i) / p as f64;
+                let xi = x[slice][i] as f64;
+                let neigh = (x[up][i] + x[down][i]) as f64;
+                let de_perp = 2.0 * j_perp * xi * neigh;
+                let de = de_classical + de_perp;
+                if de <= 0.0
+                    || rng.f64() < (-de * beta_slice * p as f64).exp()
+                {
+                    fields[slice].flip(model, &mut x[slice], i);
+                }
+            }
+        }
+    }
+
+    // Best replica by classical energy, then polish to a local min.
+    let mut best = x[0].clone();
+    let mut best_e = model.energy(&best);
+    for slice in x.iter().skip(1) {
+        let e = model.energy(slice);
+        if e < best_e {
+            best_e = e;
+            best = slice.clone();
+        }
+    }
+    greedy_descent(model, &mut best);
+    best
+}

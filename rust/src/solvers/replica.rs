@@ -1,0 +1,570 @@
+//! Replica-major lockstep solver engine (ISSUE 4).
+//!
+//! The paper's BBO loop re-optimises every surrogate with `restarts`
+//! independent SA/SQ/SQA chains (and SQA additionally carries P Trotter
+//! replicas).  The legacy execution model ran each chain as its own
+//! scalar loop — one thread per chain, each re-walking the full coupling
+//! matrix on every sweep.  This module runs all chains of one solve call
+//! as rows of a single replicas×n spin panel with a matching replicas×n
+//! local-field panel, swept **in lockstep**: for each proposal site `i`
+//! the coupling row `J[i,·]` is loaded once and applied to every replica
+//! of the block, so the inner loops are contiguous, autovectorizable
+//! column passes instead of per-chain pointer-chasing (the Ising-machine
+//! execution model of arXiv:2503.23966).
+//!
+//! # RNG-stream contract
+//!
+//! Every replica unit owns one forked [`Rng`] stream and consumes it in
+//! **exactly** the legacy per-chain order: first the initial spins, then
+//! one uniform per Metropolis proposal *whose ΔE is positive* (downhill
+//! moves draw nothing).  Draws are served through buffered per-replica
+//! block refills of raw `u64`s ([`Rng::fill_u64s`]), which is
+//! stream-transparent: the served values are the stream in order, no
+//! matter how the refills are batched.  Per-replica output is therefore
+//! bit-identical to the serial reference implementations in
+//! [`super::reference`] on the same stream — pinned by
+//! `rust/tests/replica_engine.rs` for SA, SQ and SQA.
+//!
+//! # Fan-out
+//!
+//! [`run_replicas`] partitions the replica units into blocks and fans
+//! the blocks over [`crate::util::threadpool::WorkerPool::global`] via
+//! [`crate::util::threadpool::parallel_map`].  The partition is
+//! **shape-only** (PR-3 rule): the block size depends only on the unit
+//! count, never on worker availability, and units never interact across
+//! blocks, so results are invariant to the worker count.
+//!
+//! # SQA slice mapping
+//!
+//! For SQA one replica *unit* (one restart) spans `P` consecutive panel
+//! rows — its Trotter slices — because the slices of one restart share a
+//! single RNG stream and couple through `J_perp`.  The lockstep loop
+//! therefore fixes `(slice, site)` and sweeps across *restarts*, which
+//! preserves each restart's legacy slice-major proposal order while
+//! still amortising every `J[i,·]` row load over the whole block.
+
+use super::{greedy_descent, ModelStats, QuadModel};
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// Lockstep sweep schedule of one solver family, derived once per model
+/// per solve call from the hoisted [`ModelStats`] scan (the legacy
+/// solvers recomputed the underlying O(n²) scans in every restart).
+#[derive(Clone, Copy, Debug)]
+pub enum SweepPlan {
+    /// Single-spin Metropolis on a geometric β ramp: simulated annealing
+    /// (`ratio` > 1) and simulated quenching (`ratio` = 1) share this
+    /// kernel.
+    Metropolis {
+        /// Full sweeps over all spins.
+        sweeps: usize,
+        /// Initial inverse temperature (β_hot for SA, 1/T for SQ).
+        beta0: f64,
+        /// Per-sweep β multiplier (1.0 pins the temperature).
+        ratio: f64,
+    },
+    /// Path-integral Monte Carlo of the transverse-field Ising model;
+    /// each replica unit carries `slices` coupled Trotter rows.
+    Sqa {
+        /// Trotter slices P per replica unit (≥ 2).
+        slices: usize,
+        /// Monte Carlo sweeps over (site × slice).
+        sweeps: usize,
+        /// Initial transverse field Γ0.
+        gamma0: f64,
+        /// P·T — the Trotter-slice temperature product.
+        pt: f64,
+        /// 1 / max(P·T, 1e-12).
+        beta_slice: f64,
+    },
+}
+
+impl SweepPlan {
+    /// Panel rows per replica unit (1 for Metropolis, P for SQA).
+    pub fn rows_per_unit(&self) -> usize {
+        match self {
+            SweepPlan::Metropolis { .. } => 1,
+            SweepPlan::Sqa { slices, .. } => *slices,
+        }
+    }
+
+    /// Full panel-row sweeps one unit performs over a whole solve —
+    /// the work unit behind the `sweeps_per_sec` benchmark rows
+    /// (Metropolis: `sweeps`; SQA: `sweeps × slices`, one per Trotter
+    /// row per Monte Carlo sweep).
+    pub fn row_sweeps_per_unit(&self) -> usize {
+        match self {
+            SweepPlan::Metropolis { sweeps, .. } => *sweeps,
+            SweepPlan::Sqa { slices, sweeps, .. } => sweeps * slices,
+        }
+    }
+}
+
+/// Replicas×n spin panel with its matching replicas×n local-field panel
+/// — the engine's central data structure, kept public so tests can pin
+/// the panel against per-chain [`super::LocalFields`] bookkeeping.
+///
+/// Row `r` holds one replica's configuration in `spins[r·n .. (r+1)·n]`
+/// and its incrementally maintained fields `f_i = h_i + Σ_k J_ik x_k`
+/// in the same slice of `fields`.  [`Panel::flip`] applies one coupling
+/// row to one replica's contiguous field row — the autovectorizable
+/// column pass the lockstep sweeps are built from.
+///
+/// ```
+/// use intdecomp::solvers::{replica::Panel, LocalFields, QuadModel};
+/// use intdecomp::util::rng::Rng;
+///
+/// let mut rng = Rng::new(5);
+/// let m = QuadModel::random(6, &mut rng);
+/// let x = rng.spins(6);
+/// let mut panel = Panel::new(&m, x.clone());
+/// let mut chain = LocalFields::new(&m, &x);
+/// assert_eq!(panel.delta_e(0, 3), chain.delta_e(&x, 3));
+/// // Committing the same flip keeps panel and chain bit-identical.
+/// let mut xc = x;
+/// panel.flip(&m, 0, 3);
+/// chain.flip(&m, &mut xc, 3);
+/// assert_eq!(panel.row(0), &xc[..]);
+/// assert_eq!(panel.fields, chain.f);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Panel {
+    /// Sites per replica row.
+    pub n: usize,
+    /// Replica rows in the panel.
+    pub rows: usize,
+    /// Row-major replica spins (`rows × n`, values ±1).
+    pub spins: Vec<i8>,
+    /// Row-major local fields (`rows × n`).
+    pub fields: Vec<f64>,
+}
+
+impl Panel {
+    /// Panel over `model` from row-major initial spins (length must be
+    /// a multiple of `model.n`); fields are computed per row exactly
+    /// like [`super::LocalFields::new`].
+    pub fn new(model: &QuadModel, spins: Vec<i8>) -> Self {
+        let n = model.n;
+        assert!(n > 0 && spins.len() % n == 0, "spins must be rows × n");
+        let rows = spins.len() / n;
+        let mut fields = Vec::with_capacity(rows * n);
+        for r in 0..rows {
+            let x = &spins[r * n..(r + 1) * n];
+            for i in 0..n {
+                fields.push(model.local_field(x, i));
+            }
+        }
+        Panel { n, rows, spins, fields }
+    }
+
+    /// One replica's configuration.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.spins[r * self.n..(r + 1) * self.n]
+    }
+
+    /// ΔE of flipping spin `i` of replica `r` under the current fields
+    /// (bit-identical to [`super::LocalFields::delta_e`]).
+    #[inline]
+    pub fn delta_e(&self, r: usize, i: usize) -> f64 {
+        -2.0 * self.spins[r * self.n + i] as f64 * self.fields[r * self.n + i]
+    }
+
+    /// Commit the flip of spin `i` of replica `r`: negate the spin and
+    /// stream the coupling row `J[i,·]` through the replica's contiguous
+    /// field row (bit-identical to [`super::LocalFields::flip`]).
+    #[inline]
+    pub fn flip(&mut self, model: &QuadModel, r: usize, i: usize) {
+        let n = self.n;
+        let xi = self.spins[r * n + i];
+        self.spins[r * n + i] = -xi;
+        let two_xi = 2.0 * xi as f64;
+        let jrow = &model.j[i * n..(i + 1) * n];
+        let frow = &mut self.fields[r * n..(r + 1) * n];
+        for (fk, &jik) in frow.iter_mut().zip(jrow) {
+            *fk -= two_xi * jik;
+        }
+    }
+}
+
+/// How many raw u64s a replica stream buffers per refill.
+const DRAW_BLOCK: usize = 64;
+
+/// Stream-transparent buffered draw source over an owned [`Rng`]:
+/// refills a block of raw u64s at a time ([`Rng::fill_u64s`]) and serves
+/// `f64`/`spin` draws from the buffer front-to-back, so the served
+/// sequence is bit-identical to calling the scalar [`Rng`] methods in
+/// the same order.  `served` counts consumed draws so a borrowed caller
+/// stream can be advanced by exactly that amount afterwards
+/// ([`solve_one`]).
+struct BufferedRng {
+    rng: Rng,
+    buf: [u64; DRAW_BLOCK],
+    pos: usize,
+    len: usize,
+    served: u64,
+}
+
+impl BufferedRng {
+    fn new(rng: Rng) -> Self {
+        BufferedRng { rng, buf: [0; DRAW_BLOCK], pos: 0, len: 0, served: 0 }
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        if self.pos == self.len {
+            self.rng.fill_u64s(&mut self.buf);
+            self.pos = 0;
+            self.len = DRAW_BLOCK;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        self.served += 1;
+        v
+    }
+
+    /// Uniform in [0, 1) — bit-identical to [`Rng::f64`].
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Random spin ±1 — bit-identical to [`Rng::spin`].
+    #[inline]
+    fn spin(&mut self) -> i8 {
+        if self.next_u64() & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Shape-only block partition rule: units per lockstep block as a
+/// function of the unit count alone (never of worker availability), so
+/// the partition — and with it the whole execution — is identical on
+/// every machine.  Targets ~8 independent blocks for pool parallelism
+/// while keeping blocks wide enough to amortise the `J[i,·]` row loads.
+fn unit_block(units: usize) -> usize {
+    units.div_ceil(8).clamp(1, 16)
+}
+
+/// Run every stream as one lockstep replica unit of `plan` over
+/// `model`, fanned across `workers` threads of the persistent pool in
+/// shape-only blocks; returns each unit's best configuration and its
+/// (freshly recomputed) energy, in stream order.
+///
+/// Per-unit results are a pure function of `(model, plan, stream)` —
+/// the block partition and worker count never change them — and each is
+/// bit-identical to the serial reference solver on the same stream.
+///
+/// ```
+/// use intdecomp::solvers::{self, sa::SimulatedAnnealing, IsingSolver};
+/// use intdecomp::util::rng::Rng;
+///
+/// let m = solvers::QuadModel::random(6, &mut Rng::new(3));
+/// let sa = SimulatedAnnealing { sweeps: 8, ..Default::default() };
+/// let plan = sa.lockstep_plan(&m, &m.stats()).unwrap();
+/// let streams: Vec<Rng> = (0..4u64).map(Rng::new).collect();
+/// let out = solvers::replica::run_replicas(&m, &plan, streams, 2);
+/// assert_eq!(out.len(), 4);
+/// for (x, e) in &out {
+///     assert_eq!(x.len(), 6);
+///     assert_eq!(*e, m.energy(x));
+/// }
+/// ```
+pub fn run_replicas(
+    model: &QuadModel,
+    plan: &SweepPlan,
+    streams: Vec<Rng>,
+    workers: usize,
+) -> Vec<(Vec<i8>, f64)> {
+    let units = streams.len();
+    if units == 0 {
+        return Vec::new();
+    }
+    let block = unit_block(units);
+    let blocks: Vec<Vec<Rng>> = {
+        let mut streams = streams;
+        let mut out = Vec::with_capacity(units.div_ceil(block));
+        while !streams.is_empty() {
+            let rest = streams.split_off(block.min(streams.len()));
+            out.push(streams);
+            streams = rest;
+        }
+        out
+    };
+    let per_block = parallel_map(blocks, workers, |blk| {
+        let mut rngs: Vec<BufferedRng> =
+            blk.into_iter().map(BufferedRng::new).collect();
+        run_block(model, plan, &mut rngs)
+    });
+    per_block.into_iter().flatten().collect()
+}
+
+/// One replica unit on a borrowed caller stream — the back-end of the
+/// thin [`super::IsingSolver::solve`] drivers.  Output and the caller's
+/// post-solve stream state are both bit-identical to the legacy scalar
+/// solver: the unit runs on a buffered clone of `rng`, then `rng` is
+/// advanced by exactly the number of draws the solve consumed.
+///
+/// ```
+/// use intdecomp::solvers::{self, sq::SimulatedQuenching, IsingSolver};
+/// use intdecomp::util::rng::Rng;
+///
+/// let m = solvers::QuadModel::random(5, &mut Rng::new(9));
+/// let sq = SimulatedQuenching { sweeps: 6, ..Default::default() };
+/// let plan = sq.lockstep_plan(&m, &m.stats()).unwrap();
+/// let (mut a, mut b) = (Rng::new(7), Rng::new(7));
+/// let x1 = solvers::replica::solve_one(&m, &plan, &mut a);
+/// let x2 = sq.solve(&m, &mut b); // the trait driver routes here
+/// assert_eq!(x1, x2);
+/// assert_eq!(a.next_u64(), b.next_u64()); // streams stay in sync
+/// ```
+pub fn solve_one(
+    model: &QuadModel,
+    plan: &SweepPlan,
+    rng: &mut Rng,
+) -> Vec<i8> {
+    let mut src = BufferedRng::new(rng.clone());
+    let out = run_block(model, plan, std::slice::from_mut(&mut src));
+    // Advance the caller's stream by exactly the consumed draws so its
+    // post-solve state matches the legacy scalar path bit-for-bit.  The
+    // replay is O(draws) raw generator steps — a few percent of the
+    // solve's own cost, and only on this single-unit path; the fan-out
+    // paths own their forked streams and never replay.
+    for _ in 0..src.served {
+        rng.next_u64();
+    }
+    out.into_iter()
+        .next()
+        .expect("a single-unit block always yields one result")
+        .0
+}
+
+/// Dispatch one block of replica units to its lockstep kernel.
+fn run_block(
+    model: &QuadModel,
+    plan: &SweepPlan,
+    rngs: &mut [BufferedRng],
+) -> Vec<(Vec<i8>, f64)> {
+    match *plan {
+        SweepPlan::Metropolis { sweeps, beta0, ratio } => {
+            metropolis_block(model, sweeps, beta0, ratio, rngs)
+        }
+        SweepPlan::Sqa { slices, sweeps, gamma0, pt, beta_slice } => {
+            sqa_block(model, slices, sweeps, gamma0, pt, beta_slice, rngs)
+        }
+    }
+}
+
+/// Lockstep Metropolis kernel (SA and SQ): one panel row per unit.
+///
+/// Per unit, the proposal order (sweep-major, site-ascending), the
+/// conditional uniform draw (only when ΔE > 0), the incremental energy
+/// and the best-so-far tracking replicate the legacy scalar solver
+/// exactly; the lockstep structure only changes *when* each replica's
+/// independent arithmetic happens, never its values.
+fn metropolis_block(
+    model: &QuadModel,
+    sweeps: usize,
+    beta0: f64,
+    ratio: f64,
+    rngs: &mut [BufferedRng],
+) -> Vec<(Vec<i8>, f64)> {
+    let n = model.n;
+    let rows = rngs.len();
+    if n == 0 {
+        // Degenerate zero-site model: the legacy solver returns the
+        // empty configuration without consuming any draws.
+        return rngs.iter().map(|_| (Vec::new(), model.energy(&[]))).collect();
+    }
+    let mut spins = Vec::with_capacity(rows * n);
+    for rng in rngs.iter_mut() {
+        for _ in 0..n {
+            spins.push(rng.spin());
+        }
+    }
+    let mut panel = Panel::new(model, spins);
+    let mut e: Vec<f64> = (0..rows).map(|r| model.energy(panel.row(r))).collect();
+    let mut best = panel.spins.clone();
+    let mut best_e = e.clone();
+    let mut beta = beta0;
+    for _ in 0..sweeps {
+        for i in 0..n {
+            for r in 0..rows {
+                let de = panel.delta_e(r, i);
+                if de <= 0.0 || rngs[r].f64() < (-beta * de).exp() {
+                    panel.flip(model, r, i);
+                    e[r] += de;
+                    if e[r] < best_e[r] {
+                        best_e[r] = e[r];
+                        best[r * n..(r + 1) * n]
+                            .copy_from_slice(panel.row(r));
+                    }
+                }
+            }
+        }
+        beta *= ratio;
+    }
+    (0..rows)
+        .map(|r| {
+            let x = best[r * n..(r + 1) * n].to_vec();
+            let e = model.energy(&x);
+            (x, e)
+        })
+        .collect()
+}
+
+/// Lockstep SQA kernel: `slices` coupled panel rows per unit.
+///
+/// Within a unit the legacy slice-major proposal order is preserved
+/// (slices of one restart share a stream and couple through `J_perp`);
+/// the lockstep dimension is the *unit* axis, swept innermost at fixed
+/// `(slice, site)` so every unit reuses the same `J[i,·]` row.
+fn sqa_block(
+    model: &QuadModel,
+    slices: usize,
+    sweeps: usize,
+    gamma0: f64,
+    pt: f64,
+    beta_slice: f64,
+    rngs: &mut [BufferedRng],
+) -> Vec<(Vec<i8>, f64)> {
+    let n = model.n;
+    let p = slices;
+    let units = rngs.len();
+    if n == 0 {
+        return rngs.iter().map(|_| (Vec::new(), model.energy(&[]))).collect();
+    }
+    let mut spins = Vec::with_capacity(units * p * n);
+    for rng in rngs.iter_mut() {
+        for _ in 0..p * n {
+            spins.push(rng.spin());
+        }
+    }
+    let mut panel = Panel::new(model, spins);
+    for sweep in 0..sweeps {
+        let s = (sweep + 1) as f64 / sweeps as f64;
+        let gamma = gamma0 * (1.0 - s);
+        // Replica coupling; clamped to keep exp() sane at gamma -> 0.
+        let tanh_arg = (gamma / pt).max(1e-12);
+        let j_perp = -0.5 * pt * tanh_arg.tanh().ln();
+        for slice in 0..p {
+            let up = (slice + 1) % p;
+            let down = (slice + p - 1) % p;
+            for i in 0..n {
+                for (u, rng) in rngs.iter_mut().enumerate() {
+                    let row = u * p + slice;
+                    // Classical ΔE within the slice (scaled by 1/P in
+                    // the Trotter action) + replica-coupling ΔE.
+                    let de_classical =
+                        panel.delta_e(row, i) / p as f64;
+                    let xi = panel.spins[row * n + i] as f64;
+                    let neigh = (panel.spins[(u * p + up) * n + i]
+                        + panel.spins[(u * p + down) * n + i])
+                        as f64;
+                    let de_perp = 2.0 * j_perp * xi * neigh;
+                    let de = de_classical + de_perp;
+                    if de <= 0.0
+                        || rng.f64()
+                            < (-de * beta_slice * p as f64).exp()
+                    {
+                        panel.flip(model, row, i);
+                    }
+                }
+            }
+        }
+    }
+    // Per unit: best slice by classical energy, then polish to a local
+    // minimum (the QPU readout analogue of the projective measurement).
+    (0..units)
+        .map(|u| {
+            let mut best = panel.row(u * p).to_vec();
+            let mut best_e = model.energy(&best);
+            for slice in 1..p {
+                let x = panel.row(u * p + slice);
+                let e = model.energy(x);
+                if e < best_e {
+                    best_e = e;
+                    best = x.to_vec();
+                }
+            }
+            greedy_descent(model, &mut best);
+            let e = model.energy(&best);
+            (best, e)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::{
+        random_model, reference, sa::SimulatedAnnealing, IsingSolver,
+    };
+
+    #[test]
+    fn buffered_rng_is_stream_transparent() {
+        let mut scalar = Rng::new(77);
+        let mut buffered = BufferedRng::new(Rng::new(77));
+        for step in 0..200 {
+            if step % 3 == 0 {
+                assert_eq!(buffered.spin(), scalar.spin());
+            } else {
+                assert_eq!(buffered.f64(), scalar.f64());
+            }
+        }
+        assert_eq!(buffered.served, 200);
+    }
+
+    #[test]
+    fn unit_block_is_shape_only_and_bounded() {
+        assert_eq!(unit_block(1), 1);
+        assert_eq!(unit_block(8), 1);
+        assert_eq!(unit_block(10), 2);
+        assert_eq!(unit_block(32), 4);
+        assert_eq!(unit_block(1000), 16);
+    }
+
+    #[test]
+    fn metropolis_block_matches_reference_per_replica() {
+        let mut rng = Rng::new(400);
+        let m = random_model(&mut rng, 11);
+        let sa = SimulatedAnnealing { sweeps: 12, ..Default::default() };
+        let plan = sa.lockstep_plan(&m, &m.stats()).unwrap();
+        let streams: Vec<Rng> = (0..5u64).map(|i| Rng::new(900 + i)).collect();
+        let got = run_replicas(&m, &plan, streams, 1);
+        for (i, (x, e)) in got.iter().enumerate() {
+            let want = reference::sa(&sa, &m, &mut Rng::new(900 + i as u64));
+            assert_eq!(x, &want, "replica {i} diverged from reference");
+            assert_eq!(*e, m.energy(x));
+        }
+    }
+
+    #[test]
+    fn run_replicas_is_invariant_to_worker_count() {
+        let mut rng = Rng::new(401);
+        let m = random_model(&mut rng, 9);
+        let sa = SimulatedAnnealing { sweeps: 8, ..Default::default() };
+        let plan = sa.lockstep_plan(&m, &m.stats()).unwrap();
+        let mk = || (0..20u64).map(|i| Rng::new(i)).collect::<Vec<_>>();
+        let a = run_replicas(&m, &plan, mk(), 1);
+        let b = run_replicas(&m, &plan, mk(), 6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn solve_one_advances_caller_stream_exactly() {
+        let mut rng = Rng::new(402);
+        let m = random_model(&mut rng, 7);
+        let sa = SimulatedAnnealing { sweeps: 6, ..Default::default() };
+        let plan = sa.lockstep_plan(&m, &m.stats()).unwrap();
+        let mut engine_rng = Rng::new(55);
+        let mut legacy_rng = Rng::new(55);
+        let x_engine = solve_one(&m, &plan, &mut engine_rng);
+        let x_legacy = reference::sa(&sa, &m, &mut legacy_rng);
+        assert_eq!(x_engine, x_legacy);
+        assert_eq!(engine_rng.next_u64(), legacy_rng.next_u64());
+    }
+}

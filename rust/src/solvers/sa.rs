@@ -3,8 +3,14 @@
 //! temperatures come from the estimated maximum / minimum effective fields
 //! scaled by 2.9 and 0.4 respectively, with a geometric β schedule and
 //! Metropolis single-spin updates.
+//!
+//! Since ISSUE 4 this type is a thin schedule driver over the
+//! replica-major engine ([`super::replica`]): it derives the β ramp from
+//! the hoisted [`super::ModelStats`] scan and hands the sweeps to the
+//! shared lockstep Metropolis kernel.  Output is bit-identical to the
+//! legacy scalar chain ([`super::reference::sa`]) on the same stream.
 
-use super::{IsingSolver, QuadModel};
+use super::{replica, IsingSolver, ModelStats, QuadModel};
 use crate::util::rng::Rng;
 
 /// Metropolis simulated annealing with the neal-style geometric
@@ -33,50 +39,46 @@ impl SimulatedAnnealing {
     /// — using the per-site bound here leaves SA finishing hot on
     /// surrogate-shaped models).
     pub fn beta_range(&self, model: &QuadModel) -> (f64, f64) {
-        let (max_f, _) = model.field_bounds();
-        let min_gap = model.min_nonzero_gap();
+        self.beta_range_from(&model.stats())
+    }
+
+    /// β schedule endpoints from an already-computed [`ModelStats`] —
+    /// the hoisted form used by the lockstep plan, so the O(n²) scan
+    /// runs once per solve call instead of once per restart.
+    pub fn beta_range_from(&self, stats: &ModelStats) -> (f64, f64) {
         // ΔE of a flip is at most 2*max_field, at least 2*min_gap.
-        let beta_hot = 1.0 / (self.hot_factor * 2.0 * max_f);
+        let beta_hot = 1.0 / (self.hot_factor * 2.0 * stats.max_field);
         let beta_cold =
-            1.0 / (self.cold_factor * 2.0 * min_gap).max(1e-12);
+            1.0 / (self.cold_factor * 2.0 * stats.min_gap).max(1e-12);
         (beta_hot, beta_cold.max(beta_hot * (1.0 + 1e-9)))
     }
 }
 
 impl IsingSolver for SimulatedAnnealing {
     fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
-        let n = model.n;
-        let mut x = rng.spins(n);
-        let mut best = x.clone();
-        let mut e = model.energy(&x);
-        let mut best_e = e;
-        let mut fields = super::LocalFields::new(model, &x);
-
-        let (beta_hot, beta_cold) = self.beta_range(model);
-        let ratio = (beta_cold / beta_hot).powf(
-            1.0 / (self.sweeps.max(2) - 1) as f64,
-        );
-        let mut beta = beta_hot;
-
-        for _ in 0..self.sweeps {
-            for i in 0..n {
-                let de = fields.delta_e(&x, i);
-                if de <= 0.0 || rng.f64() < (-beta * de).exp() {
-                    fields.flip(model, &mut x, i);
-                    e += de;
-                    if e < best_e {
-                        best_e = e;
-                        best.copy_from_slice(&x);
-                    }
-                }
-            }
-            beta *= ratio;
-        }
-        best
+        let plan = self
+            .lockstep_plan(model, &model.stats())
+            .expect("SA always has a lockstep plan");
+        replica::solve_one(model, &plan, rng)
     }
 
     fn name(&self) -> &'static str {
         "sa"
+    }
+
+    fn lockstep_plan(
+        &self,
+        _model: &QuadModel,
+        stats: &ModelStats,
+    ) -> Option<replica::SweepPlan> {
+        let (beta_hot, beta_cold) = self.beta_range_from(stats);
+        let ratio = (beta_cold / beta_hot)
+            .powf(1.0 / (self.sweeps.max(2) - 1) as f64);
+        Some(replica::SweepPlan::Metropolis {
+            sweeps: self.sweeps,
+            beta0: beta_hot,
+            ratio,
+        })
     }
 }
 

@@ -2,8 +2,14 @@
 //! (T = 0.1), i.e. SA with the schedule collapsed.  Deliberately bad at
 //! global exploration — the paper's finding is that this does *not* hurt
 //! BBO, because the surrogate landscape is simple.
+//!
+//! Since ISSUE 4 this type is a thin schedule driver over the
+//! replica-major engine ([`super::replica`]): SQ is the lockstep
+//! Metropolis kernel with the β ratio pinned at 1.  Output is
+//! bit-identical to the legacy scalar chain ([`super::reference::sq`])
+//! on the same stream.
 
-use super::{IsingSolver, QuadModel};
+use super::{replica, IsingSolver, ModelStats, QuadModel};
 use crate::util::rng::Rng;
 
 /// Fixed-temperature Metropolis (the paper's SQ variant).
@@ -23,31 +29,29 @@ impl Default for SimulatedQuenching {
 
 impl IsingSolver for SimulatedQuenching {
     fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
-        let n = model.n;
-        let beta = 1.0 / self.temperature.max(1e-12);
-        let mut x = rng.spins(n);
-        let mut e = model.energy(&x);
-        let mut best = x.clone();
-        let mut best_e = e;
-        let mut fields = super::LocalFields::new(model, &x);
-        for _ in 0..self.sweeps {
-            for i in 0..n {
-                let de = fields.delta_e(&x, i);
-                if de <= 0.0 || rng.f64() < (-beta * de).exp() {
-                    fields.flip(model, &mut x, i);
-                    e += de;
-                    if e < best_e {
-                        best_e = e;
-                        best.copy_from_slice(&x);
-                    }
-                }
-            }
-        }
-        best
+        let plan = self
+            .lockstep_plan(model, &model.stats())
+            .expect("SQ always has a lockstep plan");
+        replica::solve_one(model, &plan, rng)
     }
 
     fn name(&self) -> &'static str {
         "sq"
+    }
+
+    fn lockstep_plan(
+        &self,
+        _model: &QuadModel,
+        _stats: &ModelStats,
+    ) -> Option<replica::SweepPlan> {
+        // A fixed temperature is the geometric ramp with ratio 1
+        // (β·1.0 is exact in IEEE arithmetic, so the collapsed
+        // schedule shares the SA kernel bit-for-bit).
+        Some(replica::SweepPlan::Metropolis {
+            sweeps: self.sweeps,
+            beta0: 1.0 / self.temperature.max(1e-12),
+            ratio: 1.0,
+        })
     }
 }
 

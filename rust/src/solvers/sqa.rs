@@ -14,8 +14,16 @@
 //! gradually freezing the replicas into a common classical configuration
 //! (Kadowaki & Nishimori 1998; Martoňák et al. 2002).  The answer is the
 //! lowest-energy replica at the end of the schedule.
+//!
+//! Since ISSUE 4 this type is a thin schedule driver over the
+//! replica-major engine ([`super::replica`]): one restart's P Trotter
+//! slices occupy P consecutive rows of the lockstep spin panel, and
+//! multi-restart calls sweep all restarts at a fixed (slice, site) so
+//! each coupling row is shared across the whole block.  Output is
+//! bit-identical to the legacy scalar run ([`super::reference::sqa`])
+//! on the same stream.
 
-use super::{greedy_descent, IsingSolver, QuadModel};
+use super::{replica, IsingSolver, ModelStats, QuadModel};
 use crate::util::rng::Rng;
 
 /// Path-integral Monte Carlo of the transverse-field Ising model.
@@ -44,65 +52,31 @@ impl Default for SimulatedQuantumAnnealing {
 
 impl IsingSolver for SimulatedQuantumAnnealing {
     fn solve(&self, model: &QuadModel, rng: &mut Rng) -> Vec<i8> {
-        let n = model.n;
-        let p = self.slices.max(2);
-        let (max_f, _) = model.field_bounds();
-        let t = self.temperature_factor * 2.0 * max_f;
-        let pt = p as f64 * t;
-        let beta_slice = 1.0 / pt.max(1e-12);
-        let gamma0 = self.gamma0_factor * 2.0 * max_f;
-
-        // Replica spins, slice-major, with incrementally maintained
-        // classical local fields per slice (EXPERIMENTS.md §Perf).
-        let mut x: Vec<Vec<i8>> = (0..p).map(|_| rng.spins(n)).collect();
-        let mut fields: Vec<super::LocalFields> =
-            x.iter().map(|xs| super::LocalFields::new(model, xs)).collect();
-
-        for sweep in 0..self.sweeps {
-            let s = (sweep + 1) as f64 / self.sweeps as f64;
-            let gamma = gamma0 * (1.0 - s);
-            // Replica coupling; clamped to keep exp() sane at gamma -> 0.
-            let tanh_arg = (gamma / pt).max(1e-12);
-            let j_perp = -0.5 * pt * tanh_arg.tanh().ln();
-
-            for slice in 0..p {
-                let up = (slice + 1) % p;
-                let down = (slice + p - 1) % p;
-                for i in 0..n {
-                    // Classical ΔE within the slice (scaled by 1/P in the
-                    // Trotter action) + replica-coupling ΔE.
-                    let de_classical =
-                        fields[slice].delta_e(&x[slice], i) / p as f64;
-                    let xi = x[slice][i] as f64;
-                    let neigh =
-                        (x[up][i] + x[down][i]) as f64;
-                    let de_perp = 2.0 * j_perp * xi * neigh;
-                    let de = de_classical + de_perp;
-                    if de <= 0.0 || rng.f64() < (-de * beta_slice * p as f64).exp()
-                    {
-                        fields[slice].flip(model, &mut x[slice], i);
-                    }
-                }
-            }
-        }
-
-        // Best replica by classical energy, then polish to a local min
-        // (the QPU readout analogue of the final projective measurement).
-        let mut best = x[0].clone();
-        let mut best_e = model.energy(&best);
-        for slice in x.iter().skip(1) {
-            let e = model.energy(slice);
-            if e < best_e {
-                best_e = e;
-                best = slice.clone();
-            }
-        }
-        greedy_descent(model, &mut best);
-        best
+        let plan = self
+            .lockstep_plan(model, &model.stats())
+            .expect("SQA always has a lockstep plan");
+        replica::solve_one(model, &plan, rng)
     }
 
     fn name(&self) -> &'static str {
         "sqa"
+    }
+
+    fn lockstep_plan(
+        &self,
+        _model: &QuadModel,
+        stats: &ModelStats,
+    ) -> Option<replica::SweepPlan> {
+        let p = self.slices.max(2);
+        let t = self.temperature_factor * 2.0 * stats.max_field;
+        let pt = p as f64 * t;
+        Some(replica::SweepPlan::Sqa {
+            slices: p,
+            sweeps: self.sweeps,
+            gamma0: self.gamma0_factor * 2.0 * stats.max_field,
+            pt,
+            beta_slice: 1.0 / pt.max(1e-12),
+        })
     }
 }
 

@@ -1,0 +1,236 @@
+//! Replica-major engine contract tests (ISSUE 4).
+//!
+//! Pins the three guarantees the lockstep rework is built on:
+//!
+//! 1. **Per-replica bit-identity** — every replica of a lockstep run
+//!    produces exactly the spin vector the legacy scalar solver
+//!    ([`intdecomp::solvers::reference`]) produces on the same forked
+//!    RNG stream, for SA, SQ and SQA alike (seed-pinned, no tolerance).
+//! 2. **Worker-count invariance** — `solve_batch` through the engine is
+//!    a pure function of `(model, solver, seed)`; the pool fan-out and
+//!    the shape-only block partition never change results.
+//! 3. **Panel/chain equivalence** — the lockstep local-field panel stays
+//!    bit-identical to per-chain `LocalFields` bookkeeping under random
+//!    flip sequences (property-tested).
+
+use intdecomp::solvers::{
+    self, reference, replica, sa::SimulatedAnnealing,
+    sq::SimulatedQuenching, sqa::SimulatedQuantumAnnealing, IsingSolver,
+    LocalFields, QuadModel,
+};
+use intdecomp::util::prop::for_all;
+use intdecomp::util::rng::Rng;
+
+/// Forked per-restart streams exactly as `solve_batch` derives them.
+fn forked_streams(seed: u64, restarts: usize) -> Vec<Rng> {
+    let mut root = Rng::new(seed);
+    (0..restarts).map(|i| root.fork(i as u64)).collect()
+}
+
+#[test]
+fn sa_replicas_are_bit_identical_to_reference() {
+    let m = QuadModel::random(13, &mut Rng::new(500));
+    let sa = SimulatedAnnealing::default();
+    let plan = sa.lockstep_plan(&m, &m.stats()).unwrap();
+    let streams = forked_streams(71, 9);
+    let got = replica::run_replicas(&m, &plan, streams.clone(), 4);
+    assert_eq!(got.len(), 9);
+    for (i, ((x, e), stream)) in got.iter().zip(&streams).enumerate() {
+        let want = reference::sa(&sa, &m, &mut stream.clone());
+        assert_eq!(x, &want, "SA replica {i} diverged");
+        assert_eq!(*e, m.energy(x));
+    }
+}
+
+#[test]
+fn sq_replicas_are_bit_identical_to_reference() {
+    let m = QuadModel::random(12, &mut Rng::new(501));
+    let sq = SimulatedQuenching::default();
+    let plan = sq.lockstep_plan(&m, &m.stats()).unwrap();
+    let streams = forked_streams(72, 7);
+    let got = replica::run_replicas(&m, &plan, streams.clone(), 3);
+    for (i, ((x, _), stream)) in got.iter().zip(&streams).enumerate() {
+        let want = reference::sq(&sq, &m, &mut stream.clone());
+        assert_eq!(x, &want, "SQ replica {i} diverged");
+    }
+}
+
+#[test]
+fn sqa_replicas_are_bit_identical_to_reference() {
+    let m = QuadModel::random(10, &mut Rng::new(502));
+    let sqa = SimulatedQuantumAnnealing {
+        slices: 8,
+        sweeps: 30,
+        ..Default::default()
+    };
+    let plan = sqa.lockstep_plan(&m, &m.stats()).unwrap();
+    let streams = forked_streams(73, 6);
+    let got = replica::run_replicas(&m, &plan, streams.clone(), 4);
+    for (i, ((x, _), stream)) in got.iter().zip(&streams).enumerate() {
+        let want = reference::sqa(&sqa, &m, &mut stream.clone());
+        assert_eq!(x, &want, "SQA replica {i} (8 Trotter rows) diverged");
+    }
+}
+
+#[test]
+fn trait_solve_matches_reference_and_keeps_streams_in_sync() {
+    // The thin drivers route through the engine; both the output and
+    // the caller's post-solve RNG state must match the legacy scalar
+    // path, so sequential `solve_best` chains stay bit-identical too.
+    let m = QuadModel::random(11, &mut Rng::new(503));
+    let sa = SimulatedAnnealing::default();
+    let sq = SimulatedQuenching::default();
+    let sqa = SimulatedQuantumAnnealing {
+        slices: 6,
+        sweeps: 20,
+        ..Default::default()
+    };
+    {
+        let (mut a, mut b) = (Rng::new(81), Rng::new(81));
+        assert_eq!(sa.solve(&m, &mut a), reference::sa(&sa, &m, &mut b));
+        assert_eq!(a.next_u64(), b.next_u64(), "SA stream out of sync");
+    }
+    {
+        let (mut a, mut b) = (Rng::new(82), Rng::new(82));
+        assert_eq!(sq.solve(&m, &mut a), reference::sq(&sq, &m, &mut b));
+        assert_eq!(a.next_u64(), b.next_u64(), "SQ stream out of sync");
+    }
+    {
+        let (mut a, mut b) = (Rng::new(83), Rng::new(83));
+        assert_eq!(sqa.solve(&m, &mut a), reference::sqa(&sqa, &m, &mut b));
+        assert_eq!(a.next_u64(), b.next_u64(), "SQA stream out of sync");
+    }
+}
+
+#[test]
+fn solve_batch_is_worker_count_invariant_for_all_algorithms() {
+    let m = QuadModel::random(10, &mut Rng::new(504));
+    let algos: Vec<Box<dyn IsingSolver>> = vec![
+        Box::new(SimulatedAnnealing { sweeps: 15, ..Default::default() }),
+        Box::new(SimulatedQuenching { sweeps: 15, ..Default::default() }),
+        Box::new(SimulatedQuantumAnnealing {
+            slices: 6,
+            sweeps: 15,
+            ..Default::default()
+        }),
+    ];
+    for solver in &algos {
+        let run = |workers| {
+            solvers::solve_batch(
+                solver.as_ref(),
+                &m,
+                &mut Rng::new(31),
+                20,
+                5,
+                workers,
+            )
+        };
+        let serial = run(1);
+        for workers in [2, 4, 8] {
+            assert_eq!(
+                run(workers),
+                serial,
+                "{} varies with worker count",
+                solver.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn solve_batch_candidates_come_from_the_replica_set() {
+    // Every candidate solve_batch returns must be one of the per-stream
+    // reference solutions — the engine changes execution, not results.
+    let m = QuadModel::random(9, &mut Rng::new(505));
+    let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+    let restarts = 12;
+    let top =
+        solvers::solve_batch(&sa, &m, &mut Rng::new(41), restarts, 4, 3);
+    let pool: Vec<Vec<i8>> = forked_streams(41, restarts)
+        .into_iter()
+        .map(|mut s| reference::sa(&sa, &m, &mut s))
+        .collect();
+    assert!(!top.is_empty());
+    for (x, e) in &top {
+        assert!(
+            pool.contains(x),
+            "candidate not produced by any reference replica"
+        );
+        assert_eq!(*e, m.energy(x));
+    }
+}
+
+#[test]
+fn lockstep_field_panel_matches_per_chain_local_fields() {
+    // Property: after any random flip sequence, every row of the panel
+    // carries exactly the spins and fields of an independently updated
+    // per-chain LocalFields (the legacy bookkeeping).
+    for_all(25, |rng| {
+        let n = 2 + rng.below(9);
+        let rows = 1 + rng.below(5);
+        let m = QuadModel::random(n, rng);
+        let mut spins = Vec::with_capacity(rows * n);
+        for _ in 0..rows * n {
+            spins.push(rng.spin());
+        }
+        let mut chains: Vec<(Vec<i8>, LocalFields)> = (0..rows)
+            .map(|r| {
+                let x = spins[r * n..(r + 1) * n].to_vec();
+                let f = LocalFields::new(&m, &x);
+                (x, f)
+            })
+            .collect();
+        let mut panel = replica::Panel::new(&m, spins);
+        for _ in 0..60 {
+            let r = rng.below(rows);
+            let i = rng.below(n);
+            let (x, f) = &mut chains[r];
+            assert_eq!(panel.delta_e(r, i), f.delta_e(x, i));
+            panel.flip(&m, r, i);
+            f.flip(&m, x, i);
+        }
+        for (r, (x, f)) in chains.iter().enumerate() {
+            assert_eq!(panel.row(r), &x[..], "row {r} spins diverged");
+            assert_eq!(
+                &panel.fields[r * n..(r + 1) * n],
+                &f.f[..],
+                "row {r} fields diverged"
+            );
+        }
+    });
+}
+
+#[test]
+fn hoisted_stats_match_legacy_scans() {
+    for seed in [600u64, 601, 602] {
+        let m = QuadModel::random(14, &mut Rng::new(seed));
+        let s = m.stats();
+        let (max_f, min_f) = m.field_bounds();
+        assert_eq!(s.max_field, max_f);
+        assert_eq!(s.min_field, min_f);
+        assert_eq!(s.min_gap, m.min_nonzero_gap());
+    }
+    // Zero model: the legacy fallbacks.
+    let z = QuadModel::new(4);
+    let s = z.stats();
+    assert_eq!(s.min_gap, 1.0);
+    assert_eq!((s.max_field, s.min_field), z.field_bounds());
+}
+
+#[test]
+fn sweep_plan_row_accounting() {
+    let m = QuadModel::random(6, &mut Rng::new(510));
+    let stats = m.stats();
+    let sa = SimulatedAnnealing { sweeps: 40, ..Default::default() };
+    let plan = sa.lockstep_plan(&m, &stats).unwrap();
+    assert_eq!(plan.rows_per_unit(), 1);
+    assert_eq!(plan.row_sweeps_per_unit(), 40);
+    let sqa = SimulatedQuantumAnnealing {
+        slices: 8,
+        sweeps: 25,
+        ..Default::default()
+    };
+    let plan = sqa.lockstep_plan(&m, &stats).unwrap();
+    assert_eq!(plan.rows_per_unit(), 8);
+    assert_eq!(plan.row_sweeps_per_unit(), 200);
+}
