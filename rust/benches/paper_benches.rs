@@ -18,6 +18,9 @@
 //!                 acquisition (batch_size 1 vs ≥4 at a fixed evaluation
 //!                 budget on the paper-scale instance), and batched
 //!                 multi-layer compression (workers 1 vs many)
+//!   shard       — cross-process sharding overhead: fleet-scale plan
+//!                 construction and the per-job JSONL checkpoint-record
+//!                 roundtrip (ISSUE 5)
 //!
 //! Every run writes `BENCH_<label>.json` at the repo root
 //! (`--label NAME`, default "local"; `--quick` for short iterations) so
@@ -32,6 +35,7 @@ use intdecomp::greedy::greedy;
 use intdecomp::instance::{generate, InstanceConfig};
 use intdecomp::linalg::{cholesky_scaled, Matrix};
 use intdecomp::runtime::XlaRuntime;
+use intdecomp::shard;
 use intdecomp::solvers::{self};
 use intdecomp::surrogate::{
     blr::{Blr, NativePosterior, PosteriorBackend, PosteriorScratch, Prior},
@@ -421,6 +425,67 @@ fn main() {
                         .len()
                 },
             ),
+        );
+    }
+
+    println!("\n== shard: cross-process planning + checkpoint overhead ==");
+    {
+        // The fixed costs a sharded run pays on top of the engine work:
+        // planning a fleet-scale model into manifests, and the per-job
+        // JSONL checkpoint record roundtrip (serialise + fsync-sized
+        // line + parse) — see rust/src/shard.
+        let spec = shard::ModelSpec {
+            n: 8,
+            d: 100,
+            k: 3,
+            gamma: 0.7,
+            instance_seed: 5005,
+            layers: 1024,
+            iters: 288,
+            restarts: 10,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 1,
+            cache_key_raw: false,
+        };
+        note(
+            &mut all,
+            b.run("shard/plan 1024 layers x 16 shards", 16, || {
+                shard::plan(&spec, 16).map(|m| m.len()).unwrap_or(0)
+            }),
+        );
+        let fp = spec.fingerprint();
+        let rec = shard::LayerRecord {
+            job: 3,
+            name: "layer4".into(),
+            n: 8,
+            d: 100,
+            k: 3,
+            algo: "nBOCS".into(),
+            solver: "sa".into(),
+            evals: 1176,
+            best_y: 0.031_257_194_7,
+            best_x: vec![1, -1].repeat(12),
+            err: 0.0417,
+            ratio: 0.158_203_125,
+            cache_hits: 40,
+            cache_misses: 1136,
+        };
+        note(
+            &mut all,
+            b.run("shard/record jsonl roundtrip x64", 64, || {
+                let mut evals = 0usize;
+                for _ in 0..64 {
+                    let line = rec.to_json_line(&fp);
+                    evals += shard::LayerRecord::parse_line(&line, &fp)
+                        .expect("roundtrip")
+                        .evals;
+                }
+                evals
+            }),
         );
     }
 

@@ -15,7 +15,11 @@
 //!    never re-pay the `O(K·N²)` cost evaluation.
 //! 3. **Whole-model compression** — [`Engine::compress_all`] fans a batch
 //!    of [`CompressionJob`]s (one per layer matrix) across workers pulling
-//!    from a shared queue, with per-job seeds.
+//!    from a shared queue, with per-job seeds; [`Engine::compress_each`]
+//!    is the streaming variant delivering results in job order as they
+//!    complete — the checkpoint hook of the cross-process
+//!    [`crate::shard`] subsystem (one OS process per shard, level 4 of
+//!    the parallelism stack).
 //!
 //! All three levels share one set of long-lived threads: the process-wide
 //! [`crate::util::threadpool::WorkerPool`], reused across every BBO
@@ -37,11 +41,15 @@ pub mod cache;
 
 pub use cache::{CacheStats, CachedOracle, CostCache};
 
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
+
 use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun};
 use crate::cost::{compression_ratio, BinMatrix, Problem};
 use crate::report;
 use crate::solvers::{self, IsingSolver};
-use crate::util::threadpool::{default_workers, parallel_map};
+use crate::util::threadpool::{default_workers, parallel_map, WorkerPool};
 
 /// Float width used for all size/ratio reporting (the paper's f32 layers).
 const FLOAT_BITS: usize = 32;
@@ -235,6 +243,74 @@ impl Engine {
         parallel_map(jobs, self.cfg.workers, move |job| {
             run_job(job, restart_workers, batch_size)
         })
+    }
+
+    /// Compress every job like [`Engine::compress_all`], but deliver
+    /// each [`JobResult`] to `sink` **in job order, as soon as it and
+    /// every earlier job have finished** — the streaming entry point
+    /// the shard worker's checkpoint log is built on
+    /// ([`crate::shard::run_shard`] appends one durable record per
+    /// sink call).
+    ///
+    /// Up to `cfg.workers` jobs run concurrently on the process-wide
+    /// pool; out-of-order completions are buffered so the sink always
+    /// observes the prefix `0, 1, 2, ..` of finished jobs.  Results are
+    /// identical to `compress_all` for any worker count; with
+    /// `cfg.workers == 1` jobs run inline on the calling thread, the
+    /// bit-for-bit legacy serial path.  A panicking job is re-raised on
+    /// the calling thread once observed, matching the
+    /// [`parallel_map`] panic policy.
+    pub fn compress_each<F>(&self, jobs: Vec<CompressionJob>, mut sink: F)
+    where
+        F: FnMut(usize, JobResult),
+    {
+        let restart_workers = self.cfg.restart_workers;
+        let batch_size = self.cfg.batch_size;
+        let cap = self.cfg.workers.max(1);
+        if cap == 1 || jobs.len() <= 1 {
+            for (i, job) in jobs.into_iter().enumerate() {
+                sink(i, run_job(job, restart_workers, batch_size));
+            }
+            return;
+        }
+        let pool = WorkerPool::global();
+        let (tx, rx) = channel();
+        let mut queue = jobs.into_iter().enumerate();
+        let mut in_flight = 0usize;
+        let mut pending: BTreeMap<usize, JobResult> = BTreeMap::new();
+        let mut next_emit = 0usize;
+        loop {
+            // Keep up to `cap` jobs on the pool.
+            while in_flight < cap {
+                let Some((i, job)) = queue.next() else { break };
+                let tx = tx.clone();
+                pool.submit(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| {
+                        run_job(job, restart_workers, batch_size)
+                    }));
+                    let _ = tx.send((i, out));
+                });
+                in_flight += 1;
+            }
+            if in_flight == 0 {
+                break;
+            }
+            let (i, out) = rx
+                .recv()
+                .expect("engine job dropped its result channel");
+            in_flight -= 1;
+            match out {
+                Ok(result) => {
+                    pending.insert(i, result);
+                }
+                Err(payload) => resume_unwind(payload),
+            }
+            // Emit the finished prefix in job order.
+            while let Some(result) = pending.remove(&next_emit) {
+                sink(next_emit, result);
+                next_emit += 1;
+            }
+        }
     }
 }
 
@@ -437,6 +513,33 @@ mod tests {
             assert_eq!(x.run.best_y, y.run.best_y);
             assert_eq!(x.cache, y.cache);
         }
+    }
+
+    #[test]
+    fn compress_each_streams_in_job_order_and_matches_compress_all() {
+        let all = Engine::with_workers(4)
+            .compress_all((0..5).map(|i| tiny_job(i, 6)).collect());
+        for workers in [1usize, 4] {
+            let mut seen = Vec::new();
+            let mut streamed = Vec::new();
+            Engine::with_workers(workers).compress_each(
+                (0..5).map(|i| tiny_job(i, 6)).collect(),
+                |i, r| {
+                    seen.push(i);
+                    streamed.push(r);
+                },
+            );
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "workers = {workers}");
+            for (a, b) in all.iter().zip(&streamed) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.run.ys, b.run.ys);
+                assert_eq!(a.run.best_x, b.run.best_x);
+                assert_eq!(a.cache, b.cache);
+            }
+        }
+        // Empty input: the sink is never called.
+        Engine::with_workers(3)
+            .compress_each(Vec::new(), |_, _| panic!("no jobs"));
     }
 
     #[test]

@@ -5,10 +5,13 @@
 //!   run                       single BBO run, full trace to stdout/CSV
 //!   compress-model            compress all layers of a synthetic model
 //!                             concurrently (the parallel batched engine)
+//!   shard plan|work|merge     cross-process sharded compress-model with
+//!                             checkpoint/resume (one worker per process)
 //!   brute-force               exact search of an instance
 //!   greedy                    original SPADE baseline
 //!   bench                     hot-path micro-benchmarks; --json writes
-//!                             BENCH_<label>.json at the repo root
+//!                             BENCH_<label>.json at the repo root;
+//!                             --check FILE validates a snapshot's schema
 //!   exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|table1|table2|all
 //!   artifacts-check           verify the PJRT artifacts against native math
 //!
@@ -26,16 +29,17 @@ use intdecomp::bruteforce::brute_force;
 use intdecomp::cli::Args;
 use intdecomp::config::ExpConfig;
 use intdecomp::cost::BinMatrix;
-use intdecomp::engine::{
-    self, CacheKeyMode, CompressionJob, Engine, EngineConfig,
-};
+use intdecomp::engine::{self, Engine, EngineConfig};
 use intdecomp::experiments::{self as exp, Ctx};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::generate;
 use intdecomp::report::fmt;
 use intdecomp::runtime::XlaRuntime;
+use intdecomp::shard;
 use intdecomp::solvers;
 use intdecomp::util::rng::Rng;
+
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = match Args::from_env() {
@@ -57,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "decompose" => cmd_decompose(args),
         "run" => cmd_run(args),
         "compress-model" => cmd_compress_model(args),
+        "shard" => cmd_shard(args),
         "brute-force" | "bruteforce" => cmd_brute_force(args),
         "greedy" => cmd_greedy(args),
         "bench" => cmd_bench(args),
@@ -79,12 +84,25 @@ USAGE: intdecomp <subcommand> [flags]
   decompose        end-to-end compression of one instance (greedy vs BBO)
   run              one BBO run with trace output
   compress-model   compress every layer of a synthetic model concurrently
-                   (the parallel batched engine; see --layers/--workers)
+                   (the parallel batched engine; see --layers/--workers;
+                   --report FILE writes the deterministic report)
+  shard plan       partition a compress-model workload into shard
+                   manifests (--shards S --dir D + the model flags);
+                   the partition is shape-only, so any shard count
+                   merges to identical results
+  shard work       run one shard (--manifest F [--out LOG] [--workers N])
+                   with crash-safe checkpoint/resume: each finished
+                   layer is fsynced to a JSONL log, a restarted worker
+                   skips completed layers and replays byte-identically
+  shard merge      validate + combine shard logs (--dir D) into the
+                   single-process report, byte for byte
+                   (--report FILE, --csv FILE)
   brute-force      exact search (best / second-best / solution orbit)
   greedy           the original SPADE baseline
   bench            hot-path micro-benchmarks (--quick, --json, --label L:
                    --json writes schema-checked BENCH_<L>.json at the
-                   repo root — the tracked perf trajectory)
+                   repo root — the tracked perf trajectory;
+                   --check FILE validates an existing snapshot)
   exp <fig|table>  reproduce a paper figure/table:
                    fig1 fig2 fig3 fig4 fig5 fig6 fig7 table1 table2
                    ablation all
@@ -117,6 +135,17 @@ FLAGS (defaults in parens):
                     the K!*2^K symmetry orbit into one entry holding
                     the canonical representative's cost) or 'raw'
                     (exact keys, bit-identical to an uncached run)
+  --report FILE     compress-model / shard merge: write the
+                    deterministic per-layer report (no wall-clock
+                    fields) — the byte-identity artifact CI diffs
+  --shards S        shard plan: number of shards (2)
+  --dir D           shard plan/merge: plan directory (shards)
+  --manifest FILE   shard work: the shard manifest to run
+  --out LOG         shard work: result-log path (default: next to the
+                    manifest, .results.jsonl).  NOTE: 'shard merge'
+                    reads logs at the default location only — a log
+                    written elsewhere (e.g. local scratch) must be
+                    moved there before merging
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -236,63 +265,62 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compress a whole synthetic model — one instance per layer — through the
-/// parallel batched engine, and print the aggregated per-layer report.
-fn cmd_compress_model(args: &Args) -> Result<()> {
+/// Build the canonical workload description from the CLI flags — the
+/// same [`shard::ModelSpec`] the shard planner serialises, so a
+/// single-process `compress-model` run and a sharded run construct
+/// their jobs through one code path ([`shard::ModelSpec::job`]).
+fn model_spec_from_args(args: &Args) -> Result<(shard::ModelSpec, ExpConfig)> {
     let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
     let layers = args.usize_flag("layers", 4).map_err(|e| anyhow!(e))?;
-    if layers == 0 {
-        bail!("--layers must be >= 1");
-    }
     let restart_workers = args
         .usize_flag("restart-workers", 1)
         .map_err(|e| anyhow!(e))?;
-    let algo = Algorithm::by_name(&args.str_flag("algo", "nbocs"))
-        .ok_or_else(|| anyhow!("unknown --algo"))?;
-    let solver_name = args.str_flag("solver", "sa");
-
-    let cache_mode = if cfg.cache_key_raw {
-        CacheKeyMode::Exact
-    } else {
-        CacheKeyMode::Canonical
+    let spec = shard::ModelSpec {
+        n: cfg.instance.n,
+        d: cfg.instance.d,
+        k: cfg.instance.k,
+        gamma: cfg.instance.gamma,
+        instance_seed: cfg.instance.seed,
+        layers,
+        iters: cfg.iters,
+        restarts: cfg.restarts,
+        batch_size: cfg.batch_size,
+        augment: args.bool_flag("augment"),
+        restart_workers,
+        algo: args.str_flag("algo", "nbocs"),
+        solver: args.str_flag("solver", "sa"),
+        seed: cfg.seed,
+        cache_key_raw: cfg.cache_key_raw,
     };
-    let mut jobs = Vec::with_capacity(layers);
-    for i in 0..layers {
-        let p = generate(&cfg.instance, i);
-        let solver = solvers::by_name(&solver_name)
-            .ok_or_else(|| anyhow!("unknown --solver"))?;
-        jobs.push(CompressionJob {
-            name: format!("layer{}", i + 1),
-            cfg: BboConfig {
-                n_init: p.n_bits(),
-                iters: cfg.iters,
-                restarts: cfg.restarts,
-                augment: args.bool_flag("augment"),
-                restart_workers: 1,
-                batch_size: cfg.batch_size,
-            },
-            problem: p,
-            algo: algo.clone(),
-            solver,
-            seed: cfg.seed.wrapping_add(i as u64),
-            cache_mode,
-        });
+    spec.validate()?;
+    Ok((spec, cfg))
+}
+
+/// Compress a whole synthetic model — one instance per layer — through the
+/// parallel batched engine, and print the aggregated per-layer report.
+fn cmd_compress_model(args: &Args) -> Result<()> {
+    let (spec, cfg) = model_spec_from_args(args)?;
+    let mut jobs = Vec::with_capacity(spec.layers);
+    for i in 0..spec.layers {
+        jobs.push(spec.job(i)?);
     }
 
     println!(
-        "compress-model: {layers} layers ({}x{}, K={}) on {} workers \
-         (restart fan-out: {restart_workers}, batch size: {})",
-        cfg.instance.n,
-        cfg.instance.d,
-        cfg.instance.k,
+        "compress-model: {} layers ({}x{}, K={}) on {} workers \
+         (restart fan-out: {}, batch size: {})",
+        spec.layers,
+        spec.n,
+        spec.d,
+        spec.k,
         cfg.workers,
-        cfg.batch_size
+        spec.restart_workers,
+        spec.batch_size
     );
     let t = intdecomp::util::timer::Timer::start();
     let eng = Engine::new(EngineConfig {
         workers: cfg.workers,
-        restart_workers,
-        batch_size: 1, // per-job cfg above carries the batch size
+        restart_workers: spec.restart_workers,
+        batch_size: 1, // per-job cfg carries the batch size
     });
     let results = eng.compress_all(jobs);
     let wall = t.seconds();
@@ -319,6 +347,121 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
     let csv = std::path::Path::new(&cfg.out_dir).join("compress_model.csv");
     engine::write_results_csv(&csv, &results)?;
     println!("wrote {}", csv.display());
+    if let Some(path) = args.flags.get("report") {
+        let records: Vec<shard::LayerRecord> = results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| shard::LayerRecord::from_result(i, r))
+            .collect();
+        std::fs::write(path, shard::deterministic_report(&records))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Cross-process sharding: `shard plan | work | merge`.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match sub {
+        "plan" => cmd_shard_plan(args),
+        "work" => cmd_shard_work(args),
+        "merge" => cmd_shard_merge(args),
+        other => {
+            bail!("unknown shard subcommand '{other}' (try: plan, work, merge)")
+        }
+    }
+}
+
+/// Partition a compress-model workload into shard manifests.
+fn cmd_shard_plan(args: &Args) -> Result<()> {
+    let (spec, _cfg) = model_spec_from_args(args)?;
+    let shards = args.usize_flag("shards", 2).map_err(|e| anyhow!(e))?;
+    let dir = PathBuf::from(args.str_flag("dir", "shards"));
+    let paths = shard::write_plan(&spec, shards, &dir)?;
+    println!(
+        "planned {} layers into {shards} shards (fingerprint {})",
+        spec.layers,
+        spec.fingerprint()
+    );
+    for (jobs, path) in shard::partition(spec.layers, shards)
+        .iter()
+        .zip(&paths)
+    {
+        println!("  {} jobs -> {}", jobs.len(), path.display());
+    }
+    println!("run each shard:  intdecomp shard work --manifest <file>");
+    println!(
+        "then merge:      intdecomp shard merge --dir {}",
+        dir.display()
+    );
+    Ok(())
+}
+
+/// Run one shard's jobs with checkpoint/resume.
+fn cmd_shard_work(args: &Args) -> Result<()> {
+    let manifest_path = args
+        .flags
+        .get("manifest")
+        .ok_or_else(|| anyhow!("shard work requires --manifest <file>"))?;
+    let manifest_path = Path::new(manifest_path);
+    let manifest = shard::Manifest::load(manifest_path)?;
+    let out = match args.flags.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => shard::default_result_path(manifest_path),
+    };
+    let workers = args
+        .usize_flag(
+            "workers",
+            intdecomp::util::threadpool::default_workers(),
+        )
+        .map_err(|e| anyhow!(e))?;
+    println!(
+        "shard {}/{}: {} jobs on {workers} workers, log {}",
+        manifest.shard,
+        manifest.shards,
+        manifest.jobs.len(),
+        out.display()
+    );
+    let t = intdecomp::util::timer::Timer::start();
+    let run = shard::run_shard(&manifest, &out, workers, |rec| {
+        let cost = fmt(rec.best_y);
+        println!("  {}  cost {cost}  ({} evals)", rec.name, rec.evals);
+    })?;
+    println!(
+        "shard {}/{} done in {:.2}s: {} jobs already complete (resumed), \
+         {} ran, {} records at {}",
+        manifest.shard,
+        manifest.shards,
+        t.seconds(),
+        run.skipped,
+        run.ran,
+        run.records.len(),
+        run.log_path.display()
+    );
+    Ok(())
+}
+
+/// Validate and merge every shard of a plan into the single-process
+/// report (byte-identical to `compress-model --report`).
+fn cmd_shard_merge(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_flag("dir", "shards"));
+    let merged = shard::merge_dir(&dir)?;
+    let report = shard::deterministic_report(&merged.records);
+    print!("{report}");
+    println!(
+        "merged {} shards, {} layers (fingerprint {})",
+        merged.shards,
+        merged.records.len(),
+        merged.spec.fingerprint()
+    );
+    if let Some(path) = args.flags.get("report") {
+        std::fs::write(path, &report)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flags.get("csv") {
+        shard::write_merged_csv(path, &merged.records)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -384,6 +527,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
               Prior},
         Dataset, Surrogate,
     };
+
+    // `--check FILE`: validate an existing snapshot's schema and exit —
+    // CI runs this on every BENCH_*.json it is about to upload, so a
+    // schema-invalid file fails the job instead of shipping garbage.
+    if let Some(path) = args.flags.get("check") {
+        let text = std::fs::read_to_string(path)?;
+        let rows = bench::validate_json(&text)
+            .map_err(|e| anyhow!("{path}: schema validation failed: {e}"))?;
+        println!("{path}: schema ok ({rows} rows)");
+        return Ok(());
+    }
 
     let quick = args.bool_flag("quick");
     let label = args.str_flag("label", "local");
@@ -552,6 +706,65 @@ fn cmd_bench(args: &Args) -> Result<()> {
                         .best_y
                 },
             ),
+            &mut all,
+        );
+    }
+
+    // Shard-subsystem overhead (ISSUE 5): planning cost at fleet scale
+    // and the per-checkpoint JSONL record roundtrip — the fixed costs a
+    // sharded run pays on top of the engine work.
+    {
+        let spec = shard::ModelSpec {
+            n: 8,
+            d: 100,
+            k: 3,
+            gamma: 0.7,
+            instance_seed: 5005,
+            layers: 1024,
+            iters: 288,
+            restarts: 10,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 1,
+            cache_key_raw: false,
+        };
+        note(
+            b.run("shard/plan 1024 layers x 16 shards", 16, || {
+                shard::plan(&spec, 16).map(|m| m.len()).unwrap_or(0)
+            }),
+            &mut all,
+        );
+        let fp = spec.fingerprint();
+        let rec = shard::LayerRecord {
+            job: 3,
+            name: "layer4".into(),
+            n: 8,
+            d: 100,
+            k: 3,
+            algo: "nBOCS".into(),
+            solver: "sa".into(),
+            evals: 1176,
+            best_y: 0.031_257_194_7,
+            best_x: vec![1, -1].repeat(12),
+            err: 0.0417,
+            ratio: 0.158_203_125,
+            cache_hits: 40,
+            cache_misses: 1136,
+        };
+        note(
+            b.run("shard/record jsonl roundtrip x64", 64, || {
+                let mut evals = 0usize;
+                for _ in 0..64 {
+                    let line = rec.to_json_line(&fp);
+                    evals += shard::LayerRecord::parse_line(&line, &fp)
+                        .expect("roundtrip")
+                        .evals;
+                }
+                evals
+            }),
             &mut all,
         );
     }

@@ -1,0 +1,321 @@
+//! The shard merger: validate and combine per-shard result logs into
+//! the aggregated report a single-process run produces, byte for byte.
+//!
+//! [`merge_dir`] refuses to produce output from anything less than a
+//! complete, mutually consistent plan: every manifest must carry the
+//! same workload fingerprint and shard count, shard ids must cover
+//! `0..shards` exactly, every manifest job must have a checkpointed
+//! record, and no layer may appear twice.  The merged
+//! [`deterministic_report`] contains no wall-clock fields, so
+//! `intdecomp compress-model --report` (single process) and
+//! `intdecomp shard merge --report` (N processes, possibly killed and
+//! resumed) emit **identical bytes** for the same workload — the CI
+//! `shard-smoke` job diffs exactly that.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::plan::{default_result_path, Manifest};
+use super::spec::ModelSpec;
+use super::worker::{recover_log, LayerRecord};
+use crate::report;
+
+/// A fully validated, merged sharded run.
+#[derive(Debug)]
+pub struct MergedModel {
+    /// The workload every shard agreed on.
+    pub spec: ModelSpec,
+    /// Shard count of the plan.
+    pub shards: usize,
+    /// One record per layer, sorted by layer index.
+    pub records: Vec<LayerRecord>,
+}
+
+/// Load one manifest and the valid prefix of its result log (at the
+/// worker's default location next to the manifest).
+pub fn load_shard_results(
+    manifest_path: &Path,
+) -> Result<(Manifest, Vec<LayerRecord>)> {
+    let manifest = Manifest::load(manifest_path)?;
+    let log = default_result_path(manifest_path);
+    let recovered = recover_log(&log, &manifest.fingerprint)?;
+    Ok((manifest, recovered.records))
+}
+
+/// Merge every shard of the plan in `dir` (manifests `shard_*.json`
+/// with result logs beside them), validating completeness and mutual
+/// consistency; returns the records in layer order.
+pub fn merge_dir(dir: &Path) -> Result<MergedModel> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| {
+                    n.starts_with("shard_") && n.ends_with(".json")
+                })
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no shard manifests (shard_*.json) in {}", dir.display());
+    }
+
+    let mut manifests = Vec::with_capacity(paths.len());
+    for p in &paths {
+        manifests.push((p.clone(), Manifest::load(p)?));
+    }
+    let (_, first) = &manifests[0];
+    let (fingerprint, shards) = (first.fingerprint.clone(), first.shards);
+    let mut seen_shards = vec![false; shards];
+    for (p, m) in &manifests {
+        if m.fingerprint != fingerprint || m.shards != shards {
+            bail!(
+                "{}: belongs to a different plan (fingerprint {} / {} \
+                 shards, expected {} / {})",
+                p.display(),
+                m.fingerprint,
+                m.shards,
+                fingerprint,
+                shards
+            );
+        }
+        if seen_shards[m.shard] {
+            bail!("{}: duplicate manifest for shard {}", p.display(), m.shard);
+        }
+        seen_shards[m.shard] = true;
+    }
+    if manifests.len() != shards {
+        bail!(
+            "{} holds {} manifests but the plan has {} shards",
+            dir.display(),
+            manifests.len(),
+            shards
+        );
+    }
+
+    let mut by_layer: BTreeMap<usize, LayerRecord> = BTreeMap::new();
+    for (p, m) in &manifests {
+        let log = default_result_path(p);
+        let recovered = recover_log(&log, &fingerprint)?;
+        let mut have: BTreeMap<usize, LayerRecord> = BTreeMap::new();
+        for r in recovered.records {
+            have.insert(r.job, r);
+        }
+        for &job in &m.jobs {
+            let rec = have.remove(&job).ok_or_else(|| {
+                anyhow!(
+                    "shard {}/{} incomplete: no record for layer {} in {} \
+                     — rerun `intdecomp shard work --manifest {}` (note: \
+                     merge reads this default log path; a log written \
+                     with --out must be moved here first)",
+                    m.shard,
+                    m.shards,
+                    job + 1,
+                    log.display(),
+                    p.display()
+                )
+            })?;
+            if by_layer.insert(job, rec).is_some() {
+                bail!("layer {} appears in more than one shard", job + 1);
+            }
+        }
+    }
+    let records: Vec<LayerRecord> = by_layer.into_values().collect();
+    debug_assert_eq!(records.len(), first.spec.layers);
+    Ok(MergedModel { spec: first.spec.clone(), shards, records })
+}
+
+/// Aggregate compressed/original size over all layers (each layer's
+/// ratio weighted by its original size) — the same formula as
+/// [`crate::engine::overall_ratio`], computed from checkpoint records.
+pub fn overall_ratio(records: &[LayerRecord]) -> f64 {
+    let mut orig = 0.0;
+    let mut comp = 0.0;
+    for r in records {
+        let o = (r.n * r.d) as f64;
+        orig += o;
+        comp += o * r.ratio;
+    }
+    if orig == 0.0 {
+        0.0
+    } else {
+        comp / orig
+    }
+}
+
+/// The aggregated per-layer report, built exclusively from
+/// deterministic fields — no wall-clock columns — so a sharded run
+/// merges to the **same bytes** a single-process run writes
+/// (`compress-model --report` uses this very function on its own
+/// results).
+pub fn deterministic_report(records: &[LayerRecord]) -> String {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            let lookups = r.cache_hits + r.cache_misses;
+            let rate = if lookups == 0 {
+                0.0
+            } else {
+                r.cache_hits as f64 / lookups as f64
+            };
+            vec![
+                r.name.clone(),
+                format!("{}x{}", r.n, r.d),
+                r.k.to_string(),
+                r.algo.clone(),
+                r.solver.clone(),
+                r.evals.to_string(),
+                report::fmt(r.best_y),
+                format!("{:.4}", r.err),
+                format!("{:.1}%", 100.0 * r.ratio),
+                format!(
+                    "{}/{} ({:.0}%)",
+                    r.cache_hits,
+                    lookups,
+                    100.0 * rate
+                ),
+            ]
+        })
+        .collect();
+    let mut out = report::ascii_table(
+        &[
+            "layer", "shape", "K", "algo", "solver", "evals", "best cost",
+            "err", "size", "cache hits",
+        ],
+        &rows,
+    );
+    let (mut hits, mut lookups, mut evals) = (0u64, 0u64, 0usize);
+    for r in records {
+        hits += r.cache_hits;
+        lookups += r.cache_hits + r.cache_misses;
+        evals += r.evals;
+    }
+    let _ = writeln!(
+        out,
+        "total: {evals} evaluations, cache {hits}/{lookups} hits, \
+         overall size {:.1}% of original",
+        100.0 * overall_ratio(records)
+    );
+    out
+}
+
+/// Write the merged per-layer records as deterministic CSV (same
+/// columns as the report, machine-readable, no wall-clock fields).
+pub fn write_merged_csv(
+    path: impl AsRef<Path>,
+    records: &[LayerRecord],
+) -> std::io::Result<()> {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.n.to_string(),
+                r.d.to_string(),
+                r.k.to_string(),
+                r.algo.clone(),
+                r.solver.clone(),
+                r.evals.to_string(),
+                format!("{:.12e}", r.best_y),
+                format!("{:.6}", r.err),
+                format!("{:.6}", r.ratio),
+                r.cache_hits.to_string(),
+                r.cache_misses.to_string(),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        path,
+        &[
+            "layer",
+            "n",
+            "d",
+            "k",
+            "algo",
+            "solver",
+            "evals",
+            "best_cost",
+            "normalised_error",
+            "compression_ratio",
+            "cache_hits",
+            "cache_misses",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(job: usize) -> LayerRecord {
+        LayerRecord {
+            job,
+            name: format!("layer{}", job + 1),
+            n: 4,
+            d: 8,
+            k: 2,
+            algo: "nBOCS".into(),
+            solver: "sa".into(),
+            evals: 13,
+            best_y: 0.5,
+            best_x: vec![1; 8],
+            err: 0.25,
+            ratio: 0.15,
+            cache_hits: 3,
+            cache_misses: 10,
+        }
+    }
+
+    #[test]
+    fn report_has_rows_totals_and_no_time_column() {
+        let records = vec![rec(0), rec(1)];
+        let text = deterministic_report(&records);
+        assert!(text.contains("layer1"));
+        assert!(text.contains("layer2"));
+        assert!(text.contains("total: 26 evaluations"));
+        assert!(text.contains("cache 6/26 hits"));
+        assert!(!text.contains("time"), "wall-clock leaked into report");
+        // Byte-determinism: same input, same bytes.
+        assert_eq!(text, deterministic_report(&records));
+    }
+
+    #[test]
+    fn overall_ratio_weights_by_layer_size() {
+        let mut a = rec(0);
+        a.ratio = 0.1;
+        let mut b = rec(1);
+        b.ratio = 0.3;
+        // Equal shapes: plain mean.
+        let r = overall_ratio(&[a, b]);
+        assert!((r - 0.2).abs() < 1e-12);
+        assert_eq!(overall_ratio(&[]), 0.0);
+    }
+
+    #[test]
+    fn merged_csv_renders() {
+        let dir = std::env::temp_dir().join("intdecomp_shard_csv");
+        let path = dir.join("merged.csv");
+        write_merged_csv(&path, &[rec(0)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("layer,"));
+        assert!(text.contains("layer1"));
+        assert!(!text.contains("time_s"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn merge_dir_requires_manifests() {
+        let dir = std::env::temp_dir().join("intdecomp_shard_empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = format!("{:#}", merge_dir(&dir).unwrap_err());
+        assert!(err.contains("no shard manifests"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,79 @@
+//! Cross-process sharded compression with checkpoint/resume — the
+//! ROADMAP's last standing scale item past a single machine.
+//!
+//! A whole-model workload ([`spec::ModelSpec`]) is embarrassingly
+//! parallel at the layer level: each layer is an independent MINLP
+//! decomposition with its own seed.  This module splits such a workload
+//! across independent OS processes in three stages, each a subcommand of
+//! the `intdecomp shard` CLI:
+//!
+//! 1. **Plan** ([`plan`] / [`write_plan`]) — partition the layers into
+//!    shard manifests.  The [`partition`] is *shape-only* (a pure
+//!    function of `(layers, shards)`) and per-job seeds depend on the
+//!    layer index alone, so any shard count yields the same per-job
+//!    results.
+//! 2. **Work** ([`run_shard`]) — one process per manifest runs its jobs
+//!    on the in-process engine ([`crate::engine::Engine::compress_each`]
+//!    streams results in job order over the persistent worker pool) and
+//!    appends each finished job to a crash-safe JSONL result log
+//!    (fsync per record).  A killed worker restarts, keeps the log's
+//!    valid prefix, skips checkpointed jobs and completes a log that is
+//!    byte-identical to an uninterrupted run's.
+//! 3. **Merge** ([`merge_dir`]) — validate that the shard logs form one
+//!    complete, mutually consistent plan (fingerprints, shard coverage,
+//!    one record per layer) and emit the aggregated
+//!    [`deterministic_report`] — byte-identical to what a
+//!    single-process `compress-model --report` run writes, because both
+//!    sides build jobs through [`spec::ModelSpec::job`] and the report
+//!    contains no wall-clock fields.
+//!
+//! The determinism contract (`docs/ARCHITECTURE.md` § "The shard
+//! subsystem") is enforced end-to-end by `rust/tests/shard.rs` and the
+//! CI `shard-smoke` job, which kills and resumes a live worker process
+//! and then byte-compares the merged report against a single-process
+//! run.
+//!
+//! ```
+//! use intdecomp::shard::{self, ModelSpec};
+//!
+//! let spec = ModelSpec {
+//!     n: 3, d: 6, k: 2, gamma: 0.8, instance_seed: 7,
+//!     layers: 2, iters: 2, restarts: 2, batch_size: 1,
+//!     augment: false, restart_workers: 1,
+//!     algo: "nbocs".into(), solver: "sa".into(),
+//!     seed: 42, cache_key_raw: false,
+//! };
+//! let dir = std::env::temp_dir().join("intdecomp_shard_doc");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! // Plan two shards, run each (normally: two separate processes).
+//! for path in shard::write_plan(&spec, 2, &dir).unwrap() {
+//!     let m = shard::Manifest::load(&path).unwrap();
+//!     let log = shard::default_result_path(&path);
+//!     shard::run_shard(&m, &log, 2, |_rec| {}).unwrap();
+//! }
+//! // Merge: one record per layer, deterministic report.
+//! let merged = shard::merge_dir(&dir).unwrap();
+//! assert_eq!(merged.records.len(), 2);
+//! let report = shard::deterministic_report(&merged.records);
+//! assert!(report.contains("layer1"));
+//! std::fs::remove_dir_all(&dir).unwrap();
+//! ```
+
+pub mod merge;
+pub mod plan;
+pub mod spec;
+pub mod worker;
+
+pub use merge::{
+    deterministic_report, load_shard_results, merge_dir, overall_ratio,
+    write_merged_csv, MergedModel,
+};
+pub use plan::{
+    default_result_path, partition, plan, write_plan, Manifest,
+    MANIFEST_SCHEMA,
+};
+pub use spec::ModelSpec;
+pub use worker::{
+    recover_log, run_shard, LayerRecord, RecoveredLog, ShardRun,
+    RESULT_SCHEMA,
+};

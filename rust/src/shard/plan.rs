@@ -1,0 +1,312 @@
+//! The shard planner: a deterministic, shape-only partition of a
+//! [`ModelSpec`]'s layers into per-process manifests.
+//!
+//! [`partition`] depends on nothing but `(layers, shards)` — never on
+//! host, worker count or timing — and per-job seeds are a function of
+//! the layer index alone, so *any* shard count merges to the same
+//! per-job results.  A [`Manifest`] is one shard's work order: the full
+//! spec, the shard's layer indices, and the spec
+//! [`fingerprint`](ModelSpec::fingerprint) that every result-log line
+//! must echo back.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::spec::ModelSpec;
+use crate::util::json::Json;
+
+/// Schema tag of every shard manifest; bump on layout changes.
+pub const MANIFEST_SCHEMA: &str = "intdecomp-shard-manifest-v1";
+
+/// Split `layers` layer indices into `shards` balanced contiguous
+/// blocks — a pure function of the two counts (shape-only), so every
+/// process that computes it agrees on the partition.
+///
+/// Shard sizes differ by at most one; the first `layers % shards`
+/// shards carry the extra job.  Shards beyond the layer count come back
+/// empty.
+///
+/// ```
+/// use intdecomp::shard::partition;
+///
+/// assert_eq!(partition(5, 2), vec![vec![0, 1, 2], vec![3, 4]]);
+/// assert_eq!(partition(2, 3), vec![vec![0], vec![1], vec![]]);
+/// ```
+pub fn partition(layers: usize, shards: usize) -> Vec<Vec<usize>> {
+    let shards = shards.max(1);
+    let base = layers / shards;
+    let rem = layers % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        out.push((start..start + len).collect());
+        start += len;
+    }
+    out
+}
+
+/// One shard's work order: the spec, which layers this shard owns, and
+/// the workload fingerprint tying manifests and result logs together.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// The full workload description (shared by every shard).
+    pub spec: ModelSpec,
+    /// This shard's index in `0..shards`.
+    pub shard: usize,
+    /// Total shard count of the plan.
+    pub shards: usize,
+    /// Layer indices this shard compresses (the shape-only
+    /// [`partition`] block for `shard`).
+    pub jobs: Vec<usize>,
+    /// [`ModelSpec::fingerprint`] of `spec`.
+    pub fingerprint: String,
+}
+
+impl Manifest {
+    /// Canonical manifest file name inside a plan directory.
+    pub fn file_name(&self) -> String {
+        format!("shard_{}of{}.json", self.shard, self.shards)
+    }
+
+    /// Serialise to manifest JSON.
+    pub fn to_json(&self) -> Json {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|&j| Json::Num(j as f64))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("jobs", Json::Arr(jobs)),
+            ("schema", Json::Str(MANIFEST_SCHEMA.into())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("spec", self.spec.to_json()),
+        ])
+    }
+
+    /// Parse and fully validate a manifest: schema tag, fingerprint
+    /// (recomputed from the embedded spec), shard bounds, and the job
+    /// list against the shape-only [`partition`] — a hand-edited or
+    /// mismatched manifest is rejected, never silently run.
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        match j.get("schema").and_then(Json::as_str) {
+            Some(s) if s == MANIFEST_SCHEMA => {}
+            other => bail!("manifest: bad schema tag {other:?}"),
+        }
+        let spec = ModelSpec::from_json(
+            j.get("spec")
+                .ok_or_else(|| anyhow!("manifest: missing 'spec'"))?,
+        )?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest: missing 'fingerprint'"))?
+            .to_string();
+        if fingerprint != spec.fingerprint() {
+            bail!(
+                "manifest: fingerprint {} does not match its spec ({})",
+                fingerprint,
+                spec.fingerprint()
+            );
+        }
+        let shard = j
+            .get("shard")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest: missing 'shard'"))?
+            as usize;
+        let shards = j
+            .get("shards")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest: missing 'shards'"))?
+            as usize;
+        if shards == 0 || shard >= shards {
+            bail!("manifest: shard {shard} out of range (shards = {shards})");
+        }
+        let jobs = j
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'jobs' array"))?
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .map(|x| x as usize)
+                    .ok_or_else(|| anyhow!("manifest: non-integer job"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let expected = partition(spec.layers, shards);
+        if jobs != expected[shard] {
+            bail!(
+                "manifest: job list {:?} disagrees with the shape-only \
+                 partition {:?} for shard {shard}/{shards}",
+                jobs,
+                expected[shard]
+            );
+        }
+        Ok(Manifest { spec, shard, shards, jobs, fingerprint })
+    }
+
+    /// Load and validate a manifest file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Manifest::from_json(&j)
+            .with_context(|| format!("validating {}", path.display()))
+    }
+
+    /// Write this manifest into `dir` under its canonical
+    /// [`Manifest::file_name`]; creates the directory, returns the path.
+    pub fn store(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json().to_string() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Plan a workload into `shards` manifests (validates the spec first).
+pub fn plan(spec: &ModelSpec, shards: usize) -> Result<Vec<Manifest>> {
+    spec.validate()?;
+    if shards == 0 {
+        bail!("shards must be >= 1");
+    }
+    let fingerprint = spec.fingerprint();
+    Ok(partition(spec.layers, shards)
+        .into_iter()
+        .enumerate()
+        .map(|(shard, jobs)| Manifest {
+            spec: spec.clone(),
+            shard,
+            shards,
+            jobs,
+            fingerprint: fingerprint.clone(),
+        })
+        .collect())
+}
+
+/// Plan a workload and write every manifest into `dir`
+/// (`shard_<i>of<S>.json`); returns the manifest paths in shard order.
+pub fn write_plan(
+    spec: &ModelSpec,
+    shards: usize,
+    dir: &Path,
+) -> Result<Vec<PathBuf>> {
+    plan(spec, shards)?
+        .iter()
+        .map(|m| m.store(dir))
+        .collect()
+}
+
+/// The result-log path a worker derives from a manifest path when no
+/// explicit `--out` is given: `shard_0of2.json` →
+/// `shard_0of2.results.jsonl` (and the path [`crate::shard::merge_dir`]
+/// expects).
+pub fn default_result_path(manifest_path: &Path) -> PathBuf {
+    manifest_path.with_extension("results.jsonl")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    fn spec(layers: usize) -> ModelSpec {
+        ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 9,
+            layers,
+            iters: 4,
+            restarts: 2,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 7,
+            cache_key_raw: false,
+        }
+    }
+
+    #[test]
+    fn partition_covers_every_layer_exactly_once_and_is_balanced() {
+        for_all(40, |rng| {
+            let layers = rng.below(40);
+            let shards = 1 + rng.below(9);
+            let parts = partition(layers, shards);
+            assert_eq!(parts.len(), shards);
+            let flat: Vec<usize> =
+                parts.iter().flatten().copied().collect();
+            assert_eq!(flat, (0..layers).collect::<Vec<_>>());
+            let min = parts.iter().map(Vec::len).min().unwrap();
+            let max = parts.iter().map(Vec::len).max().unwrap();
+            assert!(max - min <= 1, "unbalanced: {parts:?}");
+            // Shape-only: recomputing gives the same partition.
+            assert_eq!(parts, partition(layers, shards));
+        });
+    }
+
+    #[test]
+    fn manifests_roundtrip_through_files() {
+        let dir = std::env::temp_dir().join("intdecomp_shard_plan_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = write_plan(&spec(5), 2, &dir).unwrap();
+        assert_eq!(paths.len(), 2);
+        let m0 = Manifest::load(&paths[0]).unwrap();
+        let m1 = Manifest::load(&paths[1]).unwrap();
+        assert_eq!(m0.jobs, vec![0, 1, 2]);
+        assert_eq!(m1.jobs, vec![3, 4]);
+        assert_eq!(m0.fingerprint, m1.fingerprint);
+        assert_eq!(m0.spec, spec(5));
+        assert_eq!(
+            default_result_path(&paths[0])
+                .file_name()
+                .unwrap()
+                .to_str()
+                .unwrap(),
+            "shard_0of2.results.jsonl"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_manifests_are_rejected() {
+        let m = plan(&spec(4), 2).unwrap().remove(0);
+        // Job list not matching the shape-only partition.
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("jobs", Json::Arr(vec![Json::Num(3.0)]));
+        }
+        let err = format!("{:#}", Manifest::from_json(&j).unwrap_err());
+        assert!(err.contains("shape-only partition"), "{err}");
+        // Spec edited without refreshing the fingerprint.
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            let mut s = m.spec.clone();
+            s.seed += 1;
+            o.insert("spec".into(), s.to_json());
+        }
+        let err = format!("{:#}", Manifest::from_json(&j).unwrap_err());
+        assert!(err.contains("fingerprint"), "{err}");
+        // Wrong schema tag.
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema".into(), Json::Str("bogus".into()));
+        }
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_zero_shards_and_bad_specs() {
+        assert!(plan(&spec(4), 0).is_err());
+        assert!(plan(&spec(0), 2).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! The canonical synthetic-model workload description every process in a
+//! sharded run agrees on.
+//!
+//! A [`ModelSpec`] is the *complete* determinism domain of one
+//! `compress-model` workload: instance shape and generator seed, BBO
+//! budget, algorithm/solver names, base seed and cache-key policy.  Both
+//! the single-process `compress-model` command and every `shard work`
+//! process build their [`crate::engine::CompressionJob`]s through
+//! [`ModelSpec::job`], so a job is constructed identically no matter
+//! which process runs it — the foundation of the shard subsystem's
+//! byte-identity contract.
+//!
+//! Specs serialise to JSON ([`ModelSpec::to_json`] /
+//! [`ModelSpec::from_json`]) inside shard manifests, and hash to a
+//! [`ModelSpec::fingerprint`] that tags every manifest and result-log
+//! line, so results from a different workload can never be merged by
+//! accident.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bbo::{Algorithm, BboConfig};
+use crate::engine::{CacheKeyMode, CompressionJob};
+use crate::instance::{generate, InstanceConfig};
+use crate::solvers;
+use crate::util::json::Json;
+
+/// Largest seed value that survives the JSON round trip exactly (spec
+/// integers travel as f64, so 2⁵³); [`ModelSpec::validate`] rejects
+/// anything bigger to keep the cross-process determinism contract
+/// airtight.
+const MAX_EXACT_SEED: u64 = 1 << 53;
+
+/// Complete description of one multi-layer compression workload — the
+/// determinism domain shared by `compress-model` and the `shard`
+/// pipeline.
+///
+/// Layer `i` compresses instance `generate(instance_cfg, i)` with seed
+/// `seed + i`; nothing about a job depends on which process (or how many
+/// sibling processes) runs it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Layer matrix rows N.
+    pub n: usize,
+    /// Layer matrix columns D.
+    pub d: usize,
+    /// Decomposition rank K.
+    pub k: usize,
+    /// Power-law exponent of the synthetic singular spectrum.
+    pub gamma: f64,
+    /// Instance-generator base seed (instance `i` uses `seed + i`).
+    pub instance_seed: u64,
+    /// Number of layer matrices in the model.
+    pub layers: usize,
+    /// Acquisition iterations per layer.
+    pub iters: usize,
+    /// Ising-solver restarts per acquisition.
+    pub restarts: usize,
+    /// Acquisition batch size (1 = the paper's serial loop).
+    pub batch_size: usize,
+    /// Data augmentation (nBOCSa).
+    pub augment: bool,
+    /// Ising-restart fan-out width (1 = legacy serial restart stream;
+    /// > 1 = forked per-restart streams).  Part of the spec because the
+    /// two modes produce different (each deterministic) streams.
+    pub restart_workers: usize,
+    /// BBO algorithm name ([`Algorithm::by_name`]).
+    pub algo: String,
+    /// Ising solver name ([`solvers::by_name`]).
+    pub solver: String,
+    /// Base run seed; layer `i` uses `seed + i`.
+    pub seed: u64,
+    /// Raw (exact) evaluation-cache keys instead of the default
+    /// canonical-orbit folding.
+    pub cache_key_raw: bool,
+}
+
+impl ModelSpec {
+    /// Check the spec is runnable: non-degenerate shape, at least one
+    /// layer, known algorithm/solver names, and seeds small enough to
+    /// round-trip exactly through manifest JSON.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.d == 0 || self.k == 0 {
+            bail!("spec: n, d and k must all be >= 1");
+        }
+        if self.layers == 0 {
+            bail!("spec: layers must be >= 1");
+        }
+        if self.iters == 0 {
+            bail!("spec: iters must be >= 1");
+        }
+        if Algorithm::by_name(&self.algo).is_none() {
+            bail!("spec: unknown algorithm '{}'", self.algo);
+        }
+        if solvers::by_name(&self.solver).is_none() {
+            bail!("spec: unknown solver '{}'", self.solver);
+        }
+        if self.seed >= MAX_EXACT_SEED
+            || self.instance_seed >= MAX_EXACT_SEED
+        {
+            bail!("spec: seeds must be < 2^53 to round-trip exactly");
+        }
+        Ok(())
+    }
+
+    /// The evaluation-cache key policy the spec selects.
+    pub fn cache_mode(&self) -> CacheKeyMode {
+        if self.cache_key_raw {
+            CacheKeyMode::Exact
+        } else {
+            CacheKeyMode::Canonical
+        }
+    }
+
+    /// Build layer `layer`'s compression job — the one construction
+    /// path shared by `compress-model` and every shard worker, so a
+    /// job is identical no matter which process builds it.
+    pub fn job(&self, layer: usize) -> Result<CompressionJob> {
+        if layer >= self.layers {
+            bail!("layer {layer} out of range (layers = {})", self.layers);
+        }
+        let icfg = InstanceConfig {
+            n: self.n,
+            d: self.d,
+            k: self.k,
+            gamma: self.gamma,
+            seed: self.instance_seed,
+        };
+        let p = generate(&icfg, layer);
+        let algo = Algorithm::by_name(&self.algo)
+            .ok_or_else(|| anyhow!("unknown algorithm '{}'", self.algo))?;
+        let solver = solvers::by_name(&self.solver)
+            .ok_or_else(|| anyhow!("unknown solver '{}'", self.solver))?;
+        Ok(CompressionJob {
+            name: format!("layer{}", layer + 1),
+            cfg: BboConfig {
+                n_init: p.n_bits(),
+                iters: self.iters,
+                restarts: self.restarts,
+                augment: self.augment,
+                restart_workers: 1,
+                batch_size: self.batch_size,
+            },
+            problem: p,
+            algo,
+            solver,
+            seed: self.seed.wrapping_add(layer as u64),
+            cache_mode: self.cache_mode(),
+        })
+    }
+
+    /// Serialise to the manifest JSON layout (keys sorted, so the text
+    /// — and hence [`ModelSpec::fingerprint`] — is deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("augment", Json::Bool(self.augment)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("cache_key_raw", Json::Bool(self.cache_key_raw)),
+            ("d", Json::Num(self.d as f64)),
+            ("gamma", Json::Num(self.gamma)),
+            ("instance_seed", Json::Num(self.instance_seed as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("layers", Json::Num(self.layers as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("restart_workers", Json::Num(self.restart_workers as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("solver", Json::Str(self.solver.clone())),
+        ])
+    }
+
+    /// Parse a spec back out of manifest JSON (validated).
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let spec = ModelSpec {
+            n: usize_field(j, "n")?,
+            d: usize_field(j, "d")?,
+            k: usize_field(j, "k")?,
+            gamma: f64_field(j, "gamma")?,
+            instance_seed: u64_field(j, "instance_seed")?,
+            layers: usize_field(j, "layers")?,
+            iters: usize_field(j, "iters")?,
+            restarts: usize_field(j, "restarts")?,
+            batch_size: usize_field(j, "batch_size")?,
+            augment: bool_field(j, "augment")?,
+            restart_workers: usize_field(j, "restart_workers")?,
+            algo: str_field(j, "algo")?,
+            solver: str_field(j, "solver")?,
+            seed: u64_field(j, "seed")?,
+            cache_key_raw: bool_field(j, "cache_key_raw")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Hex FNV-1a digest of the canonical spec JSON — the workload tag
+    /// carried by every manifest and result-log line, so artifacts from
+    /// different workloads can never be combined silently.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}", fnv1a64(self.to_json().to_string().as_bytes()))
+    }
+}
+
+/// 64-bit FNV-1a — tiny, dependency-free and stable across platforms;
+/// collision resistance is not a goal (the fingerprint guards against
+/// accidents, not adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow!("spec: missing field '{key}'"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    let v = field(j, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("spec: '{key}' must be a whole number"))?;
+    Ok(v as usize)
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    field(j, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("spec: '{key}' must be a whole number"))
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64> {
+    field(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("spec: '{key}' must be a number"))
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool> {
+    field(j, key)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("spec: '{key}' must be a boolean"))
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(field(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("spec: '{key}' must be a string"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(layers: usize) -> ModelSpec {
+        ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 9,
+            layers,
+            iters: 5,
+            restarts: 3,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 11,
+            cache_key_raw: false,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let spec = tiny_spec(3);
+        let back = ModelSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.fingerprint(), spec.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_workloads() {
+        let a = tiny_spec(3);
+        let mut b = a.clone();
+        b.seed += 1;
+        let mut c = a.clone();
+        c.gamma = 0.7;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(a.fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        let mut s = tiny_spec(0);
+        assert!(s.validate().is_err(), "zero layers");
+        s.layers = 2;
+        s.algo = "bogus".into();
+        assert!(s.validate().is_err(), "unknown algo");
+        s.algo = "nbocs".into();
+        s.solver = "bogus".into();
+        assert!(s.validate().is_err(), "unknown solver");
+        s.solver = "sa".into();
+        s.seed = 1 << 54;
+        assert!(s.validate().is_err(), "seed beyond 2^53");
+        s.seed = 1;
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn jobs_are_per_layer_seeded() {
+        let spec = tiny_spec(3);
+        let j0 = spec.job(0).unwrap();
+        let j2 = spec.job(2).unwrap();
+        assert_eq!(j0.name, "layer1");
+        assert_eq!(j2.name, "layer3");
+        assert_eq!(j0.seed, 11);
+        assert_eq!(j2.seed, 13);
+        assert_eq!(j0.cfg.iters, 5);
+        assert!(spec.job(3).is_err(), "out of range");
+    }
+
+    #[test]
+    fn from_json_rejects_missing_and_mistyped_fields() {
+        let mut j = tiny_spec(2).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("seed");
+        }
+        assert!(ModelSpec::from_json(&j).is_err());
+        let mut j = tiny_spec(2).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("iters".into(), Json::Str("many".into()));
+        }
+        assert!(ModelSpec::from_json(&j).is_err());
+    }
+}

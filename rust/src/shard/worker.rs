@@ -1,0 +1,442 @@
+//! The shard worker: runs one manifest's jobs on the in-process engine,
+//! checkpointing every finished job to a crash-safe JSONL result log.
+//!
+//! **Crash-recovery semantics.**  Each finished job appends exactly one
+//! JSON line (flushed and fsynced before the next job is reported), so
+//! the log on disk is always a *valid prefix* of the shard's canonical
+//! record sequence plus at most one torn tail line.  On start-up
+//! [`recover_log`] keeps the valid prefix, [`run_shard`] truncates the
+//! torn tail, skips every checkpointed job and recomputes only the
+//! rest — and because every record is a pure function of the job spec
+//! and records are emitted in job order (the engine's streaming
+//! [`crate::engine::Engine::compress_each`] entry point), the log a
+//! resumed worker completes is **byte identical** to the one an
+//! uninterrupted run writes.
+
+use std::collections::BTreeSet;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::plan::Manifest;
+use crate::engine::{Engine, EngineConfig, JobResult};
+use crate::util::json::Json;
+
+/// Schema tag of every result-log line; bump on layout changes.
+pub const RESULT_SCHEMA: &str = "intdecomp-shard-result-v1";
+
+/// One finished layer, as checkpointed to the result log — every field
+/// the merged deterministic report needs, and nothing wall-clock
+/// dependent (times never enter the log, so sharded and single-process
+/// reports can be compared byte for byte).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerRecord {
+    /// Layer index in the model (the planner's job id).
+    pub job: usize,
+    /// Layer display name (`layer<job+1>`).
+    pub name: String,
+    /// Layer rows N.
+    pub n: usize,
+    /// Layer columns D.
+    pub d: usize,
+    /// Decomposition rank K.
+    pub k: usize,
+    /// Algorithm label of the run (e.g. `nBOCS`).
+    pub algo: String,
+    /// Ising-solver name of the run.
+    pub solver: String,
+    /// Black-box evaluations performed.
+    pub evals: usize,
+    /// Best cost found.
+    pub best_y: f64,
+    /// The winning binary factor M, column-major ±1 spins.
+    pub best_x: Vec<i8>,
+    /// `||f(M)|| / ||W||` of the winner.
+    pub err: f64,
+    /// Compressed/original size at 32-bit floats.
+    pub ratio: f64,
+    /// Evaluation-cache hits of the job.
+    pub cache_hits: u64,
+    /// Evaluation-cache misses of the job.
+    pub cache_misses: u64,
+}
+
+impl LayerRecord {
+    /// Build the checkpoint record of one engine [`JobResult`].
+    pub fn from_result(job: usize, r: &JobResult) -> LayerRecord {
+        LayerRecord {
+            job,
+            name: r.name.clone(),
+            n: r.n,
+            d: r.d,
+            k: r.k,
+            algo: r.run.algo.clone(),
+            solver: r.run.solver.clone(),
+            evals: r.run.ys.len(),
+            best_y: r.run.best_y,
+            best_x: r.best_m.data.clone(),
+            err: r.normalised_error,
+            ratio: r.ratio,
+            cache_hits: r.cache.hits,
+            cache_misses: r.cache.misses,
+        }
+    }
+
+    /// Serialise to one result-log line (no trailing newline).  Floats
+    /// use Rust's shortest round-trip formatting, so parsing the line
+    /// back yields bit-identical values.
+    pub fn to_json_line(&self, fingerprint: &str) -> String {
+        let best_x = self
+            .best_x
+            .iter()
+            .map(|&s| Json::Num(s as f64))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("best_x", Json::Arr(best_x)),
+            ("best_y", Json::Num(self.best_y)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("err", Json::Num(self.err)),
+            ("evals", Json::Num(self.evals as f64)),
+            ("fingerprint", Json::Str(fingerprint.into())),
+            ("job", Json::Num(self.job as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("ratio", Json::Num(self.ratio)),
+            ("schema", Json::Str(RESULT_SCHEMA.into())),
+            ("solver", Json::Str(self.solver.clone())),
+        ])
+        .to_string()
+    }
+
+    /// Parse one result-log line, rejecting lines from another schema
+    /// or another workload (`fingerprint` mismatch).
+    pub fn parse_line(line: &str, fingerprint: &str) -> Result<LayerRecord> {
+        let j = Json::parse(line).map_err(|e| anyhow!("result line: {e}"))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some(s) if s == RESULT_SCHEMA => {}
+            other => bail!("result line: bad schema tag {other:?}"),
+        }
+        match j.get("fingerprint").and_then(Json::as_str) {
+            Some(f) if f == fingerprint => {}
+            other => bail!(
+                "result line: fingerprint {other:?} does not match the \
+                 manifest ({fingerprint}) — log from another workload?"
+            ),
+        }
+        let best_x = j
+            .get("best_x")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("result line: missing 'best_x'"))?
+            .iter()
+            .map(|v| match v.as_f64() {
+                Some(x) if x == 1.0 => Ok(1i8),
+                Some(x) if x == -1.0 => Ok(-1i8),
+                _ => Err(anyhow!("result line: best_x entries must be ±1")),
+            })
+            .collect::<Result<Vec<i8>>>()?;
+        let num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("result line: missing number '{key}'"))
+        };
+        let int = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("result line: missing integer '{key}'"))
+        };
+        let txt = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    anyhow!("result line: missing string '{key}'")
+                })?
+                .to_string())
+        };
+        let rec = LayerRecord {
+            job: int("job")? as usize,
+            name: txt("name")?,
+            n: int("n")? as usize,
+            d: int("d")? as usize,
+            k: int("k")? as usize,
+            algo: txt("algo")?,
+            solver: txt("solver")?,
+            evals: int("evals")? as usize,
+            best_y: num("best_y")?,
+            best_x,
+            err: num("err")?,
+            ratio: num("ratio")?,
+            cache_hits: int("cache_hits")?,
+            cache_misses: int("cache_misses")?,
+        };
+        if rec.best_x.len() != rec.n * rec.k {
+            bail!("result line: best_x length != n*k");
+        }
+        Ok(rec)
+    }
+}
+
+/// What [`recover_log`] found in an existing result log.
+#[derive(Debug)]
+pub struct RecoveredLog {
+    /// The valid checkpoint records, in log order.
+    pub records: Vec<LayerRecord>,
+    /// Byte length of the valid prefix (newline-terminated, parseable
+    /// lines with the right schema and fingerprint).
+    pub valid_bytes: u64,
+    /// Bytes past the valid prefix — a torn tail from a crash
+    /// mid-append (or foreign garbage); [`run_shard`] truncates them.
+    pub dropped_bytes: u64,
+}
+
+/// Read the valid prefix of a result log: complete, newline-terminated
+/// lines that parse as [`LayerRecord`]s of this workload.  Scanning
+/// stops at the first bad or unterminated line — after a crash only the
+/// tail line can be torn, so everything before it is trustworthy.  A
+/// missing file is an empty log.
+pub fn recover_log(
+    path: &Path,
+    fingerprint: &str,
+) -> Result<RecoveredLog> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(RecoveredLog {
+                records: Vec::new(),
+                valid_bytes: 0,
+                dropped_bytes: 0,
+            })
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading {}", path.display()))
+        }
+    };
+    let mut records = Vec::new();
+    let mut valid = 0usize;
+    // Scan raw bytes so a non-UTF-8 tail (binary garbage, disk
+    // corruption) is truncated like any other bad line instead of
+    // aborting the resume.
+    let mut rest = bytes.as_slice();
+    while let Some(nl) = rest.iter().position(|&b| b == b'\n') {
+        let parsed = std::str::from_utf8(&rest[..nl])
+            .ok()
+            .and_then(|line| {
+                LayerRecord::parse_line(line, fingerprint).ok()
+            });
+        match parsed {
+            Some(rec) => {
+                records.push(rec);
+                valid += nl + 1;
+                rest = &rest[nl + 1..];
+            }
+            None => break,
+        }
+    }
+    Ok(RecoveredLog {
+        records,
+        valid_bytes: valid as u64,
+        dropped_bytes: (bytes.len() - valid) as u64,
+    })
+}
+
+/// Outcome of one [`run_shard`] call.
+#[derive(Debug)]
+pub struct ShardRun {
+    /// All of the shard's records (checkpointed + newly computed),
+    /// sorted by job index.
+    pub records: Vec<LayerRecord>,
+    /// Jobs skipped because the log already held their record.
+    pub skipped: usize,
+    /// Jobs computed by this call.
+    pub ran: usize,
+    /// The result log written/extended.
+    pub log_path: PathBuf,
+}
+
+/// Run one shard's jobs on the engine, checkpointing each finished job
+/// to `out` (append + fsync per record, in job order) and resuming from
+/// whatever valid prefix `out` already holds.  `workers` bounds
+/// concurrent jobs on the process-wide pool; it never affects results.
+/// `progress` is called once per newly computed record, in job order.
+pub fn run_shard(
+    manifest: &Manifest,
+    out: &Path,
+    workers: usize,
+    mut progress: impl FnMut(&LayerRecord),
+) -> Result<ShardRun> {
+    let fp = &manifest.fingerprint;
+    let recovered = recover_log(out, fp)?;
+    let done: BTreeSet<usize> =
+        recovered.records.iter().map(|r| r.job).collect();
+    for r in &recovered.records {
+        if !manifest.jobs.contains(&r.job) {
+            bail!(
+                "{}: checkpointed job {} does not belong to shard {}/{}",
+                out.display(),
+                r.job,
+                manifest.shard,
+                manifest.shards
+            );
+        }
+    }
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    // Drop any torn tail, then (re)open for appending.  The file is
+    // created even for an empty shard so operators can see the worker
+    // ran (the merger itself treats a missing log as empty).
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .write(true)
+        .open(out)
+        .with_context(|| format!("opening {}", out.display()))?;
+    file.set_len(recovered.valid_bytes)
+        .with_context(|| format!("truncating {}", out.display()))?;
+    drop(file);
+    let mut log = std::fs::OpenOptions::new()
+        .append(true)
+        .open(out)
+        .with_context(|| format!("opening {} for append", out.display()))?;
+
+    let todo: Vec<usize> = manifest
+        .jobs
+        .iter()
+        .copied()
+        .filter(|j| !done.contains(j))
+        .collect();
+    let jobs = todo
+        .iter()
+        .map(|&layer| manifest.spec.job(layer))
+        .collect::<Result<Vec<_>>>()?;
+    let eng = Engine::new(EngineConfig {
+        workers: workers.max(1),
+        restart_workers: manifest.spec.restart_workers,
+        batch_size: 1, // per-job cfg carries the spec's batch size
+    });
+    let mut new_records = Vec::with_capacity(todo.len());
+    let mut write_err: Option<std::io::Error> = None;
+    eng.compress_each(jobs, |i, result| {
+        let rec = LayerRecord::from_result(todo[i], &result);
+        if write_err.is_none() {
+            match append_record(&mut log, &rec, fp) {
+                Ok(()) => progress(&rec),
+                Err(e) => write_err = Some(e),
+            }
+        }
+        new_records.push(rec);
+    });
+    if let Some(e) = write_err {
+        return Err(e).with_context(|| format!("appending {}", out.display()));
+    }
+
+    let mut records = recovered.records;
+    let skipped = records.len();
+    let ran = new_records.len();
+    records.extend(new_records);
+    records.sort_by_key(|r| r.job);
+    Ok(ShardRun { records, skipped, ran, log_path: out.to_path_buf() })
+}
+
+/// Append one record line and force it to disk before returning — the
+/// durability point of the checkpoint contract.
+fn append_record(
+    log: &mut std::fs::File,
+    rec: &LayerRecord,
+    fingerprint: &str,
+) -> std::io::Result<()> {
+    let mut line = rec.to_json_line(fingerprint);
+    line.push('\n');
+    log.write_all(line.as_bytes())?;
+    log.sync_data()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> LayerRecord {
+        LayerRecord {
+            job: 3,
+            name: "layer4".into(),
+            n: 4,
+            d: 8,
+            k: 2,
+            algo: "nBOCS".into(),
+            solver: "sa".into(),
+            evals: 13,
+            best_y: 0.062_384_137_529e-2,
+            best_x: vec![1, -1, 1, 1, -1, -1, 1, -1],
+            err: 0.0417,
+            ratio: 0.158_203_125,
+            cache_hits: 4,
+            cache_misses: 9,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_bit_exactly() {
+        let rec = record();
+        let line = rec.to_json_line("f00d");
+        let back = LayerRecord::parse_line(&line, "f00d").unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.best_y.to_bits(), rec.best_y.to_bits());
+        assert_eq!(back.to_json_line("f00d"), line);
+    }
+
+    #[test]
+    fn parse_rejects_foreign_lines() {
+        let line = record().to_json_line("f00d");
+        assert!(LayerRecord::parse_line(&line, "beef").is_err());
+        assert!(LayerRecord::parse_line("{}", "f00d").is_err());
+        assert!(LayerRecord::parse_line("not json", "f00d").is_err());
+        let torn = &line[..line.len() / 2];
+        assert!(LayerRecord::parse_line(torn, "f00d").is_err());
+    }
+
+    #[test]
+    fn recover_keeps_the_valid_prefix_only() {
+        let dir = std::env::temp_dir().join("intdecomp_shard_recover");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        let l1 = record().to_json_line("f00d");
+        let mut r2 = record();
+        r2.job = 4;
+        let l2 = r2.to_json_line("f00d");
+        // Two good lines + a torn third line.
+        let torn = &l1[..l1.len() - 5];
+        std::fs::write(&path, format!("{l1}\n{l2}\n{torn}")).unwrap();
+        let rec = recover_log(&path, "f00d").unwrap();
+        assert_eq!(rec.records.len(), 2);
+        assert_eq!(rec.records[1].job, 4);
+        assert_eq!(rec.valid_bytes as usize, l1.len() + l2.len() + 2);
+        assert_eq!(rec.dropped_bytes as usize, torn.len());
+        // Missing file: empty log.
+        let none = recover_log(&dir.join("absent.jsonl"), "f00d").unwrap();
+        assert!(none.records.is_empty());
+        assert_eq!(none.valid_bytes, 0);
+        // A corrupt line in the middle invalidates everything after it.
+        std::fs::write(&path, format!("{l1}\nGARBAGE\n{l2}\n")).unwrap();
+        let rec = recover_log(&path, "f00d").unwrap();
+        assert_eq!(rec.records.len(), 1);
+        assert_eq!(rec.valid_bytes as usize, l1.len() + 1);
+        // A non-UTF-8 tail is truncated like any torn line, not an
+        // error (binary garbage must never wedge the resume).
+        let mut raw = format!("{l1}\n").into_bytes();
+        raw.extend_from_slice(&[0x80, 0x81, 0xff, b'\n']);
+        std::fs::write(&path, &raw).unwrap();
+        let rec = recover_log(&path, "f00d").unwrap();
+        assert_eq!(rec.records.len(), 1);
+        assert_eq!(rec.valid_bytes as usize, l1.len() + 1);
+        assert_eq!(rec.dropped_bytes, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

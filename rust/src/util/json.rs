@@ -54,6 +54,30 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Exact unsigned integer value, if this is a non-negative whole
+    /// number small enough for f64 to carry exactly (≤ 2⁵³) — the
+    /// round-trip-safe accessor the shard manifests use for seeds.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x)
+                if *x >= 0.0
+                    && x.fract() == 0.0
+                    && *x <= 9_007_199_254_740_992.0 =>
+            {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Boolean value, if this is `true` or `false`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -377,5 +401,22 @@ mod tests {
     fn integers_serialise_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn as_u64_is_exact_only() {
+        assert_eq!(Json::Num(5005.0).as_u64(), Some(5005));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(1e18).as_u64(), None); // beyond 2^53
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn as_bool_only_on_bools() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Bool(false).as_bool(), Some(false));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
     }
 }

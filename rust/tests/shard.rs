@@ -1,0 +1,220 @@
+//! End-to-end contracts of the cross-process shard subsystem
+//! (`rust/src/shard`): shape-only planning, crash-safe checkpoint
+//! resume, and byte-identical merged output — the in-process twin of
+//! the CI `shard-smoke` job (which additionally kills a live worker
+//! process).
+
+use std::path::{Path, PathBuf};
+
+use intdecomp::engine::Engine;
+use intdecomp::shard::{
+    self, deterministic_report, merge_dir, LayerRecord, ModelSpec,
+};
+use intdecomp::util::prop::for_all;
+
+fn tiny_spec(layers: usize) -> ModelSpec {
+    ModelSpec {
+        n: 4,
+        d: 8,
+        k: 2,
+        gamma: 0.8,
+        instance_seed: 9,
+        layers,
+        iters: 5,
+        restarts: 3,
+        batch_size: 1,
+        augment: false,
+        restart_workers: 1,
+        algo: "nbocs".into(),
+        solver: "sa".into(),
+        seed: 11,
+        cache_key_raw: false,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("intdecomp_shard_it_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The single-process reference: `compress_all` over the same jobs the
+/// spec describes, converted to checkpoint records — exactly what
+/// `compress-model --report` renders.
+fn single_process_records(spec: &ModelSpec) -> Vec<LayerRecord> {
+    let jobs = (0..spec.layers)
+        .map(|i| spec.job(i).unwrap())
+        .collect::<Vec<_>>();
+    Engine::with_workers(2)
+        .compress_all(jobs)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| LayerRecord::from_result(i, r))
+        .collect()
+}
+
+/// Plan into `shards`, run every shard in its own log, merge.
+fn run_sharded(
+    spec: &ModelSpec,
+    shards: usize,
+    workers: usize,
+    dir: &Path,
+) -> Vec<LayerRecord> {
+    for path in shard::write_plan(spec, shards, dir).unwrap() {
+        let m = shard::Manifest::load(&path).unwrap();
+        let log = shard::default_result_path(&path);
+        shard::run_shard(&m, &log, workers, |_| {}).unwrap();
+    }
+    merge_dir(dir).unwrap().records
+}
+
+#[test]
+fn any_shard_count_merges_to_the_single_process_result() {
+    let spec = tiny_spec(5);
+    let reference = single_process_records(&spec);
+    let report = deterministic_report(&reference);
+    for shards in [1usize, 2, 3, 5] {
+        let dir = tmp_dir(&format!("count{shards}"));
+        let merged = run_sharded(&spec, shards, 2, &dir);
+        assert_eq!(merged, reference, "shards = {shards}");
+        assert_eq!(
+            deterministic_report(&merged),
+            report,
+            "report differs at shards = {shards}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn merged_output_is_shard_and_worker_count_invariant_property() {
+    for_all(5, |rng| {
+        let layers = 1 + rng.below(5);
+        let shards = 1 + rng.below(4);
+        let workers = 1 + rng.below(4);
+        let mut spec = tiny_spec(layers);
+        spec.seed = 20 + layers as u64; // vary the workload per case
+        let reference = single_process_records(&spec);
+        let dir = tmp_dir(&format!("prop{layers}_{shards}_{workers}"));
+        let merged = run_sharded(&spec, shards, workers, &dir);
+        assert_eq!(
+            merged, reference,
+            "layers={layers} shards={shards} workers={workers}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn resumed_worker_completes_a_byte_identical_log() {
+    let spec = tiny_spec(3);
+    let dir = tmp_dir("resume");
+    let path = &shard::write_plan(&spec, 1, &dir).unwrap()[0];
+    let manifest = shard::Manifest::load(path).unwrap();
+    let log = shard::default_result_path(path);
+    let full = shard::run_shard(&manifest, &log, 2, |_| {}).unwrap();
+    assert_eq!((full.skipped, full.ran), (0, 3));
+    let reference = std::fs::read(&log).unwrap();
+    let newlines: Vec<usize> = reference
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == b'\n')
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(newlines.len(), 3);
+
+    // Crash scenarios: (truncate-to, expected skipped jobs).
+    let torn_tail = reference.len() - 5; // mid third record
+    let torn_second = newlines[0] + 10; // first record + torn second
+    for (case, keep, skipped) in [
+        ("torn tail", torn_tail, 2),
+        ("torn second record", torn_second, 1),
+        ("empty log", 0, 0),
+        ("whole log intact", reference.len(), 3),
+    ] {
+        std::fs::write(&log, &reference[..keep]).unwrap();
+        let resumed = shard::run_shard(&manifest, &log, 2, |_| {}).unwrap();
+        assert_eq!(resumed.skipped, skipped, "{case}");
+        assert_eq!(resumed.ran, 3 - skipped, "{case}");
+        assert_eq!(resumed.records, full.records, "{case}");
+        assert_eq!(
+            std::fs::read(&log).unwrap(),
+            reference,
+            "{case}: resumed log is not byte-identical"
+        );
+    }
+
+    // Garbage appended after a crash-free prefix is dropped and the
+    // missing jobs recomputed.
+    let mut with_garbage = reference[..newlines[1] + 1].to_vec();
+    with_garbage.extend_from_slice(b"{\"half\": tru");
+    std::fs::write(&log, &with_garbage).unwrap();
+    let resumed = shard::run_shard(&manifest, &log, 2, |_| {}).unwrap();
+    assert_eq!((resumed.skipped, resumed.ran), (2, 1));
+    assert_eq!(std::fs::read(&log).unwrap(), reference);
+
+    // A corrupt byte in the middle invalidates everything after it;
+    // the rerun still converges to the same bytes.
+    let mut corrupt = reference.clone();
+    corrupt[newlines[0] + 3] = b'!';
+    std::fs::write(&log, &corrupt).unwrap();
+    let resumed = shard::run_shard(&manifest, &log, 2, |_| {}).unwrap();
+    assert_eq!((resumed.skipped, resumed.ran), (1, 2));
+    assert_eq!(std::fs::read(&log).unwrap(), reference);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn worker_flag_never_changes_the_log_bytes() {
+    let spec = tiny_spec(4);
+    let mut logs = Vec::new();
+    for workers in [1usize, 4] {
+        let dir = tmp_dir(&format!("workers{workers}"));
+        let path = &shard::write_plan(&spec, 1, &dir).unwrap()[0];
+        let m = shard::Manifest::load(path).unwrap();
+        let log = shard::default_result_path(path);
+        shard::run_shard(&m, &log, workers, |_| {}).unwrap();
+        logs.push(std::fs::read(&log).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert_eq!(logs[0], logs[1]);
+}
+
+#[test]
+fn merge_rejects_incomplete_and_mixed_plans() {
+    // Incomplete: only one of two shards ever ran.
+    let spec = tiny_spec(4);
+    let dir = tmp_dir("incomplete");
+    let paths = shard::write_plan(&spec, 2, &dir).unwrap();
+    let m0 = shard::Manifest::load(&paths[0]).unwrap();
+    let log0 = shard::default_result_path(&paths[0]);
+    shard::run_shard(&m0, &log0, 2, |_| {}).unwrap();
+    let err = format!("{:#}", merge_dir(&dir).unwrap_err());
+    assert!(err.contains("incomplete"), "{err}");
+
+    // Mixed: manifests from a different plan land in the same dir.
+    let mut other = spec.clone();
+    other.seed += 1;
+    shard::write_plan(&other, 3, &dir).unwrap();
+    let err = format!("{:#}", merge_dir(&dir).unwrap_err());
+    assert!(err.contains("different plan"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn progress_sink_reports_only_newly_computed_jobs_in_order() {
+    let spec = tiny_spec(3);
+    let dir = tmp_dir("progress");
+    let path = &shard::write_plan(&spec, 1, &dir).unwrap()[0];
+    let m = shard::Manifest::load(path).unwrap();
+    let log = shard::default_result_path(path);
+    let mut seen = Vec::new();
+    shard::run_shard(&m, &log, 4, |rec| seen.push(rec.job)).unwrap();
+    assert_eq!(seen, vec![0, 1, 2]);
+    // Fully checkpointed: the sink stays silent on resume.
+    let mut seen = Vec::new();
+    shard::run_shard(&m, &log, 4, |rec| seen.push(rec.job)).unwrap();
+    assert!(seen.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
