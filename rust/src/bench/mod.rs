@@ -18,7 +18,10 @@ use crate::util::timer::Timer;
 /// v2 (ISSUE 4) adds the `sweeps_per_rep` / `sweeps_per_sec` pair to
 /// every result row — the solver-throughput metric of the replica-major
 /// engine rows (`solver/... sweeps ...`).
-pub const BENCH_SCHEMA: &str = "intdecomp-bench-v2";
+/// v3 (ISSUE 6) adds nearest-rank `p50_s` / `p99_s` per-rep latency
+/// percentiles to every row — the tail metric the serve-daemon rows
+/// (`serve/...`) exist for.
+pub const BENCH_SCHEMA: &str = "intdecomp-bench-v3";
 
 /// Statistics of one benchmark.
 #[derive(Clone, Debug)]
@@ -35,6 +38,11 @@ pub struct BenchStats {
     pub max_s: f64,
     /// Standard deviation across reps (seconds).
     pub stddev_s: f64,
+    /// Median rep (nearest-rank, seconds).
+    pub p50_s: f64,
+    /// 99th-percentile rep (nearest-rank, seconds; equals the slowest
+    /// rep at the harness's small rep counts).
+    pub p99_s: f64,
     /// Work items per rep, for throughput reporting (0 = n/a).
     pub items_per_rep: usize,
     /// Solver panel-row sweeps per rep, for `sweeps_per_sec` reporting
@@ -73,6 +81,8 @@ impl BenchStats {
             ("min_s", Json::Num(self.min_s)),
             ("max_s", Json::Num(self.max_s)),
             ("stddev_s", Json::Num(self.stddev_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p99_s", Json::Num(self.p99_s)),
             ("items_per_rep", Json::Num(self.items_per_rep as f64)),
             (
                 "throughput_per_s",
@@ -160,6 +170,8 @@ impl Bencher {
             times.push(t.seconds());
         }
         let mean = crate::util::mean(&times);
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         BenchStats {
             name: name.to_string(),
             reps: self.reps,
@@ -167,6 +179,8 @@ impl Bencher {
             min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
             max_s: times.iter().cloned().fold(0.0, f64::max),
             stddev_s: crate::util::stddev(&times),
+            p50_s: crate::util::percentile(&sorted, 50.0),
+            p99_s: crate::util::percentile(&sorted, 99.0),
             items_per_rep: items,
             sweeps_per_rep: 0,
         }
@@ -234,7 +248,8 @@ pub fn write_json(
 ///
 /// v2 checks: every row carries a numeric `sweeps_per_rep`, and every
 /// row with `sweeps_per_rep > 0` (the solver-throughput rows) carries a
-/// numeric `sweeps_per_sec`.
+/// numeric `sweeps_per_sec`.  v3 adds: every row carries numeric
+/// `p50_s` / `p99_s` latency percentiles.
 pub fn validate_json(text: &str) -> Result<usize, String> {
     let j = Json::parse(text)?;
     match j.get("schema").and_then(Json::as_str) {
@@ -258,6 +273,8 @@ pub fn validate_json(text: &str) -> Result<usize, String> {
             "min_s",
             "max_s",
             "stddev_s",
+            "p50_s",
+            "p99_s",
             "items_per_rep",
             "sweeps_per_rep",
         ] {
@@ -299,6 +316,8 @@ mod tests {
         });
         assert_eq!(s.reps, 5);
         assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p99_s);
+        assert!(s.p99_s <= s.max_s + 1e-12);
         assert!(s.throughput().unwrap() > 0.0);
         assert!(s.report().contains("spin"));
     }
@@ -347,30 +366,41 @@ mod tests {
     fn validate_rejects_malformed_documents() {
         assert!(validate_json("not json").is_err());
         assert!(validate_json("{}").is_err());
-        // Pre-v2 documents (no sweeps_per_rep) are rejected.
+        // Pre-v3 documents (old schema tag) are rejected.
         assert!(validate_json(
-            r#"{"schema":"intdecomp-bench-v1","label":"x","results":[]}"#
+            r#"{"schema":"intdecomp-bench-v2","label":"x","results":[]}"#
         )
         .is_err());
         assert!(validate_json(
-            r#"{"schema":"intdecomp-bench-v2","label":"x","results":[{}]}"#
+            r#"{"schema":"intdecomp-bench-v3","label":"x","results":[{}]}"#
         )
         .is_err());
         assert_eq!(
             validate_json(
-                r#"{"schema":"intdecomp-bench-v2","label":"x","results":[]}"#
+                r#"{"schema":"intdecomp-bench-v3","label":"x","results":[]}"#
             ),
             Ok(0)
         );
     }
 
     #[test]
-    fn validate_requires_sweeps_per_sec_on_solver_rows() {
+    fn validate_requires_percentiles_and_sweeps_per_sec() {
+        // A v3 row missing p50_s/p99_s is rejected.
+        let old_row = r#"{"name":"x","reps":1,"mean_s":0.1,"min_s":0.1,
+            "max_s":0.1,"stddev_s":0.0,"items_per_rep":1,
+            "sweeps_per_rep":0}"#;
+        let doc = format!(
+            r#"{{"schema":"intdecomp-bench-v3","label":"x","results":[{old_row}]}}"#
+        );
+        let err = validate_json(&doc).unwrap_err();
+        assert!(err.contains("p50_s"), "{err}");
+        // A solver-throughput row missing sweeps_per_sec is rejected.
         let row = r#"{"name":"solver/sa sweeps n=32 r=1","reps":1,
             "mean_s":0.1,"min_s":0.1,"max_s":0.1,"stddev_s":0.0,
-            "items_per_rep":1,"sweeps_per_rep":100}"#;
+            "p50_s":0.1,"p99_s":0.1,"items_per_rep":1,
+            "sweeps_per_rep":100}"#;
         let doc = format!(
-            r#"{{"schema":"intdecomp-bench-v2","label":"x","results":[{row}]}}"#
+            r#"{{"schema":"intdecomp-bench-v3","label":"x","results":[{row}]}}"#
         );
         let err = validate_json(&doc).unwrap_err();
         assert!(err.contains("sweeps_per_sec"), "{err}");

@@ -147,9 +147,17 @@ impl CostCache {
 /// An [`Oracle`] adaptor that routes every evaluation through a
 /// [`CostCache`].  Purely transparent with exact keys: same values, same
 /// call order, just no duplicate work.
+///
+/// [`CachedOracle::with_shared`] adds a second, process-wide cache level
+/// consulted only on a local miss — the cross-request warm store of the
+/// serve daemon.  The local cache's map and hit/miss counters stay
+/// identical to an unshared run (the shared level only short-circuits
+/// the *evaluation*, never the lookup), which is what keeps served
+/// reports byte-identical to the cold CLI path.
 pub struct CachedOracle<'a> {
     inner: &'a dyn Oracle,
     cache: &'a CostCache,
+    shared: Option<&'a CostCache>,
     n: usize,
     k: usize,
 }
@@ -164,7 +172,27 @@ impl<'a> CachedOracle<'a> {
         k: usize,
     ) -> Self {
         assert_eq!(inner.n_bits(), n * k, "oracle bits != n * k");
-        CachedOracle { inner, cache, n, k }
+        CachedOracle { inner, cache, shared: None, n, k }
+    }
+
+    /// Like [`CachedOracle::new`] with a second-level `shared` cache
+    /// consulted on local misses.  **Soundness**: both levels must use
+    /// the same key mode, and `shared` must only ever be fed by oracles
+    /// of the *same problem* (cost is a function of `W` as well as the
+    /// key — the serve daemon keys its registry per instance layer).
+    /// With canonical keys both levels store the canonical
+    /// representative's cost, a pure function of the key, so values
+    /// coming back from the shared level are bit-identical to the ones
+    /// a cold run would compute.
+    pub fn with_shared(
+        inner: &'a dyn Oracle,
+        cache: &'a CostCache,
+        shared: &'a CostCache,
+        n: usize,
+        k: usize,
+    ) -> Self {
+        assert_eq!(inner.n_bits(), n * k, "oracle bits != n * k");
+        CachedOracle { inner, cache, shared: Some(shared), n, k }
     }
 }
 
@@ -175,8 +203,14 @@ impl Oracle for CachedOracle<'_> {
 
     fn eval(&self, x: &[i8]) -> f64 {
         let m = BinMatrix::from_spins(self.n, self.k, x);
-        self.cache
-            .get_or_eval(&m, |key| self.inner.eval(key.as_spins()))
+        match self.shared {
+            Some(shared) => self.cache.get_or_eval(&m, |key| {
+                shared.get_or_eval(key, |k| self.inner.eval(k.as_spins()))
+            }),
+            None => self
+                .cache
+                .get_or_eval(&m, |key| self.inner.eval(key.as_spins())),
+        }
     }
 
     fn equivalents(&self, x: &[i8]) -> Vec<Vec<i8>> {

@@ -36,6 +36,12 @@
 //! `restart_workers = 1` and `batch_size = 1` every job is bit-identical
 //! to a plain serial [`bbo::run`] with the same seed, which the engine
 //! regression tests assert.
+//!
+//! Jobs may attach a process-wide *second* cache level
+//! ([`CompressionJob::shared_cache`] — the serve daemon's cross-request
+//! warm store).  It is consulted only on local-cache misses and only in
+//! canonical mode, so it shortens wall-clock without changing any
+//! result or any per-job cache statistic.
 
 pub mod cache;
 
@@ -44,6 +50,7 @@ pub use cache::{CacheStats, CachedOracle, CostCache};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun};
 use crate::cost::{compression_ratio, BinMatrix, Problem};
@@ -110,6 +117,15 @@ pub struct CompressionJob {
     /// Cache-key policy of the job's memoised oracle (default:
     /// [`CacheKeyMode::Canonical`] — orbit folding).
     pub cache_mode: CacheKeyMode,
+    /// Optional process-wide second cache level consulted on local
+    /// misses — the serve daemon's cross-request warm store.  Only
+    /// honoured under [`CacheKeyMode::Canonical`] (where stored values
+    /// are pure functions of the canonical key, so sharing cannot
+    /// change any result); silently ignored in
+    /// [`CacheKeyMode::Exact`] mode, whose promise is bit-identical
+    /// replay of the *uncached* run.  Must be fed only by jobs of the
+    /// same problem instance and layer.
+    pub shared_cache: Option<Arc<CostCache>>,
 }
 
 impl CompressionJob {
@@ -130,6 +146,7 @@ impl CompressionJob {
             cfg,
             seed,
             cache_mode: CacheKeyMode::Canonical,
+            shared_cache: None,
         }
     }
 
@@ -156,6 +173,13 @@ impl CompressionJob {
     /// uncached serial run.
     pub fn with_cache_mode(mut self, mode: CacheKeyMode) -> Self {
         self.cache_mode = mode;
+        self
+    }
+
+    /// Attach a process-wide second-level cache (builder style) — see
+    /// [`CompressionJob::shared_cache`] for the soundness conditions.
+    pub fn with_shared_cache(mut self, shared: Arc<CostCache>) -> Self {
+        self.shared_cache = Some(shared);
         self
     }
 }
@@ -323,8 +347,20 @@ fn run_job(
         CacheKeyMode::Exact => CostCache::new(),
         CacheKeyMode::Canonical => CostCache::with_canonical_keys(),
     };
-    let oracle =
-        CachedOracle::new(&job.problem, &cache, job.problem.n(), job.problem.k);
+    // The shared level is only sound in canonical mode (stored values
+    // are pure functions of the canonical key); in exact mode a shared
+    // value could differ from the queried member's cost in the last
+    // ulps, so the option is dropped to keep that mode's bit-identical
+    // replay promise.
+    let shared = match job.cache_mode {
+        CacheKeyMode::Canonical => job.shared_cache.clone(),
+        CacheKeyMode::Exact => None,
+    };
+    let (n, k) = (job.problem.n(), job.problem.k);
+    let oracle = match shared.as_deref() {
+        Some(s) => CachedOracle::with_shared(&job.problem, &cache, s, n, k),
+        None => CachedOracle::new(&job.problem, &cache, n, k),
+    };
     let mut cfg = job.cfg.clone();
     if restart_workers > 1 {
         cfg.restart_workers = restart_workers;
@@ -563,6 +599,44 @@ mod tests {
             assert!(r.cache.misses >= 1);
         }
         assert_eq!(canon[0].run.ys.len(), exact[0].run.ys.len());
+    }
+
+    #[test]
+    fn shared_cache_is_transparent_and_counts_cross_job_hits() {
+        let baseline =
+            Engine::with_workers(1).compress_all(vec![tiny_job(0, 8)]);
+        let shared = Arc::new(CostCache::with_canonical_keys());
+        let first = Engine::with_workers(1).compress_all(vec![
+            tiny_job(0, 8).with_shared_cache(shared.clone()),
+        ]);
+        let second = Engine::with_workers(1).compress_all(vec![
+            tiny_job(0, 8).with_shared_cache(shared.clone()),
+        ]);
+        // Results and per-job cache stats match the unshared run
+        // exactly — the shared level only short-circuits evaluation.
+        for r in [&first[0], &second[0]] {
+            assert_eq!(r.run.ys, baseline[0].run.ys);
+            assert_eq!(r.run.best_x, baseline[0].run.best_x);
+            assert_eq!(r.run.best_y, baseline[0].run.best_y);
+            assert_eq!(r.cache, baseline[0].cache);
+        }
+        // The first job filled the shared map (one miss per local
+        // miss); the identical second job was served from it entirely.
+        let s = shared.stats();
+        assert_eq!(s.misses, first[0].cache.misses);
+        assert_eq!(s.hits, second[0].cache.misses);
+        assert!(s.hits > 0, "no cross-job shared-cache hits");
+    }
+
+    #[test]
+    fn exact_mode_ignores_the_shared_level() {
+        let shared = Arc::new(CostCache::with_canonical_keys());
+        let r = Engine::with_workers(1).compress_all(vec![tiny_job(0, 6)
+            .with_cache_mode(CacheKeyMode::Exact)
+            .with_shared_cache(shared.clone())]);
+        assert!(r[0].cache.lookups() > 0);
+        assert_eq!(shared.stats().lookups(), 0);
+        assert!(shared.is_empty());
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub mod linalg;
 pub mod minlp;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod solvers;
 pub mod surrogate;

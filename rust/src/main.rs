@@ -7,6 +7,11 @@
 //!                             concurrently (the parallel batched engine)
 //!   shard plan|work|merge     cross-process sharded compress-model with
 //!                             checkpoint/resume (one worker per process)
+//!   serve                     long-lived compression daemon (line-delimited
+//!                             JSON over TCP/Unix socket, admission control,
+//!                             cross-request evaluation cache)
+//!   serve-request             client for a running daemon (compress /
+//!                             stats / ping / shutdown)
 //!   brute-force               exact search of an instance
 //!   greedy                    original SPADE baseline
 //!   bench                     hot-path micro-benchmarks; --json writes
@@ -35,6 +40,7 @@ use intdecomp::greedy::greedy;
 use intdecomp::instance::generate;
 use intdecomp::report::fmt;
 use intdecomp::runtime::XlaRuntime;
+use intdecomp::serve;
 use intdecomp::shard;
 use intdecomp::solvers;
 use intdecomp::util::rng::Rng;
@@ -62,6 +68,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "compress-model" => cmd_compress_model(args),
         "shard" => cmd_shard(args),
+        "serve" => cmd_serve(args),
+        "serve-request" => cmd_serve_request(args),
         "brute-force" | "bruteforce" => cmd_brute_force(args),
         "greedy" => cmd_greedy(args),
         "bench" => cmd_bench(args),
@@ -97,6 +105,16 @@ USAGE: intdecomp <subcommand> [flags]
   shard merge      validate + combine shard logs (--dir D) into the
                    single-process report, byte for byte
                    (--report FILE, --csv FILE)
+  serve            long-lived compression daemon: line-delimited JSON
+                   requests over --addr HOST:PORT or --socket PATH,
+                   bounded admission (--max-inflight; excess gets an
+                   explicit 429 line), a process-wide cross-request
+                   evaluation cache, and a stats endpoint; served
+                   reports are byte-identical to compress-model
+  serve-request    client for a running daemon: --stats | --ping |
+                   --shutdown, or the compress-model flags to submit
+                   a compression (--report FILE saves the served
+                   deterministic report)
   brute-force      exact search (best / second-best / solution orbit)
   greedy           the original SPADE baseline
   bench            hot-path micro-benchmarks (--quick, --json, --label L:
@@ -146,6 +164,18 @@ FLAGS (defaults in parens):
                     reads logs at the default location only — a log
                     written elsewhere (e.g. local scratch) must be
                     moved there before merging
+  --addr HOST:PORT  serve / serve-request: TCP endpoint
+                    (127.0.0.1:7341; port 0 binds a free port and
+                    prints the actual one)
+  --socket PATH     serve / serve-request: Unix-domain socket endpoint
+                    (overrides --addr; Unix platforms only)
+  --max-inflight N  serve: concurrent compress requests admitted
+                    before the daemon answers 429 (2)
+  --state DIR       serve: optional state directory guarded by the
+                    shard advisory lock (one daemon per directory)
+  --stats / --ping / --shutdown
+                    serve-request: send a control request instead of
+                    a compression
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -465,6 +495,85 @@ fn cmd_shard_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the serve endpoint from `--socket` / `--addr`.
+fn serve_endpoint(args: &Args) -> Result<serve::Endpoint> {
+    if let Some(path) = args.flags.get("socket") {
+        #[cfg(unix)]
+        return Ok(serve::Endpoint::Unix(PathBuf::from(path)));
+        #[cfg(not(unix))]
+        bail!("--socket {path} needs a Unix platform; use --addr");
+    }
+    Ok(serve::Endpoint::Tcp(args.str_flag("addr", "127.0.0.1:7341")))
+}
+
+/// Run the long-lived compression daemon until a shutdown request.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve::ServeConfig {
+        endpoint: serve_endpoint(args)?,
+        max_inflight: args
+            .usize_flag("max-inflight", 2)
+            .map_err(|e| anyhow!(e))?,
+        workers: args
+            .usize_flag(
+                "workers",
+                intdecomp::util::threadpool::default_workers(),
+            )
+            .map_err(|e| anyhow!(e))?,
+        state_dir: args.flags.get("state").map(PathBuf::from),
+    };
+    let max_inflight = cfg.max_inflight;
+    let server = serve::Server::bind(cfg)?;
+    // The ready line: scripts parse the resolved endpoint from it
+    // (important with --addr host:0), so flush before blocking.
+    println!("serve: listening on {}", server.local_endpoint());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    eprintln!("serve: admitting {max_inflight} concurrent requests");
+    server.run()?;
+    println!("serve: shut down");
+    Ok(())
+}
+
+/// Send one request to a running daemon and print the response lines.
+fn cmd_serve_request(args: &Args) -> Result<()> {
+    use intdecomp::util::json::Json;
+
+    let endpoint = serve_endpoint(args)?;
+    let line = if args.bool_flag("stats") {
+        serve::bare_request("stats")
+    } else if args.bool_flag("ping") {
+        serve::bare_request("ping")
+    } else if args.bool_flag("shutdown") {
+        serve::bare_request("shutdown")
+    } else {
+        let (spec, _cfg) = model_spec_from_args(args)?;
+        serve::compress_request(&spec)
+    };
+    let lines = serve::request(&endpoint, &line)?;
+    for l in &lines {
+        println!("{l}");
+    }
+    let last = lines.last().expect("request returns >= 1 line");
+    let j = Json::parse(last).map_err(|e| anyhow!("response: {e}"))?;
+    if j.get("type").and_then(Json::as_str) == Some("error") {
+        let code = j.get("code").and_then(Json::as_u64).unwrap_or(0);
+        let msg = j
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown error");
+        bail!("server error {code}: {msg}");
+    }
+    if let Some(path) = args.flags.get("report") {
+        let report = j
+            .get("report")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("terminal line carries no report"))?;
+        std::fs::write(path, report)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_brute_force(args: &Args) -> Result<()> {
     let (_cfg, p) = load_instance(args)?;
     let t = intdecomp::util::timer::Timer::start();
@@ -767,6 +876,59 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }),
             &mut all,
         );
+    }
+
+    // Serve-daemon round-trip latency (ISSUE 6): the p50/p99 columns of
+    // bench schema v3 exist for these rows — wire/protocol overhead
+    // (ping) and an end-to-end tiny compression against a live daemon
+    // whose cross-request cache warms up over the reps.
+    {
+        use std::sync::Arc;
+        let server = Arc::new(serve::Server::bind(serve::ServeConfig {
+            endpoint: serve::Endpoint::Tcp("127.0.0.1:0".into()),
+            max_inflight: 4,
+            workers,
+            state_dir: None,
+        })?);
+        let endpoint = server.local_endpoint().clone();
+        let srv = Arc::clone(&server);
+        let handle = std::thread::spawn(move || srv.run());
+        note(
+            b.run("serve/ping roundtrip", 1, || {
+                serve::request(&endpoint, &serve::bare_request("ping"))
+                    .map(|ls| ls.len())
+                    .unwrap_or(0)
+            }),
+            &mut all,
+        );
+        let spec = shard::ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 7,
+            layers: 2,
+            iters: if quick { 4 } else { 8 },
+            restarts: 2,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 3,
+            cache_key_raw: false,
+        };
+        let line = serve::compress_request(&spec);
+        note(
+            b.run("serve/compress 2-layer warm e2e", 2, || {
+                serve::request(&endpoint, &line)
+                    .map(|ls| ls.len())
+                    .unwrap_or(0)
+            }),
+            &mut all,
+        );
+        let _ = serve::request(&endpoint, &serve::bare_request("shutdown"));
+        let _ = handle.join();
     }
 
     if args.bool_flag("json") {

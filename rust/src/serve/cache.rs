@@ -1,0 +1,82 @@
+//! The daemon's process-wide cross-request cache store.
+//!
+//! One canonical-orbit [`CostCache`] per *instance layer*
+//! ([`crate::shard::ModelSpec::instance_key`]): the cost is a function
+//! of the layer matrix `W` as well as the candidate, so caches are
+//! never shared across different instance keys — and within one key,
+//! canonical-mode entries are pure functions of the canonical
+//! candidate, so sharing them across requests (different seeds,
+//! budgets, algorithms) cannot change any result.  Jobs attach these
+//! caches as their second level
+//! ([`crate::engine::CompressionJob::shared_cache`]), which leaves
+//! per-request reports byte-identical to the cold CLI path.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{CacheStats, CostCache};
+
+/// Registry of shared per-instance-layer caches.
+#[derive(Default)]
+pub struct CacheRegistry {
+    map: Mutex<HashMap<String, Arc<CostCache>>>,
+}
+
+impl CacheRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        CacheRegistry::default()
+    }
+
+    /// The shared cache for one instance key, created (canonical-orbit
+    /// mode) on first use.
+    pub fn get(&self, key: &str) -> Arc<CostCache> {
+        let mut map = self.map.lock().unwrap();
+        map.entry(key.to_string())
+            .or_insert_with(|| Arc::new(CostCache::with_canonical_keys()))
+            .clone()
+    }
+
+    /// Distinct instance keys seen so far.
+    pub fn caches(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Aggregate over every cache: (stored entries, hit/miss totals).
+    /// The hits are the daemon's *cross-request* savings — evaluations
+    /// short-circuited by some earlier request's work (or a concurrent
+    /// sibling job's; a request alone in a cold daemon contributes no
+    /// shared hits because its per-job local caches absorb repeats
+    /// first).
+    pub fn stats(&self) -> (usize, CacheStats) {
+        let map = self.map.lock().unwrap();
+        let mut entries = 0usize;
+        let mut total = CacheStats::default();
+        for cache in map.values() {
+            entries += cache.len();
+            let s = cache.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+        }
+        (entries, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_key_shares_one_cache() {
+        let reg = CacheRegistry::new();
+        let a = reg.get("n4-l0");
+        let b = reg.get("n4-l0");
+        let c = reg.get("n4-l1");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(reg.caches(), 2);
+        let (entries, stats) = reg.stats();
+        assert_eq!(entries, 0);
+        assert_eq!(stats, CacheStats::default());
+    }
+}

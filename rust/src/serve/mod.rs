@@ -1,0 +1,41 @@
+//! `intdecomp serve` — the long-lived compression daemon.
+//!
+//! A line-delimited JSON request/response protocol
+//! ([`protocol::SERVE_SCHEMA`]) over a TCP or Unix-domain socket, built
+//! directly on the existing engine: requests are [`ModelSpec`]-shaped
+//! (the spec fingerprint is the request and cache identity), layer
+//! results stream back as the exact shard [`LayerRecord`] lines, and
+//! the terminal `done` line embeds the [`deterministic_report`] so a
+//! served compression is byte-identical to `compress-model --report`.
+//!
+//! What the daemon adds over the one-shot CLI:
+//!
+//! * **Warm caches across requests** — a process-wide [`CacheRegistry`]
+//!   keyed by instance layer attaches canonical-orbit [`CostCache`]s as
+//!   a second lookup level under every job's private cache, so repeated
+//!   or overlapping requests skip evaluations earlier requests already
+//!   paid for, without perturbing any request's own report.
+//! * **Admission control** — [`Admission`] bounds concurrent compress
+//!   requests; excess load gets an explicit `429` error line instead of
+//!   an invisible queue, and the connection survives for a retry.
+//! * **Observability** — a `stats` request reports cache hit-rate,
+//!   queue depth, admission counters and per-request latency
+//!   percentiles ([`Metrics`]).
+//!
+//! [`ModelSpec`]: crate::shard::ModelSpec
+//! [`LayerRecord`]: crate::shard::LayerRecord
+//! [`deterministic_report`]: crate::shard::deterministic_report
+//! [`CostCache`]: crate::engine::CostCache
+
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use cache::CacheRegistry;
+pub use protocol::{
+    bare_request, compress_request, Request, SERVE_SCHEMA,
+};
+pub use server::{
+    request, Admission, Endpoint, Metrics, MetricsSnapshot, Permit,
+    ServeConfig, Server,
+};

@@ -1,0 +1,222 @@
+//! The serve daemon's line-delimited JSON wire format.
+//!
+//! One request per line, one or more response lines per request:
+//!
+//! * `{"type":"compress","spec":{..ModelSpec json..}}` — streams one
+//!   [`crate::shard::LayerRecord`] line per finished layer (the exact
+//!   shard result-log format, schema `intdecomp-shard-result-v1`,
+//!   tagged with the spec fingerprint), then a terminal `done` line
+//!   carrying the full deterministic report — byte-identical to
+//!   `compress-model --report` for the same spec.
+//! * `{"type":"stats"}` — one `stats` line: cache hit-rate, queue
+//!   depth, admission counters and per-request latency percentiles.
+//! * `{"type":"ping"}` → `pong`; `{"type":"shutdown"}` → `bye` and the
+//!   daemon stops accepting.
+//!
+//! Every *typed* line (everything but the streamed layer records)
+//! carries `"schema":"intdecomp-serve-v1"`.  Errors are
+//! `{"type":"error","code":400|429|500,...}` — `429` is the admission
+//! rejection: the request was well-formed but the daemon is at its
+//! in-flight capacity, and the connection stays usable for a retry.
+
+use anyhow::{anyhow, Result};
+
+use crate::shard::ModelSpec;
+use crate::util::json::Json;
+
+/// Schema tag carried by every typed response line.
+pub const SERVE_SCHEMA: &str = "intdecomp-serve-v1";
+
+/// A parsed request line.
+#[derive(Debug)]
+pub enum Request {
+    /// Compress the described workload and stream its records.
+    Compress(Box<ModelSpec>),
+    /// Report daemon counters (cache, admission, latency).
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Stop accepting connections (in-flight requests finish).
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow!("request: {e}"))?;
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request: missing 'type'"))?;
+        match ty {
+            "compress" => {
+                let spec = j
+                    .get("spec")
+                    .ok_or_else(|| anyhow!("request: missing 'spec'"))?;
+                Ok(Request::Compress(Box::new(ModelSpec::from_json(spec)?)))
+            }
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(anyhow!("request: unknown type '{other}'")),
+        }
+    }
+}
+
+/// Build a `compress` request line for `spec` (no trailing newline).
+pub fn compress_request(spec: &ModelSpec) -> String {
+    Json::obj(vec![
+        ("spec", spec.to_json()),
+        ("type", Json::Str("compress".into())),
+    ])
+    .to_string()
+}
+
+/// Build a bare typed request line (`stats`, `ping`, `shutdown`).
+pub fn bare_request(ty: &str) -> String {
+    Json::obj(vec![("type", Json::Str(ty.into()))]).to_string()
+}
+
+/// An `error` response line; `code` follows HTTP idiom (`400` bad
+/// request, `429` admission rejection, `500` internal).
+pub fn error_line(code: u64, message: &str) -> String {
+    Json::obj(vec![
+        ("code", Json::Num(code as f64)),
+        ("error", Json::Str(message.into())),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("error".into())),
+    ])
+    .to_string()
+}
+
+/// The terminal `done` line of a successful compress request.  The
+/// embedded `report` string is the full deterministic report — the
+/// byte-identity artifact clients diff against `compress-model
+/// --report`.
+pub fn done_line(
+    fingerprint: &str,
+    layers: usize,
+    report: &str,
+    elapsed_s: f64,
+) -> String {
+    Json::obj(vec![
+        ("elapsed_s", Json::Num(elapsed_s)),
+        ("fingerprint", Json::Str(fingerprint.into())),
+        ("layers", Json::Num(layers as f64)),
+        ("report", Json::Str(report.into())),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("done".into())),
+    ])
+    .to_string()
+}
+
+/// The `pong` reply to a ping.
+pub fn pong_line() -> String {
+    Json::obj(vec![
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("pong".into())),
+    ])
+    .to_string()
+}
+
+/// The `bye` reply acknowledging a shutdown request.
+pub fn bye_line() -> String {
+    Json::obj(vec![
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("bye".into())),
+    ])
+    .to_string()
+}
+
+/// Whether a response line terminates the current request's response
+/// stream.  Streamed layer-record lines have no `"type"` member; every
+/// typed line (`done`, `error`, `stats`, `pong`, `bye`) is terminal.
+pub fn is_terminal(line: &str) -> bool {
+    Json::parse(line)
+        .map(|j| j.get("type").is_some())
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 9,
+            layers: 2,
+            iters: 5,
+            restarts: 3,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 11,
+            cache_key_raw: false,
+        }
+    }
+
+    #[test]
+    fn compress_request_roundtrips_the_spec() {
+        let spec = tiny_spec();
+        let line = compress_request(&spec);
+        match Request::parse(&line).unwrap() {
+            Request::Compress(back) => assert_eq!(*back, spec),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bare_requests_parse() {
+        assert!(matches!(
+            Request::parse(&bare_request("stats")).unwrap(),
+            Request::Stats
+        ));
+        assert!(matches!(
+            Request::parse(&bare_request("ping")).unwrap(),
+            Request::Ping
+        ));
+        assert!(matches!(
+            Request::parse(&bare_request("shutdown")).unwrap(),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn bad_requests_are_rejected() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse(r#"{"type":"frobnicate"}"#).is_err());
+        // compress without a spec, and with an invalid spec.
+        assert!(Request::parse(r#"{"type":"compress"}"#).is_err());
+        assert!(
+            Request::parse(r#"{"spec":{"n":0},"type":"compress"}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn terminal_detection_distinguishes_record_lines() {
+        assert!(is_terminal(&error_line(429, "full")));
+        assert!(is_terminal(&done_line("f00d", 2, "report\n", 0.1)));
+        assert!(is_terminal(&pong_line()));
+        assert!(is_terminal(&bye_line()));
+        // A shard record line has no "type" member.
+        assert!(!is_terminal(r#"{"schema":"x","job":0}"#));
+        assert!(!is_terminal("torn garbage"));
+    }
+
+    #[test]
+    fn done_line_preserves_report_bytes() {
+        let report = "layer  shape\nlayer1 4x8\n";
+        let line = done_line("f00d", 1, report, 0.25);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("report").unwrap().as_str(), Some(report));
+        assert_eq!(j.get("fingerprint").unwrap().as_str(), Some("f00d"));
+        assert_eq!(j.get("layers").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,637 @@
+//! The daemon: socket listener, admission control, request handling.
+//!
+//! One OS thread per connection reads request lines and answers them
+//! in order; compression jobs inside a request fan out through
+//! [`Engine::compress_each`] onto the process-wide
+//! [`crate::util::threadpool::WorkerPool`], so connection threads
+//! block cheaply while the pool does the work.  Admission control
+//! bounds *requests* (not jobs): up to `max_inflight` compress
+//! requests run concurrently, later ones get an explicit `429` error
+//! line and the connection stays usable — clients retry, nothing
+//! queues silently.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::CacheRegistry;
+use super::protocol::{self, Request, SERVE_SCHEMA};
+use crate::engine::{Engine, EngineConfig};
+use crate::shard::{deterministic_report, LayerRecord, ModelSpec};
+use crate::util::json::Json;
+use crate::util::lockfile::LockFile;
+use crate::util::threadpool::default_workers;
+use crate::util::timer::Timer;
+use crate::util::{mean, percentile};
+
+/// Where the daemon listens (and where clients connect).
+#[derive(Clone, Debug)]
+pub enum Endpoint {
+    /// TCP `host:port`; port `0` binds a free port — read the actual
+    /// one back via [`Server::local_endpoint`].
+    Tcp(String),
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "{addr}"),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => write!(f, "{}", path.display()),
+        }
+    }
+}
+
+/// Counting-semaphore admission control over in-flight compress
+/// requests.  [`Admission::try_acquire`] never blocks: a full daemon
+/// answers `429` instead of queueing work invisibly.
+pub struct Admission {
+    max: usize,
+    cur: AtomicUsize,
+}
+
+impl Admission {
+    /// Gate admitting at most `max` concurrent requests (`0` rejects
+    /// everything — useful to drain or to test rejection paths).
+    pub fn new(max: usize) -> Admission {
+        Admission { max, cur: AtomicUsize::new(0) }
+    }
+
+    /// Take a slot if one is free.  The slot is released when the
+    /// returned [`Permit`] drops.
+    pub fn try_acquire(&self) -> Option<Permit<'_>> {
+        loop {
+            let c = self.cur.load(Ordering::Acquire);
+            if c >= self.max {
+                return None;
+            }
+            if self
+                .cur
+                .compare_exchange(
+                    c,
+                    c + 1,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return Some(Permit { inner: self });
+            }
+        }
+    }
+
+    /// Requests currently holding a slot (the queue-depth stat).
+    pub fn in_flight(&self) -> usize {
+        self.cur.load(Ordering::Acquire)
+    }
+
+    /// The admission bound.
+    pub fn capacity(&self) -> usize {
+        self.max
+    }
+}
+
+/// A held admission slot; dropping releases it.
+pub struct Permit<'a> {
+    inner: &'a Admission,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.inner.cur.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Per-request latencies kept for the percentile stats; older samples
+/// are discarded beyond this window so a long-lived daemon's memory
+/// stays bounded.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Daemon request counters and latency accounting.
+#[derive(Default)]
+pub struct Metrics {
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    /// Zeroed counters.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    fn admit(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn complete(&self, seconds: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut lat = self.latencies.lock().unwrap();
+        if lat.len() >= LATENCY_WINDOW {
+            lat.drain(..LATENCY_WINDOW / 2);
+        }
+        lat.push(seconds);
+    }
+
+    /// Consistent snapshot of the counters and latency percentiles.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        MetricsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            latency_count: lat.len(),
+            latency_mean_s: mean(&lat),
+            latency_p50_s: percentile(&lat, 50.0),
+            latency_p99_s: percentile(&lat, 99.0),
+        }
+    }
+}
+
+/// One [`Metrics::snapshot`].
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    /// Compress requests that got a slot.
+    pub admitted: u64,
+    /// Compress requests turned away with `429`.
+    pub rejected: u64,
+    /// Compress requests finished successfully.
+    pub completed: u64,
+    /// Malformed or failed requests.
+    pub errors: u64,
+    /// Latency samples in the current window.
+    pub latency_count: usize,
+    /// Mean request latency over the window (seconds).
+    pub latency_mean_s: f64,
+    /// Median request latency (seconds).
+    pub latency_p50_s: f64,
+    /// 99th-percentile request latency (seconds).
+    pub latency_p99_s: f64,
+}
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listening endpoint.
+    pub endpoint: Endpoint,
+    /// Maximum concurrent compress requests (excess gets `429`).
+    pub max_inflight: usize,
+    /// Engine worker fan-out per request (jobs share the process-wide
+    /// pool either way; this caps one request's concurrent jobs).
+    pub workers: usize,
+    /// Optional on-disk state directory; when set, an advisory
+    /// [`LockFile`] (the `shard work` guard) keeps a second daemon off
+    /// the same state.
+    pub state_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:7341".into()),
+            max_inflight: 2,
+            workers: default_workers(),
+            state_dir: None,
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn connect(endpoint: &Endpoint) -> std::io::Result<Conn> {
+        match endpoint {
+            Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Conn::Tcp),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                UnixStream::connect(path).map(Conn::Unix)
+            }
+        }
+    }
+
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+struct Ctx {
+    admission: Admission,
+    registry: CacheRegistry,
+    metrics: Metrics,
+    workers: usize,
+    stop: AtomicBool,
+    endpoint: Endpoint,
+}
+
+/// The serve daemon: bind once, then [`Server::run`] until a
+/// `shutdown` request.
+pub struct Server {
+    listener: Listener,
+    ctx: Arc<Ctx>,
+    _lock: Option<LockFile>,
+}
+
+impl Server {
+    /// Bind the endpoint (taking the state lock first when configured)
+    /// without serving yet.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let lock = match &cfg.state_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+                Some(LockFile::acquire(&dir.join("serve.state"))?)
+            }
+            None => None,
+        };
+        let (listener, endpoint) = match &cfg.endpoint {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("binding tcp {addr}"))?;
+                let actual = l
+                    .local_addr()
+                    .with_context(|| format!("resolving {addr}"))?
+                    .to_string();
+                (Listener::Tcp(l), Endpoint::Tcp(actual))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let l = bind_unix(path)?;
+                (Listener::Unix(l), Endpoint::Unix(path.clone()))
+            }
+        };
+        Ok(Server {
+            listener,
+            ctx: Arc::new(Ctx {
+                admission: Admission::new(cfg.max_inflight),
+                registry: CacheRegistry::new(),
+                metrics: Metrics::new(),
+                workers: cfg.workers.max(1),
+                stop: AtomicBool::new(false),
+                endpoint,
+            }),
+            _lock: lock,
+        })
+    }
+
+    /// The resolved endpoint (actual port for `host:0` TCP binds) —
+    /// what clients should connect to.
+    pub fn local_endpoint(&self) -> &Endpoint {
+        &self.ctx.endpoint
+    }
+
+    /// Accept and serve connections until a `shutdown` request.  Each
+    /// connection gets its own thread; in-flight requests on other
+    /// connections finish writing before their threads exit, but
+    /// `run` itself returns as soon as the listener stops.
+    pub fn run(&self) -> Result<()> {
+        loop {
+            let conn = match self.listener.accept() {
+                Ok(c) => c,
+                Err(e) => {
+                    if self.ctx.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(e).context("accepting connection");
+                }
+            };
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let ctx = self.ctx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(conn, &ctx);
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Endpoint::Unix(path) = &self.ctx.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Bind a Unix socket, reclaiming a stale socket file (left by a
+/// crashed daemon) after probing that nothing answers on it.
+#[cfg(unix)]
+fn bind_unix(path: &std::path::Path) -> Result<UnixListener> {
+    match UnixListener::bind(path) {
+        Ok(l) => Ok(l),
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                bail!(
+                    "{}: a serve daemon is already listening",
+                    path.display()
+                );
+            }
+            std::fs::remove_file(path)
+                .with_context(|| format!("removing stale {}", path.display()))?;
+            UnixListener::bind(path)
+                .with_context(|| format!("binding unix {}", path.display()))
+        }
+        Err(e) => {
+            Err(e).with_context(|| format!("binding unix {}", path.display()))
+        }
+    }
+}
+
+fn handle_conn(conn: Conn, ctx: &Ctx) -> std::io::Result<()> {
+    let reader = BufReader::new(conn.try_clone()?);
+    let mut writer = conn;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let shutdown = handle_line(&line, &mut writer, ctx)?;
+        writer.flush()?;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    out: &mut Conn,
+    ctx: &Ctx,
+) -> std::io::Result<bool> {
+    match Request::parse(line) {
+        Err(e) => {
+            ctx.metrics.error();
+            writeln!(out, "{}", protocol::error_line(400, &format!("{e:#}")))?;
+        }
+        Ok(Request::Ping) => writeln!(out, "{}", protocol::pong_line())?,
+        Ok(Request::Stats) => writeln!(out, "{}", stats_line(ctx))?,
+        Ok(Request::Shutdown) => {
+            writeln!(out, "{}", protocol::bye_line())?;
+            out.flush()?;
+            ctx.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop so it observes the stop flag.
+            let _ = Conn::connect(&ctx.endpoint);
+            return Ok(true);
+        }
+        Ok(Request::Compress(spec)) => handle_compress(&spec, out, ctx)?,
+    }
+    Ok(false)
+}
+
+fn handle_compress(
+    spec: &ModelSpec,
+    out: &mut Conn,
+    ctx: &Ctx,
+) -> std::io::Result<()> {
+    let Some(permit) = ctx.admission.try_acquire() else {
+        ctx.metrics.reject();
+        let msg = format!(
+            "at capacity ({} of {} requests in flight); retry later",
+            ctx.admission.in_flight(),
+            ctx.admission.capacity()
+        );
+        writeln!(out, "{}", protocol::error_line(429, &msg))?;
+        return Ok(());
+    };
+    ctx.metrics.admit();
+    let timer = Timer::start();
+    let fp = spec.fingerprint();
+    let mut jobs = Vec::with_capacity(spec.layers);
+    for layer in 0..spec.layers {
+        match spec.job(layer) {
+            Ok(mut job) => {
+                // Cross-request warm store: per instance-layer, and
+                // only for canonical-key specs (exact-key jobs drop
+                // the shared level anyway — see `run_job`).
+                if !spec.cache_key_raw {
+                    job.shared_cache =
+                        Some(ctx.registry.get(&spec.instance_key(layer)));
+                }
+                jobs.push(job);
+            }
+            Err(e) => {
+                ctx.metrics.error();
+                writeln!(
+                    out,
+                    "{}",
+                    protocol::error_line(400, &format!("{e:#}"))
+                )?;
+                return Ok(());
+            }
+        }
+    }
+    let eng = Engine::new(EngineConfig {
+        workers: ctx.workers,
+        restart_workers: spec.restart_workers,
+        batch_size: 1, // per-job cfg carries the spec's batch size
+    });
+    let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.layers);
+    let mut io_err: Option<std::io::Error> = None;
+    eng.compress_each(jobs, |i, result| {
+        let rec = LayerRecord::from_result(i, &result);
+        if io_err.is_none() {
+            if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp)) {
+                io_err = Some(e);
+            }
+        }
+        records.push(rec);
+    });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    let report = deterministic_report(&records);
+    writeln!(
+        out,
+        "{}",
+        protocol::done_line(&fp, records.len(), &report, timer.seconds())
+    )?;
+    ctx.metrics.complete(timer.seconds());
+    drop(permit);
+    Ok(())
+}
+
+fn stats_line(ctx: &Ctx) -> String {
+    let (entries, cache) = ctx.registry.stats();
+    let m = ctx.metrics.snapshot();
+    Json::obj(vec![
+        ("admitted", Json::Num(m.admitted as f64)),
+        ("cache_caches", Json::Num(ctx.registry.caches() as f64)),
+        ("cache_entries", Json::Num(entries as f64)),
+        ("cache_hit_rate", Json::Num(cache.hit_rate())),
+        ("cache_hits", Json::Num(cache.hits as f64)),
+        ("cache_misses", Json::Num(cache.misses as f64)),
+        ("completed", Json::Num(m.completed as f64)),
+        ("errors", Json::Num(m.errors as f64)),
+        ("inflight", Json::Num(ctx.admission.in_flight() as f64)),
+        ("latency_count", Json::Num(m.latency_count as f64)),
+        ("latency_mean_s", Json::Num(m.latency_mean_s)),
+        ("latency_p50_s", Json::Num(m.latency_p50_s)),
+        ("latency_p99_s", Json::Num(m.latency_p99_s)),
+        ("max_inflight", Json::Num(ctx.admission.capacity() as f64)),
+        ("rejected", Json::Num(m.rejected as f64)),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("stats".into())),
+        ("workers", Json::Num(ctx.workers as f64)),
+    ])
+    .to_string()
+}
+
+/// Client side: send one request line to a daemon and collect the
+/// response lines, up to and including the terminal typed line
+/// (`done`, `stats`, `pong`, `bye` or `error`).
+pub fn request(endpoint: &Endpoint, line: &str) -> Result<Vec<String>> {
+    let mut conn = Conn::connect(endpoint)
+        .with_context(|| format!("connecting to {endpoint}"))?;
+    conn.write_all(line.as_bytes())?;
+    conn.write_all(b"\n")?;
+    conn.flush()?;
+    let reader = BufReader::new(conn.try_clone()?);
+    let mut lines = Vec::new();
+    for l in reader.lines() {
+        let l = l?;
+        if l.trim().is_empty() {
+            continue;
+        }
+        let terminal = protocol::is_terminal(&l);
+        lines.push(l);
+        if terminal {
+            return Ok(lines);
+        }
+    }
+    bail!("connection closed before a terminal response line");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_counts_and_releases_slots() {
+        let adm = Admission::new(2);
+        assert_eq!((adm.capacity(), adm.in_flight()), (2, 0));
+        let p1 = adm.try_acquire().unwrap();
+        let p2 = adm.try_acquire().unwrap();
+        assert_eq!(adm.in_flight(), 2);
+        assert!(adm.try_acquire().is_none(), "over capacity");
+        drop(p1);
+        assert_eq!(adm.in_flight(), 1);
+        let p3 = adm.try_acquire().unwrap();
+        assert!(adm.try_acquire().is_none());
+        drop(p2);
+        drop(p3);
+        assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let adm = Admission::new(0);
+        assert!(adm.try_acquire().is_none());
+    }
+
+    #[test]
+    fn metrics_percentiles_over_the_window() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.complete(i as f64 / 100.0);
+        }
+        m.reject();
+        m.error();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.latency_count, 100);
+        assert!((s.latency_p50_s - 0.5).abs() < 1e-12);
+        assert!((s.latency_p99_s - 0.99).abs() < 1e-12);
+        assert!((s.latency_mean_s - 0.505).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_window_stays_bounded() {
+        let m = Metrics::new();
+        for i in 0..(LATENCY_WINDOW + 10) {
+            m.complete(i as f64);
+        }
+        let s = m.snapshot();
+        assert!(s.latency_count <= LATENCY_WINDOW);
+        assert_eq!(s.completed as usize, LATENCY_WINDOW + 10);
+    }
+}

@@ -145,6 +145,7 @@ impl ModelSpec {
             solver,
             seed: self.seed.wrapping_add(layer as u64),
             cache_mode: self.cache_mode(),
+            shared_cache: None,
         })
     }
 
@@ -191,6 +192,23 @@ impl ModelSpec {
         };
         spec.validate()?;
         Ok(spec)
+    }
+
+    /// Identity of layer `layer`'s *cost function*: every spec field
+    /// the generated problem depends on, plus the layer index.  Two
+    /// requests agreeing on this key evaluate the same cost over the
+    /// same `W`, so the serve daemon may share one canonical-orbit
+    /// [`crate::engine::CostCache`] between them even when their
+    /// budgets, seeds or algorithms differ.
+    pub fn instance_key(&self, layer: usize) -> String {
+        format!(
+            "n{}-d{}-k{}-g{:016x}-i{}-l{layer}",
+            self.n,
+            self.d,
+            self.k,
+            self.gamma.to_bits(),
+            self.instance_seed,
+        )
     }
 
     /// Hex FNV-1a digest of the canonical spec JSON — the workload tag
@@ -292,6 +310,23 @@ mod tests {
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_ne!(a.fingerprint(), c.fingerprint());
         assert_eq!(a.fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn instance_key_tracks_the_cost_function_only() {
+        let a = tiny_spec(3);
+        let mut b = a.clone();
+        b.seed += 7; // run seed, budget, algorithm: not the cost fn
+        b.iters = 50;
+        b.algo = "fmqa08".into();
+        assert_eq!(a.instance_key(1), b.instance_key(1));
+        assert_ne!(a.instance_key(0), a.instance_key(1));
+        let mut c = a.clone();
+        c.gamma = 0.7;
+        assert_ne!(a.instance_key(0), c.instance_key(0));
+        let mut d = a.clone();
+        d.instance_seed += 1;
+        assert_ne!(a.instance_key(0), d.instance_key(0));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::plan::Manifest;
 use crate::engine::{Engine, EngineConfig, JobResult};
 use crate::util::json::Json;
+use crate::util::lockfile::LockFile;
 
 /// Schema tag of every result-log line; bump on layout changes.
 pub const RESULT_SCHEMA: &str = "intdecomp-shard-result-v1";
@@ -270,6 +271,12 @@ pub fn run_shard(
     mut progress: impl FnMut(&LayerRecord),
 ) -> Result<ShardRun> {
     let fp = &manifest.fingerprint;
+    // Single-writer guard: a second worker on the same log would
+    // interleave appends and corrupt the valid prefix recover_log
+    // trusts.  Held until this call returns; stale locks from a
+    // SIGKILLed worker are reclaimed automatically.
+    let _lock = LockFile::acquire(out)
+        .with_context(|| format!("locking result log {}", out.display()))?;
     let recovered = recover_log(out, fp)?;
     let done: BTreeSet<usize> =
         recovered.records.iter().map(|r| r.job).collect();
@@ -388,6 +395,17 @@ mod tests {
         let back = LayerRecord::parse_line(&line, "f00d").unwrap();
         assert_eq!(back, rec);
         assert_eq!(back.best_y.to_bits(), rec.best_y.to_bits());
+        assert_eq!(back.to_json_line("f00d"), line);
+        // Negative-zero float fields keep their sign bit through a
+        // full serialise→parse→serialise cycle (f64 == treats -0.0
+        // and 0.0 as equal, so compare bits explicitly).
+        let mut zero = record();
+        zero.best_y = -0.0;
+        zero.err = -0.0;
+        let line = zero.to_json_line("f00d");
+        let back = LayerRecord::parse_line(&line, "f00d").unwrap();
+        assert_eq!(back.best_y.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.err.to_bits(), (-0.0f64).to_bits());
         assert_eq!(back.to_json_line("f00d"), line);
     }
 

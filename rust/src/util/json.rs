@@ -1,6 +1,20 @@
 //! Minimal JSON substrate: enough to read `artifacts/meta.json` and write
 //! experiment results.  Supports the full JSON value grammar minus exotic
 //! escapes (\uXXXX is decoded for the BMP; surrogate pairs are joined).
+//!
+//! **Round-trip contract** (ISSUE 6 — relied on by the shard result
+//! logs, shard manifests and the serve protocol):
+//!
+//! * Finite floats serialise with Rust's shortest round-trip formatting;
+//!   whole numbers below `1e15` drop the fraction (`42`, not `42.0`) —
+//!   **except negative zero**, which serialises as `-0.0` so the sign
+//!   bit survives a serialise→parse→serialise cycle bit-exactly.
+//! * `\u` escapes forming an **unpaired surrogate** (a high surrogate
+//!   not immediately followed by a `\u`-escaped low surrogate, or a
+//!   bare low surrogate) are a parse **error** — never silently
+//!   dropped.  Paired surrogates decode to the astral-plane scalar.
+//! * [`Json::as_usize`] / [`Json::as_u64`] accept exact whole numbers
+//!   only (`1.9` and `-3.0` are rejected, not truncated or saturated).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -49,9 +63,13 @@ impl Json {
         }
     }
 
-    /// Numeric value truncated to usize, if this is a number.
+    /// Exact whole-number value as usize.  Delegates to
+    /// [`Json::as_u64`], so fractional (`1.9`), negative (`-3.0`) and
+    /// beyond-2⁵³ values are rejected rather than truncated or
+    /// saturated — numeric config/meta/manifest fields read through
+    /// this accessor fail loudly on malformed input.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
     }
 
     /// Exact unsigned integer value, if this is a non-negative whole
@@ -107,7 +125,11 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
+                    if *x == 0.0 && x.is_sign_negative() {
+                        // Keep the sign bit: `-0.0 as i64` is 0, which
+                        // would break the bit-exact float round trip.
+                        out.push_str("-0.0");
+                    } else if *x == x.trunc() && x.abs() < 1e15 {
                         let _ = write!(out, "{}", *x as i64);
                     } else {
                         let _ = write!(out, "{x}");
@@ -220,7 +242,6 @@ impl<'a> Parser<'a> {
     fn string(&mut self) -> Result<String, String> {
         self.eat('"')?;
         let mut out = String::new();
-        let mut pending_high: Option<u16> = None;
         loop {
             let c = self.peek().ok_or("unterminated string")?;
             self.i += 1;
@@ -239,23 +260,40 @@ impl<'a> Parser<'a> {
                         'b' => out.push('\u{8}'),
                         'f' => out.push('\u{c}'),
                         'u' => {
-                            let mut code = 0u32;
-                            for _ in 0..4 {
-                                let h = self.peek().ok_or("bad \\u")?;
+                            let code = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&code) {
+                                // A high surrogate is only valid when
+                                // the very next escape is a low
+                                // surrogate; anything else (string
+                                // end, ordinary char, non-low escape)
+                                // is a hard error — silently dropping
+                                // it would lose data on round trip.
+                                if self.peek() != Some('\\') {
+                                    return Err(
+                                        "unpaired high surrogate".into(),
+                                    );
+                                }
                                 self.i += 1;
-                                code = code * 16
-                                    + h.to_digit(16).ok_or("bad hex")?;
-                            }
-                            let unit = code as u16;
-                            if (0xD800..0xDC00).contains(&unit) {
-                                pending_high = Some(unit);
-                            } else if let Some(hi) = pending_high.take() {
+                                if self.peek() != Some('u') {
+                                    return Err(
+                                        "unpaired high surrogate".into(),
+                                    );
+                                }
+                                self.i += 1;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(
+                                        "unpaired high surrogate".into(),
+                                    );
+                                }
                                 let c = 0x10000
-                                    + ((hi as u32 - 0xD800) << 10)
-                                    + (unit as u32 - 0xDC00);
+                                    + ((code - 0xD800) << 10)
+                                    + (lo - 0xDC00);
                                 out.push(
                                     char::from_u32(c).ok_or("bad surrogate")?,
                                 );
+                            } else if (0xDC00..0xE000).contains(&code) {
+                                return Err("unpaired low surrogate".into());
                             } else {
                                 out.push(
                                     char::from_u32(code)
@@ -269,6 +307,16 @@ impl<'a> Parser<'a> {
                 c => out.push(c),
             }
         }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let h = self.peek().ok_or("bad \\u")?;
+            self.i += 1;
+            code = code * 16 + h.to_digit(16).ok_or("bad hex")?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -398,9 +446,53 @@ mod tests {
     }
 
     #[test]
+    fn surrogate_pair_escape_decodes_astral_scalar() {
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("😀".into())
+        );
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_parse_errors() {
+        // High surrogate at string end.
+        assert!(Json::parse(r#""\ud83d""#).is_err());
+        // High surrogate followed by an ordinary char.
+        assert!(Json::parse(r#""\ud83dX""#).is_err());
+        // High surrogate followed by a non-\u escape.
+        assert!(Json::parse(r#""\ud83d\n""#).is_err());
+        // High surrogate followed by a non-low \u escape.
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+        // Two high surrogates in a row.
+        assert!(Json::parse(r#""\ud83d\ud83d""#).is_err());
+        // Bare low surrogate.
+        assert!(Json::parse(r#""\udc00""#).is_err());
+    }
+
+    #[test]
     fn integers_serialise_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bit_exactly() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0.0");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        let back = Json::parse("-0.0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // And a second serialise produces the same bytes.
+        assert_eq!(Json::Num(back).to_string(), "-0.0");
+    }
+
+    #[test]
+    fn as_usize_is_exact_only() {
+        assert_eq!(Json::Num(8.0).as_usize(), Some(8));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(1.9).as_usize(), None);
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(1e18).as_usize(), None); // beyond 2^53
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Advisory PID lockfiles guarding single-writer on-disk state.
+//!
+//! Two `shard work` processes pointed at the same result log would
+//! interleave appends and corrupt the valid prefix that
+//! [`crate::shard::recover_log`] trusts, so the worker (and the serve
+//! daemon, for its state directory) takes an advisory lock first and
+//! fails fast with a clear error when another live process holds it.
+//!
+//! The lock is a sidecar file created with `O_EXCL` holding the owner's
+//! PID.  A lock whose owner is no longer alive (checked via
+//! `/proc/<pid>` on Linux) or whose contents are unparseable is *stale*
+//! and is taken over — a SIGKILLed worker must never wedge a resume.
+//! Like all advisory locks this guards against accidents, not
+//! adversaries: a process that ignores the protocol can still write.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A held advisory lock; releasing is dropping (the sidecar file is
+/// removed).  After a crash the file lingers, but the dead PID inside
+/// makes it stale, so the next acquirer reclaims it.
+#[derive(Debug)]
+pub struct LockFile {
+    path: PathBuf,
+}
+
+impl LockFile {
+    /// The sidecar lockfile path guarding `target` (the target path
+    /// with `.lock` appended, so `out.jsonl` → `out.jsonl.lock`).
+    pub fn path_for(target: &Path) -> PathBuf {
+        let mut os = target.as_os_str().to_os_string();
+        os.push(".lock");
+        PathBuf::from(os)
+    }
+
+    /// Acquire the advisory lock guarding `target`.  Fails fast —
+    /// without blocking — when another live process holds it; silently
+    /// takes over stale locks (dead owner, unreadable contents).
+    pub fn acquire(target: &Path) -> Result<LockFile> {
+        let path = Self::path_for(target);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        // The takeover (unlink + retry create) can race another
+        // acquirer doing the same; a handful of retries settles it.
+        for _ in 0..16 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    let _ = f.sync_data();
+                    return Ok(LockFile { path });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AlreadyExists =>
+                {
+                    match std::fs::read_to_string(&path) {
+                        Ok(body) => match body.trim().parse::<u32>() {
+                            Ok(pid) if pid_alive(pid) => bail!(
+                                "{}: held by live process {pid} — another \
+                                 worker is using {}; if that pid is stale \
+                                 (non-Linux host), remove the lockfile",
+                                path.display(),
+                                target.display(),
+                            ),
+                            // Dead owner or garbage contents: stale.
+                            _ => {
+                                let _ = std::fs::remove_file(&path);
+                            }
+                        },
+                        // Holder released between create and read.
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::NotFound => {}
+                        Err(e) => {
+                            return Err(e).with_context(|| {
+                                format!("reading {}", path.display())
+                            })
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating {}", path.display())
+                    })
+                }
+            }
+        }
+        bail!(
+            "{}: could not acquire after repeated takeover races",
+            path.display()
+        );
+    }
+
+    /// The sidecar file this lock holds.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for LockFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Whether `pid` names a live process.  On Linux this is a `/proc`
+/// lookup; elsewhere we conservatively report alive, so stale locks on
+/// such hosts need manual removal (the error message says so).
+fn pid_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        Path::new("/proc").join(pid.to_string()).exists()
+    } else {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("intdecomp_lockfile");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn second_acquire_fails_while_held_and_succeeds_after_drop() {
+        let target = tmp("log_a.jsonl");
+        let lock = LockFile::acquire(&target).unwrap();
+        assert!(lock.path().exists());
+        let held = LockFile::acquire(&target);
+        assert!(held.is_err());
+        assert!(held
+            .unwrap_err()
+            .to_string()
+            .contains("held by live process"));
+        drop(lock);
+        assert!(!LockFile::path_for(&target).exists());
+        let again = LockFile::acquire(&target).unwrap();
+        drop(again);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stale_lock_with_dead_pid_is_taken_over() {
+        let target = tmp("log_b.jsonl");
+        // PID near the 32-bit cap: far above kernel.pid_max, so no
+        // live process can own it.
+        std::fs::write(LockFile::path_for(&target), "4294967294\n")
+            .unwrap();
+        let lock = LockFile::acquire(&target).unwrap();
+        drop(lock);
+    }
+
+    #[test]
+    fn unparseable_lock_is_taken_over() {
+        let target = tmp("log_c.jsonl");
+        std::fs::write(LockFile::path_for(&target), "not a pid").unwrap();
+        let lock = LockFile::acquire(&target).unwrap();
+        drop(lock);
+    }
+}

@@ -4,6 +4,7 @@
 //! these are purpose-built rather than pulled from crates.io (DESIGN.md §6).
 
 pub mod json;
+pub mod lockfile;
 pub mod prop;
 pub mod rng;
 pub mod threadpool;
@@ -34,6 +35,19 @@ pub fn ci95(xs: &[f64]) -> f64 {
         return 0.0;
     }
     1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (`q` in
+/// percent, clamped to `[0, 100]`; `0.0` for empty input).  Shared by
+/// the bench harness (`p50_s`/`p99_s` rows) and the serve daemon's
+/// latency stats.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
 /// Moving-average smoothing with the given window (paper Fig. 4 uses 100).
@@ -70,6 +84,19 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(ci95(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 75.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        let big: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&big, 99.0), 99.0);
+        assert_eq!(percentile(&big, 50.0), 50.0);
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //! the cost function, solvers, surrogate features and clustering under
 //! randomly generated inputs.
 
+use std::collections::BTreeMap;
+
 use intdecomp::cost::{BinMatrix, Problem};
 use intdecomp::linalg::{cholesky, cho_solve, householder_qr, Matrix};
 use intdecomp::solvers::{greedy_descent, QuadModel};
 use intdecomp::surrogate::features::{alpha_to_quad, n_features, phi};
+use intdecomp::util::json::Json;
 use intdecomp::util::prop::for_all;
 use intdecomp::util::rng::Rng;
 
@@ -178,6 +181,80 @@ fn prop_dataset_moments_track_pushes() {
         for (a, b) in g.data.iter().zip(&data.g.data) {
             assert!((a - b).abs() < 1e-8);
         }
+    });
+}
+
+/// Characters the JSON escape machinery must survive: quotes and
+/// backslashes, every escape-shorthand control, raw controls that need
+/// `\uXXXX`, multi-byte BMP scalars, the surrogate-boundary scalars
+/// `U+D7FF`/`U+E000`, and astral-plane scalars that serialise through
+/// surrogate pairs or raw UTF-8.
+const STRING_POOL: &[char] = &[
+    'a', 'Z', '7', ' ', '"', '\\', '/', '\n', '\t', '\r',
+    '\u{8}', '\u{c}', '\u{0}', '\u{1f}', 'é', 'ß', '中',
+    '\u{2028}', '\u{d7ff}', '\u{e000}', '\u{fffd}', '😀', '𝄞',
+    '\u{10ffff}',
+];
+
+fn rand_string(rng: &mut Rng) -> String {
+    let len = rng.below(12);
+    (0..len).map(|_| STRING_POOL[rng.below(STRING_POOL.len())]).collect()
+}
+
+/// Numbers chosen to sit on the writer's edge cases: the signed zeros,
+/// whole values straddling the 1e15 integer-formatting cutoff, large
+/// negatives, and ordinary reals at assorted magnitudes.
+fn rand_num(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => -0.0,
+        1 => 0.0,
+        2 => 999_999_999_999_999.0, // largest whole below the cutoff
+        3 => 1.0e15,                // at the cutoff: float formatting
+        4 => -999_999_999_999_999.0,
+        5 => rng.below(2_000_001) as f64 - 1_000_000.0,
+        6 => rng.normal() * 1e9,
+        _ => rng.normal() * 1e-9,
+    }
+}
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+    let variants = if depth == 0 { 4 } else { 6 };
+    match rng.below(variants) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(rand_num(rng)),
+        3 => Json::Str(rand_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| rand_json(rng, depth - 1)).collect(),
+        ),
+        _ => {
+            let mut m = BTreeMap::new();
+            for i in 0..rng.below(5) {
+                // The index prefix keeps keys distinct even when the
+                // random suffixes collide.
+                m.insert(
+                    format!("{i}{}", rand_string(rng)),
+                    rand_json(rng, depth - 1),
+                );
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_serialise_parse_serialise_is_byte_identical() {
+    // The ISSUE 6 round-trip contract, as a property: any value tree —
+    // including −0.0, whole floats at the 1e15 formatting boundary and
+    // astral-plane strings — survives serialise → parse → serialise
+    // with byte-identical output.  (String equality rather than
+    // `PartialEq` on the trees: f64 equality would call -0.0 == 0.0.)
+    for_all(200, |rng| {
+        let tree = rand_json(rng, 3);
+        let s1 = tree.to_string();
+        let back = Json::parse(&s1).expect("writer output must parse");
+        let s2 = back.to_string();
+        assert_eq!(s1, s2, "round-trip changed bytes");
     });
 }
 

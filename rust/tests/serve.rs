@@ -1,0 +1,210 @@
+//! End-to-end tests of the serve daemon over real sockets: byte-identity
+//! of served reports against the engine, cross-request cache hits,
+//! admission rejection, and the state-dir advisory lock.
+
+use std::sync::Arc;
+use std::thread;
+
+use intdecomp::engine::{Engine, EngineConfig};
+use intdecomp::serve::{
+    self, bare_request, compress_request, Endpoint, ServeConfig, Server,
+};
+use intdecomp::shard::{self, LayerRecord, ModelSpec};
+use intdecomp::util::json::Json;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec {
+        n: 4,
+        d: 8,
+        k: 2,
+        gamma: 0.8,
+        instance_seed: 9,
+        layers: 2,
+        iters: 5,
+        restarts: 3,
+        batch_size: 1,
+        augment: false,
+        restart_workers: 1,
+        algo: "nbocs".into(),
+        solver: "sa".into(),
+        seed: 11,
+        cache_key_raw: false,
+    }
+}
+
+type Running = (Arc<Server>, Endpoint, thread::JoinHandle<anyhow::Result<()>>);
+
+fn start(max_inflight: usize) -> Running {
+    let server = Arc::new(
+        Server::bind(ServeConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+            max_inflight,
+            workers: 2,
+            state_dir: None,
+        })
+        .expect("bind on a free port"),
+    );
+    let endpoint = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let handle = thread::spawn(move || srv.run());
+    (server, endpoint, handle)
+}
+
+fn stop(endpoint: &Endpoint, handle: thread::JoinHandle<anyhow::Result<()>>) {
+    let bye = serve::request(endpoint, &bare_request("shutdown")).unwrap();
+    let last = Json::parse(bye.last().unwrap()).unwrap();
+    assert_eq!(last.get("type").and_then(Json::as_str), Some("bye"));
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn served_compression_is_byte_identical_and_warms_the_shared_cache() {
+    let spec = tiny_spec();
+    let fp = spec.fingerprint();
+
+    // Reference: the identical workload straight through the engine,
+    // exactly as `compress-model --report` builds it.
+    let jobs: Vec<_> =
+        (0..spec.layers).map(|i| spec.job(i).unwrap()).collect();
+    let eng = Engine::new(EngineConfig {
+        workers: 2,
+        restart_workers: spec.restart_workers,
+        batch_size: 1,
+    });
+    let results = eng.compress_all(jobs);
+    let records: Vec<LayerRecord> = results
+        .iter()
+        .enumerate()
+        .map(|(i, r)| LayerRecord::from_result(i, r))
+        .collect();
+    let expected = shard::deterministic_report(&records);
+
+    let (_server, endpoint, handle) = start(2);
+    let lines = serve::request(&endpoint, &compress_request(&spec)).unwrap();
+    // One streamed record line per layer plus the terminal done line,
+    // each record byte-identical to the shard result-log format.
+    assert_eq!(lines.len(), spec.layers + 1);
+    for (line, rec) in lines.iter().zip(&records) {
+        assert_eq!(line, &rec.to_json_line(&fp));
+        assert_eq!(
+            LayerRecord::parse_line(line, &fp).unwrap().name,
+            rec.name
+        );
+    }
+    let done = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(
+        done.get("fingerprint").and_then(Json::as_str),
+        Some(fp.as_str())
+    );
+    assert_eq!(
+        done.get("report").and_then(Json::as_str),
+        Some(expected.as_str()),
+        "served report must be byte-identical to the engine's"
+    );
+
+    // A second identical request: same bytes back, and the daemon's
+    // cross-request cache now shows hits for the shared fingerprint.
+    let again = serve::request(&endpoint, &compress_request(&spec)).unwrap();
+    let done2 = Json::parse(again.last().unwrap()).unwrap();
+    assert_eq!(
+        done2.get("report").and_then(Json::as_str),
+        Some(expected.as_str())
+    );
+    let stats = serve::request(&endpoint, &bare_request("stats")).unwrap();
+    let s = Json::parse(stats.last().unwrap()).unwrap();
+    assert_eq!(s.get("type").and_then(Json::as_str), Some("stats"));
+    assert_eq!(s.get("completed").and_then(Json::as_u64), Some(2));
+    assert_eq!(s.get("admitted").and_then(Json::as_u64), Some(2));
+    assert_eq!(s.get("cache_caches").and_then(Json::as_usize), Some(spec.layers));
+    let hits = s.get("cache_hits").and_then(Json::as_u64).unwrap();
+    assert!(hits > 0, "second identical request must hit the shared cache");
+    assert!(s.get("latency_p99_s").and_then(Json::as_f64).is_some());
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn full_daemon_answers_429_and_keeps_serving() {
+    // max_inflight = 0: every compress is an over-admission, which
+    // makes the rejection path deterministic.
+    let (_server, endpoint, handle) = start(0);
+    let lines =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    assert_eq!(lines.len(), 1);
+    let err = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err.get("type").and_then(Json::as_str), Some("error"));
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(429));
+    // The daemon survives the rejection: control requests still work
+    // and the counters recorded it.
+    let pong = serve::request(&endpoint, &bare_request("ping")).unwrap();
+    let p = Json::parse(&pong[0]).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    let stats = serve::request(&endpoint, &bare_request("stats")).unwrap();
+    let s = Json::parse(stats.last().unwrap()).unwrap();
+    assert_eq!(s.get("rejected").and_then(Json::as_u64), Some(1));
+    assert_eq!(s.get("admitted").and_then(Json::as_u64), Some(0));
+    assert_eq!(s.get("max_inflight").and_then(Json::as_u64), Some(0));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn malformed_requests_get_400() {
+    let (_server, endpoint, handle) = start(1);
+    for bad in ["torn {garbage", r#"{"type":"frobnicate"}"#, r#"{"type":"compress"}"#]
+    {
+        let lines = serve::request(&endpoint, bad).unwrap();
+        let err = Json::parse(&lines[0]).unwrap();
+        assert_eq!(err.get("type").and_then(Json::as_str), Some("error"));
+        assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
+    }
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn state_dir_lock_keeps_a_second_daemon_out() {
+    let dir = std::env::temp_dir()
+        .join(format!("intdecomp_serve_lock_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = || ServeConfig {
+        endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+        max_inflight: 1,
+        workers: 1,
+        state_dir: Some(dir.clone()),
+    };
+    let first = Server::bind(cfg()).unwrap();
+    let err = Server::bind(cfg()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("held by live process"),
+        "unexpected error: {err:#}"
+    );
+    drop(first);
+    let _second = Server::bind(cfg()).unwrap();
+    drop(_second);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_endpoint_serves_and_cleans_up() {
+    let path = std::env::temp_dir()
+        .join(format!("intdecomp_serve_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let server = Arc::new(
+        Server::bind(ServeConfig {
+            endpoint: Endpoint::Unix(path.clone()),
+            max_inflight: 1,
+            workers: 1,
+            state_dir: None,
+        })
+        .unwrap(),
+    );
+    let endpoint = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let handle = thread::spawn(move || srv.run());
+    let pong = serve::request(&endpoint, &bare_request("ping")).unwrap();
+    let p = Json::parse(&pong[0]).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    stop(&endpoint, handle);
+    drop(server);
+    assert!(!path.exists(), "socket file is removed when the server drops");
+}

@@ -203,6 +203,28 @@ fn merge_rejects_incomplete_and_mixed_plans() {
 }
 
 #[test]
+fn second_worker_on_a_locked_log_fails_fast() {
+    let spec = tiny_spec(2);
+    let dir = tmp_dir("locked");
+    let path = &shard::write_plan(&spec, 1, &dir).unwrap()[0];
+    let m = shard::Manifest::load(path).unwrap();
+    let log = shard::default_result_path(path);
+    let held = intdecomp::util::lockfile::LockFile::acquire(&log).unwrap();
+    let err = format!(
+        "{:#}",
+        shard::run_shard(&m, &log, 2, |_| {}).unwrap_err()
+    );
+    assert!(err.contains("held by live process"), "{err}");
+    drop(held);
+    // Released: the same call now runs, and drops its own lock after.
+    shard::run_shard(&m, &log, 2, |_| {}).unwrap();
+    assert!(
+        !intdecomp::util::lockfile::LockFile::path_for(&log).exists()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn progress_sink_reports_only_newly_computed_jobs_in_order() {
     let spec = tiny_spec(3);
     let dir = tmp_dir("progress");
