@@ -34,6 +34,7 @@ use crate::surrogate::{
     fm::{FactorizationMachine, FmTrainer},
     Dataset, Surrogate,
 };
+use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::{rng::Rng, timer::Timer};
 
 /// Paper algorithm selector.
@@ -325,6 +326,65 @@ pub fn run(
     backends: &Backends,
     seed: u64,
 ) -> BboRun {
+    match run_cancellable(
+        oracle,
+        algo,
+        solver,
+        cfg,
+        backends,
+        seed,
+        &CancelToken::never(),
+    ) {
+        Ok(run) => run,
+        Err(cause) => {
+            unreachable!("never-token run reported cancellation: {cause}")
+        }
+    }
+}
+
+/// [`run`] with cooperative cancellation: `cancel` is polled at every
+/// iteration boundary (each initial-design evaluation and each
+/// acquisition step — serial or batched), and a tripped token unwinds
+/// the run with its [`CancelCause`] before the next step starts.
+///
+/// The checks never touch the RNG or any numeric path, so a run that
+/// *completes* under a token is bit-identical to [`run`] with the same
+/// seed — the serve daemon's byte-identity contract for requests that
+/// finish.
+///
+/// ```
+/// use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+/// use intdecomp::instance::{generate, InstanceConfig};
+/// use intdecomp::solvers::sa::SimulatedAnnealing;
+/// use intdecomp::util::cancel::{CancelCause, CancelToken};
+///
+/// let icfg = InstanceConfig { n: 4, d: 10, k: 2, gamma: 0.8, seed: 7 };
+/// let p = generate(&icfg, 0);
+/// let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+/// let cfg = BboConfig::smoke_scale(p.n_bits(), 8);
+/// let tok = CancelToken::never();
+/// tok.cancel(); // already tripped: aborts before any evaluation
+/// let out = bbo::run_cancellable(
+///     &p,
+///     &Algorithm::Nbocs { sigma2: 0.1 },
+///     &sa,
+///     &cfg,
+///     &Backends::default(),
+///     1,
+///     &tok,
+/// );
+/// assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn run_cancellable(
+    oracle: &dyn Oracle,
+    algo: &Algorithm,
+    solver: &dyn IsingSolver,
+    cfg: &BboConfig,
+    backends: &Backends,
+    seed: u64,
+    cancel: &CancelToken,
+) -> Result<BboRun, CancelCause> {
     let total_timer = Timer::start();
     let mut rng = Rng::new(seed);
     let n = oracle.n_bits();
@@ -336,6 +396,9 @@ pub fn run(
 
     // Initial design.
     for _ in 0..cfg.n_init {
+        if let Some(cause) = cancel.cause() {
+            return Err(cause);
+        }
         let x = rng.spins(n);
         let t = Timer::start();
         let y = oracle.eval(&x);
@@ -356,6 +419,9 @@ pub fn run(
     let batch = cfg.batch_size.max(1);
     let mut acquired = 0;
     while acquired < cfg.iters {
+        if let Some(cause) = cancel.cause() {
+            return Err(cause);
+        }
         if batch == 1 {
             // Serial path — bit-for-bit the legacy stream.
             let x = match surrogate.as_mut() {
@@ -456,7 +522,7 @@ pub fn run(
         acquired += k_step;
     }
 
-    BboRun {
+    Ok(BboRun {
         algo: algo.label() + if cfg.augment { "a" } else { "" },
         solver: solver.name().into(),
         xs: trace.xs,
@@ -468,7 +534,7 @@ pub fn run(
         time_surrogate: t_sur,
         time_solver: t_sol,
         time_eval: t_eval,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -501,6 +567,68 @@ mod tests {
             assert!(w[1] <= w[0] + 1e-12);
         }
         assert!((run.best_curve.last().unwrap() - run.best_y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completed_cancellable_run_is_bit_identical_to_plain_run() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        let plain = run(&p, &algo, &sa, &cfg, &Backends::default(), 4);
+        let tok = CancelToken::never();
+        let cancellable = run_cancellable(
+            &p,
+            &algo,
+            &sa,
+            &cfg,
+            &Backends::default(),
+            4,
+            &tok,
+        )
+        .unwrap();
+        assert_eq!(plain.xs, cancellable.xs);
+        assert_eq!(plain.ys, cancellable.ys);
+        assert_eq!(plain.best_x, cancellable.best_x);
+        assert_eq!(plain.best_y, cancellable.best_y);
+    }
+
+    #[test]
+    fn pre_cancelled_token_aborts_before_any_evaluation() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        let tok = CancelToken::never();
+        tok.cancel();
+        let out = run_cancellable(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            4,
+            &tok,
+        );
+        assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+    }
+
+    #[test]
+    fn expired_deadline_aborts_with_deadline_cause() {
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        let tok =
+            CancelToken::with_deadline(std::time::Duration::from_millis(0));
+        let out = run_cancellable(
+            &p,
+            &Algorithm::Rs,
+            &sa,
+            &cfg,
+            &Backends::default(),
+            4,
+            &tok,
+        );
+        assert_eq!(out.unwrap_err(), CancelCause::DeadlineExceeded);
     }
 
     #[test]

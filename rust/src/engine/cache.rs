@@ -13,8 +13,14 @@
 //! value and costs only the wasted work.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Per-entry bookkeeping overhead added to the key payload when
+/// estimating a cache's memory footprint: hash-map slot, stored `f64`,
+/// `BinMatrix` header.  A deliberate round figure — the registry's byte
+/// budget is a sizing knob, not an allocator audit.
+const ENTRY_OVERHEAD: usize = 64;
 
 use crate::cost::BinMatrix;
 use crate::minlp::Oracle;
@@ -68,6 +74,7 @@ pub struct CostCache {
     map: Mutex<HashMap<BinMatrix, f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    bytes: AtomicUsize,
     canonical: bool,
 }
 
@@ -112,7 +119,10 @@ impl CostCache {
             }
             let c = eval(&key);
             self.misses.fetch_add(1, Ordering::Relaxed);
-            self.map.lock().unwrap().insert(key, c);
+            let weight = key.as_spins().len() + ENTRY_OVERHEAD;
+            if self.map.lock().unwrap().insert(key, c).is_none() {
+                self.bytes.fetch_add(weight, Ordering::Relaxed);
+            }
             return c;
         }
         if let Some(&c) = self.map.lock().unwrap().get(m) {
@@ -121,7 +131,10 @@ impl CostCache {
         }
         let c = eval(m);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map.lock().unwrap().insert(m.clone(), c);
+        let weight = m.as_spins().len() + ENTRY_OVERHEAD;
+        if self.map.lock().unwrap().insert(m.clone(), c).is_none() {
+            self.bytes.fetch_add(weight, Ordering::Relaxed);
+        }
         c
     }
 
@@ -133,6 +146,14 @@ impl CostCache {
     /// True when nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Estimated resident bytes: per-entry key payload (one byte per
+    /// spin) plus a flat bookkeeping overhead.  Monotone over a cache's
+    /// lifetime (entries are never removed); the serve registry sums
+    /// this across instances to enforce its `--cache-budget-bytes`.
+    pub fn approx_bytes(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
     }
 
     /// Snapshot of the hit/miss counters.
@@ -278,6 +299,26 @@ mod tests {
         // Same stored float, and orbit-invariance says it's the true cost.
         assert_eq!(y1, y2);
         assert!((y2 - p.cost(&t)).abs() < 1e-9 * (1.0 + y2));
+    }
+
+    #[test]
+    fn approx_bytes_counts_fresh_inserts_once() {
+        let p = tiny();
+        let cache = CostCache::new();
+        let oracle = CachedOracle::new(&p, &cache, p.n(), p.k);
+        assert_eq!(cache.approx_bytes(), 0);
+        let mut rng = Rng::new(7);
+        let x = rng.spins(p.n_bits());
+        let _ = oracle.eval(&x);
+        let per_entry = p.n_bits() + ENTRY_OVERHEAD;
+        assert_eq!(cache.approx_bytes(), per_entry);
+        let _ = oracle.eval(&x); // hit: no growth
+        assert_eq!(cache.approx_bytes(), per_entry);
+        let mut x2 = x.clone();
+        x2[0] = -x2[0];
+        let _ = oracle.eval(&x2);
+        assert_eq!(cache.approx_bytes(), 2 * per_entry);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -46,6 +46,7 @@
 pub mod cache;
 
 pub use cache::{CacheStats, CachedOracle, CostCache};
+pub use crate::util::cancel::{CancelCause, CancelToken};
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -56,7 +57,7 @@ use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun};
 use crate::cost::{compression_ratio, BinMatrix, Problem};
 use crate::report;
 use crate::solvers::{self, IsingSolver};
-use crate::util::threadpool::{default_workers, parallel_map, WorkerPool};
+use crate::util::threadpool::{default_workers, WorkerPool};
 
 /// Float width used for all size/ratio reporting (the paper's f32 layers).
 const FLOAT_BITS: usize = 32;
@@ -126,6 +127,14 @@ pub struct CompressionJob {
     /// replay of the *uncached* run.  Must be fed only by jobs of the
     /// same problem instance and layer.
     pub shared_cache: Option<Arc<CostCache>>,
+    /// Cooperative cancellation token, polled at every BBO iteration
+    /// boundary ([`crate::bbo::run_cancellable`]).  The default
+    /// ([`CancelToken::never`]) never trips; a tripped token makes the
+    /// job unwind with its [`CancelCause`] — observable only through
+    /// [`Engine::try_compress_each`] (the infallible entry points treat
+    /// cancellation as a bug and panic).  A job that *completes* under
+    /// a token is bit-identical to one run without it.
+    pub cancel: CancelToken,
 }
 
 impl CompressionJob {
@@ -147,6 +156,7 @@ impl CompressionJob {
             seed,
             cache_mode: CacheKeyMode::Canonical,
             shared_cache: None,
+            cancel: CancelToken::never(),
         }
     }
 
@@ -180,6 +190,13 @@ impl CompressionJob {
     /// [`CompressionJob::shared_cache`] for the soundness conditions.
     pub fn with_shared_cache(mut self, shared: Arc<CostCache>) -> Self {
         self.shared_cache = Some(shared);
+        self
+    }
+
+    /// Attach a cancellation token (builder style) — see
+    /// [`CompressionJob::cancel`].
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = cancel;
         self
     }
 }
@@ -261,12 +278,13 @@ impl Engine {
     /// Results come back in job order regardless of scheduling, and each
     /// is a pure function of the job (see module docs), so any worker
     /// count yields identical output.
+    ///
+    /// Panics if a job carries a tripped [`CancelToken`] — use
+    /// [`Engine::try_compress_each`] for cancellable work.
     pub fn compress_all(&self, jobs: Vec<CompressionJob>) -> Vec<JobResult> {
-        let restart_workers = self.cfg.restart_workers;
-        let batch_size = self.cfg.batch_size;
-        parallel_map(jobs, self.cfg.workers, move |job| {
-            run_job(job, restart_workers, batch_size)
-        })
+        let mut out = Vec::with_capacity(jobs.len());
+        self.compress_each(jobs, |_, result| out.push(result));
+        out
     }
 
     /// Compress every job like [`Engine::compress_all`], but deliver
@@ -276,15 +294,47 @@ impl Engine {
     /// ([`crate::shard::run_shard`] appends one durable record per
     /// sink call).
     ///
+    /// Panics if a job carries a tripped [`CancelToken`] — use
+    /// [`Engine::try_compress_each`] for cancellable work.
+    pub fn compress_each<F>(&self, jobs: Vec<CompressionJob>, sink: F)
+    where
+        F: FnMut(usize, JobResult),
+    {
+        if let Err(cause) = self.try_compress_each(jobs, sink) {
+            panic!(
+                "job cancelled ({cause}) on an infallible engine entry \
+                 point; cancellable jobs go through try_compress_each"
+            );
+        }
+    }
+
+    /// The cancellable streaming core under [`Engine::compress_each`]:
+    /// deliver each [`JobResult`] to `sink` in job order as soon as it
+    /// and every earlier job have finished, or stop early with the
+    /// first (lowest job index) [`CancelCause`] once a job's
+    /// [`CancelToken`] trips.
+    ///
     /// Up to `cfg.workers` jobs run concurrently on the process-wide
     /// pool; out-of-order completions are buffered so the sink always
-    /// observes the prefix `0, 1, 2, ..` of finished jobs.  Results are
-    /// identical to `compress_all` for any worker count; with
-    /// `cfg.workers == 1` jobs run inline on the calling thread, the
-    /// bit-for-bit legacy serial path.  A panicking job is re-raised on
-    /// the calling thread once observed, matching the
-    /// [`parallel_map`] panic policy.
-    pub fn compress_each<F>(&self, jobs: Vec<CompressionJob>, mut sink: F)
+    /// observes the prefix `0, 1, 2, ..` of finished jobs, and results
+    /// are identical to [`Engine::compress_all`] for any worker count.
+    /// With `cfg.workers == 1` jobs run inline on the calling thread,
+    /// the bit-for-bit legacy serial path.  A panicking job is
+    /// re-raised on the calling thread once observed, matching the
+    /// [`crate::util::threadpool::parallel_map`] panic policy.
+    ///
+    /// On cancellation: no further jobs are submitted, in-flight jobs
+    /// are drained (they observe the shared token at their next
+    /// iteration boundary, so the drain is prompt), the sink never sees
+    /// a job at or past the cancelled index, and `Err(cause)` is
+    /// returned only after every spawned job has left the pool — the
+    /// caller can release resources (e.g. the serve daemon's admission
+    /// permit) knowing no stray job still runs.
+    pub fn try_compress_each<F>(
+        &self,
+        jobs: Vec<CompressionJob>,
+        mut sink: F,
+    ) -> Result<(), CancelCause>
     where
         F: FnMut(usize, JobResult),
     {
@@ -293,9 +343,9 @@ impl Engine {
         let cap = self.cfg.workers.max(1);
         if cap == 1 || jobs.len() <= 1 {
             for (i, job) in jobs.into_iter().enumerate() {
-                sink(i, run_job(job, restart_workers, batch_size));
+                sink(i, run_job(job, restart_workers, batch_size)?);
             }
-            return;
+            return Ok(());
         }
         let pool = WorkerPool::global();
         let (tx, rx) = channel();
@@ -303,9 +353,10 @@ impl Engine {
         let mut in_flight = 0usize;
         let mut pending: BTreeMap<usize, JobResult> = BTreeMap::new();
         let mut next_emit = 0usize;
+        let mut cancelled: Option<(usize, CancelCause)> = None;
         loop {
-            // Keep up to `cap` jobs on the pool.
-            while in_flight < cap {
+            // Keep up to `cap` jobs on the pool (none once cancelled).
+            while in_flight < cap && cancelled.is_none() {
                 let Some((i, job)) = queue.next() else { break };
                 let tx = tx.clone();
                 pool.submit(move || {
@@ -324,16 +375,36 @@ impl Engine {
                 .expect("engine job dropped its result channel");
             in_flight -= 1;
             match out {
-                Ok(result) => {
+                Ok(Ok(result)) => {
                     pending.insert(i, result);
+                }
+                Ok(Err(cause)) => {
+                    // Remember the earliest cancelled job; later
+                    // completions may still fill the sink's prefix
+                    // below it.
+                    let earliest = match cancelled {
+                        Some((j, _)) => i < j,
+                        None => true,
+                    };
+                    if earliest {
+                        cancelled = Some((i, cause));
+                    }
                 }
                 Err(payload) => resume_unwind(payload),
             }
-            // Emit the finished prefix in job order.
+            // Emit the finished prefix in job order; a cancelled index
+            // never enters `pending`, so emission stops at the gap.
             while let Some(result) = pending.remove(&next_emit) {
+                if cancelled.is_some_and(|(j, _)| next_emit >= j) {
+                    break;
+                }
                 sink(next_emit, result);
                 next_emit += 1;
             }
+        }
+        match cancelled {
+            Some((_, cause)) => Err(cause),
+            None => Ok(()),
         }
     }
 }
@@ -342,7 +413,7 @@ fn run_job(
     job: CompressionJob,
     restart_workers: usize,
     batch_size: usize,
-) -> JobResult {
+) -> Result<JobResult, CancelCause> {
     let cache = match job.cache_mode {
         CacheKeyMode::Exact => CostCache::new(),
         CacheKeyMode::Canonical => CostCache::with_canonical_keys(),
@@ -368,18 +439,19 @@ fn run_job(
     if batch_size > 1 {
         cfg.batch_size = batch_size;
     }
-    let run = bbo::run(
+    let run = bbo::run_cancellable(
         &oracle,
         &job.algo,
         job.solver.as_ref(),
         &cfg,
         &Backends::default(),
         job.seed,
-    );
+        &job.cancel,
+    )?;
     let best_m =
         BinMatrix::from_spins(job.problem.n(), job.problem.k, &run.best_x);
     let normalised_error = job.problem.normalised_error(run.best_y);
-    JobResult {
+    Ok(JobResult {
         name: job.name,
         n: job.problem.n(),
         d: job.problem.d(),
@@ -394,7 +466,7 @@ fn run_job(
         ),
         normalised_error,
         run,
-    }
+    })
 }
 
 /// Aggregate compressed/original size over all jobs: each layer's
@@ -637,6 +709,61 @@ mod tests {
         assert!(r[0].cache.lookups() > 0);
         assert_eq!(shared.stats().lookups(), 0);
         assert!(shared.is_empty());
+    }
+
+    #[test]
+    fn pre_cancelled_jobs_abort_try_compress_each() {
+        for workers in [1usize, 4] {
+            let tok = CancelToken::never();
+            tok.cancel();
+            let jobs: Vec<_> = (0..3)
+                .map(|i| tiny_job(i, 6).with_cancel(tok.clone()))
+                .collect();
+            let mut sunk = Vec::new();
+            let out = Engine::with_workers(workers)
+                .try_compress_each(jobs, |i, _| sunk.push(i));
+            assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+            assert!(sunk.is_empty(), "workers = {workers}: sank {sunk:?}");
+        }
+    }
+
+    #[test]
+    fn mid_stream_cancel_stops_after_the_emitted_prefix() {
+        // Cancel from the sink after job 0 lands: with the shared
+        // token, later jobs unwind at their next iteration boundary
+        // and the stream reports the cancellation.
+        let tok = CancelToken::never();
+        let jobs: Vec<_> = (0..4)
+            .map(|i| tiny_job(i, 6).with_cancel(tok.clone()))
+            .collect();
+        let mut sunk = Vec::new();
+        let out = Engine::with_workers(1).try_compress_each(jobs, |i, _| {
+            sunk.push(i);
+            tok.cancel();
+        });
+        assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+        assert_eq!(sunk, vec![0]);
+    }
+
+    #[test]
+    fn completed_jobs_are_identical_with_and_without_a_token() {
+        let plain = Engine::with_workers(2)
+            .compress_all((0..3).map(|i| tiny_job(i, 6)).collect());
+        let tok = CancelToken::never();
+        let mut tokened = Vec::new();
+        Engine::with_workers(2)
+            .try_compress_each(
+                (0..3)
+                    .map(|i| tiny_job(i, 6).with_cancel(tok.clone()))
+                    .collect(),
+                |_, r| tokened.push(r),
+            )
+            .unwrap();
+        for (a, b) in plain.iter().zip(&tokened) {
+            assert_eq!(a.run.ys, b.run.ys);
+            assert_eq!(a.run.best_x, b.run.best_x);
+            assert_eq!(a.cache, b.cache);
+        }
     }
 
     #[test]

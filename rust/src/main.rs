@@ -107,10 +107,12 @@ USAGE: intdecomp <subcommand> [flags]
                    (--report FILE, --csv FILE)
   serve            long-lived compression daemon: line-delimited JSON
                    requests over --addr HOST:PORT or --socket PATH,
-                   bounded admission (--max-inflight; excess gets an
-                   explicit 429 line), a process-wide cross-request
-                   evaluation cache, and a stats endpoint; served
-                   reports are byte-identical to compress-model
+                   bounded admission (--max-inflight / --max-per-client
+                   / --admit-queue; excess gets an explicit 429 line),
+                   a budgeted LRU cross-request evaluation cache
+                   (--cache-budget[-bytes]), per-request deadlines and
+                   disconnect cancellation, and a stats endpoint;
+                   served reports are byte-identical to compress-model
   serve-request    client for a running daemon: --stats | --ping |
                    --shutdown, or the compress-model flags to submit
                    a compression (--report FILE saves the served
@@ -170,12 +172,30 @@ FLAGS (defaults in parens):
   --socket PATH     serve / serve-request: Unix-domain socket endpoint
                     (overrides --addr; Unix platforms only)
   --max-inflight N  serve: concurrent compress requests admitted
-                    before the daemon answers 429 (2)
+                    before the daemon queues or answers 429 (2)
+  --max-per-client N
+                    serve: per-client cap on held requests — running
+                    plus queued; clients are keyed by peer IP on TCP
+                    (0 = no per-client cap)
+  --admit-queue N   serve: bounded admission wait queue; requests
+                    beyond max-inflight wait here instead of bouncing,
+                    overflow still gets 429 (0 = reject immediately)
+  --cache-budget N  serve: cap on cross-request cache entries; the LRU
+                    instance cache is evicted past it (0 disables the
+                    shared cache; unset = unbounded)
+  --cache-budget-bytes N
+                    serve: same cap in estimated bytes
+  --line-timeout-ms N
+                    serve: a partially received request line older
+                    than this is a 400 slow-loris rejection (10000;
+                    0 = never)
   --state DIR       serve: optional state directory guarded by the
                     shard advisory lock (one daemon per directory)
   --stats / --ping / --shutdown
                     serve-request: send a control request instead of
                     a compression
+  --deadline-ms N   serve-request: per-request wall-time bound; the
+                    daemon aborts past it with a 'deadline' line
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -508,16 +528,35 @@ fn serve_endpoint(args: &Args) -> Result<serve::Endpoint> {
 
 /// Run the long-lived compression daemon until a shutdown request.
 fn cmd_serve(args: &Args) -> Result<()> {
+    let parse_cap = |key: &str| -> Result<Option<usize>> {
+        match args.flags.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse::<usize>().map_err(|_| {
+                anyhow!("--{key} {v}: expected a non-negative integer")
+            })?)),
+        }
+    };
     let cfg = serve::ServeConfig {
         endpoint: serve_endpoint(args)?,
         max_inflight: args
             .usize_flag("max-inflight", 2)
             .map_err(|e| anyhow!(e))?,
+        max_per_client: args
+            .usize_flag("max-per-client", 0)
+            .map_err(|e| anyhow!(e))?,
+        queue: args.usize_flag("admit-queue", 0).map_err(|e| anyhow!(e))?,
         workers: args
             .usize_flag(
                 "workers",
                 intdecomp::util::threadpool::default_workers(),
             )
+            .map_err(|e| anyhow!(e))?,
+        cache_budget: serve::CacheBudget {
+            entries: parse_cap("cache-budget")?,
+            bytes: parse_cap("cache-budget-bytes")?,
+        },
+        line_timeout_ms: args
+            .u64_flag("line-timeout-ms", 10_000)
             .map_err(|e| anyhow!(e))?,
         state_dir: args.flags.get("state").map(PathBuf::from),
     };
@@ -547,7 +586,15 @@ fn cmd_serve_request(args: &Args) -> Result<()> {
         serve::bare_request("shutdown")
     } else {
         let (spec, _cfg) = model_spec_from_args(args)?;
-        serve::compress_request(&spec)
+        match args.flags.get("deadline-ms") {
+            Some(v) => {
+                let ms = v.parse::<u64>().map_err(|_| {
+                    anyhow!("--deadline-ms {v}: expected a u64")
+                })?;
+                serve::compress_request_with_deadline(&spec, ms)
+            }
+            None => serve::compress_request(&spec),
+        }
     };
     let lines = serve::request(&endpoint, &line)?;
     for l in &lines {
@@ -562,6 +609,16 @@ fn cmd_serve_request(args: &Args) -> Result<()> {
             .and_then(Json::as_str)
             .unwrap_or("unknown error");
         bail!("server error {code}: {msg}");
+    }
+    match j.get("type").and_then(Json::as_str) {
+        Some(ty @ ("cancelled" | "deadline")) => {
+            let done = j
+                .get("layers_done")
+                .and_then(Json::as_usize)
+                .unwrap_or(0);
+            bail!("request aborted ({ty}) after {done} layers");
+        }
+        _ => {}
     }
     if let Some(path) = args.flags.get("report") {
         let report = j
@@ -888,7 +945,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             endpoint: serve::Endpoint::Tcp("127.0.0.1:0".into()),
             max_inflight: 4,
             workers,
-            state_dir: None,
+            ..Default::default()
         })?);
         let endpoint = server.local_endpoint().clone();
         let srv = Arc::clone(&server);
@@ -927,8 +984,57 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }),
             &mut all,
         );
+        // Deadline abort path (ISSUE 7): a ~0 ms deadline must come
+        // back as a typed 'deadline' terminal line without touching
+        // the engine — this row tracks the daemon's rejection latency.
+        let dline = serve::compress_request_with_deadline(&spec, 1);
+        note(
+            b.run("serve/compress deadline_ms=1 abort", 1, || {
+                serve::request(&endpoint, &dline)
+                    .map(|ls| ls.len())
+                    .unwrap_or(0)
+            }),
+            &mut all,
+        );
         let _ = serve::request(&endpoint, &serve::bare_request("shutdown"));
         let _ = handle.join();
+    }
+
+    // Registry LRU churn (ISSUE 7): fill per-instance caches past an
+    // entry budget and sweep — the cost of the daemon's post-request
+    // `enforce()` under steady eviction pressure.
+    {
+        use intdecomp::cost::BinMatrix;
+        let reg = serve::CacheRegistry::with_budget(serve::CacheBudget {
+            entries: Some(64),
+            bytes: None,
+        });
+        note(
+            b.run("serve/registry lru churn x32", 32, || {
+                let mut evicted = 0usize;
+                for round in 0..32usize {
+                    let cache = reg
+                        .get(&format!("bench-l{}", round % 8))
+                        .expect("budgeted registry");
+                    for i in 0..16usize {
+                        let spins: Vec<i8> = (0..16)
+                            .map(|b| {
+                                if ((round * 16 + i) >> b) & 1 == 1 {
+                                    1
+                                } else {
+                                    -1
+                                }
+                            })
+                            .collect();
+                        let m = BinMatrix::new(16, 1, spins);
+                        cache.get_or_eval(&m, |_| i as f64);
+                    }
+                    evicted += reg.enforce();
+                }
+                evicted
+            }),
+            &mut all,
+        );
     }
 
     if args.bool_flag("json") {

@@ -1,4 +1,5 @@
-//! The daemon's process-wide cross-request cache store.
+//! The daemon's process-wide cross-request cache store, bounded by an
+//! operator budget.
 //!
 //! One canonical-orbit [`CostCache`] per *instance layer*
 //! ([`crate::shard::ModelSpec::instance_key`]): the cost is a function
@@ -10,73 +11,329 @@
 //! caches as their second level
 //! ([`crate::engine::CompressionJob::shared_cache`]), which leaves
 //! per-request reports byte-identical to the cold CLI path.
+//!
+//! # Bounding
+//!
+//! A long-lived daemon serving many distinct models would otherwise
+//! grow without bound, so the registry takes a [`CacheBudget`]
+//! (entry and/or byte caps) and evicts **whole caches, least recently
+//! used first** when [`CacheRegistry::enforce`] runs (the server calls
+//! it after every request).  Whole-cache eviction is the only unit
+//! that preserves the byte-identity contract cheaply: a partially
+//! evicted cache would change which lookups hit, but dropping an
+//! entire instance's cache just means the next request for it
+//! recomputes from cold — same values, same report.  Jobs hold their
+//! own `Arc` for the duration of a run, so eviction can never
+//! invalidate an in-flight evaluation.  Hit/miss counts of evicted
+//! caches are folded into a retired total, keeping the daemon's
+//! aggregate counters monotone across evictions.
+//!
+//! A budget of zero entries (or zero bytes) turns the registry into a
+//! pass-through: [`CacheRegistry::get`] returns `None` and jobs run
+//! with their local caches only — never an error, never a stored byte.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::engine::{CacheStats, CostCache};
 
-/// Registry of shared per-instance-layer caches.
+/// Operator-facing registry bound: `None` means unbounded on that
+/// axis; `Some(0)` on either axis disables cross-request caching
+/// entirely (pass-through mode).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheBudget {
+    /// Cap on total stored entries across all caches.
+    pub entries: Option<usize>,
+    /// Cap on total estimated bytes ([`CostCache::approx_bytes`])
+    /// across all caches.
+    pub bytes: Option<usize>,
+}
+
+impl CacheBudget {
+    /// No caps on either axis (the registry never evicts).
+    pub fn unbounded() -> Self {
+        CacheBudget::default()
+    }
+
+    /// True when either axis is capped at zero: nothing may ever be
+    /// stored, so the registry hands out no shared caches at all.
+    pub fn is_pass_through(&self) -> bool {
+        self.entries == Some(0) || self.bytes == Some(0)
+    }
+}
+
+/// Point-in-time registry accounting, as exposed by the daemon's
+/// `stats` reply.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Live caches (distinct instance keys currently resident).
+    pub caches: usize,
+    /// Entries stored across live caches.
+    pub entries: usize,
+    /// Estimated bytes across live caches.
+    pub bytes: usize,
+    /// Whole caches evicted since startup (monotone).
+    pub evicted_caches: u64,
+    /// Entries dropped with those caches (monotone).
+    pub evicted_entries: u64,
+    /// Hit/miss totals across live *and* evicted caches (monotone).
+    pub cache: CacheStats,
+}
+
+struct Slot {
+    cache: Arc<CostCache>,
+    /// Logical timestamp of the last `get`; smallest = evict first.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Slot>,
+    tick: u64,
+    evicted_caches: u64,
+    evicted_entries: u64,
+    /// Hit/miss totals folded in from evicted caches, so aggregate
+    /// counters never move backwards when a cache is dropped.
+    retired: CacheStats,
+}
+
+/// Registry of shared per-instance-layer caches with LRU eviction
+/// under a [`CacheBudget`].
 #[derive(Default)]
 pub struct CacheRegistry {
-    map: Mutex<HashMap<String, Arc<CostCache>>>,
+    budget: CacheBudget,
+    inner: Mutex<Inner>,
 }
 
 impl CacheRegistry {
-    /// Empty registry.
+    /// Empty, unbounded registry.
     pub fn new() -> Self {
         CacheRegistry::default()
     }
 
+    /// Empty registry that [`CacheRegistry::enforce`] holds to
+    /// `budget`.
+    pub fn with_budget(budget: CacheBudget) -> Self {
+        CacheRegistry { budget, ..Default::default() }
+    }
+
+    /// The configured budget.
+    pub fn budget(&self) -> CacheBudget {
+        self.budget
+    }
+
     /// The shared cache for one instance key, created (canonical-orbit
-    /// mode) on first use.
-    pub fn get(&self, key: &str) -> Arc<CostCache> {
-        let mut map = self.map.lock().unwrap();
-        map.entry(key.to_string())
-            .or_insert_with(|| Arc::new(CostCache::with_canonical_keys()))
-            .clone()
-    }
-
-    /// Distinct instance keys seen so far.
-    pub fn caches(&self) -> usize {
-        self.map.lock().unwrap().len()
-    }
-
-    /// Aggregate over every cache: (stored entries, hit/miss totals).
-    /// The hits are the daemon's *cross-request* savings — evaluations
-    /// short-circuited by some earlier request's work (or a concurrent
-    /// sibling job's; a request alone in a cold daemon contributes no
-    /// shared hits because its per-job local caches absorb repeats
-    /// first).
-    pub fn stats(&self) -> (usize, CacheStats) {
-        let map = self.map.lock().unwrap();
-        let mut entries = 0usize;
-        let mut total = CacheStats::default();
-        for cache in map.values() {
-            entries += cache.len();
-            let s = cache.stats();
-            total.hits += s.hits;
-            total.misses += s.misses;
+    /// mode) on first use and marked most-recently-used.  `None` in
+    /// pass-through mode (zero budget): the caller runs the job with
+    /// local caches only.
+    pub fn get(&self, key: &str) -> Option<Arc<CostCache>> {
+        if self.budget.is_pass_through() {
+            return None;
         }
-        (entries, total)
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner
+            .map
+            .entry(key.to_string())
+            .or_insert_with(|| Slot {
+                cache: Arc::new(CostCache::with_canonical_keys()),
+                last_used: 0,
+            });
+        slot.last_used = tick;
+        Some(slot.cache.clone())
     }
+
+    /// Evict least-recently-used caches until the live totals fit the
+    /// budget; returns how many caches were dropped.  Runs after each
+    /// request rather than inside `get` so a request's own cache is
+    /// never pulled out from under it mid-run (jobs also hold their
+    /// own `Arc`, making eviction safe regardless).
+    pub fn enforce(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut dropped = 0usize;
+        loop {
+            let (entries, bytes) = live_totals(&inner.map);
+            let over_entries = match self.budget.entries {
+                Some(cap) => entries > cap,
+                None => false,
+            };
+            let over_bytes = match self.budget.bytes {
+                Some(cap) => bytes > cap,
+                None => false,
+            };
+            if !over_entries && !over_bytes {
+                break;
+            }
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(key) = victim else { break };
+            if let Some(slot) = inner.map.remove(&key) {
+                let s = slot.cache.stats();
+                inner.retired.hits += s.hits;
+                inner.retired.misses += s.misses;
+                inner.evicted_entries += slot.cache.len() as u64;
+                inner.evicted_caches += 1;
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    /// Distinct instance keys currently resident.
+    pub fn caches(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Aggregate accounting: live sizes plus monotone eviction and
+    /// hit/miss totals.  The hits are the daemon's *cross-request*
+    /// savings — evaluations short-circuited by some earlier request's
+    /// work (or a concurrent sibling job's; a request alone in a cold
+    /// daemon contributes no shared hits because its per-job local
+    /// caches absorb repeats first).
+    pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().unwrap();
+        let (entries, bytes) = live_totals(&inner.map);
+        let mut cache = inner.retired;
+        for slot in inner.map.values() {
+            let s = slot.cache.stats();
+            cache.hits += s.hits;
+            cache.misses += s.misses;
+        }
+        RegistryStats {
+            caches: inner.map.len(),
+            entries,
+            bytes,
+            evicted_caches: inner.evicted_caches,
+            evicted_entries: inner.evicted_entries,
+            cache,
+        }
+    }
+}
+
+fn live_totals(map: &HashMap<String, Slot>) -> (usize, usize) {
+    let mut entries = 0usize;
+    let mut bytes = 0usize;
+    for slot in map.values() {
+        entries += slot.cache.len();
+        bytes += slot.cache.approx_bytes();
+    }
+    (entries, bytes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::BinMatrix;
+
+    /// Store `n` distinct entries in the registry's cache for `key`.
+    fn fill(reg: &CacheRegistry, key: &str, n: usize) -> Arc<CostCache> {
+        let cache = reg.get(key).expect("budgeted registry refused a get");
+        for i in 0..n {
+            let spins: Vec<i8> = (0..8)
+                .map(|b| if (i >> b) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            let m = BinMatrix::new(8, 1, spins);
+            cache.get_or_eval(&m, |_| i as f64);
+        }
+        cache
+    }
 
     #[test]
     fn same_key_shares_one_cache() {
         let reg = CacheRegistry::new();
-        let a = reg.get("n4-l0");
-        let b = reg.get("n4-l0");
-        let c = reg.get("n4-l1");
+        let a = reg.get("n4-l0").unwrap();
+        let b = reg.get("n4-l0").unwrap();
+        let c = reg.get("n4-l1").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(reg.caches(), 2);
-        let (entries, stats) = reg.stats();
-        assert_eq!(entries, 0);
-        assert_eq!(stats, CacheStats::default());
+        let s = reg.stats();
+        assert_eq!((s.entries, s.cache), (0, CacheStats::default()));
+    }
+
+    #[test]
+    fn unbounded_registry_never_evicts() {
+        let reg = CacheRegistry::new();
+        for l in 0..16 {
+            fill(&reg, &format!("k-l{l}"), 4);
+        }
+        assert_eq!(reg.enforce(), 0);
+        let s = reg.stats();
+        assert_eq!((s.caches, s.entries), (16, 64));
+        assert_eq!(s.evicted_caches, 0);
+    }
+
+    #[test]
+    fn lru_eviction_drops_the_coldest_key_with_exact_accounting() {
+        let budget =
+            CacheBudget { entries: Some(8), bytes: None };
+        let reg = CacheRegistry::with_budget(budget);
+        fill(&reg, "a", 4);
+        fill(&reg, "b", 4);
+        // Touch "a" so "b" is the LRU victim.
+        let _ = reg.get("a");
+        fill(&reg, "c", 4); // 12 entries > 8
+        assert_eq!(reg.enforce(), 1);
+        assert!(reg.get("b").unwrap().is_empty(), "b was evicted");
+        assert!(!reg.get("a").unwrap().is_empty(), "a survived");
+        assert!(!reg.get("c").unwrap().is_empty(), "c survived");
+        let s = reg.stats();
+        assert_eq!(s.evicted_caches, 1);
+        assert_eq!(s.evicted_entries, 4);
+        // 12 misses total (4 per fill); evicting "b" must not lose its
+        // 4 from the aggregate.
+        assert_eq!(s.cache.misses, 12);
+    }
+
+    #[test]
+    fn byte_budget_evicts_and_recompute_is_identical() {
+        // Each fill(…, 4) entry weighs 8 spins + overhead.
+        let per_entry = 8 + 64;
+        let budget = CacheBudget {
+            entries: None,
+            bytes: Some(6 * per_entry),
+        };
+        let reg = CacheRegistry::with_budget(budget);
+        let first = fill(&reg, "a", 4);
+        let before: f64 = {
+            let spins: Vec<i8> = (0..8)
+                .map(|b| if (2usize >> b) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            first.get_or_eval(&BinMatrix::new(8, 1, spins), |_| {
+                panic!("entry 2 must already be cached")
+            })
+        };
+        fill(&reg, "b", 4); // 8 entries * per_entry > budget
+        assert!(reg.enforce() >= 1);
+        assert!(reg.stats().bytes <= 6 * per_entry);
+        // "a" was the LRU victim; refilling recomputes the same value.
+        let after: f64 = {
+            let cache = fill(&reg, "a", 4);
+            let spins: Vec<i8> = (0..8)
+                .map(|b| if (2usize >> b) & 1 == 1 { 1 } else { -1 })
+                .collect();
+            cache.get_or_eval(&BinMatrix::new(8, 1, spins), |_| 2.0)
+        };
+        assert_eq!(before.to_bits(), after.to_bits());
+    }
+
+    #[test]
+    fn zero_budget_is_pass_through() {
+        for budget in [
+            CacheBudget { entries: Some(0), bytes: None },
+            CacheBudget { entries: None, bytes: Some(0) },
+        ] {
+            assert!(budget.is_pass_through());
+            let reg = CacheRegistry::with_budget(budget);
+            assert!(reg.get("k").is_none());
+            assert_eq!(reg.enforce(), 0);
+            let s = reg.stats();
+            assert_eq!((s.caches, s.entries, s.bytes), (0, 0, 0));
+        }
+        assert!(!CacheBudget::unbounded().is_pass_through());
     }
 }

@@ -16,11 +16,25 @@
 //!   or overlapping requests skip evaluations earlier requests already
 //!   paid for, without perturbing any request's own report.
 //! * **Admission control** — [`Admission`] bounds concurrent compress
-//!   requests; excess load gets an explicit `429` error line instead of
-//!   an invisible queue, and the connection survives for a retry.
-//! * **Observability** — a `stats` request reports cache hit-rate,
-//!   queue depth, admission counters and per-request latency
-//!   percentiles ([`Metrics`]).
+//!   requests globally, per client (peer IP on TCP) and through an
+//!   optional bounded wait queue; excess load gets an explicit `429`
+//!   error line instead of an invisible queue, and the connection
+//!   survives for a retry.
+//! * **Cancellation and deadlines** — a client disconnect cancels its
+//!   in-flight request at the next iteration boundary (permit
+//!   released, typed `cancelled` trailer written best-effort), and a
+//!   per-request `deadline_ms` in the envelope bounds wall time with a
+//!   typed `deadline` trailer.  Runs that *complete* stay
+//!   byte-identical to the CLI: cancellation checks never touch RNG or
+//!   numeric state.
+//! * **Bounded memory** — the registry takes a [`CacheBudget`]
+//!   (entry/byte caps) and evicts whole per-instance caches LRU-first
+//!   after each request; a zero budget disables cross-request caching
+//!   entirely.  Slow-loris partial lines and oversized request lines
+//!   are cut off with a `400` without disturbing other connections.
+//! * **Observability** — a `stats` request reports cache sizes and
+//!   eviction totals, hit-rate, queue depth, admission/cancellation
+//!   counters and per-request latency percentiles ([`Metrics`]).
 //!
 //! [`ModelSpec`]: crate::shard::ModelSpec
 //! [`LayerRecord`]: crate::shard::LayerRecord
@@ -31,11 +45,12 @@ pub mod cache;
 pub mod protocol;
 pub mod server;
 
-pub use cache::CacheRegistry;
+pub use cache::{CacheBudget, CacheRegistry, RegistryStats};
 pub use protocol::{
-    bare_request, compress_request, Request, SERVE_SCHEMA,
+    bare_request, compress_request, compress_request_with_deadline,
+    Request, SERVE_SCHEMA,
 };
 pub use server::{
-    request, Admission, Endpoint, Metrics, MetricsSnapshot, Permit,
-    ServeConfig, Server,
+    request, Admission, Admit, Endpoint, Metrics, MetricsSnapshot,
+    Permit, ServeConfig, Server, MAX_LINE_BYTES,
 };

@@ -7,7 +7,13 @@
 //!   shard result-log format, schema `intdecomp-shard-result-v1`,
 //!   tagged with the spec fingerprint), then a terminal `done` line
 //!   carrying the full deterministic report — byte-identical to
-//!   `compress-model --report` for the same spec.
+//!   `compress-model --report` for the same spec.  An optional
+//!   `"deadline_ms"` member bounds the request's wall time: a request
+//!   aborted at the deadline ends with a terminal `deadline` line
+//!   instead of `done` (and a client disconnect aborts the run with a
+//!   `cancelled` line written best-effort).  The deadline lives in the
+//!   request envelope, *not* in the spec, so it can never perturb the
+//!   spec fingerprint or the bytes of a run that completes.
 //! * `{"type":"stats"}` — one `stats` line: cache hit-rate, queue
 //!   depth, admission counters and per-request latency percentiles.
 //! * `{"type":"ping"}` → `pong`; `{"type":"shutdown"}` → `bye` and the
@@ -22,6 +28,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::shard::ModelSpec;
+use crate::util::cancel::CancelCause;
 use crate::util::json::Json;
 
 /// Schema tag carried by every typed response line.
@@ -31,7 +38,12 @@ pub const SERVE_SCHEMA: &str = "intdecomp-serve-v1";
 #[derive(Debug)]
 pub enum Request {
     /// Compress the described workload and stream its records.
-    Compress(Box<ModelSpec>),
+    Compress {
+        /// The workload (the determinism domain — fingerprinted).
+        spec: Box<ModelSpec>,
+        /// Optional wall-time bound for this request, in milliseconds.
+        deadline_ms: Option<u64>,
+    },
     /// Report daemon counters (cache, admission, latency).
     Stats,
     /// Liveness probe.
@@ -53,7 +65,16 @@ impl Request {
                 let spec = j
                     .get("spec")
                     .ok_or_else(|| anyhow!("request: missing 'spec'"))?;
-                Ok(Request::Compress(Box::new(ModelSpec::from_json(spec)?)))
+                let deadline_ms = match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => Some(v.as_u64().ok_or_else(|| {
+                        anyhow!("request: 'deadline_ms' must be a u64")
+                    })?),
+                };
+                Ok(Request::Compress {
+                    spec: Box::new(ModelSpec::from_json(spec)?),
+                    deadline_ms,
+                })
             }
             "stats" => Ok(Request::Stats),
             "ping" => Ok(Request::Ping),
@@ -66,6 +87,19 @@ impl Request {
 /// Build a `compress` request line for `spec` (no trailing newline).
 pub fn compress_request(spec: &ModelSpec) -> String {
     Json::obj(vec![
+        ("spec", spec.to_json()),
+        ("type", Json::Str("compress".into())),
+    ])
+    .to_string()
+}
+
+/// Like [`compress_request`] with a per-request wall-time bound.
+pub fn compress_request_with_deadline(
+    spec: &ModelSpec,
+    deadline_ms: u64,
+) -> String {
+    Json::obj(vec![
+        ("deadline_ms", Json::Num(deadline_ms as f64)),
         ("spec", spec.to_json()),
         ("type", Json::Str("compress".into())),
     ])
@@ -106,6 +140,26 @@ pub fn done_line(
         ("report", Json::Str(report.into())),
         ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("type", Json::Str("done".into())),
+    ])
+    .to_string()
+}
+
+/// The terminal line of an aborted compress request: type `cancelled`
+/// (client went away) or `deadline` (its `deadline_ms` elapsed), per
+/// [`CancelCause::label`].  `layers_done` counts the record lines
+/// already streamed before the abort — the prefix the client did get.
+pub fn cancelled_line(
+    cause: CancelCause,
+    fingerprint: &str,
+    layers_done: usize,
+    elapsed_s: f64,
+) -> String {
+    Json::obj(vec![
+        ("elapsed_s", Json::Num(elapsed_s)),
+        ("fingerprint", Json::Str(fingerprint.into())),
+        ("layers_done", Json::Num(layers_done as f64)),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str(cause.label().into())),
     ])
     .to_string()
 }
@@ -166,9 +220,33 @@ mod tests {
         let spec = tiny_spec();
         let line = compress_request(&spec);
         match Request::parse(&line).unwrap() {
-            Request::Compress(back) => assert_eq!(*back, spec),
+            Request::Compress { spec: back, deadline_ms } => {
+                assert_eq!(*back, spec);
+                assert_eq!(deadline_ms, None);
+            }
             other => panic!("wrong request: {other:?}"),
         }
+    }
+
+    #[test]
+    fn deadline_rides_the_envelope_not_the_spec() {
+        let spec = tiny_spec();
+        let line = compress_request_with_deadline(&spec, 250);
+        match Request::parse(&line).unwrap() {
+            Request::Compress { spec: back, deadline_ms } => {
+                assert_eq!(*back, spec);
+                assert_eq!(deadline_ms, Some(250));
+                // The deadline must not leak into the determinism
+                // domain: same fingerprint with and without one.
+                assert_eq!(back.fingerprint(), spec.fingerprint());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // Non-integer deadlines are a 400, not a silent default.
+        assert!(Request::parse(
+            r#"{"deadline_ms":"soon","spec":{},"type":"compress"}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -205,9 +283,31 @@ mod tests {
         assert!(is_terminal(&done_line("f00d", 2, "report\n", 0.1)));
         assert!(is_terminal(&pong_line()));
         assert!(is_terminal(&bye_line()));
+        assert!(is_terminal(&cancelled_line(
+            CancelCause::DeadlineExceeded,
+            "f00d",
+            1,
+            0.2
+        )));
         // A shard record line has no "type" member.
         assert!(!is_terminal(r#"{"schema":"x","job":0}"#));
         assert!(!is_terminal("torn garbage"));
+    }
+
+    #[test]
+    fn cancelled_line_types_follow_the_cause() {
+        let c = cancelled_line(CancelCause::Cancelled, "ab", 0, 0.0);
+        let d =
+            cancelled_line(CancelCause::DeadlineExceeded, "ab", 3, 1.5);
+        let cj = Json::parse(&c).unwrap();
+        let dj = Json::parse(&d).unwrap();
+        assert_eq!(cj.get("type").unwrap().as_str(), Some("cancelled"));
+        assert_eq!(dj.get("type").unwrap().as_str(), Some("deadline"));
+        assert_eq!(dj.get("layers_done").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            dj.get("schema").unwrap().as_str(),
+            Some(SERVE_SCHEMA)
+        );
     }
 
     #[test]

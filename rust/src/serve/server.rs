@@ -1,35 +1,54 @@
 //! The daemon: socket listener, admission control, request handling.
 //!
-//! One OS thread per connection reads request lines and answers them
-//! in order; compression jobs inside a request fan out through
-//! [`Engine::compress_each`] onto the process-wide
+//! One OS thread per connection owns the write side and processes
+//! requests in order; a paired *reader thread* drains the socket into
+//! a channel so the daemon notices fault conditions that a blocking
+//! `BufReader` would hide — a client that disconnects mid-request
+//! (its in-flight run is cancelled at the next iteration boundary), a
+//! slow-loris peer dribbling a partial line (timed out with a `400`),
+//! or an oversized line (rejected before it can exhaust memory).
+//! Compression jobs inside a request fan out through
+//! [`Engine::try_compress_each`] onto the process-wide
 //! [`crate::util::threadpool::WorkerPool`], so connection threads
-//! block cheaply while the pool does the work.  Admission control
-//! bounds *requests* (not jobs): up to `max_inflight` compress
-//! requests run concurrently, later ones get an explicit `429` error
-//! line and the connection stays usable — clients retry, nothing
-//! queues silently.
+//! block cheaply while the pool does the work.
+//!
+//! Admission control bounds *requests* (not jobs): up to
+//! `max_inflight` compress requests run concurrently, with an optional
+//! per-client quota (so one client cannot monopolise the daemon) and
+//! an optional bounded wait queue; anything beyond those gets an
+//! explicit `429` error line and the connection stays usable — clients
+//! retry, nothing queues silently.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 #[cfg(unix)]
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::cache::CacheRegistry;
+use super::cache::{CacheBudget, CacheRegistry};
 use super::protocol::{self, Request, SERVE_SCHEMA};
 use crate::engine::{Engine, EngineConfig};
 use crate::shard::{deterministic_report, LayerRecord, ModelSpec};
+use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::json::Json;
 use crate::util::lockfile::LockFile;
 use crate::util::threadpool::default_workers;
 use crate::util::timer::Timer;
 use crate::util::{mean, percentile};
+
+/// Hard cap on one request line; longer lines get a `400` and the
+/// connection is closed (the remainder of the line would be garbage).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// How often blocked reads and queue waits re-check cancellation.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
 
 /// Where the daemon listens (and where clients connect).
 #[derive(Clone, Debug)]
@@ -52,63 +71,182 @@ impl std::fmt::Display for Endpoint {
     }
 }
 
-/// Counting-semaphore admission control over in-flight compress
-/// requests.  [`Admission::try_acquire`] never blocks: a full daemon
-/// answers `429` instead of queueing work invisibly.
+/// Admission control over in-flight compress requests: a global bound,
+/// an optional per-client quota under it, and an optional bounded wait
+/// queue.  Rejections are immediate and explicit (`429` to the
+/// client); queued waiters poll their [`CancelToken`] so a disconnect
+/// or deadline releases the queue slot promptly.
 pub struct Admission {
     max: usize,
-    cur: AtomicUsize,
+    per_client: usize,
+    queue_cap: usize,
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct AdmState {
+    in_flight: usize,
+    queued: usize,
+    /// Per-client held slots — running *and* queued, so a client
+    /// cannot monopolise the wait queue either.
+    clients: HashMap<String, usize>,
+}
+
+/// Outcome of [`Admission::acquire`].
+pub enum Admit<'a> {
+    /// A slot was granted; it is released when the permit drops.
+    Granted(Permit<'a>),
+    /// The caller's per-client quota is exhausted (global capacity may
+    /// still be free — another client would be admitted).
+    RejectedClient {
+        /// Slots this client already holds (running + queued).
+        held: usize,
+        /// The per-client quota.
+        quota: usize,
+    },
+    /// Global capacity and the wait queue are both full.
+    RejectedFull {
+        /// Requests currently running.
+        in_flight: usize,
+        /// Requests currently waiting.
+        queued: usize,
+    },
+    /// The caller's token tripped while waiting in the queue.
+    Cancelled(CancelCause),
 }
 
 impl Admission {
     /// Gate admitting at most `max` concurrent requests (`0` rejects
-    /// everything — useful to drain or to test rejection paths).
+    /// everything — useful to drain or to test rejection paths), with
+    /// no per-client quota and no wait queue.
     pub fn new(max: usize) -> Admission {
-        Admission { max, cur: AtomicUsize::new(0) }
+        Admission::with_limits(max, 0, 0)
     }
 
-    /// Take a slot if one is free.  The slot is released when the
-    /// returned [`Permit`] drops.
-    pub fn try_acquire(&self) -> Option<Permit<'_>> {
-        loop {
-            let c = self.cur.load(Ordering::Acquire);
-            if c >= self.max {
-                return None;
-            }
-            if self
-                .cur
-                .compare_exchange(
-                    c,
-                    c + 1,
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
-                )
-                .is_ok()
-            {
-                return Some(Permit { inner: self });
-            }
+    /// Full configuration: `per_client` caps one client's slots
+    /// (running + queued; `0` = no per-client cap), `queue_cap` bounds
+    /// the wait queue (`0` = reject instead of waiting).
+    pub fn with_limits(
+        max: usize,
+        per_client: usize,
+        queue_cap: usize,
+    ) -> Admission {
+        Admission {
+            max,
+            per_client: if per_client == 0 { usize::MAX } else { per_client },
+            queue_cap,
+            state: Mutex::new(AdmState::default()),
+            cv: Condvar::new(),
         }
     }
 
-    /// Requests currently holding a slot (the queue-depth stat).
-    pub fn in_flight(&self) -> usize {
-        self.cur.load(Ordering::Acquire)
+    /// Take a slot for `client`, waiting in the bounded queue when the
+    /// daemon is at capacity.  Never blocks past `cancel`: queue waits
+    /// poll the token at [`POLL_INTERVAL`].
+    pub fn acquire(&self, client: &str, cancel: &CancelToken) -> Admit<'_> {
+        if self.max == 0 {
+            return Admit::RejectedFull { in_flight: 0, queued: 0 };
+        }
+        let mut st = self.state.lock().unwrap();
+        let held = st.clients.get(client).copied().unwrap_or(0);
+        if held >= self.per_client {
+            return Admit::RejectedClient { held, quota: self.per_client };
+        }
+        if st.in_flight >= self.max {
+            if st.queued >= self.queue_cap {
+                return Admit::RejectedFull {
+                    in_flight: st.in_flight,
+                    queued: st.queued,
+                };
+            }
+            st.queued += 1;
+            *st.clients.entry(client.to_string()).or_insert(0) += 1;
+            loop {
+                if let Some(cause) = cancel.cause() {
+                    st.queued -= 1;
+                    release_client(&mut st, client);
+                    self.cv.notify_all();
+                    return Admit::Cancelled(cause);
+                }
+                if st.in_flight < self.max {
+                    st.queued -= 1;
+                    st.in_flight += 1;
+                    return Admit::Granted(Permit {
+                        adm: self,
+                        client: client.to_string(),
+                    });
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(st, POLL_INTERVAL)
+                    .unwrap();
+                st = guard;
+            }
+        }
+        st.in_flight += 1;
+        *st.clients.entry(client.to_string()).or_insert(0) += 1;
+        Admit::Granted(Permit { adm: self, client: client.to_string() })
     }
 
-    /// The admission bound.
+    /// Non-blocking convenience: a slot now or nothing (no queueing,
+    /// anonymous client).
+    pub fn try_acquire(&self) -> Option<Permit<'_>> {
+        match self.acquire("", &CancelToken::never()) {
+            Admit::Granted(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Requests currently holding a slot.
+    pub fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().in_flight
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap().queued
+    }
+
+    /// The global admission bound.
     pub fn capacity(&self) -> usize {
         self.max
     }
+
+    /// The per-client quota (`usize::MAX` when unlimited).
+    pub fn client_quota(&self) -> usize {
+        self.per_client
+    }
+
+    /// The wait-queue bound.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_cap
+    }
 }
 
-/// A held admission slot; dropping releases it.
+fn release_client(st: &mut AdmState, client: &str) {
+    if let Some(n) = st.clients.get_mut(client) {
+        *n -= 1;
+        if *n == 0 {
+            st.clients.remove(client);
+        }
+    }
+}
+
+/// A held admission slot; dropping releases it (and wakes queued
+/// waiters).
 pub struct Permit<'a> {
-    inner: &'a Admission,
+    adm: &'a Admission,
+    client: String,
 }
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        self.inner.cur.fetch_sub(1, Ordering::AcqRel);
+        let mut st = self.adm.state.lock().unwrap();
+        st.in_flight -= 1;
+        release_client(&mut st, &self.client);
+        drop(st);
+        self.adm.cv.notify_all();
     }
 }
 
@@ -123,6 +261,8 @@ pub struct Metrics {
     admitted: AtomicU64,
     rejected: AtomicU64,
     completed: AtomicU64,
+    cancelled: AtomicU64,
+    deadline: AtomicU64,
     errors: AtomicU64,
     latencies: Mutex<Vec<f64>>,
 }
@@ -145,6 +285,17 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    fn cancel(&self, cause: CancelCause) {
+        match cause {
+            CancelCause::Cancelled => {
+                self.cancelled.fetch_add(1, Ordering::Relaxed)
+            }
+            CancelCause::DeadlineExceeded => {
+                self.deadline.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+    }
+
     fn complete(&self, seconds: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut lat = self.latencies.lock().unwrap();
@@ -162,6 +313,8 @@ impl Metrics {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline: self.deadline.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             latency_count: lat.len(),
             latency_mean_s: mean(&lat),
@@ -180,6 +333,10 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     /// Compress requests finished successfully.
     pub completed: u64,
+    /// Admitted requests aborted because the client went away.
+    pub cancelled: u64,
+    /// Admitted requests aborted at their `deadline_ms`.
+    pub deadline: u64,
     /// Malformed or failed requests.
     pub errors: u64,
     /// Latency samples in the current window.
@@ -197,11 +354,26 @@ pub struct MetricsSnapshot {
 pub struct ServeConfig {
     /// Listening endpoint.
     pub endpoint: Endpoint,
-    /// Maximum concurrent compress requests (excess gets `429`).
+    /// Maximum concurrent compress requests (excess queues or gets
+    /// `429`).
     pub max_inflight: usize,
+    /// Per-client cap on held slots — running plus queued (`0` = no
+    /// per-client cap).  Clients are keyed by peer IP on TCP; every
+    /// Unix-socket connection is its own client.
+    pub max_per_client: usize,
+    /// Bound on the admission wait queue (`0` = reject immediately
+    /// when at capacity, the pre-queue behaviour).
+    pub queue: usize,
     /// Engine worker fan-out per request (jobs share the process-wide
     /// pool either way; this caps one request's concurrent jobs).
     pub workers: usize,
+    /// Cross-request cache registry budget (unbounded by default; a
+    /// zero cap on either axis disables the shared cache entirely).
+    pub cache_budget: CacheBudget,
+    /// How long a partially received request line may sit before the
+    /// connection is rejected as a slow-loris (`0` = never).  Idle
+    /// connections *between* lines are unaffected.
+    pub line_timeout_ms: u64,
     /// Optional on-disk state directory; when set, an advisory
     /// [`LockFile`] (the `shard work` guard) keeps a second daemon off
     /// the same state.
@@ -213,7 +385,11 @@ impl Default for ServeConfig {
         ServeConfig {
             endpoint: Endpoint::Tcp("127.0.0.1:7341".into()),
             max_inflight: 2,
+            max_per_client: 0,
+            queue: 0,
             workers: default_workers(),
+            cache_budget: CacheBudget::unbounded(),
+            line_timeout_ms: 10_000,
             state_dir: None,
         }
     }
@@ -259,6 +435,45 @@ impl Conn {
             Conn::Unix(s) => s.try_clone().map(Conn::Unix),
         }
     }
+
+    fn set_read_timeout(
+        &self,
+        dur: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    /// Best-effort full shutdown — unblocks a reader thread parked on
+    /// this socket (reads return 0/error afterwards).
+    fn shutdown(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Admission identity of the peer: its IP for TCP (one quota per
+    /// remote host, however many connections it opens), a unique key
+    /// per connection for Unix sockets (no peer identity to group by).
+    fn client_key(&self, seq: u64) -> String {
+        match self {
+            Conn::Tcp(s) => match s.peer_addr() {
+                Ok(addr) => addr.ip().to_string(),
+                Err(_) => format!("tcp#{seq}"),
+            },
+            #[cfg(unix)]
+            Conn::Unix(_) => format!("unix#{seq}"),
+        }
+    }
 }
 
 impl Read for Conn {
@@ -294,7 +509,9 @@ struct Ctx {
     registry: CacheRegistry,
     metrics: Metrics,
     workers: usize,
+    line_timeout_ms: u64,
     stop: AtomicBool,
+    conn_seq: AtomicU64,
     endpoint: Endpoint,
 }
 
@@ -337,11 +554,17 @@ impl Server {
         Ok(Server {
             listener,
             ctx: Arc::new(Ctx {
-                admission: Admission::new(cfg.max_inflight),
-                registry: CacheRegistry::new(),
+                admission: Admission::with_limits(
+                    cfg.max_inflight,
+                    cfg.max_per_client,
+                    cfg.queue,
+                ),
+                registry: CacheRegistry::with_budget(cfg.cache_budget),
                 metrics: Metrics::new(),
                 workers: cfg.workers.max(1),
+                line_timeout_ms: cfg.line_timeout_ms,
                 stop: AtomicBool::new(false),
+                conn_seq: AtomicU64::new(0),
                 endpoint,
             }),
             _lock: lock,
@@ -414,27 +637,196 @@ fn bind_unix(path: &std::path::Path) -> Result<UnixListener> {
     }
 }
 
-fn handle_conn(conn: Conn, ctx: &Ctx) -> std::io::Result<()> {
-    let reader = BufReader::new(conn.try_clone()?);
-    let mut writer = conn;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// What the reader thread feeds the connection's request loop.
+enum ConnEvent {
+    /// One complete request line (newline stripped).
+    Line(String),
+    /// A partial line sat unfinished past the slow-loris timeout.
+    SlowLine,
+    /// A single line exceeded [`MAX_LINE_BYTES`].
+    Oversized,
+    /// Clean close or read error — the peer is gone.
+    Eof,
+}
+
+/// Drain the socket into `tx`, watching for the fault conditions the
+/// request loop cannot see while it is busy: on EOF/error the current
+/// request's token (in `cancel_slot`) is tripped *immediately*, which
+/// is what turns a client disconnect into a cancelled run instead of
+/// hours of work written to a dead socket.
+fn reader_loop(
+    mut rd: Conn,
+    tx: mpsc::Sender<ConnEvent>,
+    cancel_slot: Arc<Mutex<Option<CancelToken>>>,
+    peer_gone: Arc<AtomicBool>,
+    line_timeout_ms: u64,
+) {
+    // On EOF/error: flag first, then trip whatever token is current.
+    // `handle_line` re-checks the flag right after publishing a fresh
+    // token, so a request whose client vanished before it even started
+    // is cancelled too, whichever order the two threads ran in.
+    let gone = |slot: &Mutex<Option<CancelToken>>| {
+        peer_gone.store(true, Ordering::SeqCst);
+        if let Some(tok) = slot.lock().unwrap().as_ref() {
+            tok.cancel();
         }
-        let shutdown = handle_line(&line, &mut writer, ctx)?;
-        writer.flush()?;
-        if shutdown {
-            break;
+    };
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut partial_since: Option<Instant> = None;
+    loop {
+        match rd.read(&mut chunk) {
+            Ok(0) => {
+                gone(&cancel_slot);
+                let _ = tx.send(ConnEvent::Eof);
+                return;
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    let rest = buf.split_off(pos + 1);
+                    buf.pop(); // the newline
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop(); // CRLF clients, as BufRead::lines
+                    }
+                    if buf.len() > MAX_LINE_BYTES {
+                        let _ = tx.send(ConnEvent::Oversized);
+                        return;
+                    }
+                    let line =
+                        String::from_utf8_lossy(&buf).into_owned();
+                    buf = rest;
+                    if tx.send(ConnEvent::Line(line)).is_err() {
+                        return;
+                    }
+                }
+                if buf.len() > MAX_LINE_BYTES {
+                    let _ = tx.send(ConnEvent::Oversized);
+                    return;
+                }
+                partial_since = if buf.is_empty() {
+                    None
+                } else {
+                    partial_since.or_else(|| Some(Instant::now()))
+                };
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if let (Some(t0), true) =
+                    (partial_since, line_timeout_ms > 0)
+                {
+                    if t0.elapsed()
+                        >= Duration::from_millis(line_timeout_ms)
+                    {
+                        let _ = tx.send(ConnEvent::SlowLine);
+                        return;
+                    }
+                }
+            }
+            Err(_) => {
+                gone(&cancel_slot);
+                let _ = tx.send(ConnEvent::Eof);
+                return;
+            }
         }
     }
-    Ok(())
+}
+
+fn handle_conn(conn: Conn, ctx: &Ctx) -> std::io::Result<()> {
+    let seq = ctx.conn_seq.fetch_add(1, Ordering::Relaxed);
+    let client = conn.client_key(seq);
+    let reader_conn = conn.try_clone()?;
+    reader_conn.set_read_timeout(Some(POLL_INTERVAL))?;
+    let cancel_slot: Arc<Mutex<Option<CancelToken>>> =
+        Arc::new(Mutex::new(None));
+    let peer_gone = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel();
+    let reader = {
+        let slot = cancel_slot.clone();
+        let gone = peer_gone.clone();
+        let timeout = ctx.line_timeout_ms;
+        std::thread::spawn(move || {
+            reader_loop(reader_conn, tx, slot, gone, timeout)
+        })
+    };
+    let mut writer = conn;
+    let mut result: std::io::Result<()> = Ok(());
+    loop {
+        match rx.recv() {
+            Err(_) | Ok(ConnEvent::Eof) => break,
+            Ok(ConnEvent::Oversized) => {
+                ctx.metrics.error();
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    protocol::error_line(
+                        400,
+                        &format!(
+                            "request line exceeds {MAX_LINE_BYTES} bytes"
+                        ),
+                    )
+                );
+                let _ = writer.flush();
+                break;
+            }
+            Ok(ConnEvent::SlowLine) => {
+                ctx.metrics.error();
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    protocol::error_line(
+                        400,
+                        &format!(
+                            "request line not completed within {} ms",
+                            ctx.line_timeout_ms
+                        ),
+                    )
+                );
+                let _ = writer.flush();
+                break;
+            }
+            Ok(ConnEvent::Line(line)) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let step = handle_line(
+                    &line,
+                    &mut writer,
+                    ctx,
+                    &client,
+                    &cancel_slot,
+                    &peer_gone,
+                )
+                .and_then(|shutdown| {
+                    writer.flush()?;
+                    Ok(shutdown)
+                });
+                match step {
+                    Ok(false) => {}
+                    Ok(true) => break,
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // Unblock and reap the reader before the thread exits.
+    writer.shutdown();
+    let _ = reader.join();
+    result
 }
 
 fn handle_line(
     line: &str,
     out: &mut Conn,
     ctx: &Ctx,
+    client: &str,
+    cancel_slot: &Mutex<Option<CancelToken>>,
+    peer_gone: &AtomicBool,
 ) -> std::io::Result<bool> {
     match Request::parse(line) {
         Err(e) => {
@@ -451,39 +843,103 @@ fn handle_line(
             let _ = Conn::connect(&ctx.endpoint);
             return Ok(true);
         }
-        Ok(Request::Compress(spec)) => handle_compress(&spec, out, ctx)?,
+        Ok(Request::Compress { spec, deadline_ms }) => {
+            let cancel = match deadline_ms {
+                Some(ms) => {
+                    CancelToken::with_deadline(Duration::from_millis(ms))
+                }
+                None => CancelToken::never(),
+            };
+            // Publish the token so the reader thread can trip it the
+            // moment the peer disappears; retire it afterwards so a
+            // disconnect between requests cancels nothing stale.  The
+            // flag re-check closes the race where the peer vanished
+            // before this request was even picked up.
+            *cancel_slot.lock().unwrap() = Some(cancel.clone());
+            if peer_gone.load(Ordering::SeqCst) {
+                cancel.cancel();
+            }
+            let r =
+                handle_compress(&spec, &cancel, out, ctx, client);
+            *cancel_slot.lock().unwrap() = None;
+            r?;
+        }
     }
     Ok(false)
 }
 
 fn handle_compress(
     spec: &ModelSpec,
+    cancel: &CancelToken,
     out: &mut Conn,
     ctx: &Ctx,
+    client: &str,
 ) -> std::io::Result<()> {
-    let Some(permit) = ctx.admission.try_acquire() else {
-        ctx.metrics.reject();
-        let msg = format!(
-            "at capacity ({} of {} requests in flight); retry later",
-            ctx.admission.in_flight(),
-            ctx.admission.capacity()
-        );
-        writeln!(out, "{}", protocol::error_line(429, &msg))?;
-        return Ok(());
+    let permit = match ctx.admission.acquire(client, cancel) {
+        Admit::Granted(p) => p,
+        Admit::RejectedClient { held, quota } => {
+            ctx.metrics.reject();
+            let msg = format!(
+                "client quota reached ({held} of {quota} requests held \
+                 by {client}); retry later"
+            );
+            writeln!(out, "{}", protocol::error_line(429, &msg))?;
+            return Ok(());
+        }
+        Admit::RejectedFull { in_flight, queued } => {
+            ctx.metrics.reject();
+            let msg = format!(
+                "at capacity ({in_flight} of {} requests in flight, \
+                 {queued} of {} queued); retry later",
+                ctx.admission.capacity(),
+                ctx.admission.queue_capacity(),
+            );
+            writeln!(out, "{}", protocol::error_line(429, &msg))?;
+            return Ok(());
+        }
+        Admit::Cancelled(cause) => {
+            ctx.metrics.cancel(cause);
+            writeln!(
+                out,
+                "{}",
+                protocol::cancelled_line(
+                    cause,
+                    &spec.fingerprint(),
+                    0,
+                    0.0,
+                )
+            )?;
+            return Ok(());
+        }
     };
     ctx.metrics.admit();
     let timer = Timer::start();
     let fp = spec.fingerprint();
+    // Pre-start check: a deadline that expired while queued (or a
+    // `deadline_ms` of ~0) must not launch any job — the permit is
+    // released on return, never leaked.
+    if let Some(cause) = cancel.cause() {
+        ctx.metrics.cancel(cause);
+        drop(permit);
+        writeln!(
+            out,
+            "{}",
+            protocol::cancelled_line(cause, &fp, 0, timer.seconds())
+        )?;
+        return Ok(());
+    }
     let mut jobs = Vec::with_capacity(spec.layers);
     for layer in 0..spec.layers {
         match spec.job(layer) {
             Ok(mut job) => {
-                // Cross-request warm store: per instance-layer, and
-                // only for canonical-key specs (exact-key jobs drop
-                // the shared level anyway — see `run_job`).
+                job.cancel = cancel.clone();
+                // Cross-request warm store: per instance-layer, only
+                // for canonical-key specs (exact-key jobs drop the
+                // shared level anyway — see `run_job`), and only when
+                // the registry's budget allows caching at all.
                 if !spec.cache_key_raw {
                     job.shared_cache =
-                        Some(ctx.registry.get(&spec.instance_key(layer)));
+                        ctx.registry.get(&spec.instance_key(layer));
                 }
                 jobs.push(job);
             }
@@ -505,40 +961,93 @@ fn handle_compress(
     });
     let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.layers);
     let mut io_err: Option<std::io::Error> = None;
-    eng.compress_each(jobs, |i, result| {
+    let outcome = eng.try_compress_each(jobs, |i, result| {
         let rec = LayerRecord::from_result(i, &result);
         if io_err.is_none() {
             if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp)) {
                 io_err = Some(e);
+                // The write side is dead: stop burning pool time on a
+                // stream nobody reads.
+                cancel.cancel();
             }
         }
         records.push(rec);
     });
-    if let Some(e) = io_err {
-        return Err(e);
-    }
-    let report = deterministic_report(&records);
-    writeln!(
-        out,
-        "{}",
-        protocol::done_line(&fp, records.len(), &report, timer.seconds())
-    )?;
-    ctx.metrics.complete(timer.seconds());
+    // Release the slot before the (possibly dead-socket) trailer write
+    // and the registry sweep — queued waiters should not wait on I/O.
     drop(permit);
-    Ok(())
+    match outcome {
+        Err(cause) => {
+            ctx.metrics.cancel(cause);
+            // Best-effort: on a disconnect this line goes nowhere.
+            let _ = writeln!(
+                out,
+                "{}",
+                protocol::cancelled_line(
+                    cause,
+                    &fp,
+                    records.len(),
+                    timer.seconds(),
+                )
+            );
+            ctx.registry.enforce();
+            match io_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        }
+        Ok(()) => {
+            if let Some(e) = io_err {
+                // All jobs finished but the peer vanished before the
+                // tail could be written: account it as a cancellation.
+                ctx.metrics.cancel(CancelCause::Cancelled);
+                ctx.registry.enforce();
+                return Err(e);
+            }
+            let report = deterministic_report(&records);
+            writeln!(
+                out,
+                "{}",
+                protocol::done_line(
+                    &fp,
+                    records.len(),
+                    &report,
+                    timer.seconds(),
+                )
+            )?;
+            ctx.metrics.complete(timer.seconds());
+            ctx.registry.enforce();
+            Ok(())
+        }
+    }
 }
 
 fn stats_line(ctx: &Ctx) -> String {
-    let (entries, cache) = ctx.registry.stats();
+    let reg = ctx.registry.stats();
+    let budget = ctx.registry.budget();
     let m = ctx.metrics.snapshot();
+    let opt_num = |v: Option<usize>| match v {
+        Some(n) => Json::Num(n as f64),
+        None => Json::Null,
+    };
     Json::obj(vec![
         ("admitted", Json::Num(m.admitted as f64)),
-        ("cache_caches", Json::Num(ctx.registry.caches() as f64)),
-        ("cache_entries", Json::Num(entries as f64)),
-        ("cache_hit_rate", Json::Num(cache.hit_rate())),
-        ("cache_hits", Json::Num(cache.hits as f64)),
-        ("cache_misses", Json::Num(cache.misses as f64)),
+        ("cache_budget_bytes", opt_num(budget.bytes)),
+        ("cache_budget_entries", opt_num(budget.entries)),
+        ("cache_bytes", Json::Num(reg.bytes as f64)),
+        ("cache_caches", Json::Num(reg.caches as f64)),
+        ("cache_entries", Json::Num(reg.entries as f64)),
+        ("cache_evicted_caches", Json::Num(reg.evicted_caches as f64)),
+        (
+            "cache_evicted_entries",
+            Json::Num(reg.evicted_entries as f64),
+        ),
+        ("cache_hit_rate", Json::Num(reg.cache.hit_rate())),
+        ("cache_hits", Json::Num(reg.cache.hits as f64)),
+        ("cache_misses", Json::Num(reg.cache.misses as f64)),
+        ("cancelled", Json::Num(m.cancelled as f64)),
         ("completed", Json::Num(m.completed as f64)),
+        ("deadline", Json::Num(m.deadline as f64)),
         ("errors", Json::Num(m.errors as f64)),
         ("inflight", Json::Num(ctx.admission.in_flight() as f64)),
         ("latency_count", Json::Num(m.latency_count as f64)),
@@ -546,6 +1055,15 @@ fn stats_line(ctx: &Ctx) -> String {
         ("latency_p50_s", Json::Num(m.latency_p50_s)),
         ("latency_p99_s", Json::Num(m.latency_p99_s)),
         ("max_inflight", Json::Num(ctx.admission.capacity() as f64)),
+        (
+            "max_per_client",
+            match ctx.admission.client_quota() {
+                usize::MAX => Json::Null,
+                q => Json::Num(q as f64),
+            },
+        ),
+        ("queue", Json::Num(ctx.admission.queue_capacity() as f64)),
+        ("queued", Json::Num(ctx.admission.queued() as f64)),
         ("rejected", Json::Num(m.rejected as f64)),
         ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("type", Json::Str("stats".into())),
@@ -556,7 +1074,8 @@ fn stats_line(ctx: &Ctx) -> String {
 
 /// Client side: send one request line to a daemon and collect the
 /// response lines, up to and including the terminal typed line
-/// (`done`, `stats`, `pong`, `bye` or `error`).
+/// (`done`, `cancelled`, `deadline`, `stats`, `pong`, `bye` or
+/// `error`).
 pub fn request(endpoint: &Endpoint, line: &str) -> Result<Vec<String>> {
     let mut conn = Conn::connect(endpoint)
         .with_context(|| format!("connecting to {endpoint}"))?;
@@ -604,6 +1123,118 @@ mod tests {
     fn zero_capacity_rejects_everything() {
         let adm = Admission::new(0);
         assert!(adm.try_acquire().is_none());
+        assert!(matches!(
+            adm.acquire("a", &CancelToken::never()),
+            Admit::RejectedFull { .. }
+        ));
+    }
+
+    #[test]
+    fn per_client_quota_spares_other_clients() {
+        let adm = Admission::with_limits(4, 1, 0);
+        let tok = CancelToken::never();
+        let _a = match adm.acquire("alice", &tok) {
+            Admit::Granted(p) => p,
+            _ => panic!("first slot must be granted"),
+        };
+        // Alice is at quota although global capacity remains.
+        match adm.acquire("alice", &tok) {
+            Admit::RejectedClient { held, quota } => {
+                assert_eq!((held, quota), (1, 1));
+            }
+            _ => panic!("alice must be quota-rejected"),
+        }
+        // Bob is unaffected.
+        assert!(matches!(adm.acquire("bob", &tok), Admit::Granted(_)));
+        assert_eq!(adm.in_flight(), 2);
+    }
+
+    #[test]
+    fn quota_frees_up_when_the_permit_drops() {
+        let adm = Admission::with_limits(2, 1, 0);
+        let tok = CancelToken::never();
+        let p = match adm.acquire("c", &tok) {
+            Admit::Granted(p) => p,
+            _ => panic!("grant"),
+        };
+        assert!(matches!(
+            adm.acquire("c", &tok),
+            Admit::RejectedClient { .. }
+        ));
+        drop(p);
+        assert!(matches!(adm.acquire("c", &tok), Admit::Granted(_)));
+    }
+
+    #[test]
+    fn queue_admits_after_a_release() {
+        let adm = Arc::new(Admission::with_limits(1, 0, 1));
+        let tok = CancelToken::never();
+        let p = match adm.acquire("a", &tok) {
+            Admit::Granted(p) => p,
+            _ => panic!("grant"),
+        };
+        // Drop the held permit shortly after the waiter queues.
+        let adm2 = Arc::clone(&adm);
+        let waiter = std::thread::spawn(move || {
+            matches!(
+                adm2.acquire("b", &CancelToken::never()),
+                Admit::Granted(_)
+            )
+        });
+        while adm.queued() == 0 {
+            std::thread::yield_now();
+        }
+        drop(p);
+        assert!(waiter.join().unwrap(), "queued waiter must be granted");
+        assert_eq!(adm.queued(), 0);
+    }
+
+    #[test]
+    fn queue_overflow_rejects_with_depths() {
+        let adm = Arc::new(Admission::with_limits(1, 0, 1));
+        let tok = CancelToken::never();
+        let _p = match adm.acquire("a", &tok) {
+            Admit::Granted(p) => p,
+            _ => panic!("grant"),
+        };
+        let adm2 = Arc::clone(&adm);
+        let queued_tok = CancelToken::never();
+        let qt = queued_tok.clone();
+        let waiter = std::thread::spawn(move || {
+            match adm2.acquire("b", &qt) {
+                Admit::Cancelled(cause) => Some(cause),
+                _ => None,
+            }
+        });
+        while adm.queued() == 0 {
+            std::thread::yield_now();
+        }
+        // Queue of 1 is full: the next caller bounces immediately.
+        match adm.acquire("c", &tok) {
+            Admit::RejectedFull { in_flight, queued } => {
+                assert_eq!((in_flight, queued), (1, 1));
+            }
+            _ => panic!("queue overflow must reject"),
+        }
+        // Cancel the waiter so the test tears down promptly.
+        queued_tok.cancel();
+        assert_eq!(waiter.join().unwrap(), Some(CancelCause::Cancelled));
+        assert_eq!((adm.queued(), adm.in_flight()), (0, 1));
+    }
+
+    #[test]
+    fn expired_deadline_cancels_a_queued_waiter() {
+        let adm = Admission::with_limits(1, 0, 4);
+        let _p = match adm.acquire("a", &CancelToken::never()) {
+            Admit::Granted(p) => p,
+            _ => panic!("grant"),
+        };
+        let tok = CancelToken::with_deadline(Duration::from_millis(0));
+        assert!(matches!(
+            adm.acquire("b", &tok),
+            Admit::Cancelled(CancelCause::DeadlineExceeded)
+        ));
+        assert_eq!(adm.queued(), 0);
     }
 
     #[test]
@@ -614,10 +1245,14 @@ mod tests {
         }
         m.reject();
         m.error();
+        m.cancel(CancelCause::Cancelled);
+        m.cancel(CancelCause::DeadlineExceeded);
+        m.cancel(CancelCause::DeadlineExceeded);
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.errors, 1);
+        assert_eq!((s.cancelled, s.deadline), (1, 2));
         assert_eq!(s.latency_count, 100);
         assert!((s.latency_p50_s - 0.5).abs() < 1e-12);
         assert!((s.latency_p99_s - 0.99).abs() < 1e-12);

@@ -146,6 +146,7 @@ impl ModelSpec {
             seed: self.seed.wrapping_add(layer as u64),
             cache_mode: self.cache_mode(),
             shared_cache: None,
+            cancel: crate::util::cancel::CancelToken::never(),
         })
     }
 

@@ -1,0 +1,152 @@
+//! Cooperative cancellation: a cheap, cloneable token checked at loop
+//! boundaries.
+//!
+//! A [`CancelToken`] is a shared flag (client disconnect, explicit
+//! abort) plus an optional deadline instant (per-request
+//! `deadline_ms`).  Long-running loops poll [`CancelToken::cause`] at
+//! their iteration boundaries and unwind with a [`CancelCause`] —
+//! nothing is interrupted mid-step, so every run that *completes* is
+//! byte-identical to one executed without a token (the checks never
+//! touch RNG state or any numeric path).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a run was aborted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelCause {
+    /// The token was cancelled explicitly (e.g. the requesting client
+    /// disconnected).
+    Cancelled,
+    /// The token's deadline passed.
+    DeadlineExceeded,
+}
+
+impl CancelCause {
+    /// Wire label of the cause — the serve daemon's terminal line type
+    /// (`"cancelled"` / `"deadline"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            CancelCause::Cancelled => "cancelled",
+            CancelCause::DeadlineExceeded => "deadline",
+        }
+    }
+}
+
+impl std::fmt::Display for CancelCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Shared cancellation token: an `Arc<AtomicBool>` plus an optional
+/// deadline.  Clones observe the same flag; the deadline is fixed at
+/// construction.  The default token never cancels.
+///
+/// ```
+/// use intdecomp::util::cancel::{CancelCause, CancelToken};
+///
+/// let tok = CancelToken::never();
+/// assert_eq!(tok.cause(), None);
+/// let peer = tok.clone();
+/// peer.cancel();
+/// assert_eq!(tok.cause(), Some(CancelCause::Cancelled));
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only cancels when [`CancelToken::cancel`] is called
+    /// (never, if nobody holds a clone).
+    pub fn never() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that additionally cancels once `timeout` has elapsed
+    /// from now.  A `timeout` too large to represent is treated as no
+    /// deadline.
+    pub fn with_deadline(timeout: Duration) -> CancelToken {
+        CancelToken {
+            flag: Arc::new(AtomicBool::new(false)),
+            deadline: Instant::now().checked_add(timeout),
+        }
+    }
+
+    /// Trip the shared flag; every clone observes it on its next
+    /// [`CancelToken::cause`] check.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Why the holder should stop, if it should.  The explicit flag
+    /// wins over the deadline when both hold.
+    pub fn cause(&self) -> Option<CancelCause> {
+        if self.flag.load(Ordering::Acquire) {
+            return Some(CancelCause::Cancelled);
+        }
+        match self.deadline {
+            Some(d) if Instant::now() >= d => {
+                Some(CancelCause::DeadlineExceeded)
+            }
+            _ => None,
+        }
+    }
+
+    /// Convenience: is the token tripped (flag or deadline)?
+    pub fn is_cancelled(&self) -> bool {
+        self.cause().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_token_never_cancels() {
+        let tok = CancelToken::never();
+        assert_eq!(tok.cause(), None);
+        assert!(!tok.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_the_flag() {
+        let tok = CancelToken::never();
+        let other = tok.clone();
+        other.cancel();
+        assert_eq!(tok.cause(), Some(CancelCause::Cancelled));
+        assert!(tok.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_trips_after_the_timeout() {
+        let tok = CancelToken::with_deadline(Duration::from_millis(0));
+        assert_eq!(tok.cause(), Some(CancelCause::DeadlineExceeded));
+        let far = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert_eq!(far.cause(), None);
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_deadline() {
+        let tok = CancelToken::with_deadline(Duration::from_millis(0));
+        tok.cancel();
+        assert_eq!(tok.cause(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn huge_deadline_degrades_to_never() {
+        let tok = CancelToken::with_deadline(Duration::MAX);
+        assert_eq!(tok.cause(), None);
+    }
+
+    #[test]
+    fn cause_labels_are_the_wire_types() {
+        assert_eq!(CancelCause::Cancelled.label(), "cancelled");
+        assert_eq!(CancelCause::DeadlineExceeded.label(), "deadline");
+        assert_eq!(CancelCause::Cancelled.to_string(), "cancelled");
+    }
+}

@@ -3,6 +3,7 @@
 //! The build environment is offline with a minimal vendored crate set, so
 //! these are purpose-built rather than pulled from crates.io (DESIGN.md §6).
 
+pub mod cancel;
 pub mod json;
 pub mod lockfile;
 pub mod prop;

@@ -8,6 +8,8 @@ use intdecomp::cost::{BinMatrix, Problem};
 use intdecomp::instance::{generate, InstanceConfig};
 use intdecomp::linalg::Matrix;
 use intdecomp::runtime::XlaRuntime;
+use intdecomp::serve::{Endpoint, ServeConfig, Server};
+use intdecomp::shard::{recover_log, LayerRecord};
 use intdecomp::solvers::{self, IsingSolver, QuadModel};
 use intdecomp::surrogate::{
     blr::{Blr, Prior},
@@ -233,6 +235,131 @@ fn rfmqa_explores_more_than_fmqa() {
         rand >= plain,
         "rFMQA sampled {rand} distinct vs FMQA {plain}"
     );
+}
+
+// ------------------------------------------- serve state / result logs --
+
+fn serve_cfg(dir: &std::path::Path) -> ServeConfig {
+    ServeConfig {
+        endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+        max_inflight: 1,
+        workers: 1,
+        state_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn corrupt_serve_lockfile_is_reclaimed_at_bind() {
+    // A state dir left behind with a garbage lockfile (disk corruption,
+    // partial write) must not wedge the daemon: unparseable contents
+    // are stale by definition and bind takes the lock over.
+    let dir = tmpdir("servelock_garbage");
+    std::fs::write(dir.join("serve.state.lock"), "\x00\x7f not a pid")
+        .unwrap();
+    let server = Server::bind(serve_cfg(&dir)).expect("stale takeover");
+    drop(server);
+    // The reclaimed lock is released on drop, so a restart binds clean.
+    let again = Server::bind(serve_cfg(&dir)).unwrap();
+    drop(again);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn dead_pid_serve_lockfile_is_reclaimed_at_bind() {
+    // A SIGKILLed daemon leaves its PID behind; the next bind must
+    // detect the owner is gone and take over instead of failing.
+    let dir = tmpdir("servelock_dead");
+    // Far above kernel.pid_max, so no live process can own it.
+    std::fs::write(dir.join("serve.state.lock"), "4294967294\n").unwrap();
+    let server = Server::bind(serve_cfg(&dir)).expect("dead-owner takeover");
+    drop(server);
+}
+
+#[test]
+fn live_pid_serve_lockfile_blocks_bind() {
+    // A lockfile naming a live process (here: ourselves) is genuinely
+    // held — bind must fail fast with a clear error, not steal it.
+    let dir = tmpdir("servelock_live");
+    std::fs::write(
+        dir.join("serve.state.lock"),
+        format!("{}\n", std::process::id()),
+    )
+    .unwrap();
+    let err = Server::bind(serve_cfg(&dir)).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("held by live process"),
+        "unexpected error: {err:#}"
+    );
+    // The refused bind must not have clobbered the lockfile.
+    assert!(dir.join("serve.state.lock").exists());
+}
+
+fn log_record(job: usize) -> LayerRecord {
+    LayerRecord {
+        job,
+        name: format!("couche-é{}", job + 1),
+        n: 4,
+        d: 8,
+        k: 2,
+        algo: "nBOCS".into(),
+        solver: "sa".into(),
+        evals: 7,
+        best_y: 0.25,
+        best_x: vec![1, -1, 1, 1, -1, -1, 1, -1],
+        err: 0.04,
+        ratio: 0.16,
+        cache_hits: 2,
+        cache_misses: 5,
+    }
+}
+
+#[test]
+fn recover_log_drops_a_tail_torn_mid_utf8() {
+    // A crash mid-append can cut a record inside a multi-byte UTF-8
+    // sequence.  Whether or not the torn tail is newline-terminated,
+    // recovery must keep the valid prefix and drop the tail — never
+    // error out on the invalid UTF-8.
+    let dir = tmpdir("utf8log");
+    let path = dir.join("log.jsonl");
+    let l1 = log_record(0).to_json_line("feed");
+    let l2 = log_record(1).to_json_line("feed");
+    // Cut the second line one byte into the 'é' (0xC3 0xA9), leaving a
+    // dangling lead byte.
+    let b2 = l2.as_bytes();
+    let cut = b2.iter().position(|&b| b == 0xC3).unwrap() + 1;
+    assert!(!l2.is_char_boundary(cut), "cut must split the 'é'");
+
+    // Unterminated torn tail: the scanner never sees a newline, so the
+    // tail is dropped as an incomplete line.
+    let mut raw = format!("{l1}\n").into_bytes();
+    raw.extend_from_slice(&b2[..cut]);
+    std::fs::write(&path, &raw).unwrap();
+    let rec = recover_log(&path, "feed").unwrap();
+    assert_eq!(rec.records.len(), 1);
+    assert_eq!(rec.records[0].name, "couche-é1");
+    assert_eq!(rec.valid_bytes as usize, l1.len() + 1);
+    assert_eq!(rec.dropped_bytes as usize, cut);
+
+    // Newline-terminated torn tail: the line is complete but not valid
+    // UTF-8, which must read as a bad line, not a panic or an Err.
+    let mut raw = format!("{l1}\n").into_bytes();
+    raw.extend_from_slice(&b2[..cut]);
+    raw.push(b'\n');
+    std::fs::write(&path, &raw).unwrap();
+    let rec = recover_log(&path, "feed").unwrap();
+    assert_eq!(rec.records.len(), 1);
+    assert_eq!(rec.valid_bytes as usize, l1.len() + 1);
+    assert_eq!(rec.dropped_bytes as usize, cut + 1);
+
+    // Sanity: an untorn log with the same multi-byte names recovers
+    // both records bit-exactly.
+    std::fs::write(&path, format!("{l1}\n{l2}\n")).unwrap();
+    let rec = recover_log(&path, "feed").unwrap();
+    assert_eq!(rec.records.len(), 2);
+    assert_eq!(rec.records[1].name, "couche-é2");
+    assert_eq!(rec.dropped_bytes, 0);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---------------------------------------------------------------- cli --

@@ -40,7 +40,7 @@ fn start(max_inflight: usize) -> Running {
             endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
             max_inflight,
             workers: 2,
-            state_dir: None,
+            ..Default::default()
         })
         .expect("bind on a free port"),
     );
@@ -170,6 +170,7 @@ fn state_dir_lock_keeps_a_second_daemon_out() {
         max_inflight: 1,
         workers: 1,
         state_dir: Some(dir.clone()),
+        ..Default::default()
     };
     let first = Server::bind(cfg()).unwrap();
     let err = Server::bind(cfg()).unwrap_err();
@@ -194,7 +195,7 @@ fn unix_socket_endpoint_serves_and_cleans_up() {
             endpoint: Endpoint::Unix(path.clone()),
             max_inflight: 1,
             workers: 1,
-            state_dir: None,
+            ..Default::default()
         })
         .unwrap(),
     );

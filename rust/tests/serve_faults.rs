@@ -1,0 +1,403 @@
+//! Fault injection against a live serve daemon: disconnects mid-run,
+//! deadlines, slow-loris and oversized lines, per-client quotas, the
+//! bounded admission queue, and cache-budget degradation — proving the
+//! daemon degrades instead of leaking permits, leaking memory, or
+//! crashing, and that every run that completes stays byte-identical.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use intdecomp::serve::{
+    self, bare_request, compress_request, compress_request_with_deadline,
+    CacheBudget, Endpoint, ServeConfig, Server,
+};
+use intdecomp::shard::ModelSpec;
+use intdecomp::util::json::Json;
+
+fn spec(layers: usize, iters: usize, instance_seed: u64) -> ModelSpec {
+    ModelSpec {
+        n: 4,
+        d: 8,
+        k: 2,
+        gamma: 0.8,
+        instance_seed,
+        layers,
+        iters,
+        restarts: 2,
+        batch_size: 1,
+        augment: false,
+        restart_workers: 1,
+        algo: "nbocs".into(),
+        solver: "sa".into(),
+        seed: 11,
+        cache_key_raw: false,
+    }
+}
+
+/// A request small enough to finish in well under a second.
+fn tiny_spec() -> ModelSpec {
+    spec(1, 4, 9)
+}
+
+/// A request that would grind for a long time if nothing aborted it —
+/// the cancellation paths must cut it short at an iteration boundary.
+fn slow_spec() -> ModelSpec {
+    spec(1, 200_000, 9)
+}
+
+type Running = (Arc<Server>, Endpoint, thread::JoinHandle<anyhow::Result<()>>);
+
+fn start(tweak: impl FnOnce(&mut ServeConfig)) -> Running {
+    let mut cfg = ServeConfig {
+        endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+        max_inflight: 2,
+        workers: 2,
+        ..Default::default()
+    };
+    tweak(&mut cfg);
+    let server = Arc::new(Server::bind(cfg).expect("bind on a free port"));
+    let endpoint = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let handle = thread::spawn(move || srv.run());
+    (server, endpoint, handle)
+}
+
+fn stop(endpoint: &Endpoint, handle: thread::JoinHandle<anyhow::Result<()>>) {
+    let bye = serve::request(endpoint, &bare_request("shutdown")).unwrap();
+    let last = Json::parse(bye.last().unwrap()).unwrap();
+    assert_eq!(last.get("type").and_then(Json::as_str), Some("bye"));
+    handle.join().unwrap().unwrap();
+}
+
+fn tcp_addr(endpoint: &Endpoint) -> String {
+    match endpoint {
+        Endpoint::Tcp(addr) => addr.clone(),
+        #[cfg(unix)]
+        Endpoint::Unix(p) => {
+            panic!("test daemon must be TCP, got {}", p.display())
+        }
+    }
+}
+
+fn stats(endpoint: &Endpoint) -> Json {
+    let lines = serve::request(endpoint, &bare_request("stats")).unwrap();
+    Json::parse(lines.last().unwrap()).unwrap()
+}
+
+fn num(s: &Json, key: &str) -> u64 {
+    s.get(key)
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("stats missing {key}: {}", s.to_string()))
+}
+
+/// Poll the stats endpoint until `pred` holds (the daemon's counters
+/// move asynchronously to the fault we injected).
+fn poll_stats(
+    endpoint: &Endpoint,
+    what: &str,
+    pred: impl Fn(&Json) -> bool,
+) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = stats(endpoint);
+        if pred(&s) {
+            return s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {what}; last stats: {}",
+            s.to_string()
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Send `line` on a raw TCP connection without reading the response.
+fn raw_send(addr: &str, line: &str) -> TcpStream {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    conn.flush().unwrap();
+    conn
+}
+
+fn read_lines(conn: TcpStream) -> Vec<String> {
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut out = Vec::new();
+    for l in BufReader::new(conn).lines() {
+        match l {
+            Ok(l) if l.trim().is_empty() => continue,
+            Ok(l) => out.push(l),
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_the_run_and_releases_the_permit() {
+    let (_server, endpoint, handle) = start(|c| c.max_inflight = 1);
+    let addr = tcp_addr(&endpoint);
+    let conn = raw_send(&addr, &compress_request(&slow_spec()));
+    poll_stats(&endpoint, "the slow request to be admitted", |s| {
+        num(s, "inflight") == 1
+    });
+    drop(conn); // the client vanishes mid-run
+    let s = poll_stats(&endpoint, "the disconnect to cancel the run", |s| {
+        num(s, "cancelled") == 1
+    });
+    assert_eq!(num(&s, "completed"), 0);
+    poll_stats(&endpoint, "the permit to be released", |s| {
+        num(s, "inflight") == 0
+    });
+    // The freed slot serves a normal request to completion.
+    let lines =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    let done = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn deadline_ms_one_ends_with_a_deadline_line_and_frees_the_slot() {
+    let (_server, endpoint, handle) = start(|c| c.max_inflight = 1);
+    let lines = serve::request(
+        &endpoint,
+        &compress_request_with_deadline(&slow_spec(), 1),
+    )
+    .unwrap();
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(
+        last.get("type").and_then(Json::as_str),
+        Some("deadline"),
+        "a 1 ms deadline on a long request must abort: {}",
+        lines.last().unwrap()
+    );
+    let s = stats(&endpoint);
+    assert_eq!(num(&s, "deadline"), 1);
+    assert_eq!(num(&s, "inflight"), 0, "the permit must be released");
+    // The slot is free for real work.
+    let ok =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    let done = Json::parse(ok.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn slow_loris_partial_line_times_out_with_400() {
+    let (_server, endpoint, handle) = start(|c| c.line_timeout_ms = 200);
+    let addr = tcp_addr(&endpoint);
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.write_all(br#"{"type":"pi"#).unwrap(); // never finished
+    conn.flush().unwrap();
+    let lines = read_lines(conn);
+    assert_eq!(lines.len(), 1, "one 400 line then close: {lines:?}");
+    let err = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
+    // Other connections are untouched.
+    let pong = serve::request(&endpoint, &bare_request("ping")).unwrap();
+    let p = Json::parse(&pong[0]).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn oversized_line_gets_400_without_killing_the_accept_loop() {
+    let (_server, endpoint, handle) = start(|_| {});
+    let addr = tcp_addr(&endpoint);
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    // 2 MiB of garbage, no newline: the reader must cut it off at the
+    // 1 MiB cap rather than buffer forever.
+    let chunk = vec![b'x'; 64 * 1024];
+    for _ in 0..32 {
+        if conn.write_all(&chunk).is_err() {
+            break; // daemon already closed on us — also acceptable
+        }
+    }
+    let lines = read_lines(conn);
+    if let Some(first) = lines.first() {
+        let err = Json::parse(first).unwrap();
+        assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
+    }
+    // The daemon survives and keeps serving.
+    let pong = serve::request(&endpoint, &bare_request("ping")).unwrap();
+    let p = Json::parse(&pong[0]).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn garbage_line_gets_400_and_the_connection_survives() {
+    let (_server, endpoint, handle) = start(|_| {});
+    let addr = tcp_addr(&endpoint);
+    let mut conn = raw_send(&addr, "torn {garbage");
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
+    // Same connection, next line: still served.
+    conn.write_all(bare_request("ping").as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let p = Json::parse(line.trim()).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn per_client_quota_rejects_while_capacity_remains() {
+    let (_server, endpoint, handle) = start(|c| {
+        c.max_inflight = 4;
+        c.max_per_client = 1;
+    });
+    let addr = tcp_addr(&endpoint);
+    let conn = raw_send(&addr, &compress_request(&slow_spec()));
+    poll_stats(&endpoint, "the slow request to be admitted", |s| {
+        num(s, "inflight") == 1
+    });
+    // Same peer IP: over quota despite 3 free global slots.
+    let lines =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    assert_eq!(lines.len(), 1);
+    let err = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(429));
+    assert!(
+        err.get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("client quota"),
+        "the rejection must name the quota: {}",
+        lines[0]
+    );
+    drop(conn);
+    poll_stats(&endpoint, "the quota holder to be cancelled", |s| {
+        num(s, "cancelled") == 1 && num(s, "inflight") == 0
+    });
+    // Quota freed: the same client is admitted again.
+    let ok =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    let done = Json::parse(ok.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn admission_queue_holds_requests_and_overflow_bounces() {
+    let (_server, endpoint, handle) = start(|c| {
+        c.max_inflight = 1;
+        c.queue = 1;
+    });
+    let addr = tcp_addr(&endpoint);
+    let conn = raw_send(&addr, &compress_request(&slow_spec()));
+    poll_stats(&endpoint, "the slow request to be admitted", |s| {
+        num(s, "inflight") == 1
+    });
+    // Second request parks in the queue instead of bouncing.
+    let queued_endpoint = endpoint.clone();
+    let queued = thread::spawn(move || {
+        serve::request(&queued_endpoint, &compress_request(&tiny_spec()))
+    });
+    poll_stats(&endpoint, "the second request to queue", |s| {
+        num(s, "queued") == 1
+    });
+    // Third request: queue full -> explicit 429.
+    let lines =
+        serve::request(&endpoint, &compress_request(&tiny_spec())).unwrap();
+    let err = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(429));
+    assert!(
+        err.get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("at capacity"),
+        "overflow rejection: {}",
+        lines[0]
+    );
+    // Disconnect the running request: its cancellation must hand the
+    // slot to the queued one, which then completes normally.
+    drop(conn);
+    let got = queued.join().unwrap().unwrap();
+    let done = Json::parse(got.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    let s = poll_stats(&endpoint, "final counters", |s| {
+        num(s, "inflight") == 0 && num(s, "queued") == 0
+    });
+    assert_eq!(num(&s, "completed"), 1);
+    assert_eq!(num(&s, "cancelled"), 1);
+    assert_eq!(num(&s, "rejected"), 1);
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn zero_cache_budget_is_pass_through_end_to_end() {
+    let (_server, endpoint, handle) = start(|c| {
+        c.cache_budget = CacheBudget { entries: Some(0), bytes: None };
+    });
+    let line = compress_request(&tiny_spec());
+    let first = serve::request(&endpoint, &line).unwrap();
+    let second = serve::request(&endpoint, &line).unwrap();
+    let r1 = Json::parse(first.last().unwrap()).unwrap();
+    let r2 = Json::parse(second.last().unwrap()).unwrap();
+    assert_eq!(r1.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(
+        r1.get("report").and_then(Json::as_str),
+        r2.get("report").and_then(Json::as_str),
+        "pass-through mode must not change results"
+    );
+    let s = stats(&endpoint);
+    assert_eq!(num(&s, "completed"), 2);
+    assert_eq!(num(&s, "cache_caches"), 0, "nothing may be cached");
+    assert_eq!(num(&s, "cache_entries"), 0);
+    assert_eq!(num(&s, "cache_hits"), 0);
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn eviction_then_recompute_is_byte_identical_end_to_end() {
+    // A 1-entry budget forces every request's caches out at the next
+    // sweep — the hardest possible eviction schedule.
+    let (_server, endpoint, handle) = start(|c| {
+        c.cache_budget = CacheBudget { entries: Some(1), bytes: None };
+    });
+    let line = compress_request(&tiny_spec());
+    let first = serve::request(&endpoint, &line).unwrap();
+    let s = stats(&endpoint);
+    assert!(
+        num(&s, "cache_evicted_caches") >= 1,
+        "the sweep after the request must evict: {}",
+        s.to_string()
+    );
+    assert!(num(&s, "cache_entries") <= 1, "registry over budget");
+    let second = serve::request(&endpoint, &line).unwrap();
+    // Streamed record lines are deterministic byte-for-byte; the done
+    // line carries a wall-clock elapsed_s, so compare its report field.
+    assert_eq!(
+        first[..first.len() - 1],
+        second[..second.len() - 1],
+        "recompute after eviction must stream identical records"
+    );
+    let rep = |lines: &[String]| {
+        Json::parse(lines.last().unwrap())
+            .unwrap()
+            .get("report")
+            .and_then(Json::as_str)
+            .map(str::to_owned)
+            .expect("done line carries the report")
+    };
+    assert_eq!(
+        rep(&first),
+        rep(&second),
+        "recompute after eviction must be byte-identical"
+    );
+    let s = stats(&endpoint);
+    assert!(num(&s, "cache_entries") <= 1, "registry over budget");
+    assert!(num(&s, "cache_evicted_caches") >= 2);
+    stop(&endpoint, handle);
+}
