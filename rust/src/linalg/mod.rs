@@ -398,6 +398,114 @@ pub fn cholesky_scaled_into(
     factor_lower_in_place(l, tol)
 }
 
+/// How [`cholesky_jittered`] escalates when a factorisation fails:
+/// attempt 0 always runs with **zero** jitter (bit-identical to
+/// [`cholesky_into`] / [`cholesky_scaled_into`] on the same inputs),
+/// then each of the `retries` retry attempts adds
+/// `base · factor^i` to the diagonal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JitterLadder {
+    /// Diagonal jitter of the first retry.
+    pub base: f64,
+    /// Multiplicative escalation between consecutive retries.
+    pub factor: f64,
+    /// Jittered retries after the clean first attempt.
+    pub retries: usize,
+}
+
+impl Default for JitterLadder {
+    /// Three retries, ×10 jitter each, starting at `1e-10`.
+    fn default() -> Self {
+        JitterLadder { base: 1e-10, factor: 10.0, retries: 3 }
+    }
+}
+
+/// Typed failure of the jittered Cholesky: the matrix stayed
+/// numerically non-SPD after the whole ladder was exhausted.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CholeskyError {
+    /// Factorisation attempts made (one clean + the retries).
+    pub attempts: usize,
+    /// The largest diagonal jitter tried.
+    pub max_jitter: f64,
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not SPD after {} Cholesky attempts (max jitter {:e})",
+            self.attempts, self.max_jitter
+        )
+    }
+}
+
+impl std::error::Error for CholeskyError {}
+
+/// [`cholesky`] with a bounded escalating diagonal-jitter retry: the
+/// graceful-degradation path for near-singular Gram matrices.  Returns
+/// the factor and the jitter that succeeded (`0.0` on the clean first
+/// attempt, whose factor is bit-identical to [`cholesky`]'s), or a
+/// typed [`CholeskyError`] once the ladder is exhausted.
+pub fn cholesky_jittered(
+    a: &Matrix,
+    tol: f64,
+    ladder: JitterLadder,
+) -> Result<(Matrix, f64), CholeskyError> {
+    let mut l = Matrix::zeros(a.rows, a.rows);
+    if cholesky_into(a, tol, &mut l) {
+        return Ok((l, 0.0));
+    }
+    let zeros = vec![0.0; a.rows];
+    let mut jitter = 0.0;
+    let mut attempts = 1usize;
+    loop {
+        if attempts > ladder.retries {
+            return Err(CholeskyError { attempts, max_jitter: jitter });
+        }
+        attempts += 1;
+        jitter = if jitter == 0.0 {
+            ladder.base
+        } else {
+            jitter * ladder.factor
+        };
+        if cholesky_scaled_into(a, 1.0, &zeros, jitter, tol, &mut l) {
+            return Ok((l, jitter));
+        }
+    }
+}
+
+/// [`cholesky_scaled_into`] with the same bounded jitter ladder — the
+/// zero-alloc variant the surrogate's posterior draw runs on.  The
+/// first attempt uses zero jitter and is bit-identical to calling
+/// [`cholesky_scaled_into`] directly; on success the jitter used is
+/// returned so callers can surface degraded draws.
+pub fn cholesky_jittered_scaled_into(
+    g: &Matrix,
+    scale: f64,
+    lam: &[f64],
+    tol: f64,
+    ladder: JitterLadder,
+    l: &mut Matrix,
+) -> Result<f64, CholeskyError> {
+    let mut jitter = 0.0;
+    let mut attempts = 0usize;
+    loop {
+        attempts += 1;
+        if cholesky_scaled_into(g, scale, lam, jitter, tol, l) {
+            return Ok(jitter);
+        }
+        if attempts > ladder.retries {
+            return Err(CholeskyError { attempts, max_jitter: jitter });
+        }
+        jitter = if jitter == 0.0 {
+            ladder.base
+        } else {
+            jitter * ladder.factor
+        };
+    }
+}
+
 /// Blocked right-looking Cholesky on the lower triangle of `l` (strict
 /// upper triangle must already be zero).  Per block step: unblocked
 /// factor of the diagonal block, triangular solve of the panel below it,
@@ -730,6 +838,90 @@ mod tests {
         let fresh_b = cholesky(&b, 1e-12).unwrap();
         assert!(cholesky_into(&b, 1e-12, &mut l));
         assert_eq!(l.data, fresh_b.data);
+    }
+
+    #[test]
+    fn jittered_no_jitter_path_is_bit_identical() {
+        // Seed-pinned: on an SPD matrix the ladder's clean first
+        // attempt must reproduce the direct factorisations bit for
+        // bit — jitter must be a pure fallback, never a perturbation.
+        let mut rng = Rng::new(77);
+        let a = spd(&mut rng, CHOL_BLOCK + 5);
+        let direct = cholesky(&a, 1e-12).unwrap();
+        let (l, jitter) =
+            cholesky_jittered(&a, 1e-12, JitterLadder::default()).unwrap();
+        assert_eq!(jitter, 0.0);
+        assert_eq!(l.data, direct.data);
+        // Scaled variant: same contract against cholesky_scaled_into.
+        let n = a.rows;
+        let lam: Vec<f64> = (0..n).map(|i| 0.1 + i as f64 * 0.01).collect();
+        let mut want = Matrix::zeros(n, n);
+        assert!(cholesky_scaled_into(&a, 0.7, &lam, 0.0, 0.0, &mut want));
+        let mut got = Matrix::zeros(n, n);
+        let jitter = cholesky_jittered_scaled_into(
+            &a,
+            0.7,
+            &lam,
+            0.0,
+            JitterLadder::default(),
+            &mut got,
+        )
+        .unwrap();
+        assert_eq!(jitter, 0.0);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn jittered_ladder_rescues_a_singular_gram() {
+        // Rank-deficient Gram (duplicate columns): the clean attempt
+        // fails, an escalated jitter succeeds, and the jitter used is
+        // one of the ladder's rungs.
+        let mut rng = Rng::new(78);
+        let col = rng.normals(6);
+        let mut a = Matrix::zeros(6, 2);
+        for i in 0..6 {
+            a[(i, 0)] = col[i];
+            a[(i, 1)] = col[i];
+        }
+        let g = a.gram();
+        assert!(cholesky(&g, 1e-12).is_none(), "precondition: singular");
+        let ladder = JitterLadder { base: 1e-8, factor: 10.0, retries: 3 };
+        let (l, jitter) = cholesky_jittered(&g, 1e-12, ladder).unwrap();
+        assert!(jitter > 0.0 && jitter <= 1e-8 * 10f64.powi(2));
+        // The factor reproduces G + jitter·I.
+        let llt = l.matmul(&l.transpose());
+        for i in 0..2 {
+            for j in 0..2 {
+                let want = g[(i, j)] + if i == j { jitter } else { 0.0 };
+                assert!((llt[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn jittered_exhaustion_is_a_typed_error() {
+        // An indefinite matrix no tiny jitter can fix: the ladder must
+        // exhaust and report exactly how hard it tried.
+        let a = Matrix::from_rows(&[vec![1.0, 9.0], vec![9.0, 1.0]]);
+        let ladder = JitterLadder { base: 1e-10, factor: 10.0, retries: 3 };
+        let err = cholesky_jittered(&a, 1e-12, ladder).unwrap_err();
+        assert_eq!(err.attempts, 4);
+        assert!((err.max_jitter - 1e-8).abs() < 1e-20);
+        let msg = err.to_string();
+        assert!(msg.contains("not SPD"), "message: {msg}");
+        // Scaled variant exhausts identically.
+        let lam = vec![0.0; 2];
+        let mut l = Matrix::zeros(2, 2);
+        let err = cholesky_jittered_scaled_into(
+            &a,
+            1.0,
+            &lam,
+            1e-12,
+            ladder,
+            &mut l,
+        )
+        .unwrap_err();
+        assert_eq!(err.attempts, 4);
     }
 
     #[test]

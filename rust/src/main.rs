@@ -114,9 +114,10 @@ USAGE: intdecomp <subcommand> [flags]
                    disconnect cancellation, and a stats endpoint;
                    served reports are byte-identical to compress-model
   serve-request    client for a running daemon: --stats | --ping |
-                   --shutdown, or the compress-model flags to submit
-                   a compression (--report FILE saves the served
-                   deterministic report)
+                   --jobs | --shutdown, or the compress-model flags to
+                   submit a compression (--report FILE saves the
+                   served deterministic report; --retry/--backoff-ms
+                   retry refused connections and 429s)
   brute-force      exact search (best / second-best / solution orbit)
   greedy           the original SPADE baseline
   bench            hot-path micro-benchmarks (--quick, --json, --label L:
@@ -190,12 +191,28 @@ FLAGS (defaults in parens):
                     than this is a 400 slow-loris rejection (10000;
                     0 = never)
   --state DIR       serve: optional state directory guarded by the
-                    shard advisory lock (one daemon per directory)
-  --stats / --ping / --shutdown
+                    shard advisory lock (one daemon per directory);
+                    with journaling on, requests and per-layer
+                    progress are durable and a SIGKILL'd daemon
+                    resumes on restart
+  --journal on|off  serve: write-ahead journaling of compress
+                    requests under --state (on); off disables
+                    durability but keeps the state lock
+  --recover MODE    serve: bind-time recovery of journaled state —
+                    'on' (default) finishes interrupted requests and
+                    truncates torn bytes, 'off' skips the recovery
+                    pass, 'strict' refuses to start on torn bytes
+  --stats / --ping / --jobs / --shutdown
                     serve-request: send a control request instead of
-                    a compression
+                    a compression (--jobs lists journaled requests)
   --deadline-ms N   serve-request: per-request wall-time bound; the
                     daemon aborts past it with a 'deadline' line
+  --retry N         serve-request: extra attempts after a refused
+                    connection or a 429 response (0); the final
+                    attempt's typed failure is preserved
+  --backoff-ms B    serve-request: base retry backoff, doubled per
+                    attempt plus a deterministic seeded jitter (100;
+                    --retry-seed S reseeds the jitter stream)
 ";
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
@@ -559,6 +576,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .u64_flag("line-timeout-ms", 10_000)
             .map_err(|e| anyhow!(e))?,
         state_dir: args.flags.get("state").map(PathBuf::from),
+        journal: match args.str_flag("journal", "on").as_str() {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            v => bail!("--journal {v}: expected on|off"),
+        },
+        recover: serve::RecoverMode::parse(
+            &args.str_flag("recover", "on"),
+        )?,
     };
     let max_inflight = cfg.max_inflight;
     let server = serve::Server::bind(cfg)?;
@@ -573,6 +598,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Retry policy for `serve-request`: up to `retries` extra attempts
+/// on connection-refused and `429` responses, sleeping an exponential
+/// backoff (`backoff_ms << attempt`) plus a deterministic seeded
+/// jitter between attempts.  Any other failure — and the final
+/// attempt's — keeps its typed nonzero exit.
+fn serve_request_with_retry(
+    endpoint: &serve::Endpoint,
+    line: &str,
+    retries: usize,
+    backoff_ms: u64,
+    seed: u64,
+) -> Result<Vec<String>> {
+    use intdecomp::util::json::Json;
+    use intdecomp::util::rng::Rng;
+
+    let mut rng = Rng::new(seed);
+    let mut attempt = 0usize;
+    loop {
+        let retryable_err;
+        match serve::request(endpoint, line) {
+            Ok(lines) => {
+                let is_429 = lines.last().and_then(|l| Json::parse(l).ok())
+                    .is_some_and(|j| {
+                        j.get("type").and_then(Json::as_str)
+                            == Some("error")
+                            && j.get("code").and_then(Json::as_u64)
+                                == Some(429)
+                    });
+                if !is_429 || attempt >= retries {
+                    return Ok(lines);
+                }
+                retryable_err = "server at capacity (429)".to_string();
+            }
+            Err(e) => {
+                let refused = e
+                    .downcast_ref::<std::io::Error>()
+                    .is_some_and(|io| {
+                        io.kind()
+                            == std::io::ErrorKind::ConnectionRefused
+                    });
+                if !refused || attempt >= retries {
+                    return Err(e);
+                }
+                retryable_err = format!("{e:#}");
+            }
+        }
+        // Exponential base with a seeded jitter in [0, base/2]: spreads
+        // simultaneous retriers without losing reproducibility.
+        let base = backoff_ms.saturating_mul(1u64 << attempt.min(16));
+        let jitter = match base / 2 {
+            0 => 0,
+            half => rng.next_u64() % (half + 1),
+        };
+        let delay = base.saturating_add(jitter);
+        eprintln!(
+            "serve-request: attempt {} failed ({retryable_err}); \
+             retrying in {delay} ms",
+            attempt + 1
+        );
+        std::thread::sleep(std::time::Duration::from_millis(delay));
+        attempt += 1;
+    }
+}
+
 /// Send one request to a running daemon and print the response lines.
 fn cmd_serve_request(args: &Args) -> Result<()> {
     use intdecomp::util::json::Json;
@@ -582,6 +671,8 @@ fn cmd_serve_request(args: &Args) -> Result<()> {
         serve::bare_request("stats")
     } else if args.bool_flag("ping") {
         serve::bare_request("ping")
+    } else if args.bool_flag("jobs") {
+        serve::bare_request("jobs")
     } else if args.bool_flag("shutdown") {
         serve::bare_request("shutdown")
     } else {
@@ -596,7 +687,13 @@ fn cmd_serve_request(args: &Args) -> Result<()> {
             None => serve::compress_request(&spec),
         }
     };
-    let lines = serve::request(&endpoint, &line)?;
+    let retries = args.usize_flag("retry", 0).map_err(|e| anyhow!(e))?;
+    let backoff_ms =
+        args.u64_flag("backoff-ms", 100).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("retry-seed", 0x7341).map_err(|e| anyhow!(e))?;
+    let lines = serve_request_with_retry(
+        &endpoint, &line, retries, backoff_ms, seed,
+    )?;
     for l in &lines {
         println!("{l}");
     }
@@ -998,6 +1095,76 @@ fn cmd_bench(args: &Args) -> Result<()> {
         );
         let _ = serve::request(&endpoint, &serve::bare_request("shutdown"));
         let _ = handle.join();
+    }
+
+    // Durability hot paths (ISSUE 8): the fsynced write-ahead journal
+    // append a request pays before its first layer, and a full
+    // bind-time recovery pass (journal scan + checkpoint replay of an
+    // interrupted 1-layer request).
+    {
+        let dir = std::env::temp_dir().join("intdecomp_bench_journal");
+        let spec = shard::ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 7,
+            layers: 1,
+            iters: if quick { 2 } else { 4 },
+            restarts: 2,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed: 3,
+            cache_key_raw: false,
+        };
+        let fp = spec.fingerprint();
+        note(
+            b.run("serve/journal append x64", 64, || {
+                let _ = std::fs::remove_dir_all(&dir);
+                std::fs::create_dir_all(&dir).expect("bench tmpdir");
+                let (mut j, _) =
+                    serve::Journal::open(&serve::journal::journal_path(
+                        &dir,
+                    ))
+                    .expect("journal open");
+                for _ in 0..64usize {
+                    j.record_admitted(&spec, &fp).expect("append");
+                }
+                64
+            }),
+            &mut all,
+        );
+        note(
+            b.run("serve/recover replay", 1, || {
+                let _ = std::fs::remove_dir_all(&dir);
+                std::fs::create_dir_all(&dir).expect("bench tmpdir");
+                {
+                    let (mut j, _) = serve::Journal::open(
+                        &serve::journal::journal_path(&dir),
+                    )
+                    .expect("journal open");
+                    j.record_admitted(&spec, &fp).expect("append");
+                }
+                let server = serve::Server::bind(serve::ServeConfig {
+                    endpoint: serve::Endpoint::Tcp(
+                        "127.0.0.1:0".into(),
+                    ),
+                    workers,
+                    state_dir: Some(dir.clone()),
+                    ..Default::default()
+                })
+                .expect("recovery bind");
+                server
+                    .resume_stats()
+                    .map(|r| r.replayed_layers as usize)
+                    .unwrap_or(0)
+            }),
+            &mut all,
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // Registry LRU churn (ISSUE 7): fill per-instance caches past an

@@ -183,6 +183,29 @@ impl CacheRegistry {
         dropped
     }
 
+    /// Pre-populate the shared cache for one instance key with a known
+    /// evaluation — the serve recovery pass calls this with each
+    /// journaled layer record's winning candidate and cost, so the
+    /// first post-restart request for the same instance hits warm
+    /// instead of re-evaluating.  Storing is idempotent (the canonical
+    /// key dedupes) and can never change a result: the cached value
+    /// *is* the deterministic cost of the candidate.  Returns `false`
+    /// in pass-through mode (nothing may be stored).
+    pub fn warm(
+        &self,
+        key: &str,
+        candidate: &crate::cost::BinMatrix,
+        cost: f64,
+    ) -> bool {
+        match self.get(key) {
+            Some(cache) => {
+                cache.get_or_eval(candidate, |_| cost);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Distinct instance keys currently resident.
     pub fn caches(&self) -> usize {
         self.inner.lock().unwrap().map.len()
@@ -319,6 +342,24 @@ mod tests {
             cache.get_or_eval(&BinMatrix::new(8, 1, spins), |_| 2.0)
         };
         assert_eq!(before.to_bits(), after.to_bits());
+    }
+
+    #[test]
+    fn warm_seeds_the_cache_and_respects_pass_through() {
+        let reg = CacheRegistry::new();
+        let spins: Vec<i8> = vec![1, -1, 1, 1, -1, -1, 1, -1];
+        let m = BinMatrix::new(8, 1, spins.clone());
+        assert!(reg.warm("n8-l0", &m, 0.375));
+        // The warmed entry short-circuits the evaluation.
+        let cache = reg.get("n8-l0").unwrap();
+        let got = cache.get_or_eval(&m, |_| panic!("must be warm"));
+        assert_eq!(got.to_bits(), 0.375f64.to_bits());
+        // Pass-through registries store nothing.
+        let off = CacheRegistry::with_budget(CacheBudget {
+            entries: Some(0),
+            bytes: None,
+        });
+        assert!(!off.warm("n8-l0", &m, 0.375));
     }
 
     #[test]

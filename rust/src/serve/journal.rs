@@ -1,0 +1,464 @@
+//! The daemon's write-ahead request journal — the durability layer
+//! that makes `intdecomp serve` restart-transparent.
+//!
+//! When the daemon runs with `--state DIR` and journaling on, every
+//! admitted `compress` request appends one **admitted** line here
+//! (schema-versioned JSONL carrying the full [`ModelSpec`] JSON plus
+//! its fingerprint) before any work starts, and one terminal
+//! **completed** / **cancelled** line when it ends; every line is
+//! fsynced before the daemon proceeds.  Per-layer progress does *not*
+//! live in the journal: it rides the exact shard checkpoint path — a
+//! [`crate::shard::CheckpointLog`] at `DIR/jobs/<fingerprint>.jsonl`,
+//! one fsynced [`crate::shard::LayerRecord`] line per finished layer.
+//!
+//! On restart, [`recover_journal`] scans the journal's **valid
+//! prefix** (complete, newline-terminated, parseable lines — the same
+//! torn-tail contract as [`crate::shard::recover_log`]; a crash can
+//! only tear the final line) and yields each request's latest status.
+//! Requests left `admitted` are the daemon's crash debt: the recovery
+//! pass re-runs exactly their unfinished layers (the checkpoint log
+//! already holds the finished prefix) and marks them completed.
+//! Because every record is a pure function of the spec, the finished
+//! log — and the report served from it — is byte-identical to an
+//! uninterrupted run's.
+//!
+//! The journal itself carries no extra lockfile: the daemon's state
+//! directory is exclusive already (`serve.state` advisory lock at
+//! bind), making the daemon the journal's single writer.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::shard::ModelSpec;
+use crate::util::json::Json;
+
+/// Schema tag of every journal line; bump on layout changes.
+pub const JOURNAL_SCHEMA: &str = "intdecomp-serve-journal-v1";
+
+/// Bind-time recovery policy for a journaled state directory
+/// (`--recover on|off|strict`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoverMode {
+    /// Skip the recovery pass: the journal is appended to but crash
+    /// debt is left untouched (it stays serveable on re-request).
+    Off,
+    /// Recover every valid prefix, silently truncating torn tails,
+    /// and finish incomplete requests at bind.  The default.
+    #[default]
+    On,
+    /// Like `On`, but refuse to start if any torn or foreign bytes
+    /// had to be dropped from the journal or a checkpoint log.
+    Strict,
+}
+
+impl RecoverMode {
+    /// Parse the `--recover` flag value.
+    pub fn parse(s: &str) -> Result<RecoverMode> {
+        match s {
+            "off" => Ok(RecoverMode::Off),
+            "on" => Ok(RecoverMode::On),
+            "strict" => Ok(RecoverMode::Strict),
+            other => bail!("--recover {other}: expected on, off or strict"),
+        }
+    }
+
+    /// The flag spelling of this mode.
+    pub fn label(self) -> &'static str {
+        match self {
+            RecoverMode::Off => "off",
+            RecoverMode::On => "on",
+            RecoverMode::Strict => "strict",
+        }
+    }
+}
+
+/// Life-cycle status of a journaled request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Work was admitted; no terminal marker yet (crash debt when
+    /// found at recovery time).
+    Admitted,
+    /// All layers finished; the checkpoint log holds the full run.
+    Completed,
+    /// The request was cancelled (client gone or deadline); its
+    /// checkpoint prefix is kept but recovery does not replay it.
+    Cancelled,
+}
+
+impl JobStatus {
+    /// The wire spelling of this status.
+    pub fn label(self) -> &'static str {
+        match self {
+            JobStatus::Admitted => "admitted",
+            JobStatus::Completed => "completed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    fn parse(s: &str) -> Option<JobStatus> {
+        match s {
+            "admitted" => Some(JobStatus::Admitted),
+            "completed" => Some(JobStatus::Completed),
+            "cancelled" => Some(JobStatus::Cancelled),
+            _ => None,
+        }
+    }
+}
+
+/// One journaled request: the admitted spec and its latest status.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    /// The spec fingerprint — the request's durable identity.
+    pub fingerprint: String,
+    /// The full admitted workload (enough to re-run it from nothing).
+    pub spec: ModelSpec,
+    /// The latest status found in the journal.
+    pub status: JobStatus,
+}
+
+/// What [`recover_journal`] found in an existing journal.
+#[derive(Debug, Default)]
+pub struct RecoveredJournal {
+    /// One entry per distinct fingerprint, in first-admit order, each
+    /// carrying the latest status its lines reached.
+    pub entries: Vec<JournalEntry>,
+    /// Byte length of the valid prefix.
+    pub valid_bytes: u64,
+    /// Bytes past the valid prefix (torn tail / foreign garbage);
+    /// [`Journal::open`] truncates them.
+    pub dropped_bytes: u64,
+}
+
+impl RecoveredJournal {
+    /// The crash debt: requests admitted but never terminated.
+    pub fn incomplete(&self) -> impl Iterator<Item = &JournalEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.status == JobStatus::Admitted)
+    }
+}
+
+/// The journal file inside a state directory.
+pub fn journal_path(state_dir: &Path) -> PathBuf {
+    state_dir.join("journal.jsonl")
+}
+
+/// The per-request checkpoint log inside a state directory.
+pub fn jobs_log_path(state_dir: &Path, fingerprint: &str) -> PathBuf {
+    state_dir.join("jobs").join(format!("{fingerprint}.jsonl"))
+}
+
+/// Build one `admitted` journal line (no trailing newline): the full
+/// spec JSON rides along so recovery can re-run the request with no
+/// other input.
+pub fn admitted_line(spec: &ModelSpec, fingerprint: &str) -> String {
+    Json::obj(vec![
+        ("fingerprint", Json::Str(fingerprint.into())),
+        ("schema", Json::Str(JOURNAL_SCHEMA.into())),
+        ("spec", spec.to_json()),
+        ("status", Json::Str(JobStatus::Admitted.label().into())),
+    ])
+    .to_string()
+}
+
+/// Build one terminal journal line (no trailing newline).
+pub fn status_line(fingerprint: &str, status: JobStatus) -> String {
+    Json::obj(vec![
+        ("fingerprint", Json::Str(fingerprint.into())),
+        ("schema", Json::Str(JOURNAL_SCHEMA.into())),
+        ("status", Json::Str(status.label().into())),
+    ])
+    .to_string()
+}
+
+/// Parse one journal line into `(fingerprint, status, spec)`.  An
+/// `admitted` line must carry a spec whose own fingerprint matches the
+/// line's; terminal lines carry none.
+fn parse_line(line: &str) -> Result<(String, JobStatus, Option<ModelSpec>)> {
+    let j = Json::parse(line).map_err(|e| anyhow!("journal line: {e}"))?;
+    match j.get("schema").and_then(Json::as_str) {
+        Some(s) if s == JOURNAL_SCHEMA => {}
+        other => bail!("journal line: bad schema tag {other:?}"),
+    }
+    let fp = j
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("journal line: missing 'fingerprint'"))?
+        .to_string();
+    let status = j
+        .get("status")
+        .and_then(Json::as_str)
+        .and_then(JobStatus::parse)
+        .ok_or_else(|| anyhow!("journal line: bad 'status'"))?;
+    let spec = match status {
+        JobStatus::Admitted => {
+            let spec = ModelSpec::from_json(
+                j.get("spec")
+                    .ok_or_else(|| anyhow!("journal line: missing 'spec'"))?,
+            )?;
+            if spec.fingerprint() != fp {
+                bail!(
+                    "journal line: spec fingerprint {} != envelope {fp}",
+                    spec.fingerprint()
+                );
+            }
+            Some(spec)
+        }
+        _ => None,
+    };
+    Ok((fp, status, spec))
+}
+
+/// Read the valid prefix of a journal: complete, newline-terminated,
+/// parseable lines whose statuses form a consistent history (a
+/// terminal marker for a never-admitted fingerprint ends the prefix —
+/// admits always precede their terminals, so anything else is
+/// corruption).  A missing file is an empty journal.
+pub fn recover_journal(path: &Path) -> Result<RecoveredJournal> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(RecoveredJournal::default())
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading {}", path.display()))
+        }
+    };
+    let mut entries: Vec<JournalEntry> = Vec::new();
+    let mut index: BTreeMap<String, usize> = BTreeMap::new();
+    let mut valid = 0usize;
+    // Raw-byte scan, like `shard::recover_log`: a non-UTF-8 tail is
+    // truncated like any other torn line instead of wedging recovery.
+    let mut rest = bytes.as_slice();
+    'scan: while let Some(nl) = rest.iter().position(|&b| b == b'\n') {
+        let parsed = std::str::from_utf8(&rest[..nl])
+            .ok()
+            .and_then(|line| parse_line(line).ok());
+        let Some((fp, status, spec)) = parsed else { break };
+        match (index.get(&fp), spec) {
+            (None, Some(spec)) => {
+                index.insert(fp.clone(), entries.len());
+                entries.push(JournalEntry { fingerprint: fp, spec, status });
+            }
+            (Some(&i), spec) => {
+                // Re-admit or terminal transition of a known request.
+                entries[i].status = status;
+                if let Some(spec) = spec {
+                    entries[i].spec = spec;
+                }
+            }
+            // Terminal marker for a fingerprint never admitted.
+            (None, None) => break 'scan,
+        }
+        valid += nl + 1;
+        rest = &rest[nl + 1..];
+    }
+    Ok(RecoveredJournal {
+        entries,
+        valid_bytes: valid as u64,
+        dropped_bytes: (bytes.len() - valid) as u64,
+    })
+}
+
+/// The append-side journal handle.  Opening recovers the valid
+/// prefix, truncates the torn tail and positions for appending;
+/// [`Journal::record_admitted`] and friends fsync every line before
+/// returning — the write-ahead guarantee the recovery pass trusts.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl Journal {
+    /// Open (creating if missing) the journal at `path`, returning the
+    /// writer and everything the valid prefix held.
+    pub fn open(path: &Path) -> Result<(Journal, RecoveredJournal)> {
+        let recovered = recover_journal(path)?;
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        file.set_len(recovered.valid_bytes)
+            .with_context(|| format!("truncating {}", path.display()))?;
+        drop(file);
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| {
+                format!("opening {} for append", path.display())
+            })?;
+        Ok((Journal { path: path.to_path_buf(), file }, recovered))
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Journal a request's admission (write-ahead: call before any
+    /// layer work starts).
+    pub fn record_admitted(
+        &mut self,
+        spec: &ModelSpec,
+        fingerprint: &str,
+    ) -> std::io::Result<()> {
+        self.append(admitted_line(spec, fingerprint))
+    }
+
+    /// Journal a request's completion.
+    pub fn record_completed(
+        &mut self,
+        fingerprint: &str,
+    ) -> std::io::Result<()> {
+        self.append(status_line(fingerprint, JobStatus::Completed))
+    }
+
+    /// Journal a request's cancellation (client gone / deadline).
+    pub fn record_cancelled(
+        &mut self,
+        fingerprint: &str,
+    ) -> std::io::Result<()> {
+        self.append(status_line(fingerprint, JobStatus::Cancelled))
+    }
+
+    fn append(&mut self, mut line: String) -> std::io::Result<()> {
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(seed: u64) -> ModelSpec {
+        ModelSpec {
+            n: 4,
+            d: 8,
+            k: 2,
+            gamma: 0.8,
+            instance_seed: 9,
+            layers: 2,
+            iters: 5,
+            restarts: 3,
+            batch_size: 1,
+            augment: false,
+            restart_workers: 1,
+            algo: "nbocs".into(),
+            solver: "sa".into(),
+            seed,
+            cache_key_raw: false,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("intdecomp_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn journal_roundtrips_specs_and_statuses() {
+        let dir = tmp("journal_roundtrip");
+        let path = journal_path(&dir);
+        let a = tiny_spec(1);
+        let b = tiny_spec(2);
+        let (fa, fb) = (a.fingerprint(), b.fingerprint());
+        {
+            let (mut j, rec) = Journal::open(&path).unwrap();
+            assert!(rec.entries.is_empty());
+            j.record_admitted(&a, &fa).unwrap();
+            j.record_admitted(&b, &fb).unwrap();
+            j.record_completed(&fa).unwrap();
+        }
+        let rec = recover_journal(&path).unwrap();
+        assert_eq!(rec.entries.len(), 2);
+        assert_eq!(rec.dropped_bytes, 0);
+        assert_eq!(rec.entries[0].status, JobStatus::Completed);
+        assert_eq!(rec.entries[0].spec, a);
+        assert_eq!(rec.entries[1].status, JobStatus::Admitted);
+        let debt: Vec<_> =
+            rec.incomplete().map(|e| e.fingerprint.clone()).collect();
+        assert_eq!(debt, vec![fb.clone()]);
+        // Cancel b on a reopen; no more crash debt.
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.record_cancelled(&fb).unwrap();
+        }
+        let rec = recover_journal(&path).unwrap();
+        assert_eq!(rec.entries[1].status, JobStatus::Cancelled);
+        assert_eq!(rec.incomplete().count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_truncates_torn_tails_and_rejects_foreign_lines() {
+        let dir = tmp("journal_torn");
+        let path = journal_path(&dir);
+        let a = tiny_spec(3);
+        let fa = a.fingerprint();
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.record_admitted(&a, &fa).unwrap();
+        }
+        let full = std::fs::read(&path).unwrap();
+        // Torn mid-line: the admit survives only when its newline does.
+        let mut cut = full.clone();
+        cut.extend_from_slice(&full[..full.len() - 9]);
+        std::fs::write(&path, &cut).unwrap();
+        let rec = recover_journal(&path).unwrap();
+        assert_eq!(rec.entries.len(), 1);
+        assert_eq!(rec.valid_bytes as usize, full.len());
+        assert_eq!(rec.dropped_bytes as usize, full.len() - 9);
+        // Journal::open truncates the tail for good.
+        drop(Journal::open(&path).unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), full);
+        // A terminal marker for a never-admitted fingerprint ends the
+        // valid prefix (admits precede terminals by construction).
+        let orphan = format!(
+            "{}\n{}",
+            status_line("deadbeef", JobStatus::Completed),
+            String::from_utf8(full.clone()).unwrap()
+        );
+        std::fs::write(&path, orphan).unwrap();
+        let rec = recover_journal(&path).unwrap();
+        assert_eq!(rec.valid_bytes, 0);
+        assert!(rec.entries.is_empty());
+        // A spec whose fingerprint disagrees with the envelope is
+        // corruption, not a request.
+        let lied = admitted_line(&a, "0000000000000000");
+        std::fs::write(&path, format!("{lied}\n")).unwrap();
+        let rec = recover_journal(&path).unwrap();
+        assert!(rec.entries.is_empty());
+        assert!(rec.dropped_bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_mode_parses_and_labels() {
+        for (s, m) in [
+            ("off", RecoverMode::Off),
+            ("on", RecoverMode::On),
+            ("strict", RecoverMode::Strict),
+        ] {
+            assert_eq!(RecoverMode::parse(s).unwrap(), m);
+            assert_eq!(m.label(), s);
+        }
+        assert!(RecoverMode::parse("maybe").is_err());
+        assert_eq!(RecoverMode::default(), RecoverMode::On);
+    }
+}

@@ -34,7 +34,17 @@
 //!   are cut off with a `400` without disturbing other connections.
 //! * **Observability** — a `stats` request reports cache sizes and
 //!   eviction totals, hit-rate, queue depth, admission/cancellation
-//!   counters and per-request latency percentiles ([`Metrics`]).
+//!   counters and per-request latency percentiles ([`Metrics`]); a
+//!   `jobs` request lists every journaled request and its status.
+//! * **Crash durability** — with `--state DIR` and journaling on, a
+//!   write-ahead [`Journal`] plus per-request
+//!   [`crate::shard::CheckpointLog`]s make a SIGKILL'd daemon
+//!   restart-transparent: the bind-time recovery pass finishes
+//!   interrupted requests (re-running only unfinished layers), warms
+//!   the cache registry from the recovered records, and a re-sent
+//!   request is served from the durable log with `recovered:true` and
+//!   a byte-identical report (see `docs/ARCHITECTURE.md`
+//!   § Durability).
 //!
 //! [`ModelSpec`]: crate::shard::ModelSpec
 //! [`LayerRecord`]: crate::shard::LayerRecord
@@ -42,15 +52,20 @@
 //! [`CostCache`]: crate::engine::CostCache
 
 pub mod cache;
+pub mod journal;
 pub mod protocol;
 pub mod server;
 
 pub use cache::{CacheBudget, CacheRegistry, RegistryStats};
+pub use journal::{
+    recover_journal, JobStatus, Journal, JournalEntry, RecoverMode,
+    RecoveredJournal, JOURNAL_SCHEMA,
+};
 pub use protocol::{
     bare_request, compress_request, compress_request_with_deadline,
     Request, SERVE_SCHEMA,
 };
 pub use server::{
     request, Admission, Admit, Endpoint, Metrics, MetricsSnapshot,
-    Permit, ServeConfig, Server, MAX_LINE_BYTES,
+    Permit, ResumeStats, ServeConfig, Server, MAX_LINE_BYTES,
 };

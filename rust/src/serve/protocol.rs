@@ -15,9 +15,20 @@
 //!   request envelope, *not* in the spec, so it can never perturb the
 //!   spec fingerprint or the bytes of a run that completes.
 //! * `{"type":"stats"}` — one `stats` line: cache hit-rate, queue
-//!   depth, admission counters and per-request latency percentiles.
+//!   depth, admission counters, per-request latency percentiles and
+//!   (on a journaled daemon) a nested `resume` block.
+//! * `{"type":"jobs"}` — one `jobs` line listing every journaled
+//!   request: fingerprint, status (`admitted`/`completed`/
+//!   `cancelled`), layers checkpointed and layers requested.  An
+//!   un-journaled daemon answers with an empty list.
 //! * `{"type":"ping"}` → `pong`; `{"type":"shutdown"}` → `bye` and the
 //!   daemon stops accepting.
+//!
+//! On a journaled daemon the `done` line additionally reports
+//! `"recovered"` (true when any layer was served from the durable
+//! checkpoint log instead of computed in-request) and
+//! `"resumed_layers"` (how many) — metadata only, the `report` bytes
+//! are identical either way.
 //!
 //! Every *typed* line (everything but the streamed layer records)
 //! carries `"schema":"intdecomp-serve-v1"`.  Errors are
@@ -44,8 +55,10 @@ pub enum Request {
         /// Optional wall-time bound for this request, in milliseconds.
         deadline_ms: Option<u64>,
     },
-    /// Report daemon counters (cache, admission, latency).
+    /// Report daemon counters (cache, admission, latency, resume).
     Stats,
+    /// List the journaled requests and their statuses.
+    Jobs,
     /// Liveness probe.
     Ping,
     /// Stop accepting connections (in-flight requests finish).
@@ -77,6 +90,7 @@ impl Request {
                 })
             }
             "stats" => Ok(Request::Stats),
+            "jobs" => Ok(Request::Jobs),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(anyhow!("request: unknown type '{other}'")),
@@ -126,20 +140,60 @@ pub fn error_line(code: u64, message: &str) -> String {
 /// The terminal `done` line of a successful compress request.  The
 /// embedded `report` string is the full deterministic report — the
 /// byte-identity artifact clients diff against `compress-model
-/// --report`.
+/// --report`.  `resumed_layers` counts layers served from the durable
+/// checkpoint log rather than computed in-request (`recovered` is its
+/// non-zero flag); both are envelope metadata — the report bytes do
+/// not depend on them.
 pub fn done_line(
     fingerprint: &str,
     layers: usize,
     report: &str,
     elapsed_s: f64,
+    resumed_layers: usize,
 ) -> String {
     Json::obj(vec![
         ("elapsed_s", Json::Num(elapsed_s)),
         ("fingerprint", Json::Str(fingerprint.into())),
         ("layers", Json::Num(layers as f64)),
+        ("recovered", Json::Bool(resumed_layers > 0)),
         ("report", Json::Str(report.into())),
+        ("resumed_layers", Json::Num(resumed_layers as f64)),
         ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("type", Json::Str("done".into())),
+    ])
+    .to_string()
+}
+
+/// One row of a `jobs` introspection reply (journal-backed).
+#[derive(Clone, Debug)]
+pub struct JobRow {
+    /// The request's spec fingerprint.
+    pub fingerprint: String,
+    /// Latest journaled status: `admitted`, `completed`, `cancelled`.
+    pub status: String,
+    /// Layers durably checkpointed so far.
+    pub layers_done: usize,
+    /// Layers the spec asks for.
+    pub layers: usize,
+}
+
+/// The `jobs` reply line: every journaled request and where it stands.
+pub fn jobs_line(rows: &[JobRow]) -> String {
+    let jobs = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("fingerprint", Json::Str(r.fingerprint.clone())),
+                ("layers", Json::Num(r.layers as f64)),
+                ("layers_done", Json::Num(r.layers_done as f64)),
+                ("status", Json::Str(r.status.clone())),
+            ])
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("jobs", Json::Arr(jobs)),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("jobs".into())),
     ])
     .to_string()
 }
@@ -256,6 +310,10 @@ mod tests {
             Request::Stats
         ));
         assert!(matches!(
+            Request::parse(&bare_request("jobs")).unwrap(),
+            Request::Jobs
+        ));
+        assert!(matches!(
             Request::parse(&bare_request("ping")).unwrap(),
             Request::Ping
         ));
@@ -280,7 +338,8 @@ mod tests {
     #[test]
     fn terminal_detection_distinguishes_record_lines() {
         assert!(is_terminal(&error_line(429, "full")));
-        assert!(is_terminal(&done_line("f00d", 2, "report\n", 0.1)));
+        assert!(is_terminal(&done_line("f00d", 2, "report\n", 0.1, 0)));
+        assert!(is_terminal(&jobs_line(&[])));
         assert!(is_terminal(&pong_line()));
         assert!(is_terminal(&bye_line()));
         assert!(is_terminal(&cancelled_line(
@@ -313,10 +372,44 @@ mod tests {
     #[test]
     fn done_line_preserves_report_bytes() {
         let report = "layer  shape\nlayer1 4x8\n";
-        let line = done_line("f00d", 1, report, 0.25);
+        let line = done_line("f00d", 1, report, 0.25, 0);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("report").unwrap().as_str(), Some(report));
         assert_eq!(j.get("fingerprint").unwrap().as_str(), Some("f00d"));
         assert_eq!(j.get("layers").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("recovered").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("resumed_layers").unwrap().as_usize(), Some(0));
+        // A resumed run flags itself but never touches the report.
+        let resumed = done_line("f00d", 1, report, 0.25, 1);
+        let rj = Json::parse(&resumed).unwrap();
+        assert_eq!(rj.get("recovered").unwrap().as_bool(), Some(true));
+        assert_eq!(rj.get("resumed_layers").unwrap().as_usize(), Some(1));
+        assert_eq!(rj.get("report").unwrap().as_str(), Some(report));
+    }
+
+    #[test]
+    fn jobs_line_lists_journaled_requests() {
+        let rows = vec![
+            JobRow {
+                fingerprint: "f00d".into(),
+                status: "completed".into(),
+                layers_done: 2,
+                layers: 2,
+            },
+            JobRow {
+                fingerprint: "beef".into(),
+                status: "admitted".into(),
+                layers_done: 1,
+                layers: 3,
+            },
+        ];
+        let line = jobs_line(&rows);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("jobs"));
+        let arr = j.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("status").unwrap().as_str(), Some("admitted"));
+        assert_eq!(arr[1].get("layers_done").unwrap().as_usize(), Some(1));
+        assert_eq!(arr[1].get("layers").unwrap().as_usize(), Some(3));
     }
 }

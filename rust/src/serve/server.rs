@@ -19,13 +19,12 @@
 //! explicit `429` error line and the connection stays usable — clients
 //! retry, nothing queues silently.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
-#[cfg(unix)]
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -33,9 +32,14 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::cache::{CacheBudget, CacheRegistry};
+use super::journal::{self, JobStatus, Journal, RecoverMode};
 use super::protocol::{self, Request, SERVE_SCHEMA};
+use crate::cost::BinMatrix;
 use crate::engine::{Engine, EngineConfig};
-use crate::shard::{deterministic_report, LayerRecord, ModelSpec};
+use crate::shard::{
+    deterministic_report, recover_log, CheckpointLog, LayerRecord,
+    ModelSpec,
+};
 use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::json::Json;
 use crate::util::lockfile::LockFile;
@@ -378,6 +382,16 @@ pub struct ServeConfig {
     /// [`LockFile`] (the `shard work` guard) keeps a second daemon off
     /// the same state.
     pub state_dir: Option<std::path::PathBuf>,
+    /// Write-ahead journaling of compress requests (effective only
+    /// with `state_dir`; on by default).  Admitted requests and their
+    /// per-layer progress survive a SIGKILL and are finished by the
+    /// next bind's recovery pass.
+    pub journal: bool,
+    /// What the bind-time recovery pass does with journaled state:
+    /// replay it ([`RecoverMode::On`]), skip it ([`RecoverMode::Off`],
+    /// journaling still active) or refuse to start on torn bytes
+    /// ([`RecoverMode::Strict`]).
+    pub recover: RecoverMode,
 }
 
 impl Default for ServeConfig {
@@ -391,6 +405,8 @@ impl Default for ServeConfig {
             cache_budget: CacheBudget::unbounded(),
             line_timeout_ms: 10_000,
             state_dir: None,
+            journal: true,
+            recover: RecoverMode::On,
         }
     }
 }
@@ -513,6 +529,215 @@ struct Ctx {
     stop: AtomicBool,
     conn_seq: AtomicU64,
     endpoint: Endpoint,
+    durability: Option<Durability>,
+}
+
+/// Counters of a journaled daemon's durability layer: what the
+/// bind-time recovery pass did, plus layers served from the durable
+/// checkpoint logs since.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResumeStats {
+    /// Requests found admitted-but-unterminated in the journal at bind
+    /// and finished by the recovery pass.
+    pub recovered_requests: u64,
+    /// Layers the recovery pass had to re-run (the unfinished
+    /// remainder of interrupted requests).
+    pub replayed_layers: u64,
+    /// Layers served straight from a durable checkpoint log instead
+    /// of being computed in-request.
+    pub resumed_layers: u64,
+    /// Torn/garbage bytes truncated from the journal and checkpoint
+    /// logs at bind.
+    pub dropped_bytes: u64,
+}
+
+/// Per-fingerprint status row backing the `jobs` introspection
+/// request.
+struct JobState {
+    status: JobStatus,
+    layers_done: usize,
+    layers: usize,
+}
+
+/// Journaled-daemon state: the write-ahead journal (single writer —
+/// the daemon, guarded by the `serve.state` lock), the jobs index for
+/// introspection, and the in-process busy set that keeps two
+/// concurrent requests for the same fingerprint off one checkpoint
+/// log.
+struct Durability {
+    dir: PathBuf,
+    journal: Mutex<Journal>,
+    jobs: Mutex<BTreeMap<String, JobState>>,
+    busy: Mutex<BTreeSet<String>>,
+    recovered_requests: AtomicU64,
+    replayed_layers: AtomicU64,
+    resumed_layers: AtomicU64,
+    dropped_bytes: AtomicU64,
+}
+
+impl Durability {
+    fn stats(&self) -> ResumeStats {
+        ResumeStats {
+            recovered_requests: self.recovered_requests.load(Ordering::Relaxed),
+            replayed_layers: self.replayed_layers.load(Ordering::Relaxed),
+            resumed_layers: self.resumed_layers.load(Ordering::Relaxed),
+            dropped_bytes: self.dropped_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn set_job(&self, fp: &str, status: JobStatus, layers_done: usize, layers: usize) {
+        self.jobs.lock().unwrap().insert(
+            fp.to_string(),
+            JobState { status, layers_done, layers },
+        );
+    }
+}
+
+/// Seed the shared cache with a recovered record's winning candidate:
+/// the cost is already known, so later requests on the same instance
+/// layer skip that evaluation.  Raw-keyed specs opt out of the shared
+/// cache entirely (mirrors `handle_compress`).
+fn warm_registry(registry: &CacheRegistry, spec: &ModelSpec, rec: &LayerRecord) {
+    if spec.cache_key_raw {
+        return;
+    }
+    let m = BinMatrix::new(rec.n, rec.k, rec.best_x.clone());
+    registry.warm(&spec.instance_key(rec.job), &m, rec.best_y);
+}
+
+/// Open the journal and replay its crash debt: requests admitted but
+/// never terminated are finished off their checkpoint prefix (only
+/// unfinished layers re-run), every recovered record warms the shared
+/// cache, and the jobs index is rebuilt for introspection.
+fn recover_state(
+    dir: &Path,
+    mode: RecoverMode,
+    workers: usize,
+    registry: &CacheRegistry,
+) -> Result<Durability> {
+    let jpath = journal::journal_path(dir);
+    if mode == RecoverMode::Strict {
+        // Read-only pre-scan: strict mode must refuse before
+        // `Journal::open` would truncate the torn tail.
+        let scan = journal::recover_journal(&jpath)?;
+        if scan.dropped_bytes > 0 {
+            bail!(
+                "{}: {} torn/garbage bytes in the journal (--recover strict)",
+                jpath.display(),
+                scan.dropped_bytes
+            );
+        }
+    }
+    let (journal_w, recovered) = Journal::open(&jpath)?;
+    let journal_w = Mutex::new(journal_w);
+    let mut dropped = recovered.dropped_bytes;
+    let mut jobs = BTreeMap::new();
+    let mut recovered_requests = 0u64;
+    let mut replayed = 0u64;
+    for entry in &recovered.entries {
+        let fp = &entry.fingerprint;
+        let lpath = journal::jobs_log_path(dir, fp);
+        let layers_done;
+        let mut status = entry.status;
+        if entry.status == JobStatus::Admitted && mode != RecoverMode::Off {
+            // Crash debt: finish the request durably before serving.
+            // Two-phase open: strict mode must see torn bytes before
+            // `commit` would truncate them.
+            let mut log = CheckpointLog::recover(&lpath, fp)
+                .with_context(|| format!("recovering job {fp}"))?;
+            if mode == RecoverMode::Strict && log.dropped_bytes() > 0 {
+                bail!(
+                    "{}: {} torn/garbage bytes in the checkpoint log (--recover strict)",
+                    lpath.display(),
+                    log.dropped_bytes()
+                );
+            }
+            dropped += log.dropped_bytes();
+            log.commit()
+                .with_context(|| format!("truncating job {fp}"))?;
+            let done: BTreeSet<usize> =
+                log.records().iter().map(|r| r.job).collect();
+            for rec in log.records() {
+                warm_registry(registry, &entry.spec, rec);
+            }
+            let todo: Vec<usize> = (0..entry.spec.layers)
+                .filter(|l| !done.contains(l))
+                .collect();
+            if !todo.is_empty() {
+                let mut engine_jobs = Vec::with_capacity(todo.len());
+                for &layer in &todo {
+                    let mut job = entry.spec.job(layer)?;
+                    if !entry.spec.cache_key_raw {
+                        job.shared_cache =
+                            registry.get(&entry.spec.instance_key(layer));
+                    }
+                    engine_jobs.push(job);
+                }
+                let eng = Engine::new(EngineConfig {
+                    workers,
+                    restart_workers: entry.spec.restart_workers,
+                    batch_size: 1,
+                });
+                let mut werr: Option<std::io::Error> = None;
+                eng.compress_each(engine_jobs, |i, result| {
+                    let rec = LayerRecord::from_result(todo[i], &result);
+                    if werr.is_none() {
+                        if let Err(e) = log.append(&rec) {
+                            werr = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = werr {
+                    return Err(e)
+                        .with_context(|| format!("replaying job {fp}"));
+                }
+            }
+            journal_w.lock().unwrap().record_completed(fp)?;
+            eprintln!(
+                "serve: resumed {fp}: {} layers re-run, {} recovered from checkpoint",
+                todo.len(),
+                done.len()
+            );
+            recovered_requests += 1;
+            replayed += todo.len() as u64;
+            layers_done = entry.spec.layers;
+            status = JobStatus::Completed;
+        } else {
+            // Terminated (or recovery off): read-only scan for the
+            // jobs index and cache warming; bytes are left untouched.
+            let scan = recover_log(&lpath, fp)?;
+            if mode == RecoverMode::Strict && scan.dropped_bytes > 0 {
+                bail!(
+                    "{}: {} torn/garbage bytes in the checkpoint log (--recover strict)",
+                    lpath.display(),
+                    scan.dropped_bytes
+                );
+            }
+            layers_done = scan.records.len();
+            for rec in &scan.records {
+                warm_registry(registry, &entry.spec, rec);
+            }
+        }
+        jobs.insert(
+            fp.clone(),
+            JobState { status, layers_done, layers: entry.spec.layers },
+        );
+    }
+    if recovered_requests > 0 {
+        eprintln!(
+            "serve: recovery pass finished {recovered_requests} interrupted request(s), {replayed} layers re-run"
+        );
+    }
+    Ok(Durability {
+        dir: dir.to_path_buf(),
+        journal: journal_w,
+        jobs: Mutex::new(jobs),
+        busy: Mutex::new(BTreeSet::new()),
+        recovered_requests: AtomicU64::new(recovered_requests),
+        replayed_layers: AtomicU64::new(replayed),
+        resumed_layers: AtomicU64::new(0),
+        dropped_bytes: AtomicU64::new(dropped),
+    })
 }
 
 /// The serve daemon: bind once, then [`Server::run`] until a
@@ -534,6 +759,20 @@ impl Server {
                 Some(LockFile::acquire(&dir.join("serve.state"))?)
             }
             None => None,
+        };
+        let registry = CacheRegistry::with_budget(cfg.cache_budget);
+        // Recovery runs before the listener exists: by the time a
+        // client can connect, every interrupted request is finished
+        // and durable.  The state lock above makes this daemon the
+        // journal's single writer.
+        let durability = match (&cfg.state_dir, cfg.journal) {
+            (Some(dir), true) => Some(recover_state(
+                dir,
+                cfg.recover,
+                cfg.workers.max(1),
+                &registry,
+            )?),
+            _ => None,
         };
         let (listener, endpoint) = match &cfg.endpoint {
             Endpoint::Tcp(addr) => {
@@ -559,13 +798,14 @@ impl Server {
                     cfg.max_per_client,
                     cfg.queue,
                 ),
-                registry: CacheRegistry::with_budget(cfg.cache_budget),
+                registry,
                 metrics: Metrics::new(),
                 workers: cfg.workers.max(1),
                 line_timeout_ms: cfg.line_timeout_ms,
                 stop: AtomicBool::new(false),
                 conn_seq: AtomicU64::new(0),
                 endpoint,
+                durability,
             }),
             _lock: lock,
         })
@@ -575,6 +815,13 @@ impl Server {
     /// what clients should connect to.
     pub fn local_endpoint(&self) -> &Endpoint {
         &self.ctx.endpoint
+    }
+
+    /// Durability counters of a journaled daemon (`None` without a
+    /// journal): what the bind-time recovery pass did, plus layers
+    /// served from the durable logs since.
+    pub fn resume_stats(&self) -> Option<ResumeStats> {
+        self.ctx.durability.as_ref().map(|d| d.stats())
     }
 
     /// Accept and serve connections until a `shutdown` request.  Each
@@ -835,6 +1082,7 @@ fn handle_line(
         }
         Ok(Request::Ping) => writeln!(out, "{}", protocol::pong_line())?,
         Ok(Request::Stats) => writeln!(out, "{}", stats_line(ctx))?,
+        Ok(Request::Jobs) => writeln!(out, "{}", jobs_reply(ctx))?,
         Ok(Request::Shutdown) => {
             writeln!(out, "{}", protocol::bye_line())?;
             out.flush()?;
@@ -928,8 +1176,31 @@ fn handle_compress(
         )?;
         return Ok(());
     }
+    // Durable attach (journaled daemons only): the fingerprint's
+    // checkpoint log carries any prior progress, so layers already on
+    // disk are streamed back instead of recomputed.  A concurrent
+    // identical request or a failed open degrades to plain serving.
+    let mut durable = ctx
+        .durability
+        .as_ref()
+        .and_then(|d| DurableReq::begin(d, spec, &fp));
+    let recovered: Vec<LayerRecord> = match durable.as_mut() {
+        Some(d) => {
+            let recs = d.log.take_records();
+            d.resumed = recs.len();
+            recs
+        }
+        None => Vec::new(),
+    };
+    let resumed = recovered.len();
+    let done_layers: BTreeSet<usize> =
+        recovered.iter().map(|r| r.job).collect();
+    let mut todo: Vec<usize> = Vec::new();
     let mut jobs = Vec::with_capacity(spec.layers);
     for layer in 0..spec.layers {
+        if done_layers.contains(&layer) {
+            continue;
+        }
         match spec.job(layer) {
             Ok(mut job) => {
                 job.cancel = cancel.clone();
@@ -941,6 +1212,7 @@ fn handle_compress(
                     job.shared_cache =
                         ctx.registry.get(&spec.instance_key(layer));
                 }
+                todo.push(layer);
                 jobs.push(job);
             }
             Err(e) => {
@@ -954,30 +1226,64 @@ fn handle_compress(
             }
         }
     }
-    let eng = Engine::new(EngineConfig {
-        workers: ctx.workers,
-        restart_workers: spec.restart_workers,
-        batch_size: 1, // per-job cfg carries the spec's batch size
-    });
+    // Write-ahead admit: journaled before any layer runs, so a crash
+    // from here on leaves exactly the state the bind-time recovery
+    // pass finishes.  Requests served entirely from the log write
+    // nothing.
+    if let Some(d) = durable.as_mut() {
+        if !jobs.is_empty() && !d.record_admitted(spec) {
+            durable = None;
+        }
+    }
     let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.layers);
     let mut io_err: Option<std::io::Error> = None;
-    let outcome = eng.try_compress_each(jobs, |i, result| {
-        let rec = LayerRecord::from_result(i, &result);
+    // Stream the recovered prefix first; the lines are byte-identical
+    // to freshly computed ones because records are pure functions of
+    // the spec.
+    for rec in recovered {
         if io_err.is_none() {
             if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp)) {
                 io_err = Some(e);
-                // The write side is dead: stop burning pool time on a
-                // stream nobody reads.
                 cancel.cancel();
             }
         }
         records.push(rec);
-    });
+    }
+    let outcome = if jobs.is_empty() {
+        Ok(())
+    } else {
+        let eng = Engine::new(EngineConfig {
+            workers: ctx.workers,
+            restart_workers: spec.restart_workers,
+            batch_size: 1, // per-job cfg carries the spec's batch size
+        });
+        eng.try_compress_each(jobs, |i, result| {
+            let rec = LayerRecord::from_result(todo[i], &result);
+            // Checkpoint (append + fsync) before the client sees the
+            // line: whatever was streamed is always durable.
+            if let Some(d) = durable.as_mut() {
+                d.append(&rec);
+            }
+            if io_err.is_none() {
+                if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp))
+                {
+                    io_err = Some(e);
+                    // The write side is dead: stop burning pool time
+                    // on a stream nobody reads.
+                    cancel.cancel();
+                }
+            }
+            records.push(rec);
+        })
+    };
     // Release the slot before the (possibly dead-socket) trailer write
     // and the registry sweep — queued waiters should not wait on I/O.
     drop(permit);
     match outcome {
         Err(cause) => {
+            if let Some(d) = durable.as_mut() {
+                d.finish_cancelled();
+            }
             ctx.metrics.cancel(cause);
             // Best-effort: on a disconnect this line goes nowhere.
             let _ = writeln!(
@@ -997,6 +1303,11 @@ fn handle_compress(
             }
         }
         Ok(()) => {
+            // Every layer is on disk by now, so the journal terminal
+            // marker is correct whether or not the peer survived.
+            if let Some(d) = durable.as_mut() {
+                d.finish_completed();
+            }
             if let Some(e) = io_err {
                 // All jobs finished but the peer vanished before the
                 // tail could be written: account it as a cancellation.
@@ -1004,6 +1315,9 @@ fn handle_compress(
                 ctx.registry.enforce();
                 return Err(e);
             }
+            // Recovered prefix + freshly computed remainder, merged
+            // into layer order (a no-op for uninterrupted runs).
+            records.sort_by_key(|r| r.job);
             let report = deterministic_report(&records);
             writeln!(
                 out,
@@ -1013,6 +1327,7 @@ fn handle_compress(
                     records.len(),
                     &report,
                     timer.seconds(),
+                    resumed,
                 )
             )?;
             ctx.metrics.complete(timer.seconds());
@@ -1020,6 +1335,172 @@ fn handle_compress(
             Ok(())
         }
     }
+}
+
+/// One request's handle on the durability layer: the open checkpoint
+/// log (exclusive via its lockfile plus the in-process busy set) and
+/// the journal bookkeeping around it.  Dropping releases the busy
+/// slot on every exit path.
+struct DurableReq<'a> {
+    dur: &'a Durability,
+    fp: String,
+    log: CheckpointLog,
+    layers: usize,
+    resumed: usize,
+    admitted: bool,
+    append_failed: bool,
+    appended: usize,
+}
+
+impl<'a> DurableReq<'a> {
+    /// Attach the request to its durable log, or `None` to degrade to
+    /// plain (un-journaled) serving: an identical request is already
+    /// in flight, or opening the log failed — availability beats
+    /// durability for a live request.
+    fn begin(
+        dur: &'a Durability,
+        spec: &ModelSpec,
+        fp: &str,
+    ) -> Option<DurableReq<'a>> {
+        if !dur.busy.lock().unwrap().insert(fp.to_string()) {
+            return None;
+        }
+        match CheckpointLog::open(&journal::jobs_log_path(&dur.dir, fp), fp)
+        {
+            Ok(log) => Some(DurableReq {
+                dur,
+                fp: fp.to_string(),
+                log,
+                layers: spec.layers,
+                resumed: 0,
+                admitted: false,
+                append_failed: false,
+                appended: 0,
+            }),
+            Err(e) => {
+                eprintln!(
+                    "serve: journal: {fp}: {e:#}; serving without durability"
+                );
+                dur.busy.lock().unwrap().remove(fp);
+                None
+            }
+        }
+    }
+
+    /// Write-ahead marker: the full spec goes into the journal before
+    /// any layer runs.  `false` means the write failed and the caller
+    /// should degrade to plain serving.
+    fn record_admitted(&mut self, spec: &ModelSpec) -> bool {
+        match self
+            .dur
+            .journal
+            .lock()
+            .unwrap()
+            .record_admitted(spec, &self.fp)
+        {
+            Ok(()) => {
+                self.admitted = true;
+                self.dur.set_job(
+                    &self.fp,
+                    JobStatus::Admitted,
+                    self.resumed,
+                    self.layers,
+                );
+                true
+            }
+            Err(e) => {
+                eprintln!(
+                    "serve: journal: {}: {e}; serving without durability",
+                    self.fp
+                );
+                false
+            }
+        }
+    }
+
+    /// Checkpoint one computed record (append + fsync).  A failure
+    /// stops checkpointing — the admit marker stays, so a later
+    /// recovery pass re-runs whatever is missing — without failing
+    /// the live request.
+    fn append(&mut self, rec: &LayerRecord) {
+        if self.append_failed {
+            return;
+        }
+        match self.log.append(rec) {
+            Ok(()) => self.appended += 1,
+            Err(e) => {
+                eprintln!(
+                    "serve: journal: {}: checkpoint append failed: {e}",
+                    self.fp
+                );
+                self.append_failed = true;
+            }
+        }
+    }
+
+    fn finish_completed(&mut self) {
+        self.dur
+            .resumed_layers
+            .fetch_add(self.resumed as u64, Ordering::Relaxed);
+        if self.admitted && !self.append_failed {
+            if let Err(e) =
+                self.dur.journal.lock().unwrap().record_completed(&self.fp)
+            {
+                eprintln!("serve: journal: {}: {e}", self.fp);
+                return;
+            }
+            self.dur.set_job(
+                &self.fp,
+                JobStatus::Completed,
+                self.layers,
+                self.layers,
+            );
+        }
+    }
+
+    fn finish_cancelled(&mut self) {
+        if self.admitted {
+            if let Err(e) =
+                self.dur.journal.lock().unwrap().record_cancelled(&self.fp)
+            {
+                eprintln!("serve: journal: {}: {e}", self.fp);
+                return;
+            }
+            self.dur.set_job(
+                &self.fp,
+                JobStatus::Cancelled,
+                self.resumed + self.appended,
+                self.layers,
+            );
+        }
+    }
+}
+
+impl Drop for DurableReq<'_> {
+    fn drop(&mut self) {
+        self.dur.busy.lock().unwrap().remove(&self.fp);
+    }
+}
+
+/// The `jobs` introspection reply: one row per journaled fingerprint
+/// (always empty without a journal).
+fn jobs_reply(ctx: &Ctx) -> String {
+    let rows: Vec<protocol::JobRow> = match &ctx.durability {
+        None => Vec::new(),
+        Some(d) => d
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(fp, st)| protocol::JobRow {
+                fingerprint: fp.clone(),
+                status: st.status.label().to_string(),
+                layers_done: st.layers_done,
+                layers: st.layers,
+            })
+            .collect(),
+    };
+    protocol::jobs_line(&rows)
 }
 
 fn stats_line(ctx: &Ctx) -> String {
@@ -1065,6 +1546,33 @@ fn stats_line(ctx: &Ctx) -> String {
         ("queue", Json::Num(ctx.admission.queue_capacity() as f64)),
         ("queued", Json::Num(ctx.admission.queued() as f64)),
         ("rejected", Json::Num(m.rejected as f64)),
+        (
+            "resume",
+            match &ctx.durability {
+                None => Json::Null,
+                Some(d) => {
+                    let r = d.stats();
+                    Json::obj(vec![
+                        (
+                            "dropped_bytes",
+                            Json::Num(r.dropped_bytes as f64),
+                        ),
+                        (
+                            "recovered_requests",
+                            Json::Num(r.recovered_requests as f64),
+                        ),
+                        (
+                            "replayed_layers",
+                            Json::Num(r.replayed_layers as f64),
+                        ),
+                        (
+                            "resumed_layers",
+                            Json::Num(r.resumed_layers as f64),
+                        ),
+                    ])
+                }
+            },
+        ),
         ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("type", Json::Str("stats".into())),
         ("workers", Json::Num(ctx.workers as f64)),

@@ -74,6 +74,6 @@ pub use plan::{
 };
 pub use spec::ModelSpec;
 pub use worker::{
-    recover_log, run_shard, LayerRecord, RecoveredLog, ShardRun,
-    RESULT_SCHEMA,
+    recover_log, run_shard, CheckpointLog, LayerRecord, RecoveredLog,
+    ShardRun, RESULT_SCHEMA,
 };

@@ -82,6 +82,13 @@ impl ModelSpec {
         if self.n == 0 || self.d == 0 || self.k == 0 {
             bail!("spec: n, d and k must all be >= 1");
         }
+        // JSON has no NaN/Inf literals, but an overflowing exponent
+        // (`1e999`) parses to +Inf — reject it here so it becomes a
+        // typed 400 at the serve boundary instead of reaching the
+        // cost oracle (where a non-finite penalty poisons every cost).
+        if !self.gamma.is_finite() {
+            bail!("spec: gamma must be finite (got {})", self.gamma);
+        }
         if self.layers == 0 {
             bail!("spec: layers must be >= 1");
         }
@@ -345,6 +352,58 @@ mod tests {
         assert!(s.validate().is_err(), "seed beyond 2^53");
         s.seed = 1;
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_gamma() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut s = tiny_spec(2);
+            s.gamma = bad;
+            assert!(s.validate().is_err(), "gamma {bad} must be rejected");
+        }
+        let mut s = tiny_spec(2);
+        s.gamma = 0.8;
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_non_finite_gamma_and_negative_budgets() {
+        // The JSON number grammar has no NaN/Inf literals, but an
+        // overflowing exponent parses to ±Inf — the one ingress for a
+        // non-finite gamma.  It must die at parse time, not at the
+        // cost oracle.
+        for bad in ["1e999", "-1e999"] {
+            let txt = tiny_spec(2)
+                .to_json()
+                .to_string()
+                .replace("\"gamma\":0.8", &format!("\"gamma\":{bad}"));
+            let j = Json::parse(&txt).expect("overflow still parses");
+            assert!(
+                !j.get("gamma").unwrap().as_f64().unwrap().is_finite(),
+                "precondition: {bad} parses non-finite"
+            );
+            assert!(
+                ModelSpec::from_json(&j).is_err(),
+                "gamma {bad} must be a parse-time rejection"
+            );
+        }
+        // Negative or non-finite budget fields are mistyped unsigned
+        // integers: one rejection test per field.
+        for key in [
+            "n", "d", "k", "layers", "iters", "restarts", "batch_size",
+            "restart_workers", "seed", "instance_seed",
+        ] {
+            for bad in [Json::Num(-3.0), Json::Num(f64::INFINITY)] {
+                let mut j = tiny_spec(2).to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert(key.into(), bad.clone());
+                }
+                assert!(
+                    ModelSpec::from_json(&j).is_err(),
+                    "'{key}' = {bad:?} must be rejected"
+                );
+            }
+        }
     }
 
     #[test]

@@ -245,6 +245,132 @@ pub fn recover_log(
     })
 }
 
+/// A locked, crash-safe, append-only [`LayerRecord`] checkpoint log —
+/// the one durability primitive shared by the shard worker and the
+/// serve daemon's request journal.
+///
+/// Life cycle: [`CheckpointLog::recover`] takes the advisory lock and
+/// scans the valid prefix without touching any byte on disk (so a
+/// caller can still reject the log wholesale, as [`run_shard`] does
+/// when a checkpointed job belongs to another shard);
+/// [`CheckpointLog::commit`] then truncates the torn tail and opens
+/// the file for appending; [`CheckpointLog::append`] writes one record
+/// line and fsyncs it before returning — the durability point.
+/// [`CheckpointLog::open`] is the one-call form for callers with no
+/// pre-commit validation.  The lock is held until the value is
+/// dropped; a second writer on the same path fails to acquire it.
+#[derive(Debug)]
+pub struct CheckpointLog {
+    path: PathBuf,
+    fingerprint: String,
+    _lock: LockFile,
+    records: Vec<LayerRecord>,
+    valid_bytes: u64,
+    dropped_bytes: u64,
+    file: Option<std::fs::File>,
+}
+
+impl CheckpointLog {
+    /// Lock `path` and scan its valid prefix ([`recover_log`]) without
+    /// modifying the file.  The parent directory is created if
+    /// missing (the lock sidecar needs it to exist).
+    pub fn recover(path: &Path, fingerprint: &str) -> Result<CheckpointLog> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        // Single-writer guard: a second writer on the same log would
+        // interleave appends and corrupt the valid prefix recover_log
+        // trusts.  Stale locks from a SIGKILLed process are reclaimed.
+        let lock = LockFile::acquire(path).with_context(|| {
+            format!("locking checkpoint log {}", path.display())
+        })?;
+        let recovered = recover_log(path, fingerprint)?;
+        Ok(CheckpointLog {
+            path: path.to_path_buf(),
+            fingerprint: fingerprint.to_string(),
+            _lock: lock,
+            records: recovered.records,
+            valid_bytes: recovered.valid_bytes,
+            dropped_bytes: recovered.dropped_bytes,
+            file: None,
+        })
+    }
+
+    /// Drop the torn tail (truncate to the valid prefix) and open the
+    /// log for appending.  The file is created even when there is
+    /// nothing to append, so operators can see the writer ran.
+    /// Idempotent: committing twice is a no-op.
+    pub fn commit(&mut self) -> Result<()> {
+        if self.file.is_some() {
+            return Ok(());
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        file.set_len(self.valid_bytes)
+            .with_context(|| format!("truncating {}", self.path.display()))?;
+        drop(file);
+        let log = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| {
+                format!("opening {} for append", self.path.display())
+            })?;
+        self.file = Some(log);
+        Ok(())
+    }
+
+    /// [`CheckpointLog::recover`] + [`CheckpointLog::commit`] in one
+    /// call, for callers with no validation between the two.
+    pub fn open(path: &Path, fingerprint: &str) -> Result<CheckpointLog> {
+        let mut log = CheckpointLog::recover(path, fingerprint)?;
+        log.commit()?;
+        Ok(log)
+    }
+
+    /// The valid-prefix records recovered at open, in log order.
+    pub fn records(&self) -> &[LayerRecord] {
+        &self.records
+    }
+
+    /// Take ownership of the recovered records (leaves the log empty).
+    pub fn take_records(&mut self) -> Vec<LayerRecord> {
+        std::mem::take(&mut self.records)
+    }
+
+    /// Bytes past the valid prefix found at open — a torn tail from a
+    /// crash mid-append; [`CheckpointLog::commit`] truncates them.
+    pub fn dropped_bytes(&self) -> u64 {
+        self.dropped_bytes
+    }
+
+    /// The log file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The workload fingerprint every line is tagged with.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Append one record line and force it to disk before returning —
+    /// the durability point of the checkpoint contract.  The log must
+    /// have been committed first.
+    pub fn append(&mut self, rec: &LayerRecord) -> std::io::Result<()> {
+        let file = self.file.as_mut().ok_or_else(|| {
+            std::io::Error::other("checkpoint log not committed")
+        })?;
+        append_record(file, rec, &self.fingerprint)
+    }
+}
+
 /// Outcome of one [`run_shard`] call.
 #[derive(Debug)]
 pub struct ShardRun {
@@ -271,16 +397,12 @@ pub fn run_shard(
     mut progress: impl FnMut(&LayerRecord),
 ) -> Result<ShardRun> {
     let fp = &manifest.fingerprint;
-    // Single-writer guard: a second worker on the same log would
-    // interleave appends and corrupt the valid prefix recover_log
-    // trusts.  Held until this call returns; stale locks from a
-    // SIGKILLed worker are reclaimed automatically.
-    let _lock = LockFile::acquire(out)
-        .with_context(|| format!("locking result log {}", out.display()))?;
-    let recovered = recover_log(out, fp)?;
+    // Lock + scan only: the shard-membership check below must run
+    // before commit() touches any byte of a log we might reject.
+    let mut log = CheckpointLog::recover(out, fp)?;
     let done: BTreeSet<usize> =
-        recovered.records.iter().map(|r| r.job).collect();
-    for r in &recovered.records {
+        log.records().iter().map(|r| r.job).collect();
+    for r in log.records() {
         if !manifest.jobs.contains(&r.job) {
             bail!(
                 "{}: checkpointed job {} does not belong to shard {}/{}",
@@ -291,27 +413,10 @@ pub fn run_shard(
             );
         }
     }
-    if let Some(parent) = out.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)
-                .with_context(|| format!("creating {}", parent.display()))?;
-        }
-    }
     // Drop any torn tail, then (re)open for appending.  The file is
     // created even for an empty shard so operators can see the worker
     // ran (the merger itself treats a missing log as empty).
-    let file = std::fs::OpenOptions::new()
-        .create(true)
-        .write(true)
-        .open(out)
-        .with_context(|| format!("opening {}", out.display()))?;
-    file.set_len(recovered.valid_bytes)
-        .with_context(|| format!("truncating {}", out.display()))?;
-    drop(file);
-    let mut log = std::fs::OpenOptions::new()
-        .append(true)
-        .open(out)
-        .with_context(|| format!("opening {} for append", out.display()))?;
+    log.commit()?;
 
     let todo: Vec<usize> = manifest
         .jobs
@@ -333,7 +438,7 @@ pub fn run_shard(
     eng.compress_each(jobs, |i, result| {
         let rec = LayerRecord::from_result(todo[i], &result);
         if write_err.is_none() {
-            match append_record(&mut log, &rec, fp) {
+            match log.append(&rec) {
                 Ok(()) => progress(&rec),
                 Err(e) => write_err = Some(e),
             }
@@ -344,7 +449,7 @@ pub fn run_shard(
         return Err(e).with_context(|| format!("appending {}", out.display()));
     }
 
-    let mut records = recovered.records;
+    let mut records = log.take_records();
     let skipped = records.len();
     let ran = new_records.len();
     records.extend(new_records);
@@ -417,6 +522,50 @@ mod tests {
         assert!(LayerRecord::parse_line("not json", "f00d").is_err());
         let torn = &line[..line.len() / 2];
         assert!(LayerRecord::parse_line(torn, "f00d").is_err());
+    }
+
+    #[test]
+    fn checkpoint_log_resumes_byte_identically_after_a_torn_tail() {
+        let dir = std::env::temp_dir().join("intdecomp_checkpoint_log");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("log.jsonl");
+        // Uninterrupted run: three records.
+        let mut recs = Vec::new();
+        for job in 0..3 {
+            let mut r = record();
+            r.job = job;
+            recs.push(r);
+        }
+        {
+            let mut log = CheckpointLog::open(&path, "f00d").unwrap();
+            assert!(log.records().is_empty());
+            for r in &recs {
+                log.append(r).unwrap();
+            }
+        }
+        let full = std::fs::read(&path).unwrap();
+        // Crash: torn third line.  Reopen must recover two records,
+        // truncate the tail, and re-appending the third must
+        // reproduce the uninterrupted bytes exactly.
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        {
+            let mut log = CheckpointLog::open(&path, "f00d").unwrap();
+            assert_eq!(log.records().len(), 2);
+            assert!(log.dropped_bytes() > 0);
+            log.append(&recs[2]).unwrap();
+            // The lock is exclusive while held.
+            assert!(CheckpointLog::recover(&path, "f00d").is_err());
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), full);
+        // recover() without commit() must not touch the file, and
+        // append before commit is an error.
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        {
+            let mut log = CheckpointLog::recover(&path, "f00d").unwrap();
+            assert!(log.append(&recs[2]).is_err());
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), &full[..full.len() - 7]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

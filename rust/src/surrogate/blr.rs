@@ -35,8 +35,8 @@
 
 use super::{features, Dataset, Surrogate};
 use crate::linalg::{
-    cholesky_scaled_into, dot, solve_lower_into, solve_lower_t_in_place,
-    Matrix,
+    cholesky_jittered_scaled_into, dot, solve_lower_into,
+    solve_lower_t_in_place, JitterLadder, Matrix,
 };
 use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
@@ -198,22 +198,19 @@ impl PosteriorBackend for NativePosterior {
         scratch.ensure(p);
         let inv_s2 = 1.0 / sigma_n2;
         // Fused scale+diag factorisation into the reused factor buffer;
-        // jitter ladder for the (rare) borderline case.
-        let mut jitter = 0.0;
-        loop {
-            if cholesky_scaled_into(
-                g,
-                inv_s2,
-                lam,
-                jitter,
-                0.0,
-                &mut scratch.l,
-            ) {
-                break;
-            }
-            jitter = if jitter == 0.0 { 1e-10 } else { jitter * 100.0 };
-            assert!(jitter < 1.0, "posterior matrix not SPD");
-        }
+        // bounded jitter ladder (0, 1e-10, ×100 each retry up to 1e-2)
+        // for the (rare) borderline case.  The clean first attempt is
+        // bit-identical to a direct `cholesky_scaled_into` call; only
+        // an exhausted ladder aborts the draw.
+        cholesky_jittered_scaled_into(
+            g,
+            inv_s2,
+            lam,
+            0.0,
+            JitterLadder { base: 1e-10, factor: 100.0, retries: 5 },
+            &mut scratch.l,
+        )
+        .expect("posterior matrix not SPD");
         for (b, v) in scratch.b.iter_mut().zip(gv) {
             *b = v * inv_s2;
         }

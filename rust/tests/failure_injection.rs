@@ -8,13 +8,19 @@ use intdecomp::cost::{BinMatrix, Problem};
 use intdecomp::instance::{generate, InstanceConfig};
 use intdecomp::linalg::Matrix;
 use intdecomp::runtime::XlaRuntime;
-use intdecomp::serve::{Endpoint, ServeConfig, Server};
-use intdecomp::shard::{recover_log, LayerRecord};
+use intdecomp::serve::{
+    self, compress_request, recover_journal, Endpoint, Journal,
+    RecoverMode, ServeConfig, Server,
+};
+use intdecomp::shard::{
+    recover_log, CheckpointLog, LayerRecord, ModelSpec,
+};
 use intdecomp::solvers::{self, IsingSolver, QuadModel};
 use intdecomp::surrogate::{
     blr::{Blr, Prior},
     Dataset, Surrogate,
 };
+use intdecomp::util::json::Json;
 use intdecomp::util::rng::Rng;
 
 fn tmpdir(name: &str) -> std::path::PathBuf {
@@ -359,6 +365,272 @@ fn recover_log_drops_a_tail_torn_mid_utf8() {
     assert_eq!(rec.records.len(), 2);
     assert_eq!(rec.records[1].name, "couche-é2");
     assert_eq!(rec.dropped_bytes, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------- crash-durability (ISSUE 8) --
+
+fn fi_spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        n: 4,
+        d: 8,
+        k: 2,
+        gamma: 0.8,
+        instance_seed: 9,
+        layers: 2,
+        iters: 4,
+        restarts: 2,
+        batch_size: 1,
+        augment: false,
+        restart_workers: 1,
+        algo: "nbocs".into(),
+        solver: "sa".into(),
+        seed,
+        cache_key_raw: false,
+    }
+}
+
+#[test]
+fn checkpoint_log_recovers_a_valid_prefix_at_every_truncation_offset() {
+    // Property: whatever byte a crash tears the log at — including
+    // mid-UTF-8 and mid-line — recovery keeps exactly the longest
+    // whole-line prefix, and finishing the run off that prefix
+    // reproduces the uninterrupted log bit for bit.
+    let fp = "feed";
+    let records: Vec<LayerRecord> = (0..3).map(log_record).collect();
+    let mut full = Vec::new();
+    for r in &records {
+        full.extend_from_slice(r.to_json_line(fp).as_bytes());
+        full.push(b'\n');
+    }
+    let dir = tmpdir("ckpt_prop");
+    let path = dir.join("log.jsonl");
+    let mut cases = 0usize;
+    for cut in 0..=full.len() {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let rec = recover_log(&path, fp).unwrap();
+        assert_eq!(
+            rec.valid_bytes + rec.dropped_bytes,
+            cut as u64,
+            "offset {cut}: prefix + tail must cover the file"
+        );
+        let n = rec.records.len();
+        assert!(n <= records.len(), "offset {cut}");
+        for (got, want) in rec.records.iter().zip(&records) {
+            assert_eq!(
+                got.to_json_line(fp),
+                want.to_json_line(fp),
+                "offset {cut}: recovered record differs"
+            );
+        }
+        // Resume through the shared CheckpointLog: the torn tail is
+        // truncated and re-appending the missing records reproduces
+        // the uninterrupted bytes exactly.
+        let mut log = CheckpointLog::open(&path, fp).unwrap();
+        assert_eq!(log.records().len(), n, "offset {cut}");
+        for r in records.iter().skip(n) {
+            log.append(r).unwrap();
+        }
+        drop(log);
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            full,
+            "offset {cut}: resumed log not byte-identical"
+        );
+        cases += 1;
+    }
+    assert!(cases >= 200, "only {cases} truncation cases exercised");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_recovers_a_valid_prefix_at_every_truncation_offset() {
+    // Same property for the write-ahead request journal: any
+    // truncation yields a consistent prefix, and replaying the
+    // remaining operations reproduces the uninterrupted journal.
+    let a = fi_spec(1);
+    let b = fi_spec(2);
+    let (fa, fb) = (a.fingerprint(), b.fingerprint());
+    type Op = Box<dyn Fn(&mut Journal) -> std::io::Result<()>>;
+    let ops: Vec<Op> = vec![
+        {
+            let (a, fa) = (a.clone(), fa.clone());
+            Box::new(move |j: &mut Journal| j.record_admitted(&a, &fa))
+        },
+        {
+            let (b, fb) = (b.clone(), fb.clone());
+            Box::new(move |j: &mut Journal| j.record_admitted(&b, &fb))
+        },
+        {
+            let fa = fa.clone();
+            Box::new(move |j: &mut Journal| j.record_completed(&fa))
+        },
+        {
+            let fb = fb.clone();
+            Box::new(move |j: &mut Journal| j.record_cancelled(&fb))
+        },
+    ];
+    let dir = tmpdir("journal_prop");
+    let path = serve::journal::journal_path(&dir);
+    {
+        let (mut j, _) = Journal::open(&path).unwrap();
+        for op in &ops {
+            op(&mut j).unwrap();
+        }
+    }
+    let full = std::fs::read(&path).unwrap();
+    assert!(full.len() >= 200, "journal too small for the property");
+    for cut in 0..=full.len() {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let rec = recover_journal(&path).unwrap();
+        assert_eq!(
+            rec.valid_bytes + rec.dropped_bytes,
+            cut as u64,
+            "offset {cut}"
+        );
+        // Whole lines up to the cut survive; every surviving entry is
+        // internally consistent (spec fingerprint == envelope).
+        let whole_lines =
+            full[..cut].iter().filter(|&&c| c == b'\n').count();
+        assert!(rec.entries.len() <= 2, "offset {cut}");
+        for e in &rec.entries {
+            assert_eq!(e.spec.fingerprint(), e.fingerprint, "offset {cut}");
+        }
+        // Reopen (truncating the tail) and replay the remaining
+        // operations: byte-identical to the uninterrupted journal.
+        let (mut j, reopened) = Journal::open(&path).unwrap();
+        assert_eq!(
+            reopened.valid_bytes,
+            rec.valid_bytes,
+            "offset {cut}"
+        );
+        for op in ops.iter().skip(whole_lines) {
+            op(&mut j).unwrap();
+        }
+        drop(j);
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            full,
+            "offset {cut}: replayed journal not byte-identical"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interrupted_request_recovers_and_serves_an_identical_report() {
+    use std::sync::Arc;
+    use std::thread;
+
+    let spec = fi_spec(21);
+    let fp = spec.fingerprint();
+    let req = compress_request(&spec);
+
+    // Ground truth: an uninterrupted run on a journal-less daemon.
+    let plain = Arc::new(
+        Server::bind(ServeConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+            max_inflight: 1,
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let ep = plain.local_endpoint().clone();
+    let srv = Arc::clone(&plain);
+    let h = thread::spawn(move || srv.run());
+    let truth = serve::request(&ep, &req).unwrap();
+    let _ = serve::request(&ep, &serve::bare_request("shutdown"));
+    let _ = h.join();
+    let tj = Json::parse(truth.last().unwrap()).unwrap();
+    assert_eq!(tj.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(tj.get("recovered").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        tj.get("resumed_layers").and_then(Json::as_usize),
+        Some(0)
+    );
+    let report = tj
+        .get("report")
+        .and_then(Json::as_str)
+        .expect("done line carries the report")
+        .to_string();
+
+    // Simulate a SIGKILL mid-request: an admitted journal entry and a
+    // checkpoint log holding layer 0 plus a torn tail.  The plain
+    // run's first response line IS the layer-0 checkpoint line
+    // (records are pure functions of the spec).
+    let dir = tmpdir("kill_recover");
+    {
+        let (mut j, _) =
+            Journal::open(&serve::journal::journal_path(&dir)).unwrap();
+        j.record_admitted(&spec, &fp).unwrap();
+    }
+    let jobs = serve::journal::jobs_log_path(&dir, &fp);
+    std::fs::create_dir_all(jobs.parent().unwrap()).unwrap();
+    std::fs::write(&jobs, format!("{}\n{{\"torn", truth[0])).unwrap();
+
+    // Strict mode refuses to start on the torn tail.
+    let mut strict = serve_cfg(&dir);
+    strict.recover = RecoverMode::Strict;
+    let err = Server::bind(strict).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("torn"),
+        "unexpected strict-mode error: {err:#}"
+    );
+
+    // The default recovers at bind: layer 1 is re-run, the journal is
+    // marked completed, and the re-sent request is served from the
+    // durable log with a byte-identical report.
+    let server = Arc::new(Server::bind(serve_cfg(&dir)).unwrap());
+    let r = server.resume_stats().expect("journaled daemon");
+    assert_eq!(r.recovered_requests, 1);
+    assert_eq!(r.replayed_layers, 1);
+    assert!(r.dropped_bytes > 0, "torn tail must be counted");
+    let ep = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let h = thread::spawn(move || srv.run());
+
+    // Introspection: the recovered request shows up completed.
+    let jl = serve::request(&ep, &serve::bare_request("jobs")).unwrap();
+    let jj = Json::parse(jl.last().unwrap()).unwrap();
+    let rows = match jj.get("jobs") {
+        Some(Json::Arr(rows)) => rows.clone(),
+        other => panic!("jobs reply: {other:?}"),
+    };
+    assert_eq!(rows.len(), 1);
+    assert_eq!(
+        rows[0].get("fingerprint").and_then(Json::as_str),
+        Some(fp.as_str())
+    );
+    assert_eq!(
+        rows[0].get("status").and_then(Json::as_str),
+        Some("completed")
+    );
+    assert_eq!(
+        rows[0].get("layers_done").and_then(Json::as_usize),
+        Some(2)
+    );
+
+    let served = serve::request(&ep, &req).unwrap();
+    let _ = serve::request(&ep, &serve::bare_request("shutdown"));
+    let _ = h.join();
+    assert_eq!(
+        served[..spec.layers],
+        truth[..spec.layers],
+        "streamed layer lines must be byte-identical"
+    );
+    let sj = Json::parse(served.last().unwrap()).unwrap();
+    assert_eq!(sj.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(sj.get("recovered").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        sj.get("resumed_layers").and_then(Json::as_usize),
+        Some(spec.layers)
+    );
+    assert_eq!(
+        sj.get("report").and_then(Json::as_str),
+        Some(report.as_str()),
+        "recovered-then-served report must be byte-identical"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
