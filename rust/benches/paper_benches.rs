@@ -105,12 +105,15 @@ fn main() {
             &mut all,
             b.run("linalg/posterior draw (scratch reuse)", 1, || {
                 be.draw_into(&g, &gv, &lam, 0.5, &z, &mut scratch)
+                    .expect("bench posterior is SPD")
             }),
         );
         note(
             &mut all,
             b.run("linalg/posterior draw (fresh alloc)", 1, || {
-                be.draw(&g, &gv, &lam, 0.5, &z).1
+                be.draw(&g, &gv, &lam, 0.5, &z)
+                    .expect("bench posterior is SPD")
+                    .1
             }),
         );
     }
@@ -173,7 +176,7 @@ fn main() {
             data.push(x, y);
         }
         let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
-        blr.fit_model(&data, &mut rng)
+        blr.fit_model(&data, &mut rng).expect("bench posterior is SPD")
     };
     for name in ["sa", "sqa", "sq"] {
         let solver = solvers::by_name(name).unwrap();
@@ -266,7 +269,9 @@ fn main() {
         note(
             &mut all,
             b.run(&format!("surrogate/{label} fit+draw"), 1, || {
-                blr.fit_model(&data, &mut r2).energy(&[1i8; 24])
+                blr.fit_model(&data, &mut r2)
+                    .expect("bench posterior is SPD")
+                    .energy(&[1i8; 24])
             }),
         );
     }
@@ -276,7 +281,9 @@ fn main() {
         note(
             &mut all,
             b.run("surrogate/FMQA08 train (200 adam)", 200, || {
-                fm.fit_model(&data, &mut r2).energy(&[1i8; 24])
+                fm.fit_model(&data, &mut r2)
+                    .expect("bench fm stays finite")
+                    .energy(&[1i8; 24])
             }),
         );
     }
@@ -473,13 +480,17 @@ fn main() {
             ratio: 0.158_203_125,
             cache_hits: 40,
             cache_misses: 1136,
+            surrogate_failures: 0,
+            fallback_proposals: 0,
+            rejected_costs: 0,
         };
         note(
             &mut all,
             b.run("shard/record jsonl roundtrip x64", 64, || {
                 let mut evals = 0usize;
                 for _ in 0..64 {
-                    let line = rec.to_json_line(&fp);
+                    let line =
+                        rec.to_json_line(&fp).expect("finite record");
                     evals += shard::LayerRecord::parse_line(&line, &fp)
                         .expect("roundtrip")
                         .evals;

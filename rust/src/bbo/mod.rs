@@ -27,6 +27,7 @@
 //! schedule scan hoisted out of the restart loop.  Results are
 //! bit-identical to the legacy per-chain execution on every path.
 
+use crate::linalg::NumericError;
 use crate::minlp::Oracle;
 use crate::solvers::IsingSolver;
 use crate::surrogate::{
@@ -156,6 +157,79 @@ impl BboConfig {
     }
 }
 
+/// Counters for every degraded-mode event of one BBO run (ISSUE 9).
+///
+/// A fault-free run has all counters at zero; each nonzero count marks
+/// one place where the loop absorbed a numeric fault instead of
+/// aborting.  The counters are exact — the fault-injection tests assert
+/// they match the number of injected faults — and they propagate to
+/// `LayerRecord` rows and the serve daemon's `stats` line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Degradation {
+    /// Surrogate fits that failed with a typed [`NumericError`] (non-SPD
+    /// posterior, diverged FM) and were replaced by a fallback
+    /// acquisition.
+    pub surrogate_failures: u64,
+    /// Candidates proposed by the random fallback instead of the
+    /// surrogate+solver path (one per missing candidate; a failed
+    /// batched fit counts the whole batch).
+    pub fallback_proposals: u64,
+    /// Oracle evaluations quarantined because the cost came back
+    /// non-finite — recorded in the trace but never pushed into the
+    /// surrogate dataset's Gram moments.
+    pub rejected_costs: u64,
+}
+
+impl Degradation {
+    /// True when any degraded-mode event occurred.
+    pub fn any(&self) -> bool {
+        self.surrogate_failures > 0
+            || self.fallback_proposals > 0
+            || self.rejected_costs > 0
+    }
+}
+
+/// Why a [`run_cancellable`] call did not produce a [`BboRun`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunError {
+    /// The cancel token tripped (caller cancelled or deadline expired).
+    Cancelled(CancelCause),
+    /// A numeric fault the degraded mode could not absorb — today only
+    /// [`NumericError::NonFiniteCost`]: every oracle evaluation was
+    /// quarantined, so there is no finite best to report.
+    Numeric(NumericError),
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Cancelled(cause) => write!(f, "{cause}"),
+            RunError::Numeric(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RunError::Cancelled(_) => None,
+            RunError::Numeric(e) => Some(e),
+        }
+    }
+}
+
+impl From<CancelCause> for RunError {
+    fn from(cause: CancelCause) -> Self {
+        RunError::Cancelled(cause)
+    }
+}
+
+impl From<NumericError> for RunError {
+    fn from(e: NumericError) -> Self {
+        RunError::Numeric(e)
+    }
+}
+
 /// Per-run output: everything the figures need.
 #[derive(Clone, Debug)]
 pub struct BboRun {
@@ -181,6 +255,8 @@ pub struct BboRun {
     pub time_solver: f64,
     /// Seconds spent in black-box evaluations.
     pub time_eval: f64,
+    /// Degraded-mode event counters (all zero on a fault-free run).
+    pub degradation: Degradation,
 }
 
 impl BboRun {
@@ -336,9 +412,13 @@ pub fn run(
         &CancelToken::never(),
     ) {
         Ok(run) => run,
-        Err(cause) => {
+        Err(RunError::Cancelled(cause)) => {
             unreachable!("never-token run reported cancellation: {cause}")
         }
+        // A finite-input oracle (Problem::cost of a finite W) always
+        // produces finite costs, so this is unreachable for real
+        // problems; fault-injection callers use run_cancellable.
+        Err(RunError::Numeric(e)) => panic!("BBO run failed: {e}"),
     }
 }
 
@@ -352,8 +432,20 @@ pub fn run(
 /// seed — the serve daemon's byte-identity contract for requests that
 /// finish.
 ///
+/// **Degraded-mode determinism contract (ISSUE 9).**  Numeric faults
+/// degrade rather than abort: a failed surrogate fit falls back to
+/// random candidate proposal (each missing candidate consumes exactly
+/// one `rng.spins(n_bits)` from the main acquisition stream, in
+/// candidate order, after the fit's own RNG consumption), and a
+/// non-finite oracle cost is quarantined — recorded in the trace but
+/// never pushed into the surrogate dataset.  Fault-free runs never
+/// enter either branch, so they stay bit-identical to the pre-fault
+/// streams.  Every degraded event is counted in [`BboRun::degradation`].
+/// Only a run with *no* finite cost at all fails, with
+/// [`RunError::Numeric`]\([`NumericError::NonFiniteCost`]).
+///
 /// ```
-/// use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+/// use intdecomp::bbo::{self, Algorithm, Backends, BboConfig, RunError};
 /// use intdecomp::instance::{generate, InstanceConfig};
 /// use intdecomp::solvers::sa::SimulatedAnnealing;
 /// use intdecomp::util::cancel::{CancelCause, CancelToken};
@@ -373,7 +465,7 @@ pub fn run(
 ///     1,
 ///     &tok,
 /// );
-/// assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+/// assert_eq!(out.unwrap_err(), RunError::Cancelled(CancelCause::Cancelled));
 /// ```
 #[allow(clippy::too_many_arguments)]
 pub fn run_cancellable(
@@ -384,7 +476,7 @@ pub fn run_cancellable(
     backends: &Backends,
     seed: u64,
     cancel: &CancelToken,
-) -> Result<BboRun, CancelCause> {
+) -> Result<BboRun, RunError> {
     let total_timer = Timer::start();
     let mut rng = Rng::new(seed);
     let n = oracle.n_bits();
@@ -393,17 +485,24 @@ pub fn run_cancellable(
     let mut trace = Trace::new();
     let (mut t_sur, mut t_sol, mut t_eval) = (0.0, 0.0, 0.0);
     let mut pairs: Vec<(Vec<i8>, f64)> = Vec::new();
+    let mut degradation = Degradation::default();
 
-    // Initial design.
+    // Initial design.  Non-finite costs are quarantined: noted in the
+    // trace (the evaluation budget was spent) but never pushed into the
+    // dataset's Gram moments.
     for _ in 0..cfg.n_init {
         if let Some(cause) = cancel.cause() {
-            return Err(cause);
+            return Err(cause.into());
         }
         let x = rng.spins(n);
         let t = Timer::start();
         let y = oracle.eval(&x);
         t_eval += t.seconds();
-        expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+        if y.is_finite() {
+            expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+        } else {
+            degradation.rejected_costs += 1;
+        }
         data.push_batch(pairs.drain(..));
         trace.note(x, y);
     }
@@ -420,7 +519,7 @@ pub fn run_cancellable(
     let mut acquired = 0;
     while acquired < cfg.iters {
         if let Some(cause) = cancel.cause() {
-            return Err(cause);
+            return Err(cause.into());
         }
         if batch == 1 {
             // Serial path — bit-for-bit the legacy stream.
@@ -428,32 +527,56 @@ pub fn run_cancellable(
                 None => rng.spins(n), // RS
                 Some(sur) => {
                     let t = Timer::start();
-                    let model = sur.fit_model(&data, &mut rng);
+                    let fit = sur.fit_model(&data, &mut rng);
                     t_sur += t.seconds();
-                    let t = Timer::start();
-                    let (x, _) = if cfg.restart_workers > 1 {
-                        crate::solvers::solve_best_parallel(
-                            solver,
-                            &model,
-                            &mut rng,
-                            cfg.restarts,
-                            cfg.restart_workers,
-                        )
-                    } else {
-                        solver.solve_best(&model, &mut rng, cfg.restarts)
-                    };
-                    t_sol += t.seconds();
-                    if eps > 0.0 && rng.f64() < eps {
-                        rng.spins(n) // randomised-FMQA exploration step
-                    } else {
-                        x
+                    match fit {
+                        Err(_) => {
+                            // Degraded acquisition: the surrogate could
+                            // not be fit, so this iteration's candidate
+                            // comes off the main stream — exactly one
+                            // rng.spins(n), consumed after the fit's own
+                            // RNG use.  Fault-free runs never take this
+                            // branch, so their stream is untouched.
+                            degradation.surrogate_failures += 1;
+                            degradation.fallback_proposals += 1;
+                            rng.spins(n)
+                        }
+                        Ok(model) => {
+                            let t = Timer::start();
+                            let (x, _) = if cfg.restart_workers > 1 {
+                                crate::solvers::solve_best_parallel(
+                                    solver,
+                                    &model,
+                                    &mut rng,
+                                    cfg.restarts,
+                                    cfg.restart_workers,
+                                )
+                            } else {
+                                solver.solve_best(
+                                    &model,
+                                    &mut rng,
+                                    cfg.restarts,
+                                )
+                            };
+                            t_sol += t.seconds();
+                            if eps > 0.0 && rng.f64() < eps {
+                                // randomised-FMQA exploration step
+                                rng.spins(n)
+                            } else {
+                                x
+                            }
+                        }
                     }
                 }
             };
             let t = Timer::start();
             let y = oracle.eval(&x);
             t_eval += t.seconds();
-            expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+            if y.is_finite() {
+                expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+            } else {
+                degradation.rejected_costs += 1;
+            }
             data.push_batch(pairs.drain(..));
             trace.note(x, y);
             acquired += 1;
@@ -470,37 +593,51 @@ pub fn run_cancellable(
             None => (0..k_step).map(|_| rng.spins(n)).collect(),
             Some(sur) => {
                 let t = Timer::start();
-                let model = sur.fit_model(&data, &mut rng);
+                let fit = sur.fit_model(&data, &mut rng);
                 t_sur += t.seconds();
-                let t = Timer::start();
-                let cands = crate::solvers::solve_batch(
-                    solver,
-                    &model,
-                    &mut rng,
-                    cfg.restarts,
-                    k_step,
-                    cfg.restart_workers,
-                );
-                t_sol += t.seconds();
-                let mut xs: Vec<Vec<i8>> =
-                    cands.into_iter().map(|(x, _)| x).collect();
-                // Fewer distinct restart minima than the batch asks
-                // for: pad with random exploration candidates so the
-                // evaluation budget is spent either way.
-                while xs.len() < k_step {
-                    xs.push(rng.spins(n));
-                }
-                if eps > 0.0 {
-                    // Per-slot ε-greedy replacement, decided on the
-                    // main stream in candidate order (deterministic
-                    // for any worker count).
-                    for x in xs.iter_mut() {
-                        if rng.f64() < eps {
-                            *x = rng.spins(n);
+                match fit {
+                    Err(_) => {
+                        // Degraded batched acquisition: the whole batch
+                        // comes off the main stream, one rng.spins(n)
+                        // per candidate in slot order (same order the
+                        // pad/ε-greedy paths use).
+                        degradation.surrogate_failures += 1;
+                        degradation.fallback_proposals += k_step as u64;
+                        (0..k_step).map(|_| rng.spins(n)).collect()
+                    }
+                    Ok(model) => {
+                        let t = Timer::start();
+                        let cands = crate::solvers::solve_batch(
+                            solver,
+                            &model,
+                            &mut rng,
+                            cfg.restarts,
+                            k_step,
+                            cfg.restart_workers,
+                        );
+                        t_sol += t.seconds();
+                        let mut xs: Vec<Vec<i8>> =
+                            cands.into_iter().map(|(x, _)| x).collect();
+                        // Fewer distinct restart minima than the batch
+                        // asks for: pad with random exploration
+                        // candidates so the evaluation budget is spent
+                        // either way.
+                        while xs.len() < k_step {
+                            xs.push(rng.spins(n));
                         }
+                        if eps > 0.0 {
+                            // Per-slot ε-greedy replacement, decided on
+                            // the main stream in candidate order
+                            // (deterministic for any worker count).
+                            for x in xs.iter_mut() {
+                                if rng.f64() < eps {
+                                    *x = rng.spins(n);
+                                }
+                            }
+                        }
+                        xs
                     }
                 }
-                xs
             }
         };
         // Evaluate the whole batch concurrently through the oracle's
@@ -512,7 +649,11 @@ pub fn run_cancellable(
         let ys_batch: Vec<f64> = oracle.eval_batch(&xs_batch, k_step);
         t_eval += t.seconds();
         for (x, &y) in xs_batch.iter().zip(&ys_batch) {
-            expand_pairs(oracle, cfg.augment, x, y, &mut pairs);
+            if y.is_finite() {
+                expand_pairs(oracle, cfg.augment, x, y, &mut pairs);
+            } else {
+                degradation.rejected_costs += 1;
+            }
         }
         // One surrogate-dataset update for the whole batch.
         data.push_batch(pairs.drain(..));
@@ -520,6 +661,14 @@ pub fn run_cancellable(
             trace.note(x, y);
         }
         acquired += k_step;
+    }
+
+    // Every evaluation quarantined: there is no finite decomposition to
+    // report, so the run fails with the typed taxonomy error.
+    if !trace.best_y.is_finite() {
+        return Err(RunError::Numeric(NumericError::NonFiniteCost {
+            rejected: degradation.rejected_costs as usize,
+        }));
     }
 
     Ok(BboRun {
@@ -534,6 +683,7 @@ pub fn run_cancellable(
         time_surrogate: t_sur,
         time_solver: t_sol,
         time_eval: t_eval,
+        degradation,
     })
 }
 
@@ -609,7 +759,10 @@ mod tests {
             4,
             &tok,
         );
-        assert_eq!(out.unwrap_err(), CancelCause::Cancelled);
+        assert_eq!(
+            out.unwrap_err(),
+            RunError::Cancelled(CancelCause::Cancelled)
+        );
     }
 
     #[test]
@@ -628,7 +781,10 @@ mod tests {
             4,
             &tok,
         );
-        assert_eq!(out.unwrap_err(), CancelCause::DeadlineExceeded);
+        assert_eq!(
+            out.unwrap_err(),
+            RunError::Cancelled(CancelCause::DeadlineExceeded)
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use std::cell::RefCell;
 
-use crate::linalg::{dot, lu_solve, Matrix};
+use crate::linalg::{dot, lu_solve, Matrix, NumericError};
 use crate::util::threadpool::parallel_map;
 
 /// Rank threshold for the masked Gram–Schmidt.  For integer columns the
@@ -187,12 +187,29 @@ pub struct Problem {
 
 impl Problem {
     /// Problem for target `w` at rank `k` (precomputes S = W Wᵀ).
+    ///
+    /// Panics on a non-finite entry in `w`; use [`Problem::try_new`] at
+    /// boundaries that need a typed error instead (serve 400, CLI).
     pub fn new(w: Matrix, k: usize) -> Self {
+        match Problem::try_new(w, k) {
+            Ok(p) => p,
+            Err(e) => panic!("invalid problem: {e}"),
+        }
+    }
+
+    /// Fallible [`Problem::new`]: rejects a target matrix containing
+    /// NaN/±Inf entries with [`NumericError::NonFiniteInput`] (ISSUE 9)
+    /// — a non-finite W would otherwise poison S = W Wᵀ and every cost
+    /// the oracle ever reports.
+    pub fn try_new(w: Matrix, k: usize) -> Result<Self, NumericError> {
         assert!(k >= 1 && k <= w.rows);
+        if let Some(index) = w.data.iter().position(|v| !v.is_finite()) {
+            return Err(NumericError::NonFiniteInput { index });
+        }
         let wt = w.transpose();
         let s = w.matmul(&wt);
         let w_norm_sq = w.frob_norm_sq();
-        Problem { w, k, s, w_norm_sq }
+        Ok(Problem { w, k, s, w_norm_sq })
     }
 
     /// Target rows N.
@@ -519,5 +536,32 @@ mod tests {
         let m = rand_bin(&mut rng, 8, 3);
         let m2 = BinMatrix::from_spins(8, 3, m.as_spins());
         assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn try_new_rejects_non_finite_entries() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut w = Matrix::zeros(3, 4);
+            w[(1, 2)] = bad;
+            let err = Problem::try_new(w, 2).unwrap_err();
+            // Flat index of (1, 2) in row-major 3×4 storage.
+            assert_eq!(err, NumericError::NonFiniteInput { index: 6 });
+        }
+    }
+
+    #[test]
+    fn try_new_accepts_finite_matrix() {
+        let mut rng = Rng::new(111);
+        let w = Matrix::from_vec(4, 6, rng.normals(24));
+        let p = Problem::try_new(w, 2).unwrap();
+        assert_eq!(p.n_bits(), 8);
+    }
+
+    #[test]
+    fn new_panics_on_non_finite_entry() {
+        let mut w = Matrix::zeros(2, 2);
+        w[(0, 0)] = f64::NAN;
+        let out = std::panic::catch_unwind(|| Problem::new(w, 1));
+        assert!(out.is_err());
     }
 }

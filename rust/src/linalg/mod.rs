@@ -442,6 +442,73 @@ impl std::fmt::Display for CholeskyError {
 
 impl std::error::Error for CholeskyError {}
 
+/// Typed numeric failure of the surrogate/BBO pipeline — the error
+/// taxonomy every layer above `linalg` speaks (ISSUE 9).  Each variant
+/// is a *recoverable* fault: callers either degrade (fall back to a
+/// random acquisition, quarantine the sample) or surface the error as a
+/// typed per-request failure, never a process abort.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NumericError {
+    /// The posterior precision matrix stayed non-SPD after the whole
+    /// jitter ladder (wraps the [`CholeskyError`] from the draw).
+    PosteriorNotSpd(CholeskyError),
+    /// A black-box cost came back NaN/±Inf and no finite evaluation
+    /// remained to fall back on; `rejected` counts the quarantined
+    /// evaluations.
+    NonFiniteCost {
+        /// Non-finite evaluations quarantined before the failure.
+        rejected: usize,
+    },
+    /// An input matrix carried a NaN/±Inf entry (row-major flat index).
+    NonFiniteInput {
+        /// Flat row-major index of the first offending entry.
+        index: usize,
+    },
+    /// A trained surrogate produced non-finite parameters.
+    SurrogateDiverged {
+        /// Which surrogate diverged (e.g. "fm").
+        surrogate: &'static str,
+    },
+}
+
+impl From<CholeskyError> for NumericError {
+    fn from(e: CholeskyError) -> Self {
+        NumericError::PosteriorNotSpd(e)
+    }
+}
+
+impl std::fmt::Display for NumericError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NumericError::PosteriorNotSpd(e) => {
+                write!(f, "posterior not SPD: {e}")
+            }
+            NumericError::NonFiniteCost { rejected } => write!(
+                f,
+                "no finite cost observed ({rejected} non-finite \
+                 evaluation(s) quarantined)"
+            ),
+            NumericError::NonFiniteInput { index } => write!(
+                f,
+                "input matrix has a non-finite entry at flat index {index}"
+            ),
+            NumericError::SurrogateDiverged { surrogate } => {
+                write!(f, "{surrogate} surrogate diverged to non-finite \
+                           parameters")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NumericError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NumericError::PosteriorNotSpd(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
 /// [`cholesky`] with a bounded escalating diagonal-jitter retry: the
 /// graceful-degradation path for near-singular Gram matrices.  Returns
 /// the factor and the jitter that succeeded (`0.0` on the clean first

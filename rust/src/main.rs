@@ -388,6 +388,7 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
         workers: cfg.workers,
         restart_workers: spec.restart_workers,
         batch_size: 1, // per-job cfg carries the batch size
+        ..Default::default()
     });
     let results = eng.compress_all(jobs);
     let wall = t.seconds();
@@ -841,6 +842,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     note(
         b.run("linalg/posterior draw (scratch reuse)", 1, || {
             be.draw_into(&g, &gv, &lam, 0.5, &z, &mut scratch)
+                .expect("bench posterior is SPD")
         }),
         &mut all,
     );
@@ -855,7 +857,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
     note(
         b.run("surrogate/nBOCS fit+draw", 1, || {
-            blr.fit_model(&data, &mut rng).energy(&[1i8; 24])
+            blr.fit_model(&data, &mut rng)
+                .expect("bench posterior is SPD")
+                .energy(&[1i8; 24])
         }),
         &mut all,
     );
@@ -1016,12 +1020,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ratio: 0.158_203_125,
             cache_hits: 40,
             cache_misses: 1136,
+            surrogate_failures: 0,
+            fallback_proposals: 0,
+            rejected_costs: 0,
         };
         note(
             b.run("shard/record jsonl roundtrip x64", 64, || {
                 let mut evals = 0usize;
                 for _ in 0..64 {
-                    let line = rec.to_json_line(&fp);
+                    let line =
+                        rec.to_json_line(&fp).expect("finite record");
                     evals += shard::LayerRecord::parse_line(&line, &fp)
                         .expect("roundtrip")
                         .evals;
@@ -1305,7 +1313,7 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     let (alpha_x, _) = rt.bocs_draw(&data.g, &data.gv, &lam, 0.5, &z)?;
     use intdecomp::surrogate::blr::PosteriorBackend as _;
     let (alpha_n, _) = intdecomp::surrogate::blr::NativePosterior
-        .draw(&data.g, &data.gv, &lam, 0.5, &z);
+        .draw(&data.g, &data.gv, &lam, 0.5, &z)?;
     let aerr = alpha_x
         .iter()
         .zip(&alpha_n)

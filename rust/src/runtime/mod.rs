@@ -33,7 +33,7 @@ pub use stub::XlaRuntime;
 use anyhow::{anyhow, Result};
 
 use crate::cost::BinMatrix;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, NumericError};
 use crate::surrogate::blr::PosteriorBackend;
 use crate::surrogate::fm::FmTrainer;
 use crate::util::json::Json;
@@ -106,12 +106,14 @@ impl PosteriorBackend for XlaPosterior {
         lam: &[f64],
         sigma_n2: f64,
         z: &[f64],
-    ) -> (Vec<f64>, f64) {
+    ) -> Result<(Vec<f64>, f64), NumericError> {
         match self.rt.bocs_draw(g, gv, lam, sigma_n2, z) {
-            Ok(out) => out,
+            Ok(out) => Ok(out),
             Err(e) => {
                 // Artifact mismatch is a programming error upstream; fall
                 // back to native so a run is never lost mid-experiment.
+                // The native twin may itself fail (non-SPD posterior),
+                // which propagates as the typed NumericError.
                 eprintln!("warn: xla posterior fell back to native: {e:#}");
                 crate::surrogate::blr::NativePosterior
                     .draw(g, gv, lam, sigma_n2, z)
@@ -142,7 +144,7 @@ impl FmTrainer for XlaFmTrainer {
         w: &mut [f64],
         v: &mut Matrix,
         lr: f64,
-    ) {
+    ) -> Result<(), NumericError> {
         for _ in 0..self.bundles.max(1) {
             match self.rt.fm_epoch(v.cols, xs, ys, *w0, w, v, lr) {
                 Ok((nw0, nw, nv)) => {
@@ -151,11 +153,15 @@ impl FmTrainer for XlaFmTrainer {
                     *v = nv;
                 }
                 Err(e) => {
+                    // Artifact failure keeps the warm parameters; the
+                    // caller's finiteness check decides whether the model
+                    // is still usable.
                     eprintln!("warn: xla fm trainer failed: {e:#}");
-                    return;
+                    return Ok(());
                 }
             }
         }
+        Ok(())
     }
 
     fn trainer_name(&self) -> &'static str {

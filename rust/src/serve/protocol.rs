@@ -4,7 +4,8 @@
 //!
 //! * `{"type":"compress","spec":{..ModelSpec json..}}` — streams one
 //!   [`crate::shard::LayerRecord`] line per finished layer (the exact
-//!   shard result-log format, schema `intdecomp-shard-result-v1`,
+//!   shard result-log format, schema `intdecomp-shard-result-v2` with
+//!   the per-layer degraded-mode counters,
 //!   tagged with the spec fingerprint), then a terminal `done` line
 //!   carrying the full deterministic report — byte-identical to
 //!   `compress-model --report` for the same spec.  An optional
@@ -15,7 +16,11 @@
 //!   request envelope, *not* in the spec, so it can never perturb the
 //!   spec fingerprint or the bytes of a run that completes.
 //! * `{"type":"stats"}` — one `stats` line: cache hit-rate, queue
-//!   depth, admission counters, per-request latency percentiles and
+//!   depth, admission counters, per-request latency percentiles, the
+//!   fault counters (`degraded` requests failed on a typed numeric
+//!   error, `panicked` jobs contained at the pool boundary, and a
+//!   nested `degradation` block summing the per-layer
+//!   `surrogate_failures`/`fallback_proposals`/`rejected_costs`) and
 //!   (on a journaled daemon) a nested `resume` block.
 //! * `{"type":"jobs"}` — one `jobs` line listing every journaled
 //!   request: fingerprint, status (`admitted`/`completed`/
@@ -35,6 +40,9 @@
 //! `{"type":"error","code":400|429|500,...}` — `429` is the admission
 //! rejection: the request was well-formed but the daemon is at its
 //! in-flight capacity, and the connection stays usable for a retry.
+//! `500` covers a faulted job — a typed numeric failure (e.g. no
+//! finite cost was ever observed) or a panic contained at the pool
+//! boundary; either way the daemon keeps serving.
 
 use anyhow::{anyhow, Result};
 

@@ -34,8 +34,9 @@ use anyhow::{bail, Context, Result};
 use super::cache::{CacheBudget, CacheRegistry};
 use super::journal::{self, JobStatus, Journal, RecoverMode};
 use super::protocol::{self, Request, SERVE_SCHEMA};
+use crate::bbo::Degradation;
 use crate::cost::BinMatrix;
-use crate::engine::{Engine, EngineConfig};
+use crate::engine::{Engine, EngineConfig, JobError};
 use crate::shard::{
     deterministic_report, recover_log, CheckpointLog, LayerRecord,
     ModelSpec,
@@ -268,6 +269,17 @@ pub struct Metrics {
     cancelled: AtomicU64,
     deadline: AtomicU64,
     errors: AtomicU64,
+    /// Requests failed with a typed numeric error (`500`).
+    degraded: AtomicU64,
+    /// Jobs whose panic was contained at the pool boundary (`500`).
+    panicked: AtomicU64,
+    /// Accumulated [`Degradation::surrogate_failures`] over completed
+    /// layers.
+    surrogate_failures: AtomicU64,
+    /// Accumulated [`Degradation::fallback_proposals`].
+    fallback_proposals: AtomicU64,
+    /// Accumulated [`Degradation::rejected_costs`].
+    rejected_costs: AtomicU64,
     latencies: Mutex<Vec<f64>>,
 }
 
@@ -300,6 +312,27 @@ impl Metrics {
         };
     }
 
+    fn degrade_request(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn contain_panic(&self) {
+        self.panicked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one finished layer's degraded-mode counters into the
+    /// daemon totals (ISSUE 9).
+    fn absorb_degradation(&self, d: Degradation) {
+        if !d.any() {
+            return;
+        }
+        self.surrogate_failures
+            .fetch_add(d.surrogate_failures, Ordering::Relaxed);
+        self.fallback_proposals
+            .fetch_add(d.fallback_proposals, Ordering::Relaxed);
+        self.rejected_costs.fetch_add(d.rejected_costs, Ordering::Relaxed);
+    }
+
     fn complete(&self, seconds: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut lat = self.latencies.lock().unwrap();
@@ -320,6 +353,15 @@ impl Metrics {
             cancelled: self.cancelled.load(Ordering::Relaxed),
             deadline: self.deadline.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
+            surrogate_failures: self
+                .surrogate_failures
+                .load(Ordering::Relaxed),
+            fallback_proposals: self
+                .fallback_proposals
+                .load(Ordering::Relaxed),
+            rejected_costs: self.rejected_costs.load(Ordering::Relaxed),
             latency_count: lat.len(),
             latency_mean_s: mean(&lat),
             latency_p50_s: percentile(&lat, 50.0),
@@ -343,6 +385,17 @@ pub struct MetricsSnapshot {
     pub deadline: u64,
     /// Malformed or failed requests.
     pub errors: u64,
+    /// Requests failed with a typed numeric error (`500`).
+    pub degraded: u64,
+    /// Jobs whose panic was contained at the pool boundary (`500`).
+    pub panicked: u64,
+    /// Surrogate fit/draw failures degraded to random acquisition,
+    /// summed over all finished layers.
+    pub surrogate_failures: u64,
+    /// Candidates proposed by the degraded random fallback.
+    pub fallback_proposals: u64,
+    /// Non-finite oracle costs quarantined before the dataset.
+    pub rejected_costs: u64,
     /// Latency samples in the current window.
     pub latency_count: usize,
     /// Mean request latency over the window (seconds).
@@ -673,10 +726,14 @@ fn recover_state(
                     }
                     engine_jobs.push(job);
                 }
+                // Recovery stays on the infallible entry point: a
+                // panic here is a startup failure the operator should
+                // see, not a request to degrade.
                 let eng = Engine::new(EngineConfig {
                     workers,
                     restart_workers: entry.spec.restart_workers,
                     batch_size: 1,
+                    ..Default::default()
                 });
                 let mut werr: Option<std::io::Error> = None;
                 eng.compress_each(engine_jobs, |i, result| {
@@ -1240,39 +1297,53 @@ fn handle_compress(
     // Stream the recovered prefix first; the lines are byte-identical
     // to freshly computed ones because records are pure functions of
     // the spec.
-    for rec in recovered {
-        if io_err.is_none() {
-            if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp)) {
-                io_err = Some(e);
+    // A strict-serialisation failure on a record (non-finite float
+    // field — can't happen for a completed run, which guarantees a
+    // finite best cost, but handled defensively) is treated like a
+    // dead peer: the stream is aborted and the request fails.
+    let emit =
+        |rec: &LayerRecord,
+         io_err: &mut Option<std::io::Error>,
+         out: &mut Conn,
+         cancel: &CancelToken| {
+            if io_err.is_some() {
+                return;
+            }
+            let step = rec
+                .to_json_line(&fp)
+                .map_err(std::io::Error::other)
+                .and_then(|line| writeln!(out, "{line}"));
+            if let Err(e) = step {
+                *io_err = Some(e);
+                // The write side is dead: stop burning pool time on a
+                // stream nobody reads.
                 cancel.cancel();
             }
-        }
+        };
+    for rec in recovered {
+        emit(&rec, &mut io_err, out, cancel);
         records.push(rec);
     }
     let outcome = if jobs.is_empty() {
         Ok(())
     } else {
+        // `contain_panics`: a panicking job must become a typed `500`
+        // on this request, never take the daemon down (ISSUE 9).
         let eng = Engine::new(EngineConfig {
             workers: ctx.workers,
             restart_workers: spec.restart_workers,
             batch_size: 1, // per-job cfg carries the spec's batch size
+            contain_panics: true,
         });
         eng.try_compress_each(jobs, |i, result| {
+            ctx.metrics.absorb_degradation(result.run.degradation);
             let rec = LayerRecord::from_result(todo[i], &result);
             // Checkpoint (append + fsync) before the client sees the
             // line: whatever was streamed is always durable.
             if let Some(d) = durable.as_mut() {
                 d.append(&rec);
             }
-            if io_err.is_none() {
-                if let Err(e) = writeln!(out, "{}", rec.to_json_line(&fp))
-                {
-                    io_err = Some(e);
-                    // The write side is dead: stop burning pool time
-                    // on a stream nobody reads.
-                    cancel.cancel();
-                }
-            }
+            emit(&rec, &mut io_err, out, cancel);
             records.push(rec);
         })
     };
@@ -1280,7 +1351,7 @@ fn handle_compress(
     // and the registry sweep — queued waiters should not wait on I/O.
     drop(permit);
     match outcome {
-        Err(cause) => {
+        Err(JobError::Cancelled(cause)) => {
             if let Some(d) = durable.as_mut() {
                 d.finish_cancelled();
             }
@@ -1295,6 +1366,29 @@ fn handle_compress(
                     records.len(),
                     timer.seconds(),
                 )
+            );
+            ctx.registry.enforce();
+            match io_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        }
+        Err(err @ (JobError::Numeric(_) | JobError::Panicked { .. })) => {
+            // A faulted job: typed `500`, daemon keeps serving.  The
+            // journal entry is terminated so the bind-time recovery
+            // pass does not replay a job that would fault again.
+            if let Some(d) = durable.as_mut() {
+                d.finish_cancelled();
+            }
+            match &err {
+                JobError::Panicked { .. } => ctx.metrics.contain_panic(),
+                _ => ctx.metrics.degrade_request(),
+            }
+            ctx.metrics.error();
+            let _ = writeln!(
+                out,
+                "{}",
+                protocol::error_line(500, &format!("{err}"))
             );
             ctx.registry.enforce();
             match io_err {
@@ -1529,7 +1623,23 @@ fn stats_line(ctx: &Ctx) -> String {
         ("cancelled", Json::Num(m.cancelled as f64)),
         ("completed", Json::Num(m.completed as f64)),
         ("deadline", Json::Num(m.deadline as f64)),
+        (
+            "degradation",
+            Json::obj(vec![
+                (
+                    "fallback_proposals",
+                    Json::Num(m.fallback_proposals as f64),
+                ),
+                ("rejected_costs", Json::Num(m.rejected_costs as f64)),
+                (
+                    "surrogate_failures",
+                    Json::Num(m.surrogate_failures as f64),
+                ),
+            ]),
+        ),
+        ("degraded", Json::Num(m.degraded as f64)),
         ("errors", Json::Num(m.errors as f64)),
+        ("panicked", Json::Num(m.panicked as f64)),
         ("inflight", Json::Num(ctx.admission.in_flight() as f64)),
         ("latency_count", Json::Num(m.latency_count as f64)),
         ("latency_mean_s", Json::Num(m.latency_mean_s)),

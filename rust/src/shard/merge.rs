@@ -269,6 +269,9 @@ mod tests {
             ratio: 0.15,
             cache_hits: 3,
             cache_misses: 10,
+            surrogate_failures: 0,
+            fallback_proposals: 0,
+            rejected_costs: 0,
         }
     }
 

@@ -21,11 +21,13 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::plan::Manifest;
 use crate::engine::{Engine, EngineConfig, JobResult};
-use crate::util::json::Json;
+use crate::util::json::{Json, NonFiniteJson};
 use crate::util::lockfile::LockFile;
 
 /// Schema tag of every result-log line; bump on layout changes.
-pub const RESULT_SCHEMA: &str = "intdecomp-shard-result-v1";
+/// v2 (ISSUE 9) adds the degraded-mode counters (`surrogate_failures`,
+/// `fallback_proposals`, `rejected_costs`).
+pub const RESULT_SCHEMA: &str = "intdecomp-shard-result-v2";
 
 /// One finished layer, as checkpointed to the result log — every field
 /// the merged deterministic report needs, and nothing wall-clock
@@ -61,6 +63,12 @@ pub struct LayerRecord {
     pub cache_hits: u64,
     /// Evaluation-cache misses of the job.
     pub cache_misses: u64,
+    /// Surrogate fit/draw failures degraded to random acquisition.
+    pub surrogate_failures: u64,
+    /// Candidates proposed by the degraded random fallback.
+    pub fallback_proposals: u64,
+    /// Non-finite oracle costs quarantined before the dataset.
+    pub rejected_costs: u64,
 }
 
 impl LayerRecord {
@@ -81,13 +89,22 @@ impl LayerRecord {
             ratio: r.ratio,
             cache_hits: r.cache.hits,
             cache_misses: r.cache.misses,
+            surrogate_failures: r.run.degradation.surrogate_failures,
+            fallback_proposals: r.run.degradation.fallback_proposals,
+            rejected_costs: r.run.degradation.rejected_costs,
         }
     }
 
     /// Serialise to one result-log line (no trailing newline).  Floats
     /// use Rust's shortest round-trip formatting, so parsing the line
-    /// back yields bit-identical values.
-    pub fn to_json_line(&self, fingerprint: &str) -> String {
+    /// back yields bit-identical values.  A non-finite float field
+    /// (which JSON would collapse to `null` and the parse side would
+    /// then reject) is a typed error instead of a silently corrupt
+    /// checkpoint (ISSUE 9).
+    pub fn to_json_line(
+        &self,
+        fingerprint: &str,
+    ) -> Result<String, NonFiniteJson> {
         let best_x = self
             .best_x
             .iter()
@@ -102,16 +119,25 @@ impl LayerRecord {
             ("d", Json::Num(self.d as f64)),
             ("err", Json::Num(self.err)),
             ("evals", Json::Num(self.evals as f64)),
+            (
+                "fallback_proposals",
+                Json::Num(self.fallback_proposals as f64),
+            ),
             ("fingerprint", Json::Str(fingerprint.into())),
             ("job", Json::Num(self.job as f64)),
             ("k", Json::Num(self.k as f64)),
             ("n", Json::Num(self.n as f64)),
             ("name", Json::Str(self.name.clone())),
             ("ratio", Json::Num(self.ratio)),
+            ("rejected_costs", Json::Num(self.rejected_costs as f64)),
             ("schema", Json::Str(RESULT_SCHEMA.into())),
             ("solver", Json::Str(self.solver.clone())),
+            (
+                "surrogate_failures",
+                Json::Num(self.surrogate_failures as f64),
+            ),
         ])
-        .to_string()
+        .to_string_strict()
     }
 
     /// Parse one result-log line, rejecting lines from another schema
@@ -173,6 +199,9 @@ impl LayerRecord {
             ratio: num("ratio")?,
             cache_hits: int("cache_hits")?,
             cache_misses: int("cache_misses")?,
+            surrogate_failures: int("surrogate_failures")?,
+            fallback_proposals: int("fallback_proposals")?,
+            rejected_costs: int("rejected_costs")?,
         };
         if rec.best_x.len() != rec.n * rec.k {
             bail!("result line: best_x length != n*k");
@@ -432,6 +461,7 @@ pub fn run_shard(
         workers: workers.max(1),
         restart_workers: manifest.spec.restart_workers,
         batch_size: 1, // per-job cfg carries the spec's batch size
+        ..Default::default()
     });
     let mut new_records = Vec::with_capacity(todo.len());
     let mut write_err: Option<std::io::Error> = None;
@@ -464,7 +494,10 @@ fn append_record(
     rec: &LayerRecord,
     fingerprint: &str,
 ) -> std::io::Result<()> {
-    let mut line = rec.to_json_line(fingerprint);
+    // A non-finite float field would corrupt the checkpoint (the parse
+    // side rejects `null`); surface it as a write error instead.
+    let mut line =
+        rec.to_json_line(fingerprint).map_err(std::io::Error::other)?;
     line.push('\n');
     log.write_all(line.as_bytes())?;
     log.sync_data()
@@ -490,33 +523,48 @@ mod tests {
             ratio: 0.158_203_125,
             cache_hits: 4,
             cache_misses: 9,
+            surrogate_failures: 2,
+            fallback_proposals: 2,
+            rejected_costs: 1,
         }
     }
 
     #[test]
     fn record_roundtrips_bit_exactly() {
         let rec = record();
-        let line = rec.to_json_line("f00d");
+        let line = rec.to_json_line("f00d").unwrap();
         let back = LayerRecord::parse_line(&line, "f00d").unwrap();
         assert_eq!(back, rec);
         assert_eq!(back.best_y.to_bits(), rec.best_y.to_bits());
-        assert_eq!(back.to_json_line("f00d"), line);
+        assert_eq!(back.to_json_line("f00d").unwrap(), line);
         // Negative-zero float fields keep their sign bit through a
         // full serialise→parse→serialise cycle (f64 == treats -0.0
         // and 0.0 as equal, so compare bits explicitly).
         let mut zero = record();
         zero.best_y = -0.0;
         zero.err = -0.0;
-        let line = zero.to_json_line("f00d");
+        let line = zero.to_json_line("f00d").unwrap();
         let back = LayerRecord::parse_line(&line, "f00d").unwrap();
         assert_eq!(back.best_y.to_bits(), (-0.0f64).to_bits());
         assert_eq!(back.err.to_bits(), (-0.0f64).to_bits());
-        assert_eq!(back.to_json_line("f00d"), line);
+        assert_eq!(back.to_json_line("f00d").unwrap(), line);
+    }
+
+    #[test]
+    fn non_finite_record_fields_are_typed_write_errors() {
+        let mut rec = record();
+        rec.best_y = f64::NAN;
+        let err = rec.to_json_line("f00d").unwrap_err();
+        assert_eq!(err.path, "best_y");
+        assert!(err.value.is_nan());
+        let mut rec = record();
+        rec.err = f64::INFINITY;
+        assert_eq!(rec.to_json_line("f00d").unwrap_err().path, "err");
     }
 
     #[test]
     fn parse_rejects_foreign_lines() {
-        let line = record().to_json_line("f00d");
+        let line = record().to_json_line("f00d").unwrap();
         assert!(LayerRecord::parse_line(&line, "beef").is_err());
         assert!(LayerRecord::parse_line("{}", "f00d").is_err());
         assert!(LayerRecord::parse_line("not json", "f00d").is_err());
@@ -574,10 +622,10 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("log.jsonl");
-        let l1 = record().to_json_line("f00d");
+        let l1 = record().to_json_line("f00d").unwrap();
         let mut r2 = record();
         r2.job = 4;
-        let l2 = r2.to_json_line("f00d");
+        let l2 = r2.to_json_line("f00d").unwrap();
         // Two good lines + a torn third line.
         let torn = &l1[..l1.len() - 5];
         std::fs::write(&path, format!("{l1}\n{l2}\n{torn}")).unwrap();

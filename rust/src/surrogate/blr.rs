@@ -36,7 +36,7 @@
 use super::{features, Dataset, Surrogate};
 use crate::linalg::{
     cholesky_jittered_scaled_into, dot, solve_lower_into,
-    solve_lower_t_in_place, JitterLadder, Matrix,
+    solve_lower_t_in_place, JitterLadder, Matrix, NumericError,
 };
 use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
@@ -129,6 +129,11 @@ impl Default for PosteriorScratch {
 }
 
 /// Where the O(P³) Gaussian draw happens (native Cholesky or PJRT artifact).
+///
+/// Both entry points are fallible (ISSUE 9): an exhausted jitter ladder
+/// surfaces as [`NumericError::PosteriorNotSpd`] instead of a panic, so
+/// the BBO loop above can degrade to a random acquisition for that
+/// iteration rather than kill the process.
 pub trait PosteriorBackend: Send {
     /// Draw `mu + L⁻ᵀ z` with `A = G/σ_n² + diag(lam)`, `b = gv/σ_n²`,
     /// `mu = A⁻¹ b`; returns (draw, Σ ln diag L).
@@ -139,7 +144,7 @@ pub trait PosteriorBackend: Send {
         lam: &[f64],
         sigma_n2: f64,
         z: &[f64],
-    ) -> (Vec<f64>, f64);
+    ) -> Result<(Vec<f64>, f64), NumericError>;
 
     /// Scratch-reusing draw: identical output to
     /// [`PosteriorBackend::draw`], written into `scratch` (read it back
@@ -147,7 +152,8 @@ pub trait PosteriorBackend: Send {
     /// default delegates to `draw` and copies — the PJRT backend keeps
     /// its API shape untouched — while [`NativePosterior`] overrides it
     /// with a zero-allocation implementation.  For any one backend the
-    /// two entry points are bit-identical.
+    /// two entry points are bit-identical, errors included (a failed
+    /// draw leaves `scratch` unspecified).
     fn draw_into(
         &self,
         g: &Matrix,
@@ -156,11 +162,11 @@ pub trait PosteriorBackend: Send {
         sigma_n2: f64,
         z: &[f64],
         scratch: &mut PosteriorScratch,
-    ) -> f64 {
-        let (d, half_logdet) = self.draw(g, gv, lam, sigma_n2, z);
+    ) -> Result<f64, NumericError> {
+        let (d, half_logdet) = self.draw(g, gv, lam, sigma_n2, z)?;
         scratch.ensure(g.rows);
         scratch.draw.copy_from_slice(&d);
-        half_logdet
+        Ok(half_logdet)
     }
 
     /// Short identifier for reports ("native" / "xla").
@@ -178,11 +184,11 @@ impl PosteriorBackend for NativePosterior {
         lam: &[f64],
         sigma_n2: f64,
         z: &[f64],
-    ) -> (Vec<f64>, f64) {
+    ) -> Result<(Vec<f64>, f64), NumericError> {
         let mut scratch = PosteriorScratch::new();
         let half_logdet =
-            self.draw_into(g, gv, lam, sigma_n2, z, &mut scratch);
-        (scratch.draw, half_logdet)
+            self.draw_into(g, gv, lam, sigma_n2, z, &mut scratch)?;
+        Ok((scratch.draw, half_logdet))
     }
 
     fn draw_into(
@@ -193,7 +199,7 @@ impl PosteriorBackend for NativePosterior {
         sigma_n2: f64,
         z: &[f64],
         scratch: &mut PosteriorScratch,
-    ) -> f64 {
+    ) -> Result<f64, NumericError> {
         let p = g.rows;
         scratch.ensure(p);
         let inv_s2 = 1.0 / sigma_n2;
@@ -201,7 +207,8 @@ impl PosteriorBackend for NativePosterior {
         // bounded jitter ladder (0, 1e-10, ×100 each retry up to 1e-2)
         // for the (rare) borderline case.  The clean first attempt is
         // bit-identical to a direct `cholesky_scaled_into` call; only
-        // an exhausted ladder aborts the draw.
+        // an exhausted ladder aborts the draw — as a typed
+        // `NumericError::PosteriorNotSpd`, never a panic (ISSUE 9).
         cholesky_jittered_scaled_into(
             g,
             inv_s2,
@@ -209,8 +216,7 @@ impl PosteriorBackend for NativePosterior {
             0.0,
             JitterLadder { base: 1e-10, factor: 100.0, retries: 5 },
             &mut scratch.l,
-        )
-        .expect("posterior matrix not SPD");
+        )?;
         for (b, v) in scratch.b.iter_mut().zip(gv) {
             *b = v * inv_s2;
         }
@@ -223,7 +229,7 @@ impl PosteriorBackend for NativePosterior {
         for (d, u) in scratch.draw.iter_mut().zip(&scratch.u) {
             *d += *u;
         }
-        (0..p).map(|i| scratch.l[(i, i)].ln()).sum()
+        Ok((0..p).map(|i| scratch.l[(i, i)].ln()).sum())
     }
 
     fn backend_name(&self) -> &'static str {
@@ -297,12 +303,17 @@ impl Blr {
 
     /// One posterior draw with the current `self.lam` into the scratch
     /// (fresh normals off `rng`, same stream the allocating path used).
+    ///
+    /// The normals are consumed from `rng` *before* the backend runs, so
+    /// the RNG stream position after a failed draw is the same as after a
+    /// successful one — the degraded-mode determinism contract (ISSUE 9)
+    /// depends on this ordering.
     fn draw_into_scratch(
         &mut self,
         data: &Dataset,
         sigma_n2: f64,
         rng: &mut Rng,
-    ) {
+    ) -> Result<(), NumericError> {
         self.z.resize(data.p, 0.0);
         rng.fill_normals(&mut self.z);
         self.backend.draw_into(
@@ -312,11 +323,19 @@ impl Blr {
             sigma_n2,
             &self.z,
             &mut self.scratch,
-        );
+        )?;
+        Ok(())
     }
 
     /// One Thompson sample of the coefficient vector.
-    pub fn sample_alpha(&mut self, data: &Dataset, rng: &mut Rng) -> Vec<f64> {
+    ///
+    /// Fallible (ISSUE 9): a non-SPD posterior surfaces as
+    /// [`NumericError::PosteriorNotSpd`] and the caller degrades.
+    pub fn sample_alpha(
+        &mut self,
+        data: &Dataset,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>, NumericError> {
         let p = data.p;
         let rows = data.len().max(1) as f64;
         match self.prior.clone() {
@@ -326,7 +345,7 @@ impl Blr {
                 self.lam[0] = BIAS_PRECISION;
                 for _ in 0..self.gibbs_sweeps {
                     let s2 = self.sigma_n2;
-                    self.draw_into_scratch(data, s2, rng);
+                    self.draw_into_scratch(data, s2, rng)?;
                     // Jeffreys conditional: σ_n² ~ IG(rows/2, SSR/2).
                     let ssr =
                         Self::ssr(data, &self.scratch.draw, &mut self.ga);
@@ -334,7 +353,7 @@ impl Blr {
                         rng.inv_gamma(rows / 2.0, (ssr / 2.0).max(SCALE_MIN)),
                     );
                 }
-                self.scratch.draw.clone()
+                Ok(self.scratch.draw.clone())
             }
             Prior::NormalGamma { a, beta } => {
                 // Conjugate: draw σ² from the marginal, then alpha | σ².
@@ -352,7 +371,7 @@ impl Blr {
                     1.0,
                     &self.z,
                     &mut self.scratch,
-                );
+                )?;
                 // β_post = β + (y^T y - μ^T (G + λ0) μ)/2, guarded >= β.
                 data.g.matvec_into(&self.scratch.draw, &mut self.ga);
                 let mu = &self.scratch.draw;
@@ -370,8 +389,8 @@ impl Blr {
                 for l in self.lam.iter_mut() {
                     *l /= sigma2;
                 }
-                self.draw_into_scratch(data, sigma2, rng);
-                self.scratch.draw.clone()
+                self.draw_into_scratch(data, sigma2, rng)?;
+                Ok(self.scratch.draw.clone())
             }
             Prior::Horseshoe => {
                 if self.hs.is_none() {
@@ -395,7 +414,7 @@ impl Blr {
                         }
                         self.lam[0] = BIAS_PRECISION;
                     }
-                    self.draw_into_scratch(data, s2, rng);
+                    self.draw_into_scratch(data, s2, rng)?;
                     let ssr =
                         Self::ssr(data, &self.scratch.draw, &mut self.ga);
                     let alpha = &self.scratch.draw;
@@ -428,16 +447,20 @@ impl Blr {
                             .max(SCALE_MIN),
                     ));
                 }
-                self.scratch.draw.clone()
+                Ok(self.scratch.draw.clone())
             }
         }
     }
 }
 
 impl Surrogate for Blr {
-    fn fit_model(&mut self, data: &Dataset, rng: &mut Rng) -> QuadModel {
-        let alpha = self.sample_alpha(data, rng);
-        features::alpha_to_quad(&alpha, data.n_bits)
+    fn fit_model(
+        &mut self,
+        data: &Dataset,
+        rng: &mut Rng,
+    ) -> Result<QuadModel, NumericError> {
+        let alpha = self.sample_alpha(data, rng)?;
+        Ok(features::alpha_to_quad(&alpha, data.n_bits))
     }
 
     fn name(&self) -> String {
@@ -482,7 +505,7 @@ mod tests {
         let mut avg = vec![0.0; data.p];
         let draws = 20;
         for _ in 0..draws {
-            let a = blr.sample_alpha(&data, &mut rng);
+            let a = blr.sample_alpha(&data, &mut rng).unwrap();
             for (s, v) in avg.iter_mut().zip(&a) {
                 *s += v / draws as f64;
             }
@@ -504,7 +527,7 @@ mod tests {
         ] {
             let mut blr = Blr::new(prior.clone());
             for _ in 0..3 {
-                let a = blr.sample_alpha(&data, &mut rng);
+                let a = blr.sample_alpha(&data, &mut rng).unwrap();
                 assert_eq!(a.len(), data.p);
                 assert!(
                     a.iter().all(|v| v.is_finite()),
@@ -535,7 +558,7 @@ mod tests {
         let mut avg = vec![0.0; p];
         let draws = 10;
         for _ in 0..draws {
-            let a = blr.sample_alpha(&data, &mut rng);
+            let a = blr.sample_alpha(&data, &mut rng).unwrap();
             for (s, v) in avg.iter_mut().zip(&a) {
                 *s += v.abs() / draws as f64;
             }
@@ -573,7 +596,7 @@ mod tests {
             data.push(x, y);
         }
         let mut blr = Blr::new(Prior::Normal { sigma2: 10.0 });
-        let model = blr.fit_model(&data, &mut rng);
+        let model = blr.fit_model(&data, &mut rng).unwrap();
         // The planted minimiser should be at (or within noise of) the
         // surrogate's own minimum.
         let e_best = model.energy(&true_best.0);
@@ -602,7 +625,7 @@ mod tests {
         let mut m2 = vec![0.0; p];
         for _ in 0..nsamp {
             let z = rng.normals(p);
-            let (d, hld) = be.draw(&g, &gv, &lam, 1.0, &z);
+            let (d, hld) = be.draw(&g, &gv, &lam, 1.0, &z).unwrap();
             assert!((hld - (2.0f64).ln() * p as f64 / 2.0).abs() < 1e-9);
             for (s, v) in m2.iter_mut().zip(&d) {
                 *s += v * v / nsamp as f64;
@@ -632,9 +655,10 @@ mod tests {
         for trial in 0..4 {
             let z = rng.normals(p);
             let s2 = 0.3 + 0.2 * trial as f64;
-            let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z);
-            let hld_warm =
-                be.draw_into(&g, &gv, &lam, s2, &z, &mut scratch);
+            let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z).unwrap();
+            let hld_warm = be
+                .draw_into(&g, &gv, &lam, s2, &z, &mut scratch)
+                .unwrap();
             assert_eq!(hld_fresh.to_bits(), hld_warm.to_bits());
             assert_eq!(fresh.len(), scratch.draw().len());
             for (a, b) in fresh.iter().zip(scratch.draw()) {

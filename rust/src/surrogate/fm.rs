@@ -16,7 +16,7 @@
 //! cross-checked in integration tests.
 
 use super::{Dataset, Surrogate};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, NumericError};
 use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
 
@@ -28,6 +28,10 @@ const L2_REG: f64 = 1e-6;
 /// External training engine hook (the PJRT artifact path).
 pub trait FmTrainer: Send {
     /// Run a training epoch bundle on (xs, ys), updating the parameters.
+    ///
+    /// Fallible (ISSUE 9): a trainer that drives the parameters to
+    /// non-finite values reports [`NumericError::SurrogateDiverged`]
+    /// rather than leaving a poisoned model behind.
     fn train_epoch(
         &self,
         xs: &[Vec<i8>],
@@ -36,7 +40,7 @@ pub trait FmTrainer: Send {
         w: &mut [f64],
         v: &mut Matrix,
         lr: f64,
-    );
+    ) -> Result<(), NumericError>;
 
     /// Short identifier for reports ("native" / "xla").
     fn trainer_name(&self) -> &'static str;
@@ -205,10 +209,29 @@ impl FactorizationMachine {
         loss
     }
 
+    /// True when every FM parameter is a finite number.
+    fn params_finite(&self) -> bool {
+        self.w0.is_finite()
+            && self.w.iter().all(|v| v.is_finite())
+            && self.v.data.iter().all(|v| v.is_finite())
+    }
+
     /// Fit on the dataset (warm start from the previous parameters).
-    pub fn train(&mut self, xs: &[Vec<i8>], ys: &[f64]) -> f64 {
+    ///
+    /// Fallible (ISSUE 9): if training drives any parameter to a
+    /// non-finite value — possible with pathological targets or an
+    /// exploding external trainer — this returns
+    /// [`NumericError::SurrogateDiverged`] instead of handing the BBO
+    /// loop a poisoned model.
+    pub fn train(
+        &mut self,
+        xs: &[Vec<i8>],
+        ys: &[f64],
+    ) -> Result<f64, NumericError> {
+        let diverged =
+            || NumericError::SurrogateDiverged { surrogate: "fm" };
         if let Some(trainer) = self.trainer.take() {
-            trainer.train_epoch(
+            let trained = trainer.train_epoch(
                 xs,
                 ys,
                 &mut self.w0,
@@ -217,8 +240,12 @@ impl FactorizationMachine {
                 self.lr,
             );
             self.trainer = Some(trainer);
+            trained?;
+            if !self.params_finite() {
+                return Err(diverged());
+            }
             let rows = xs.len().max(1) as f64;
-            return xs
+            return Ok(xs
                 .iter()
                 .zip(ys)
                 .map(|(x, &y)| {
@@ -226,13 +253,16 @@ impl FactorizationMachine {
                     e * e
                 })
                 .sum::<f64>()
-                / rows;
+                / rows);
         }
         let mut loss = f64::INFINITY;
         for _ in 0..self.steps {
             loss = self.adam_step(xs, ys);
         }
-        loss
+        if !self.params_finite() {
+            return Err(diverged());
+        }
+        Ok(loss)
     }
 
     /// The FM parameters read off as a QUBO (paper: the surrogate is
@@ -255,9 +285,13 @@ impl FactorizationMachine {
 }
 
 impl Surrogate for FactorizationMachine {
-    fn fit_model(&mut self, data: &Dataset, _rng: &mut Rng) -> QuadModel {
-        self.train(&data.xs, &data.ys);
-        self.to_quad()
+    fn fit_model(
+        &mut self,
+        data: &Dataset,
+        _rng: &mut Rng,
+    ) -> Result<QuadModel, NumericError> {
+        self.train(&data.xs, &data.ys)?;
+        Ok(self.to_quad())
     }
 
     fn name(&self) -> String {
@@ -337,7 +371,7 @@ mod tests {
         let mut fm = FactorizationMachine::new(n, 6, &mut rng);
         fm.steps = 1500;
         fm.lr = 0.05;
-        let loss = fm.train(&xs, &ys);
+        let loss = fm.train(&xs, &ys).unwrap();
         let var = {
             let mean: f64 = ys.iter().sum::<f64>() / ys.len() as f64;
             ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>()
@@ -362,10 +396,10 @@ mod tests {
         }
         let mut fm = FactorizationMachine::new(n, 5, &mut rng);
         fm.steps = 50;
-        let l1 = fm.train(&xs, &ys);
+        let l1 = fm.train(&xs, &ys).unwrap();
         let mut l5 = l1;
         for _ in 0..6 {
-            l5 = fm.train(&xs, &ys);
+            l5 = fm.train(&xs, &ys).unwrap();
         }
         assert!(l5 < l1, "warm start should keep improving: {l5} vs {l1}");
     }
@@ -379,8 +413,23 @@ mod tests {
         }
         let mut fm = FactorizationMachine::new(4, 3, &mut rng);
         fm.steps = 20;
-        let model = fm.fit_model(&data, &mut rng);
+        let model = fm.fit_model(&data, &mut rng).unwrap();
         assert_eq!(model.n, 4);
         assert!(fm.name().starts_with("FMQA03"));
+    }
+
+    #[test]
+    fn non_finite_targets_surface_as_diverged() {
+        // NaN targets poison the Adam moments; train() must report a
+        // typed divergence instead of returning a poisoned model.
+        let mut rng = Rng::new(605);
+        let xs: Vec<Vec<i8>> = (0..8).map(|_| rng.spins(4)).collect();
+        let ys = vec![f64::NAN; 8];
+        let mut fm = FactorizationMachine::new(4, 3, &mut rng);
+        fm.steps = 5;
+        assert_eq!(
+            fm.train(&xs, &ys),
+            Err(NumericError::SurrogateDiverged { surrogate: "fm" })
+        );
     }
 }

@@ -19,7 +19,7 @@ pub mod blr;
 pub mod features;
 pub mod fm;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, NumericError};
 use crate::solvers::QuadModel;
 use crate::util::rng::Rng;
 
@@ -203,7 +203,15 @@ pub trait Surrogate: Send {
     /// Fit the surrogate on `data` and return the quadratic model the
     /// Ising solver should minimise (a Thompson draw for BLR, the FM
     /// parameters themselves for FMQA).
-    fn fit_model(&mut self, data: &Dataset, rng: &mut Rng) -> QuadModel;
+    ///
+    /// Fallible (ISSUE 9): a non-SPD posterior or diverged FM surfaces
+    /// as a typed [`NumericError`]; the BBO loop degrades to a random
+    /// acquisition for that iteration instead of aborting the run.
+    fn fit_model(
+        &mut self,
+        data: &Dataset,
+        rng: &mut Rng,
+    ) -> Result<QuadModel, NumericError>;
 
     /// Short identifier for reports (e.g. "nBOCS", "FMQA08").
     fn name(&self) -> String;

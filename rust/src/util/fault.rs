@@ -1,0 +1,254 @@
+//! Deterministic fault injection for the robustness tests (ISSUE 9).
+//!
+//! A [`FaultPlan`] schedules numeric faults by zero-based call index:
+//! Cholesky failures in the posterior draw, NaN oracle costs, and an
+//! injected panic.  [`FaultyOracle`] and [`FaultyPosterior`] wrap the
+//! real implementations and execute the plan with atomic call counters,
+//! so the same plan injects the same faults at the same points on every
+//! run — the fault tests assert *exact* degradation counts, not "some
+//! fault happened".
+//!
+//! These wrappers are test instrumentation, not production code paths:
+//! nothing in the library constructs them outside `#[cfg(test)]` code
+//! and the integration tests.  `FaultyOracle::eval_batch` deliberately
+//! evaluates serially so call indices are assigned in candidate order
+//! regardless of the worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::linalg::{CholeskyError, Matrix, NumericError};
+use crate::minlp::Oracle;
+use crate::surrogate::blr::{PosteriorBackend, PosteriorScratch};
+
+/// A deterministic schedule of numeric faults, by zero-based call index
+/// of the wrapper that executes it.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Posterior-draw call indices that fail with a synthetic
+    /// [`NumericError::PosteriorNotSpd`] (consumed by
+    /// [`FaultyPosterior`]).
+    pub cholesky_fail: Vec<usize>,
+    /// Oracle evaluation indices that return `NaN` instead of the true
+    /// cost (consumed by [`FaultyOracle`]).
+    pub nan_cost: Vec<usize>,
+    /// Oracle evaluation index at which to `panic!` (consumed by
+    /// [`FaultyOracle`]) — exercises the engine's panic containment.
+    pub panic_at: Option<usize>,
+}
+
+impl FaultPlan {
+    /// The all-clear plan: wrappers pass every call through untouched.
+    /// Runs under an empty plan must stay bit-identical to unwrapped
+    /// runs — the fault tests assert exactly that.
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// An [`Oracle`] wrapper that injects the `nan_cost` / `panic_at`
+/// entries of a [`FaultPlan`], counting evaluations in candidate order.
+pub struct FaultyOracle<'a> {
+    inner: &'a dyn Oracle,
+    plan: FaultPlan,
+    calls: AtomicUsize,
+}
+
+impl<'a> FaultyOracle<'a> {
+    /// Wrap `inner` under `plan` with the call counter at zero.
+    pub fn new(inner: &'a dyn Oracle, plan: FaultPlan) -> Self {
+        Self { inner, plan, calls: AtomicUsize::new(0) }
+    }
+
+    /// Evaluations observed so far (including the faulted ones).
+    pub fn evals(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Oracle for FaultyOracle<'_> {
+    fn n_bits(&self) -> usize {
+        self.inner.n_bits()
+    }
+
+    fn eval(&self, x: &[i8]) -> f64 {
+        let idx = self.calls.fetch_add(1, Ordering::SeqCst);
+        if self.plan.panic_at == Some(idx) {
+            panic!("injected oracle panic at evaluation {idx}");
+        }
+        if self.plan.nan_cost.contains(&idx) {
+            return f64::NAN;
+        }
+        self.inner.eval(x)
+    }
+
+    // Serial on purpose: batch evaluation must assign call indices in
+    // candidate order, or the plan would fire nondeterministically
+    // under the thread pool.
+    fn eval_batch(&self, xs: &[Vec<i8>], _workers: usize) -> Vec<f64> {
+        xs.iter().map(|x| self.eval(x)).collect()
+    }
+
+    fn equivalents(&self, x: &[i8]) -> Vec<Vec<i8>> {
+        self.inner.equivalents(x)
+    }
+}
+
+/// Shared draw counters of a [`FaultyPosterior`], cloneable before the
+/// backend is moved into a `Backends` factory so the test can read them
+/// after the run.
+#[derive(Clone, Debug, Default)]
+pub struct DrawCounters {
+    /// Posterior draws attempted (faulted ones included).
+    pub calls: Arc<AtomicUsize>,
+    /// Draws that failed with the injected Cholesky error.
+    pub injected: Arc<AtomicUsize>,
+}
+
+impl DrawCounters {
+    /// Draws attempted so far.
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Injected failures so far.
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::SeqCst)
+    }
+}
+
+/// A [`PosteriorBackend`] wrapper that fails the draws named by
+/// `FaultPlan::cholesky_fail` with a synthetic non-SPD error, passing
+/// every other draw through to the wrapped backend.
+pub struct FaultyPosterior<B: PosteriorBackend> {
+    inner: B,
+    cholesky_fail: Vec<usize>,
+    counters: DrawCounters,
+}
+
+impl<B: PosteriorBackend> FaultyPosterior<B> {
+    /// Wrap `inner`, failing the zero-based draw indices in
+    /// `cholesky_fail`; `counters` should be cloned from
+    /// [`DrawCounters::default`] kept by the test.
+    pub fn new(
+        inner: B,
+        cholesky_fail: Vec<usize>,
+        counters: DrawCounters,
+    ) -> Self {
+        Self { inner, cholesky_fail, counters }
+    }
+
+    fn inject(&self) -> Option<NumericError> {
+        let idx = self.counters.calls.fetch_add(1, Ordering::SeqCst);
+        if self.cholesky_fail.contains(&idx) {
+            self.counters.injected.fetch_add(1, Ordering::SeqCst);
+            // The same shape a real exhausted jitter ladder reports.
+            Some(NumericError::PosteriorNotSpd(CholeskyError {
+                attempts: 6,
+                max_jitter: 1e-2,
+            }))
+        } else {
+            None
+        }
+    }
+}
+
+impl<B: PosteriorBackend> PosteriorBackend for FaultyPosterior<B> {
+    fn draw(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+    ) -> Result<(Vec<f64>, f64), NumericError> {
+        if let Some(e) = self.inject() {
+            return Err(e);
+        }
+        self.inner.draw(g, gv, lam, sigma_n2, z)
+    }
+
+    fn draw_into(
+        &self,
+        g: &Matrix,
+        gv: &[f64],
+        lam: &[f64],
+        sigma_n2: f64,
+        z: &[f64],
+        scratch: &mut PosteriorScratch,
+    ) -> Result<f64, NumericError> {
+        if let Some(e) = self.inject() {
+            return Err(e);
+        }
+        self.inner.draw_into(g, gv, lam, sigma_n2, z, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::blr::NativePosterior;
+
+    struct Quad;
+    impl Oracle for Quad {
+        fn n_bits(&self) -> usize {
+            4
+        }
+        fn eval(&self, x: &[i8]) -> f64 {
+            x.iter().map(|&s| s as f64).sum::<f64>().powi(2)
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let o = FaultyOracle::new(&Quad, FaultPlan::none());
+        let x = vec![1i8, -1, 1, 1];
+        assert_eq!(o.eval(&x), Quad.eval(&x));
+        assert_eq!(o.evals(), 1);
+    }
+
+    #[test]
+    fn nan_plan_fires_at_exact_indices() {
+        let plan = FaultPlan { nan_cost: vec![1, 3], ..Default::default() };
+        let o = FaultyOracle::new(&Quad, plan);
+        let xs: Vec<Vec<i8>> = (0..5).map(|_| vec![1i8; 4]).collect();
+        let ys = o.eval_batch(&xs, 8);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(y.is_nan(), i == 1 || i == 3, "index {i}");
+        }
+        assert_eq!(o.evals(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected oracle panic at evaluation 2")]
+    fn panic_plan_fires() {
+        let plan = FaultPlan { panic_at: Some(2), ..Default::default() };
+        let o = FaultyOracle::new(&Quad, plan);
+        for _ in 0..3 {
+            let _ = o.eval(&[1, 1, 1, 1]);
+        }
+    }
+
+    #[test]
+    fn faulty_posterior_fails_named_draws_only() {
+        let counters = DrawCounters::default();
+        let be = FaultyPosterior::new(
+            NativePosterior,
+            vec![1],
+            counters.clone(),
+        );
+        let g = {
+            let mut g = Matrix::zeros(2, 2);
+            g[(0, 0)] = 4.0;
+            g[(1, 1)] = 4.0;
+            g
+        };
+        let (gv, lam, z) = (vec![1.0, 1.0], vec![0.5, 0.5], vec![0.0, 0.0]);
+        assert!(be.draw(&g, &gv, &lam, 1.0, &z).is_ok());
+        let err = be.draw(&g, &gv, &lam, 1.0, &z).unwrap_err();
+        assert!(matches!(err, NumericError::PosteriorNotSpd(_)));
+        assert!(be.draw(&g, &gv, &lam, 1.0, &z).is_ok());
+        assert_eq!(counters.calls(), 3);
+        assert_eq!(counters.injected(), 1);
+    }
+}

@@ -19,6 +19,34 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Typed serialisation error of [`Json::to_string_strict`]: the value
+/// tree holds a NaN/±Inf number, which JSON cannot represent and a
+/// schema boundary must not round-trip into `null`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NonFiniteJson {
+    /// Dotted object path to the offending number ("" at the root;
+    /// array indices are not tracked).
+    pub path: String,
+    /// The non-finite value itself.
+    pub value: f64,
+}
+
+impl std::fmt::Display for NonFiniteJson {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.path.is_empty() {
+            write!(f, "non-finite number ({}) in JSON output", self.value)
+        } else {
+            write!(
+                f,
+                "non-finite number ({}) at '{}' in JSON output",
+                self.value, self.path
+            )
+        }
+    }
+}
+
+impl std::error::Error for NonFiniteJson {}
+
 /// JSON value tree (object keys ordered for deterministic output).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -113,10 +141,55 @@ impl Json {
     }
 
     /// Serialise to compact JSON text.
+    ///
+    /// **Lossy for non-finite numbers**: JSON has no NaN/Inf, so a
+    /// non-finite [`Json::Num`] is emitted as `null` — acceptable for
+    /// display-only output, but a silent data loss at a schema boundary
+    /// (a cost round-tripping into `null` would corrupt a checkpoint).
+    /// Durable/schema writes use [`Json::to_string_strict`] instead.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// [`Json::to_string`] that *fails* on non-finite numbers instead
+    /// of silently emitting `null` (ISSUE 9).  This is the entry point
+    /// for every schema boundary — shard result/checkpoint lines, bench
+    /// rows, serve stats — where a NaN/Inf reaching the serialiser is a
+    /// bug upstream that must surface as a typed error, not a corrupted
+    /// record.
+    pub fn to_string_strict(&self) -> Result<String, NonFiniteJson> {
+        self.check_finite(&mut Vec::new())?;
+        Ok(self.to_string())
+    }
+
+    fn check_finite<'a>(
+        &'a self,
+        path: &mut Vec<&'a str>,
+    ) -> Result<(), NonFiniteJson> {
+        match self {
+            Json::Num(x) if !x.is_finite() => Err(NonFiniteJson {
+                path: path.join("."),
+                value: *x,
+            }),
+            Json::Arr(v) => {
+                for x in v {
+                    x.check_finite(path)?;
+                }
+                Ok(())
+            }
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    path.push(k);
+                    let out = v.check_finite(path);
+                    path.pop();
+                    out?;
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -510,5 +583,53 @@ mod tests {
         assert_eq!(Json::Bool(true).as_bool(), Some(true));
         assert_eq!(Json::Bool(false).as_bool(), Some(false));
         assert_eq!(Json::Num(1.0).as_bool(), None);
+    }
+
+    #[test]
+    fn strict_write_matches_lossy_write_on_finite_trees() {
+        let j = Json::obj(vec![
+            ("a", Json::Num(1.5)),
+            ("b", Json::Arr(vec![Json::Num(-0.0), Json::Str("x".into())])),
+            ("c", Json::Null),
+        ]);
+        assert_eq!(j.to_string_strict().unwrap(), j.to_string());
+    }
+
+    #[test]
+    fn strict_write_rejects_nested_nan_with_dotted_path() {
+        let j = Json::obj(vec![(
+            "a",
+            Json::obj(vec![("b", Json::Num(f64::NAN))]),
+        )]);
+        let err = j.to_string_strict().unwrap_err();
+        assert_eq!(err.path, "a.b");
+        assert!(err.value.is_nan());
+        assert!(err.to_string().contains("a.b"));
+    }
+
+    #[test]
+    fn strict_write_rejects_infinity_inside_arrays() {
+        let j = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![Json::Num(1.0), Json::Num(f64::INFINITY)]),
+        )]);
+        let err = j.to_string_strict().unwrap_err();
+        assert_eq!(err.path, "rows");
+        assert_eq!(err.value, f64::INFINITY);
+    }
+
+    #[test]
+    fn strict_write_rejects_root_non_finite() {
+        let err = Json::Num(f64::NEG_INFINITY).to_string_strict().unwrap_err();
+        assert_eq!(err.path, "");
+        assert_eq!(err.value, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn lossy_write_still_emits_null_for_non_finite() {
+        // to_string() keeps the display-only lossy contract; strict is
+        // the schema-boundary writer.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
     }
 }

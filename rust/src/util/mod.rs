@@ -4,6 +4,7 @@
 //! these are purpose-built rather than pulled from crates.io (DESIGN.md §6).
 
 pub mod cancel;
+pub mod fault;
 pub mod json;
 pub mod lockfile;
 pub mod prop;

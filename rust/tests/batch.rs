@@ -84,7 +84,7 @@ fn solve_batch_candidates_are_distinct_on_a_fitted_surrogate() {
         data.push(x, y);
     }
     let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
-    let model = blr.fit_model(&data, &mut rng);
+    let model = blr.fit_model(&data, &mut rng).unwrap();
     let top = solvers::solve_batch(
         &sa(30),
         &model,
@@ -158,6 +158,7 @@ fn engine_batch_size_override_applies_to_all_jobs() {
         workers: 2,
         restart_workers: 1,
         batch_size: 3,
+        ..Default::default()
     })
     .compress_all(jobs(1));
     for (a, b) in via_jobs.iter().zip(&via_engine) {

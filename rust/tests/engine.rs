@@ -104,6 +104,7 @@ fn engine_restart_fanout_is_deterministic_too() {
             workers: 2,
             restart_workers: rw,
             batch_size: 1,
+            ..Default::default()
         })
         .compress_all((0..2).map(job).collect())
     };

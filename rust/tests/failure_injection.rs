@@ -128,7 +128,7 @@ fn blr_handles_constant_targets() {
     ] {
         let mut blr = Blr::new(prior.clone());
         for _ in 0..3 {
-            let a = blr.sample_alpha(&data, &mut rng);
+            let a = blr.sample_alpha(&data, &mut rng).unwrap();
             assert!(
                 a.iter().all(|v| v.is_finite()),
                 "{prior:?} non-finite"
@@ -146,7 +146,7 @@ fn blr_underdetermined_tiny_dataset() {
         data.push(rng.spins(6), rng.normal());
     }
     let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
-    let model = blr.fit_model(&data, &mut rng);
+    let model = blr.fit_model(&data, &mut rng).unwrap();
     assert!(model.energy(&vec![1i8; 6]).is_finite());
 }
 
@@ -160,7 +160,7 @@ fn blr_duplicate_rows_only() {
         data.push(x.clone(), 2.0);
     }
     let mut blr = Blr::new(Prior::Horseshoe);
-    let a = blr.sample_alpha(&data, &mut rng);
+    let a = blr.sample_alpha(&data, &mut rng).unwrap();
     assert!(a.iter().all(|v| v.is_finite()));
 }
 
@@ -317,6 +317,9 @@ fn log_record(job: usize) -> LayerRecord {
         ratio: 0.16,
         cache_hits: 2,
         cache_misses: 5,
+        surrogate_failures: 0,
+        fallback_proposals: 0,
+        rejected_costs: 0,
     }
 }
 
@@ -328,8 +331,8 @@ fn recover_log_drops_a_tail_torn_mid_utf8() {
     // error out on the invalid UTF-8.
     let dir = tmpdir("utf8log");
     let path = dir.join("log.jsonl");
-    let l1 = log_record(0).to_json_line("feed");
-    let l2 = log_record(1).to_json_line("feed");
+    let l1 = log_record(0).to_json_line("feed").unwrap();
+    let l2 = log_record(1).to_json_line("feed").unwrap();
     // Cut the second line one byte into the 'é' (0xC3 0xA9), leaving a
     // dangling lead byte.
     let b2 = l2.as_bytes();
@@ -400,7 +403,7 @@ fn checkpoint_log_recovers_a_valid_prefix_at_every_truncation_offset() {
     let records: Vec<LayerRecord> = (0..3).map(log_record).collect();
     let mut full = Vec::new();
     for r in &records {
-        full.extend_from_slice(r.to_json_line(fp).as_bytes());
+        full.extend_from_slice(r.to_json_line(fp).unwrap().as_bytes());
         full.push(b'\n');
     }
     let dir = tmpdir("ckpt_prop");
@@ -418,8 +421,8 @@ fn checkpoint_log_recovers_a_valid_prefix_at_every_truncation_offset() {
         assert!(n <= records.len(), "offset {cut}");
         for (got, want) in rec.records.iter().zip(&records) {
             assert_eq!(
-                got.to_json_line(fp),
-                want.to_json_line(fp),
+                got.to_json_line(fp).unwrap(),
+                want.to_json_line(fp).unwrap(),
                 "offset {cut}: recovered record differs"
             );
         }

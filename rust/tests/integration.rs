@@ -85,7 +85,7 @@ fn all_solvers_agree_with_exhaustive_on_surrogate_models() {
         data.push(x, y);
     }
     let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
-    let model = blr.fit_model(&data, &mut rng);
+    let model = blr.fit_model(&data, &mut rng).unwrap();
 
     let exact = solvers::exhaustive::Exhaustive.solve(&model, &mut rng);
     let e_exact = model.energy(&exact);

@@ -225,8 +225,9 @@ fn posterior_scratch_draws_match_fresh_allocation_bit_for_bit() {
             rng.normals(p).iter().map(|v| v.abs() + 0.05).collect();
         let z = rng.normals(p);
         let s2 = 0.2 + 0.3 * trial as f64;
-        let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z);
-        let hld_warm = be.draw_into(&g, &gv, &lam, s2, &z, &mut scratch);
+        let (fresh, hld_fresh) = be.draw(&g, &gv, &lam, s2, &z).unwrap();
+        let hld_warm =
+            be.draw_into(&g, &gv, &lam, s2, &z, &mut scratch).unwrap();
         assert_eq!(hld_fresh.to_bits(), hld_warm.to_bits(), "trial {trial}");
         for (x, y) in fresh.iter().zip(scratch.draw()) {
             assert_eq!(x.to_bits(), y.to_bits(), "trial {trial}");

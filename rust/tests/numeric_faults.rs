@@ -1,0 +1,393 @@
+//! Deterministic numeric-fault injection (ISSUE 9): every degraded
+//! path must complete with a finite, valid decomposition — or fail with
+//! a typed error — while the degradation counters match the injected
+//! fault schedule *exactly*, fault-free wrapped runs stay bit-identical
+//! to plain runs, and a live daemon keeps serving through panicking and
+//! all-NaN requests.
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig, RunError};
+use intdecomp::engine::{
+    CompressionJob, Engine, EngineConfig, JobError,
+};
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::linalg::NumericError;
+use intdecomp::serve::{
+    self, bare_request, compress_request, Endpoint, ServeConfig, Server,
+};
+use intdecomp::shard::ModelSpec;
+use intdecomp::solvers::sa::SimulatedAnnealing;
+use intdecomp::surrogate::blr::{NativePosterior, PosteriorBackend};
+use intdecomp::util::cancel::CancelToken;
+use intdecomp::util::fault::{
+    DrawCounters, FaultPlan, FaultyOracle, FaultyPosterior,
+};
+use intdecomp::util::json::Json;
+
+/// Serialises the tests that set the process-global chaos env hooks.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Job seed the chaos hooks key on — distinctive, and small enough to
+/// round-trip exactly through the JSON number path (f64 < 2^53).
+const CHAOS_SEED: u64 = 195_948_557; // 0x0BAD_F00D
+
+fn problem(layer: usize) -> intdecomp::cost::Problem {
+    let icfg = InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed: 7 };
+    generate(&icfg, layer)
+}
+
+fn sa(sweeps: usize) -> SimulatedAnnealing {
+    SimulatedAnnealing { sweeps, ..Default::default() }
+}
+
+fn faulty_backends(
+    cholesky_fail: Vec<usize>,
+    counters: &DrawCounters,
+) -> Backends {
+    let c = counters.clone();
+    Backends {
+        posterior: Some(Box::new(move || {
+            Box::new(FaultyPosterior::new(
+                NativePosterior,
+                cholesky_fail.clone(),
+                c.clone(),
+            )) as Box<dyn PosteriorBackend>
+        })),
+        fm_trainer: None,
+    }
+}
+
+fn assert_valid_decomposition(run: &bbo::BboRun, n_bits: usize) {
+    assert!(run.best_y.is_finite(), "best_y = {}", run.best_y);
+    assert_eq!(run.best_x.len(), n_bits);
+    assert!(run.best_x.iter().all(|&s| s == 1 || s == -1));
+}
+
+// ------------------------------------------------ degraded acquisition --
+
+#[test]
+fn cholesky_fault_falls_back_and_counts_exactly() {
+    let p = problem(0);
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 6);
+    let counters = DrawCounters::default();
+    // Fail the very first posterior draw: exactly one fit degrades.
+    let backends = faulty_backends(vec![0], &counters);
+    let run = bbo::run(
+        &p,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa(10),
+        &cfg,
+        &backends,
+        5,
+    );
+    assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+    assert_valid_decomposition(&run, p.n_bits());
+    assert_eq!(counters.injected(), 1);
+    assert_eq!(run.degradation.surrogate_failures, 1);
+    assert_eq!(run.degradation.fallback_proposals, 1);
+    assert_eq!(run.degradation.rejected_costs, 0);
+    assert!(run.degradation.any());
+}
+
+#[test]
+fn batched_cholesky_fault_falls_back_for_the_whole_batch() {
+    let p = problem(1);
+    let mut cfg = BboConfig::smoke_scale(p.n_bits(), 6);
+    cfg.batch_size = 3;
+    let counters = DrawCounters::default();
+    let backends = faulty_backends(vec![0], &counters);
+    let run = bbo::run(
+        &p,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa(10),
+        &cfg,
+        &backends,
+        5,
+    );
+    assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+    assert_valid_decomposition(&run, p.n_bits());
+    assert_eq!(counters.injected(), 1);
+    assert_eq!(run.degradation.surrogate_failures, 1);
+    // A failed batched fit replaces every candidate of that batch.
+    assert_eq!(run.degradation.fallback_proposals, 3);
+    assert_eq!(run.degradation.rejected_costs, 0);
+}
+
+#[test]
+fn nan_costs_are_quarantined_with_exact_counters() {
+    let p = problem(0);
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 6);
+    // One fault inside the initial design, one inside acquisition.
+    let plan = FaultPlan { nan_cost: vec![2, 9], ..Default::default() };
+    let oracle = FaultyOracle::new(&p, plan);
+    let run = bbo::run(
+        &oracle,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa(10),
+        &cfg,
+        &Backends::default(),
+        5,
+    );
+    // The budget is still spent (the trace keeps the NaN rows) but the
+    // quarantined costs never reach the surrogate or the best.
+    assert_eq!(run.ys.len(), cfg.n_init + cfg.iters);
+    assert_eq!(run.ys.iter().filter(|y| y.is_nan()).count(), 2);
+    assert_eq!(run.degradation.rejected_costs, 2);
+    assert_eq!(run.degradation.surrogate_failures, 0);
+    assert_valid_decomposition(&run, p.n_bits());
+    let finite_min = run
+        .ys
+        .iter()
+        .copied()
+        .filter(|y| y.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(run.best_y, finite_min);
+}
+
+#[test]
+fn all_nan_costs_fail_with_the_typed_error() {
+    let p = problem(0);
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 4);
+    let total = cfg.n_init + cfg.iters;
+    let plan =
+        FaultPlan { nan_cost: (0..total).collect(), ..Default::default() };
+    let oracle = FaultyOracle::new(&p, plan);
+    let out = bbo::run_cancellable(
+        &oracle,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa(10),
+        &cfg,
+        &Backends::default(),
+        5,
+        &CancelToken::never(),
+    );
+    match out.unwrap_err() {
+        RunError::Numeric(NumericError::NonFiniteCost { rejected }) => {
+            assert_eq!(rejected, total);
+        }
+        other => panic!("expected NonFiniteCost, got {other:?}"),
+    }
+    assert_eq!(oracle.evals(), total, "the budget is spent either way");
+}
+
+// ----------------------------------------------------- bit-identity --
+
+#[test]
+fn fault_free_wrappers_are_bit_identical_to_plain_runs() {
+    let p = problem(0);
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 8);
+    let algo = Algorithm::Nbocs { sigma2: 0.1 };
+    let plain =
+        bbo::run(&p, &algo, &sa(10), &cfg, &Backends::default(), 13);
+
+    let counters = DrawCounters::default();
+    let backends = faulty_backends(Vec::new(), &counters);
+    let oracle = FaultyOracle::new(&p, FaultPlan::none());
+    let wrapped = bbo::run(&oracle, &algo, &sa(10), &cfg, &backends, 13);
+
+    assert_eq!(plain.xs, wrapped.xs);
+    assert_eq!(plain.ys, wrapped.ys);
+    assert_eq!(plain.best_x, wrapped.best_x);
+    assert_eq!(plain.best_y.to_bits(), wrapped.best_y.to_bits());
+    assert!(!wrapped.degradation.any());
+    assert_eq!(counters.injected(), 0);
+    assert!(counters.calls() > 0, "the wrapper must have been exercised");
+}
+
+// ----------------------------------------------- property (≥200 cases) --
+
+#[test]
+fn property_injected_nan_faults_never_yield_non_finite_best() {
+    // 200+ (seed, fault-schedule) cases: as long as at least one cost
+    // survives quarantine, the run completes with a finite best and the
+    // rejected counter equals the number of faults that fired.
+    let algo = Algorithm::Nbocs { sigma2: 0.1 };
+    let mut cases = 0usize;
+    for seed in 0..50u64 {
+        let p = problem((seed % 4) as usize);
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 4);
+        let total = cfg.n_init + cfg.iters;
+        for pat in 0..4usize {
+            // A deterministic, pattern-varied schedule that never
+            // covers every evaluation (stride 3 leaves survivors).
+            let nan: Vec<usize> = (0..total)
+                .filter(|i| (i + pat + seed as usize) % 3 == 0)
+                .collect();
+            let fired = nan.len();
+            assert!(fired < total, "schedule must leave a survivor");
+            let plan =
+                FaultPlan { nan_cost: nan, ..Default::default() };
+            let oracle = FaultyOracle::new(&p, plan);
+            let run = bbo::run_cancellable(
+                &oracle,
+                &algo,
+                &sa(5),
+                &cfg,
+                &Backends::default(),
+                seed,
+                &CancelToken::never(),
+            )
+            .expect("a surviving finite cost must complete the run");
+            assert_valid_decomposition(&run, p.n_bits());
+            assert_eq!(
+                run.degradation.rejected_costs,
+                fired as u64,
+                "seed {seed} pat {pat}"
+            );
+            cases += 1;
+        }
+    }
+    assert!(cases >= 200, "only {cases} fault cases exercised");
+}
+
+// ------------------------------------------------- panic containment --
+
+#[test]
+fn engine_contains_injected_panics_and_default_propagates() {
+    let _guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var(
+        "INTDECOMP_CHAOS_PANIC_SEED",
+        CHAOS_SEED.to_string(),
+    );
+
+    // Containment on: the panic becomes a typed per-job error.
+    let eng = Engine::new(EngineConfig {
+        workers: 2,
+        contain_panics: true,
+        ..Default::default()
+    });
+    let job = CompressionJob::new("chaos", problem(0), 4, CHAOS_SEED)
+        .with_solver(Box::new(sa(5)));
+    let out = eng.try_compress_each(vec![job], |_, _| {});
+    match out.unwrap_err() {
+        JobError::Panicked { message } => {
+            assert!(message.contains("chaos"), "{message}");
+        }
+        other => panic!("expected Panicked, got {other:?}"),
+    }
+
+    // Default policy: the panic unwinds through the caller.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || {
+            let job =
+                CompressionJob::new("chaos", problem(0), 4, CHAOS_SEED)
+                    .with_solver(Box::new(sa(5)));
+            Engine::with_workers(1).try_compress_each(vec![job], |_, _| {})
+        },
+    ));
+    assert!(caught.is_err(), "default engine must propagate the panic");
+
+    std::env::remove_var("INTDECOMP_CHAOS_PANIC_SEED");
+}
+
+// --------------------------------------------------- daemon survival --
+
+fn chaos_spec(instance_seed: u64, seed: u64) -> ModelSpec {
+    ModelSpec {
+        n: 4,
+        d: 8,
+        k: 2,
+        gamma: 0.8,
+        instance_seed,
+        layers: 1,
+        iters: 4,
+        restarts: 2,
+        batch_size: 1,
+        augment: false,
+        restart_workers: 1,
+        algo: "nbocs".into(),
+        solver: "sa".into(),
+        seed,
+        cache_key_raw: false,
+    }
+}
+
+fn num(s: &Json, key: &str) -> u64 {
+    s.get(key)
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("stats missing {key}: {}", s.to_string()))
+}
+
+#[test]
+fn daemon_survives_chaos_panic_and_all_nan_requests() {
+    let _guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let server = Arc::new(
+        Server::bind(ServeConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+            max_inflight: 2,
+            workers: 2,
+            ..Default::default()
+        })
+        .expect("bind on a free port"),
+    );
+    let endpoint = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let handle = thread::spawn(move || srv.run());
+
+    let expect_500 = |lines: &[String], needle: &str| {
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(
+            last.get("type").and_then(Json::as_str),
+            Some("error"),
+            "{lines:?}"
+        );
+        assert_eq!(last.get("code").and_then(Json::as_u64), Some(500));
+        let msg = last.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains(needle), "error {msg:?} lacks {needle:?}");
+    };
+
+    // A request whose job panics: contained into a typed 500.
+    std::env::set_var(
+        "INTDECOMP_CHAOS_PANIC_SEED",
+        CHAOS_SEED.to_string(),
+    );
+    let lines = serve::request(
+        &endpoint,
+        &compress_request(&chaos_spec(9, CHAOS_SEED)),
+    )
+    .unwrap();
+    expect_500(&lines, "panicked");
+    std::env::remove_var("INTDECOMP_CHAOS_PANIC_SEED");
+
+    // A request whose every cost is NaN: typed numeric 500.
+    std::env::set_var("INTDECOMP_CHAOS_NAN_SEED", CHAOS_SEED.to_string());
+    let lines = serve::request(
+        &endpoint,
+        &compress_request(&chaos_spec(10, CHAOS_SEED)),
+    )
+    .unwrap();
+    expect_500(&lines, "non-finite");
+    std::env::remove_var("INTDECOMP_CHAOS_NAN_SEED");
+
+    // The daemon is still alive and still serves real work.
+    let pong = serve::request(&endpoint, &bare_request("ping")).unwrap();
+    let p = Json::parse(&pong[0]).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    let ok = serve::request(
+        &endpoint,
+        &compress_request(&chaos_spec(11, 21)),
+    )
+    .unwrap();
+    let done = Json::parse(ok.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+
+    // The fault classes are counted separately in stats.
+    let stats = serve::request(&endpoint, &bare_request("stats")).unwrap();
+    let s = Json::parse(stats.last().unwrap()).unwrap();
+    assert_eq!(num(&s, "panicked"), 1);
+    assert_eq!(num(&s, "degraded"), 1);
+    assert_eq!(num(&s, "errors"), 2);
+    assert_eq!(num(&s, "completed"), 1);
+    assert!(
+        s.get("degradation").is_some(),
+        "stats must carry the degradation block: {}",
+        s.to_string()
+    );
+
+    let bye = serve::request(&endpoint, &bare_request("shutdown")).unwrap();
+    let last = Json::parse(bye.last().unwrap()).unwrap();
+    assert_eq!(last.get("type").and_then(Json::as_str), Some("bye"));
+    handle.join().unwrap().unwrap();
+}

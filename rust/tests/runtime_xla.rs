@@ -106,8 +106,9 @@ fn posterior_artifact_matches_native_backend() {
     // Deterministic comparison at z = 0 (posterior mean).
     let z = vec![0.0; rt.meta.p];
     let xp = XlaPosterior { rt: rt.clone() };
-    let (a_xla, _) = xp.draw(&data.g, &data.gv, &lam, 0.7, &z);
-    let (a_nat, _) = NativePosterior.draw(&data.g, &data.gv, &lam, 0.7, &z);
+    let (a_xla, _) = xp.draw(&data.g, &data.gv, &lam, 0.7, &z).unwrap();
+    let (a_nat, _) =
+        NativePosterior.draw(&data.g, &data.gv, &lam, 0.7, &z).unwrap();
     let max_err = a_xla
         .iter()
         .zip(&a_nat)
@@ -155,7 +156,9 @@ fn fm_artifact_trains_comparably_to_native() {
     let mut w0 = fm_xla.w0;
     let mut w = fm_xla.w.clone();
     let mut v = fm_xla.v.clone();
-    trainer.train_epoch(&xs, &ys, &mut w0, &mut w, &mut v, 0.05);
+    trainer
+        .train_epoch(&xs, &ys, &mut w0, &mut w, &mut v, 0.05)
+        .unwrap();
     fm_xla.w0 = w0;
     fm_xla.w = w;
     fm_xla.v = v;

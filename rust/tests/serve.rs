@@ -70,6 +70,7 @@ fn served_compression_is_byte_identical_and_warms_the_shared_cache() {
         workers: 2,
         restart_workers: spec.restart_workers,
         batch_size: 1,
+        ..Default::default()
     });
     let results = eng.compress_all(jobs);
     let records: Vec<LayerRecord> = results
@@ -85,7 +86,7 @@ fn served_compression_is_byte_identical_and_warms_the_shared_cache() {
     // each record byte-identical to the shard result-log format.
     assert_eq!(lines.len(), spec.layers + 1);
     for (line, rec) in lines.iter().zip(&records) {
-        assert_eq!(line, &rec.to_json_line(&fp));
+        assert_eq!(line, &rec.to_json_line(&fp).unwrap());
         assert_eq!(
             LayerRecord::parse_line(line, &fp).unwrap().name,
             rec.name
