@@ -38,6 +38,8 @@ use crate::surrogate::{
 use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::{rng::Rng, timer::Timer};
 
+pub use crate::surrogate::state::{StateError, SurrogateState, WarmStart};
+
 /// Paper algorithm selector.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Algorithm {
@@ -87,6 +89,23 @@ impl Algorithm {
                 Some(Algorithm::Rfmqa { k_fm: 12, eps: 0.1 })
             }
             _ => None,
+        }
+    }
+
+    /// The surrogate-state kind this algorithm's surrogate exports and
+    /// accepts (`None` for surrogate-free random search) — the
+    /// compatibility key checked before attaching a persisted
+    /// [`SurrogateState`] to a job (serve warm store, CLI
+    /// `--warm-from`).
+    pub fn state_kind(&self) -> Option<String> {
+        match self {
+            Algorithm::Rs => None,
+            Algorithm::Vbocs => Some("vBOCS".into()),
+            Algorithm::Nbocs { .. } => Some("nBOCS".into()),
+            Algorithm::Gbocs { .. } => Some("gBOCS".into()),
+            Algorithm::Fmqa { k_fm } | Algorithm::Rfmqa { k_fm, .. } => {
+                Some(format!("fm-k{k_fm}"))
+            }
         }
     }
 }
@@ -155,6 +174,37 @@ impl BboConfig {
             batch_size: 1,
         }
     }
+
+    /// Override the solver restart count.
+    ///
+    /// Together with the other `with_*` setters this is the ONE shared
+    /// builder path for loop configuration (ISSUE 10): `ExpConfig`,
+    /// `ModelSpec`, `CompressionJob` and the engine's per-job overrides
+    /// all chain these on a [`BboConfig::paper_scale`] /
+    /// [`BboConfig::smoke_scale`] base instead of re-spelling the
+    /// struct literal at each layer.
+    pub fn with_restarts(mut self, restarts: usize) -> Self {
+        self.restarts = restarts;
+        self
+    }
+
+    /// Enable/disable symmetry-orbit data augmentation (nBOCSa).
+    pub fn with_augment(mut self, augment: bool) -> Self {
+        self.augment = augment;
+        self
+    }
+
+    /// Override the restart fan-out worker count (clamped to ≥ 1).
+    pub fn with_restart_workers(mut self, workers: usize) -> Self {
+        self.restart_workers = workers.max(1);
+        self
+    }
+
+    /// Override the acquisition batch size (clamped to ≥ 1).
+    pub fn with_batch_size(mut self, batch: usize) -> Self {
+        self.batch_size = batch.max(1);
+        self
+    }
 }
 
 /// Counters for every degraded-mode event of one BBO run (ISSUE 9).
@@ -189,7 +239,8 @@ impl Degradation {
     }
 }
 
-/// Why a [`run_cancellable`] call did not produce a [`BboRun`].
+/// Why a [`run_cancellable`] / [`run_warm`] call did not produce a
+/// [`BboRun`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum RunError {
     /// The cancel token tripped (caller cancelled or deadline expired).
@@ -198,6 +249,11 @@ pub enum RunError {
     /// [`NumericError::NonFiniteCost`]: every oracle evaluation was
     /// quarantined, so there is no finite best to report.
     Numeric(NumericError),
+    /// The supplied warm-start state is incompatible with this run
+    /// (wrong problem size, wrong surrogate kind, malformed payload).
+    /// Warm-start errors are never silently degraded to a cold start —
+    /// the caller decides.
+    Warm(StateError),
 }
 
 impl std::fmt::Display for RunError {
@@ -205,6 +261,7 @@ impl std::fmt::Display for RunError {
         match self {
             RunError::Cancelled(cause) => write!(f, "{cause}"),
             RunError::Numeric(e) => write!(f, "{e}"),
+            RunError::Warm(e) => write!(f, "warm start rejected: {e}"),
         }
     }
 }
@@ -214,6 +271,7 @@ impl std::error::Error for RunError {
         match self {
             RunError::Cancelled(_) => None,
             RunError::Numeric(e) => Some(e),
+            RunError::Warm(e) => Some(e),
         }
     }
 }
@@ -227,6 +285,12 @@ impl From<CancelCause> for RunError {
 impl From<NumericError> for RunError {
     fn from(e: NumericError) -> Self {
         RunError::Numeric(e)
+    }
+}
+
+impl From<StateError> for RunError {
+    fn from(e: StateError) -> Self {
+        RunError::Warm(e)
     }
 }
 
@@ -419,6 +483,10 @@ pub fn run(
         // produces finite costs, so this is unreachable for real
         // problems; fault-injection callers use run_cancellable.
         Err(RunError::Numeric(e)) => panic!("BBO run failed: {e}"),
+        // `run` never supplies a warm start.
+        Err(RunError::Warm(e)) => {
+            unreachable!("cold run reported a warm-start error: {e}")
+        }
     }
 }
 
@@ -477,6 +545,60 @@ pub fn run_cancellable(
     seed: u64,
     cancel: &CancelToken,
 ) -> Result<BboRun, RunError> {
+    run_warm(oracle, algo, solver, cfg, backends, seed, cancel, None, false)
+        .map(|w| w.run)
+}
+
+/// Output of [`run_warm`]: the run itself plus the warm-start metadata.
+#[derive(Clone, Debug)]
+pub struct WarmRun {
+    /// The optimisation run.
+    pub run: BboRun,
+    /// End-of-run exported state (when requested): the final dataset
+    /// with its sufficient statistics plus the fitted surrogate's
+    /// parameters, ready to seed a later run.
+    pub state: Option<SurrogateState>,
+    /// True when a warm start was applied (the run skipped the random
+    /// initial design).
+    pub warm: bool,
+}
+
+/// [`run_cancellable`] with warm-start input and state export
+/// (ISSUE 10).
+///
+/// With `warm = None` this *is* [`run_cancellable`]: the cold branch
+/// executes the exact legacy code, so cold runs stay bit-identical to
+/// pre-warm-start builds (pinned by the seed-pinned regression tests).
+///
+/// With `warm = Some(w)` the random initial design is skipped: the
+/// dataset is seeded from `w.state.dataset`, the surrogate imports
+/// `w.state.surrogate`, and the donor run's best point (if present) is
+/// re-evaluated once on the *current* oracle to anchor the trace — the
+/// stale donor costs stay in the dataset as surrogate training data but
+/// never enter this run's trace or best curve, so a drifted instance
+/// reports only costs measured against itself.  Evaluation budget:
+/// `(1 if prev_best) + cfg.iters` instead of `cfg.n_init + cfg.iters`.
+///
+/// An incompatible state (wrong `n_bits`, wrong surrogate kind,
+/// malformed payload) fails typed with [`RunError::Warm`] — never a
+/// silent cold start.
+///
+/// RNG discipline: the surrogate is built *before* the warm import with
+/// the same stream the cold path uses (the FM draws its init normals
+/// either way), so warm and cold runs consume the seed stream at
+/// identical positions up to the acquisition loop.
+#[allow(clippy::too_many_arguments)]
+pub fn run_warm(
+    oracle: &dyn Oracle,
+    algo: &Algorithm,
+    solver: &dyn IsingSolver,
+    cfg: &BboConfig,
+    backends: &Backends,
+    seed: u64,
+    cancel: &CancelToken,
+    warm: Option<&WarmStart>,
+    export_state: bool,
+) -> Result<WarmRun, RunError> {
     let total_timer = Timer::start();
     let mut rng = Rng::new(seed);
     let n = oracle.n_bits();
@@ -487,24 +609,66 @@ pub fn run_cancellable(
     let mut pairs: Vec<(Vec<i8>, f64)> = Vec::new();
     let mut degradation = Degradation::default();
 
-    // Initial design.  Non-finite costs are quarantined: noted in the
-    // trace (the evaluation budget was spent) but never pushed into the
-    // dataset's Gram moments.
-    for _ in 0..cfg.n_init {
-        if let Some(cause) = cancel.cause() {
-            return Err(cause.into());
+    if let Some(w) = warm {
+        // Warm start: validate, seed, re-anchor.  No random init design.
+        if w.state.n_bits != n {
+            return Err(RunError::Warm(StateError::BitsMismatch {
+                expected: n,
+                found: w.state.n_bits,
+            }));
         }
-        let x = rng.spins(n);
-        let t = Timer::start();
-        let y = oracle.eval(&x);
-        t_eval += t.seconds();
-        if y.is_finite() {
-            expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
-        } else {
-            degradation.rejected_costs += 1;
+        data = w.state.dataset.clone();
+        if let (Some(sur), Some(params)) =
+            (surrogate.as_mut(), w.state.surrogate.as_ref())
+        {
+            // RS carries no surrogate: a state payload is simply unused
+            // there (the dataset and prev_best still seed the run).
+            sur.import_state(params).map_err(RunError::Warm)?;
         }
-        data.push_batch(pairs.drain(..));
-        trace.note(x, y);
+        if let Some((x, _stale_y)) = &w.prev_best {
+            if x.len() != n {
+                return Err(RunError::Warm(StateError::Malformed {
+                    field: "prev_best.x",
+                    detail: format!(
+                        "expected {n} spins, found {}",
+                        x.len()
+                    ),
+                }));
+            }
+            if let Some(cause) = cancel.cause() {
+                return Err(cause.into());
+            }
+            let t = Timer::start();
+            let y = oracle.eval(x);
+            t_eval += t.seconds();
+            if y.is_finite() {
+                expand_pairs(oracle, cfg.augment, x, y, &mut pairs);
+            } else {
+                degradation.rejected_costs += 1;
+            }
+            data.push_batch(pairs.drain(..));
+            trace.note(x.clone(), y);
+        }
+    } else {
+        // Initial design.  Non-finite costs are quarantined: noted in
+        // the trace (the evaluation budget was spent) but never pushed
+        // into the dataset's Gram moments.
+        for _ in 0..cfg.n_init {
+            if let Some(cause) = cancel.cause() {
+                return Err(cause.into());
+            }
+            let x = rng.spins(n);
+            let t = Timer::start();
+            let y = oracle.eval(&x);
+            t_eval += t.seconds();
+            if y.is_finite() {
+                expand_pairs(oracle, cfg.augment, &x, y, &mut pairs);
+            } else {
+                degradation.rejected_costs += 1;
+            }
+            data.push_batch(pairs.drain(..));
+            trace.note(x, y);
+        }
     }
 
     // ε-greedy exploration rate (rFMQA only).
@@ -671,19 +835,35 @@ pub fn run_cancellable(
         }));
     }
 
-    Ok(BboRun {
-        algo: algo.label() + if cfg.augment { "a" } else { "" },
-        solver: solver.name().into(),
-        xs: trace.xs,
-        ys: trace.ys,
-        best_curve: trace.best_curve,
-        best_x: trace.best_x,
-        best_y: trace.best_y,
-        time_total: total_timer.seconds(),
-        time_surrogate: t_sur,
-        time_solver: t_sol,
-        time_eval: t_eval,
-        degradation,
+    // Export the end-of-run state when asked (the dataset clone is the
+    // only cost; cold callers pass `false` and pay nothing).
+    let state = if export_state {
+        Some(SurrogateState {
+            n_bits: n,
+            dataset: data.clone(),
+            surrogate: surrogate.as_ref().map(|s| s.export_state()),
+        })
+    } else {
+        None
+    };
+
+    Ok(WarmRun {
+        run: BboRun {
+            algo: algo.label() + if cfg.augment { "a" } else { "" },
+            solver: solver.name().into(),
+            xs: trace.xs,
+            ys: trace.ys,
+            best_curve: trace.best_curve,
+            best_x: trace.best_x,
+            best_y: trace.best_y,
+            time_total: total_timer.seconds(),
+            time_surrogate: t_sur,
+            time_solver: t_sol,
+            time_eval: t_eval,
+            degradation,
+        },
+        state,
+        warm: warm.is_some(),
     })
 }
 
@@ -1015,5 +1195,268 @@ mod tests {
                     &Backends::default(), 9);
         assert_eq!(a.ys, b.ys);
         assert_eq!(a.best_x, b.best_x);
+    }
+
+    // ---- warm start (ISSUE 10) -------------------------------------
+
+    /// The base problem with a tiny gaussian drift on W (same shape,
+    /// argmin preserved at this scale — the re-deployed fine-tuned
+    /// model scenario).
+    fn drifted_problem(
+        base: &crate::cost::Problem,
+        scale: f64,
+        seed: u64,
+    ) -> crate::cost::Problem {
+        let mut w = base.w.clone();
+        let mut rng = Rng::new(seed);
+        for v in w.data.iter_mut() {
+            *v += scale * rng.normal();
+        }
+        crate::cost::Problem::new(w, 2) // tiny_problem uses k = 2
+    }
+
+    /// A long cold run on `p` that exports its state — the donor every
+    /// warm test seeds from.  seed 5 / 2·8·8 iters / 30 sweeps is the
+    /// exact-hit configuration pinned by
+    /// `bbo_finds_exact_solution_on_tiny_problem`.
+    fn donor_run(p: &crate::cost::Problem) -> WarmRun {
+        let sa = SimulatedAnnealing { sweeps: 30, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 2 * 8 * 8);
+        run_warm(
+            p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            5,
+            &CancelToken::never(),
+            None,
+            true,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn run_warm_without_warm_start_is_the_cold_path_bit_for_bit() {
+        // warm = None must execute the exact legacy code: same RNG
+        // stream, same trace — the cold bit-identity contract.
+        let p = tiny_problem();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 12);
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        let cold = run(&p, &algo, &sa, &cfg, &Backends::default(), 4);
+        let via_warm = run_warm(
+            &p,
+            &algo,
+            &sa,
+            &cfg,
+            &Backends::default(),
+            4,
+            &CancelToken::never(),
+            None,
+            false,
+        )
+        .unwrap();
+        assert!(!via_warm.warm);
+        assert!(via_warm.state.is_none());
+        assert_eq!(cold.xs, via_warm.run.xs);
+        for (a, b) in cold.ys.iter().zip(&via_warm.run.ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(cold.best_x, via_warm.run.best_x);
+        assert_eq!(cold.best_y.to_bits(), via_warm.run.best_y.to_bits());
+    }
+
+    #[test]
+    fn warm_start_on_unperturbed_instance_reproduces_cold_best() {
+        let p = tiny_problem();
+        let donor = donor_run(&p);
+        let warm_input =
+            WarmStart::new(donor.state.clone().unwrap()).with_prev_best(
+                donor.run.best_x.clone(),
+                donor.run.best_y,
+            );
+        let sa = SimulatedAnnealing { sweeps: 30, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 4);
+        let warm = run_warm(
+            &p,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            6,
+            &CancelToken::never(),
+            Some(&warm_input),
+            false,
+        )
+        .unwrap();
+        assert!(warm.warm);
+        // The first trace entry is the donor best re-evaluated on the
+        // same oracle: bit-identical cost, so the cold best cost is
+        // reproduced immediately and never lost.
+        assert_eq!(warm.run.ys[0].to_bits(), donor.run.best_y.to_bits());
+        assert!(warm.run.best_y <= donor.run.best_y);
+        // Budget: one anchor evaluation + iters, no random init design.
+        assert_eq!(warm.run.ys.len(), 1 + cfg.iters);
+    }
+
+    #[test]
+    fn warm_start_reaches_cold_best_in_half_the_evals_under_drift() {
+        // The acceptance scenario: re-compress a slightly drifted
+        // instance.  The warm run gets ≤ half the cold run's evaluation
+        // budget and must still match (or beat) the cold best cost.
+        let p = tiny_problem();
+        let donor = donor_run(&p);
+        let drifted = drifted_problem(&p, 1e-9, 909);
+        let sa = SimulatedAnnealing { sweeps: 30, ..Default::default() };
+        // Cold reference on the drifted instance: full budget.
+        let cold_cfg = BboConfig::smoke_scale(drifted.n_bits(), 8);
+        let cold = run(
+            &drifted,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cold_cfg,
+            &Backends::default(),
+            6,
+        );
+        // Warm run: half the evaluations (1 anchor + 7 acquisitions =
+        // 8, vs the cold 8 init + 8 acquisitions = 16).
+        let warm_input =
+            WarmStart::new(donor.state.clone().unwrap()).with_prev_best(
+                donor.run.best_x.clone(),
+                donor.run.best_y,
+            );
+        let warm_cfg = BboConfig::smoke_scale(drifted.n_bits(), 7);
+        let warm = run_warm(
+            &drifted,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &warm_cfg,
+            &Backends::default(),
+            6,
+            &CancelToken::never(),
+            Some(&warm_input),
+            false,
+        )
+        .unwrap();
+        assert!(warm.run.ys.len() * 2 <= cold.ys.len());
+        assert!(
+            warm.run.best_y <= cold.best_y + 1e-12,
+            "warm best {} did not reach cold best {}",
+            warm.run.best_y,
+            cold.best_y
+        );
+    }
+
+    #[test]
+    fn warm_start_survives_a_serialisation_roundtrip() {
+        // Seeding from a parsed text document gives the bit-identical
+        // run to seeding from the in-memory state.
+        let p = tiny_problem();
+        let donor = donor_run(&p);
+        let warm_input =
+            WarmStart::new(donor.state.clone().unwrap()).with_prev_best(
+                donor.run.best_x.clone(),
+                donor.run.best_y,
+            );
+        let text = warm_input.to_string_strict().unwrap();
+        let reparsed = WarmStart::parse(&text).unwrap();
+        let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 5);
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        let from_memory = run_warm(
+            &p, &algo, &sa, &cfg, &Backends::default(), 3,
+            &CancelToken::never(), Some(&warm_input), false,
+        )
+        .unwrap();
+        let from_text = run_warm(
+            &p, &algo, &sa, &cfg, &Backends::default(), 3,
+            &CancelToken::never(), Some(&reparsed), false,
+        )
+        .unwrap();
+        for (a, b) in from_memory.run.ys.iter().zip(&from_text.run.ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(from_memory.run.best_x, from_text.run.best_x);
+    }
+
+    #[test]
+    fn warm_start_kind_mismatch_is_a_typed_error() {
+        let p = tiny_problem();
+        let donor = donor_run(&p); // nBOCS state
+        let warm_input = WarmStart::new(donor.state.clone().unwrap());
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(p.n_bits(), 3);
+        let out = run_warm(
+            &p,
+            &Algorithm::Fmqa { k_fm: 8 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            3,
+            &CancelToken::never(),
+            Some(&warm_input),
+            false,
+        );
+        assert!(matches!(
+            out,
+            Err(RunError::Warm(StateError::KindMismatch { .. }))
+        ));
+    }
+
+    #[test]
+    fn warm_start_bits_mismatch_is_a_typed_error() {
+        let p = tiny_problem(); // n_bits = 8
+        let donor = donor_run(&p);
+        let warm_input = WarmStart::new(donor.state.clone().unwrap());
+        let other = generate(
+            &InstanceConfig { n: 3, d: 6, k: 2, gamma: 0.8, seed: 1 },
+            0,
+        ); // n_bits = 6
+        let sa = SimulatedAnnealing { sweeps: 5, ..Default::default() };
+        let cfg = BboConfig::smoke_scale(other.n_bits(), 3);
+        let out = run_warm(
+            &other,
+            &Algorithm::Nbocs { sigma2: 0.1 },
+            &sa,
+            &cfg,
+            &Backends::default(),
+            3,
+            &CancelToken::never(),
+            Some(&warm_input),
+            false,
+        );
+        assert!(matches!(
+            out,
+            Err(RunError::Warm(StateError::BitsMismatch {
+                expected: 6,
+                found: 8
+            }))
+        ));
+    }
+
+    #[test]
+    fn algorithm_state_kinds_match_surrogate_exports() {
+        // The serve warm store's compatibility pre-check relies on
+        // Algorithm::state_kind agreeing with what each surrogate
+        // actually exports.
+        let mut rng = Rng::new(99);
+        for (algo, n) in [
+            (Algorithm::Vbocs, 4usize),
+            (Algorithm::Nbocs { sigma2: 0.1 }, 4),
+            (Algorithm::Gbocs { beta: 0.001 }, 4),
+            (Algorithm::Fmqa { k_fm: 8 }, 4),
+            (Algorithm::Rfmqa { k_fm: 12, eps: 0.1 }, 4),
+        ] {
+            let sur =
+                build_surrogate(&algo, n, &Backends::default(), &mut rng)
+                    .unwrap();
+            assert_eq!(
+                Some(sur.export_state().kind),
+                algo.state_kind(),
+                "{algo:?}"
+            );
+        }
+        assert_eq!(Algorithm::Rs.state_kind(), None);
     }
 }

@@ -2,6 +2,7 @@
 //! from CLI flags with the paper's defaults (`--full`) or a smoke scale
 //! that finishes in minutes on one core.
 
+use crate::bbo::BboConfig;
 use crate::cli::Args;
 use crate::instance::InstanceConfig;
 
@@ -96,6 +97,17 @@ impl ExpConfig {
             batch_size: args.usize_flag("batch-size", 1)?.max(1),
             cache_key_raw,
         })
+    }
+
+    /// The experiment's loop configuration for a problem of `n_bits`
+    /// bits — the shared [`BboConfig`] builder path (ISSUE 10) every
+    /// consumer (`run`, `decompose`, the experiment harness and its
+    /// ablations) chains from instead of re-spelling the struct
+    /// literal.
+    pub fn bbo_config(&self, n_bits: usize) -> BboConfig {
+        BboConfig::smoke_scale(n_bits, self.iters)
+            .with_restarts(self.restarts)
+            .with_batch_size(self.batch_size)
     }
 }
 

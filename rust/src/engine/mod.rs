@@ -53,7 +53,10 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use crate::bbo::{self, Algorithm, Backends, BboConfig, BboRun, RunError};
+use crate::bbo::{
+    self, Algorithm, Backends, BboConfig, BboRun, RunError, StateError,
+    SurrogateState, WarmStart,
+};
 use crate::cost::{compression_ratio, BinMatrix, Problem};
 use crate::linalg::NumericError;
 use crate::report;
@@ -128,6 +131,10 @@ pub enum JobError {
         /// The panic payload (downcast to a string when possible).
         message: String,
     },
+    /// The job's [`CompressionJob::warm_start`] donor state was
+    /// rejected (schema, shape or surrogate-kind mismatch).  The job
+    /// never started — callers decide whether to retry cold.
+    Warm(StateError),
 }
 
 impl std::fmt::Display for JobError {
@@ -138,6 +145,7 @@ impl std::fmt::Display for JobError {
             JobError::Panicked { message } => {
                 write!(f, "job panicked: {message}")
             }
+            JobError::Warm(e) => write!(f, "warm start rejected: {e}"),
         }
     }
 }
@@ -146,6 +154,7 @@ impl std::error::Error for JobError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             JobError::Numeric(e) => Some(e),
+            JobError::Warm(e) => Some(e),
             _ => None,
         }
     }
@@ -156,6 +165,7 @@ impl From<RunError> for JobError {
         match e {
             RunError::Cancelled(cause) => JobError::Cancelled(cause),
             RunError::Numeric(e) => JobError::Numeric(e),
+            RunError::Warm(e) => JobError::Warm(e),
         }
     }
 }
@@ -205,6 +215,16 @@ pub struct CompressionJob {
     /// cancellation as a bug and panic).  A job that *completes* under
     /// a token is bit-identical to one run without it.
     pub cancel: CancelToken,
+    /// Optional warm-start input: a prior run's exported surrogate
+    /// state (and best point) seeding this job instead of the random
+    /// init design — see [`crate::bbo::run_warm`].  `None` (the
+    /// default) is the cold path, bit-identical to pre-warm-start
+    /// builds.
+    pub warm_start: Option<WarmStart>,
+    /// When set, the job's [`JobResult::state`] carries the exported
+    /// [`SurrogateState`] for future warm starts (default: `false`, no
+    /// export cost).
+    pub export_state: bool,
 }
 
 impl CompressionJob {
@@ -227,6 +247,8 @@ impl CompressionJob {
             cache_mode: CacheKeyMode::Canonical,
             shared_cache: None,
             cancel: CancelToken::never(),
+            warm_start: None,
+            export_state: false,
         }
     }
 
@@ -239,6 +261,15 @@ impl CompressionJob {
     /// Replace the Ising solver (builder style).
     pub fn with_solver(mut self, solver: Box<dyn IsingSolver>) -> Self {
         self.solver = solver;
+        self
+    }
+
+    /// Replace the whole loop configuration (builder style) — the hook
+    /// [`crate::shard::ModelSpec::job`] uses to install a
+    /// [`BboConfig`] assembled through the shared `with_*` builder
+    /// chain.
+    pub fn with_bbo_config(mut self, cfg: BboConfig) -> Self {
+        self.cfg = cfg;
         self
     }
 
@@ -269,6 +300,20 @@ impl CompressionJob {
         self.cancel = cancel;
         self
     }
+
+    /// Seed the job from a prior run's exported state (builder style)
+    /// — see [`CompressionJob::warm_start`].
+    pub fn with_warm_start(mut self, warm: WarmStart) -> Self {
+        self.warm_start = Some(warm);
+        self
+    }
+
+    /// Request the final surrogate state on [`JobResult::state`]
+    /// (builder style) — see [`CompressionJob::export_state`].
+    pub fn with_state_export(mut self) -> Self {
+        self.export_state = true;
+        self
+    }
 }
 
 /// Output of one job: the full BBO trace plus compression metrics and
@@ -292,6 +337,13 @@ pub struct JobResult {
     pub ratio: f64,
     /// `||f(M)|| / ||W||` of the winner.
     pub normalised_error: f64,
+    /// The final surrogate state, present iff the job asked for it via
+    /// [`CompressionJob::export_state`] — the donor document for a
+    /// future warm start.
+    pub state: Option<SurrogateState>,
+    /// Whether this job was warm-started ([`CompressionJob::warm_start`]
+    /// was present and accepted).
+    pub warm: bool,
 }
 
 /// The compression engine: a configuration plus `compress_all`.
@@ -563,15 +615,15 @@ fn run_job(
     };
     let mut cfg = job.cfg.clone();
     if restart_workers > 1 {
-        cfg.restart_workers = restart_workers;
+        cfg = cfg.with_restart_workers(restart_workers);
     }
     if batch_size > 1 {
-        cfg.batch_size = batch_size;
+        cfg = cfg.with_batch_size(batch_size);
     }
     let nan_chaos =
         chaos_seed_matches("INTDECOMP_CHAOS_NAN_SEED", job.seed);
-    let run = if nan_chaos {
-        bbo::run_cancellable(
+    let warm_run = if nan_chaos {
+        bbo::run_warm(
             &NanOracle(&oracle),
             &job.algo,
             job.solver.as_ref(),
@@ -579,9 +631,11 @@ fn run_job(
             &Backends::default(),
             job.seed,
             &job.cancel,
+            job.warm_start.as_ref(),
+            job.export_state,
         )
     } else {
-        bbo::run_cancellable(
+        bbo::run_warm(
             &oracle,
             &job.algo,
             job.solver.as_ref(),
@@ -589,9 +643,13 @@ fn run_job(
             &Backends::default(),
             job.seed,
             &job.cancel,
+            job.warm_start.as_ref(),
+            job.export_state,
         )
     }
     .map_err(JobError::from)?;
+    let (run, state, warm) =
+        (warm_run.run, warm_run.state, warm_run.warm);
     let best_m =
         BinMatrix::from_spins(job.problem.n(), job.problem.k, &run.best_x);
     let normalised_error = job.problem.normalised_error(run.best_y);
@@ -610,6 +668,8 @@ fn run_job(
         ),
         normalised_error,
         run,
+        state,
+        warm,
     })
 }
 
@@ -1005,6 +1065,54 @@ mod tests {
             assert_eq!(a.run.best_x, b.run.best_x);
             assert_eq!(a.cache, b.cache);
         }
+    }
+
+    #[test]
+    fn warm_jobs_round_trip_through_the_engine() {
+        // Donor job exports its state; a second job on the same layer
+        // warm-starts from it with a quarter of the budget and still
+        // holds the donor's best cost.
+        let donor = Engine::with_workers(1)
+            .compress_all(vec![tiny_job(0, 8).with_state_export()]);
+        assert!(!donor[0].warm);
+        let state = donor[0].state.clone().expect("state was requested");
+        let warm = WarmStart::new(state).with_prev_best(
+            donor[0].run.best_x.clone(),
+            donor[0].run.best_y,
+        );
+        let out = Engine::with_workers(1)
+            .compress_all(vec![tiny_job(0, 4).with_warm_start(warm)]);
+        assert!(out[0].warm);
+        assert!(out[0].state.is_none(), "export was not requested");
+        // One anchor evaluation + 4 acquisitions — no init design.
+        assert_eq!(out[0].run.ys.len(), 1 + 4);
+        assert!(out[0].run.best_y <= donor[0].run.best_y);
+    }
+
+    #[test]
+    fn cold_jobs_report_no_warm_flag_and_no_state() {
+        let r = Engine::with_workers(1).compress_all(vec![tiny_job(0, 5)]);
+        assert!(!r[0].warm);
+        assert!(r[0].state.is_none());
+    }
+
+    #[test]
+    fn warm_kind_mismatch_is_a_typed_job_error() {
+        // nBOCS donor state offered to an FMQA job: rejected before the
+        // job starts, surfaced as JobError::Warm.
+        let donor = Engine::with_workers(1)
+            .compress_all(vec![tiny_job(0, 6).with_state_export()]);
+        let warm = WarmStart::new(donor[0].state.clone().unwrap());
+        let out = Engine::with_workers(1).try_compress_each(
+            vec![tiny_job(0, 4)
+                .with_algo(Algorithm::Fmqa { k_fm: 8 })
+                .with_warm_start(warm)],
+            |_, _| panic!("mismatched warm job must not produce results"),
+        );
+        assert!(matches!(
+            out.unwrap_err(),
+            JobError::Warm(StateError::KindMismatch { .. })
+        ));
     }
 
     #[test]

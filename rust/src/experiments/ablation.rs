@@ -8,7 +8,7 @@
 //!   (ref. 24) — implemented as ε-greedy acquisition.
 
 use super::{count_exact_hits, Ctx, RunSpec};
-use crate::bbo::{self, Algorithm, Backends, BboConfig};
+use crate::bbo::{self, Algorithm, Backends};
 use crate::report::{ascii_table, fmt, write_csv};
 use crate::solvers::sa::SimulatedAnnealing;
 use crate::util::mean;
@@ -21,14 +21,13 @@ fn run_with(
     runs: usize,
 ) -> (f64, usize) {
     let p = &ctx.problems[0];
-    let cfg = BboConfig {
-        n_init: p.n_bits(),
-        iters: ctx.cfg.iters,
-        restarts,
-        augment: false,
-        restart_workers: 1,
-        batch_size: 1,
-    };
+    // The shared builder path, with the sweep's restart override and
+    // the ablation protocol's fixed serial acquisition.
+    let cfg = ctx
+        .cfg
+        .bbo_config(p.n_bits())
+        .with_restarts(restarts)
+        .with_batch_size(1);
     let results: Vec<_> = (0..runs)
         .map(|r| {
             bbo::run(p, algo, sa, &cfg, &Backends::default(),

@@ -164,14 +164,7 @@ impl Ctx {
     }
 
     fn bbo_config(&self) -> BboConfig {
-        BboConfig {
-            n_init: self.problems[0].n_bits(),
-            iters: self.cfg.iters,
-            restarts: self.cfg.restarts,
-            augment: false,
-            restart_workers: 1,
-            batch_size: self.cfg.batch_size,
-        }
+        self.cfg.bbo_config(self.problems[0].n_bits())
     }
 
     /// Run `runs` independent BBO runs of `spec` on instance `inst`.

@@ -29,12 +29,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use intdecomp::bbo::{self, Algorithm, Backends, BboConfig};
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig, WarmStart};
 use intdecomp::bruteforce::brute_force;
 use intdecomp::cli::Args;
 use intdecomp::config::ExpConfig;
 use intdecomp::cost::BinMatrix;
-use intdecomp::engine::{self, Engine, EngineConfig};
+use intdecomp::engine::{self, Engine};
 use intdecomp::experiments::{self as exp, Ctx};
 use intdecomp::greedy::greedy;
 use intdecomp::instance::generate;
@@ -159,6 +159,14 @@ FLAGS (defaults in parens):
   --report FILE     compress-model / shard merge: write the
                     deterministic per-layer report (no wall-clock
                     fields) — the byte-identity artifact CI diffs
+  --save-state FILE compress-model: write each layer's final surrogate
+                    state (one JSON document per line) for later
+                    warm-started runs
+  --warm-from FILE  compress-model: seed layer i's BBO from line i of
+                    a --save-state file instead of the random init
+                    design (rejected with a typed error on schema or
+                    shape mismatch; omit for the bit-identical cold
+                    path)
   --shards S        shard plan: number of shards (2)
   --dir D           shard plan/merge: plan directory (shards)
   --manifest FILE   shard work: the shard manifest to run
@@ -194,7 +202,10 @@ FLAGS (defaults in parens):
                     shard advisory lock (one daemon per directory);
                     with journaling on, requests and per-layer
                     progress are durable and a SIGKILL'd daemon
-                    resumes on restart
+                    resumes on restart; per-instance surrogate states
+                    are persisted under DIR/warm and warm-start later
+                    requests on the same instance (the 'done' line
+                    reports warm:true and its warm_source)
   --journal on|off  serve: write-ahead journaling of compress
                     requests under --state (on); off disables
                     durability but keeps the state lock
@@ -214,6 +225,34 @@ FLAGS (defaults in parens):
                     attempt plus a deterministic seeded jitter (100;
                     --retry-seed S reseeds the jitter stream)
 ";
+
+/// Parse the loop-shaping flags shared by every BBO-running command
+/// (`run`, `decompose`, `compress-model`, `shard`, `serve-request`) —
+/// the one flag→config path (ISSUE 10), so a flag means the same thing
+/// under every subcommand.
+fn bbo_flag_overrides(args: &Args) -> Result<(bool, usize)> {
+    let augment = args.bool_flag("augment");
+    let restart_workers = args
+        .usize_flag("restart-workers", 1)
+        .map_err(|e| anyhow!(e))?;
+    Ok((augment, restart_workers))
+}
+
+/// Assemble a run's [`BboConfig`] from parsed flags: the shared
+/// builder chain over [`ExpConfig::bbo_config`] used by `run` and
+/// `decompose` (the model-spec commands reach the same chain through
+/// [`shard::ModelSpec::job`]).
+fn bbo_config_from_args(
+    args: &Args,
+    cfg: &ExpConfig,
+    n_bits: usize,
+) -> Result<BboConfig> {
+    let (augment, restart_workers) = bbo_flag_overrides(args)?;
+    Ok(cfg
+        .bbo_config(n_bits)
+        .with_augment(augment)
+        .with_restart_workers(restart_workers))
+}
 
 fn load_instance(args: &Args) -> Result<(ExpConfig, intdecomp::cost::Problem)> {
     let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
@@ -253,16 +292,7 @@ fn cmd_decompose(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown --algo"))?;
     let solver = solvers::by_name(&args.str_flag("solver", "sa"))
         .ok_or_else(|| anyhow!("unknown --solver"))?;
-    let bcfg = BboConfig {
-        n_init: p.n_bits(),
-        iters: cfg.iters,
-        restarts: cfg.restarts,
-        augment: args.bool_flag("augment"),
-        restart_workers: args
-            .usize_flag("restart-workers", 1)
-            .map_err(|e| anyhow!(e))?,
-        batch_size: cfg.batch_size,
-    };
+    let bcfg = bbo_config_from_args(args, &cfg, p.n_bits())?;
     let run = bbo::run(
         &p,
         &algo,
@@ -298,16 +328,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown --algo"))?;
     let solver = solvers::by_name(&args.str_flag("solver", "sa"))
         .ok_or_else(|| anyhow!("unknown --solver"))?;
-    let bcfg = BboConfig {
-        n_init: p.n_bits(),
-        iters: cfg.iters,
-        restarts: cfg.restarts,
-        augment: args.bool_flag("augment"),
-        restart_workers: args
-            .usize_flag("restart-workers", 1)
-            .map_err(|e| anyhow!(e))?,
-        batch_size: cfg.batch_size,
-    };
+    let bcfg = bbo_config_from_args(args, &cfg, p.n_bits())?;
     let run = bbo::run(
         &p,
         &algo,
@@ -339,9 +360,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn model_spec_from_args(args: &Args) -> Result<(shard::ModelSpec, ExpConfig)> {
     let cfg = ExpConfig::from_args(args).map_err(|e| anyhow!(e))?;
     let layers = args.usize_flag("layers", 4).map_err(|e| anyhow!(e))?;
-    let restart_workers = args
-        .usize_flag("restart-workers", 1)
-        .map_err(|e| anyhow!(e))?;
+    let (augment, restart_workers) = bbo_flag_overrides(args)?;
     let spec = shard::ModelSpec {
         n: cfg.instance.n,
         d: cfg.instance.d,
@@ -352,7 +371,7 @@ fn model_spec_from_args(args: &Args) -> Result<(shard::ModelSpec, ExpConfig)> {
         iters: cfg.iters,
         restarts: cfg.restarts,
         batch_size: cfg.batch_size,
-        augment: args.bool_flag("augment"),
+        augment,
         restart_workers,
         algo: args.str_flag("algo", "nbocs"),
         solver: args.str_flag("solver", "sa"),
@@ -367,9 +386,33 @@ fn model_spec_from_args(args: &Args) -> Result<(shard::ModelSpec, ExpConfig)> {
 /// parallel batched engine, and print the aggregated per-layer report.
 fn cmd_compress_model(args: &Args) -> Result<()> {
     let (spec, cfg) = model_spec_from_args(args)?;
+    let save_state = args.flags.get("save-state");
     let mut jobs = Vec::with_capacity(spec.layers);
     for i in 0..spec.layers {
-        jobs.push(spec.job(i)?);
+        let mut job = spec.job(i)?;
+        job.export_state = save_state.is_some();
+        jobs.push(job);
+    }
+    // --warm-from FILE: one WarmStart JSON document per line, layer i
+    // seeded from line i — the file a prior run's --save-state wrote.
+    if let Some(path) = args.flags.get("warm-from") {
+        let text = std::fs::read_to_string(path)?;
+        let warms: Vec<WarmStart> = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(WarmStart::parse)
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| anyhow!("--warm-from {path}: {e}"))?;
+        if warms.len() != jobs.len() {
+            bail!(
+                "--warm-from {path}: {} state lines for {} layers",
+                warms.len(),
+                jobs.len()
+            );
+        }
+        for (job, warm) in jobs.iter_mut().zip(warms) {
+            job.warm_start = Some(warm);
+        }
     }
 
     println!(
@@ -384,14 +427,32 @@ fn cmd_compress_model(args: &Args) -> Result<()> {
         spec.batch_size
     );
     let t = intdecomp::util::timer::Timer::start();
-    let eng = Engine::new(EngineConfig {
-        workers: cfg.workers,
-        restart_workers: spec.restart_workers,
-        batch_size: 1, // per-job cfg carries the batch size
-        ..Default::default()
-    });
+    // The shared spec→engine path (ISSUE 10) — identical to the shard
+    // worker's and the serve daemon's construction.
+    let eng = Engine::new(spec.engine_config(cfg.workers, false));
     let results = eng.compress_all(jobs);
     let wall = t.seconds();
+
+    let warm_layers = results.iter().filter(|r| r.warm).count();
+    if warm_layers > 0 {
+        println!("warm-started {warm_layers}/{} layers", results.len());
+    }
+    if let Some(path) = save_state {
+        let mut out = String::new();
+        for r in &results {
+            let state = r.state.clone().ok_or_else(|| {
+                anyhow!("layer '{}' exported no state", r.name)
+            })?;
+            let warm = WarmStart::new(state)
+                .with_prev_best(r.run.best_x.clone(), r.run.best_y);
+            out.push_str(&warm.to_string_strict().map_err(|e| {
+                anyhow!("layer '{}' state not serialisable: {e}", r.name)
+            })?);
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        println!("wrote {path} ({} layer states)", results.len());
+    }
 
     print!("{}", engine::summary_table(&results));
     let (mut hits, mut lookups, mut evals) = (0u64, 0u64, 0usize);
@@ -871,6 +932,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }),
         &mut all,
     );
+    // ISSUE 10: export→serialise→parse of a 300-row fitted state — the
+    // cost a warm-store save/load pays per layer.
+    note(
+        b.run("surrogate/state roundtrip", 1, || {
+            let state = intdecomp::bbo::SurrogateState {
+                n_bits: p.n_bits(),
+                dataset: data.clone(),
+                surrogate: Some(blr.export_state()),
+            };
+            let text =
+                state.to_string_strict().expect("finite bench state");
+            intdecomp::bbo::SurrogateState::parse(&text)
+                .expect("state roundtrips")
+                .dataset
+                .len()
+        }),
+        &mut all,
+    );
 
     // Cost oracle, single and batched.
     let cands: Vec<intdecomp::cost::BinMatrix> = (0..256)
@@ -971,6 +1050,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 || {
                     bbo::run(&p, &algo, &sa, &cfg, &Backends::default(), 5)
                         .best_y
+                },
+            ),
+            &mut all,
+        );
+    }
+
+    // ISSUE 10 acceptance row: the warm-started run at half the cold
+    // budget (1 anchor + evals/2 - 1 acquisitions) — tracked against
+    // the cold `engine/bbo batch=1` row above.
+    {
+        let sa = solvers::sa::SimulatedAnnealing::default();
+        let algo = Algorithm::Nbocs { sigma2: 0.1 };
+        let never = intdecomp::util::cancel::CancelToken::never();
+        let donor = bbo::run_warm(
+            &p,
+            &algo,
+            &sa,
+            &BboConfig::smoke_scale(p.n_bits(), evals),
+            &Backends::default(),
+            5,
+            &never,
+            None,
+            true,
+        )
+        .expect("bench donor run");
+        let warm = WarmStart::new(
+            donor.state.clone().expect("donor exports state"),
+        )
+        .with_prev_best(donor.run.best_x.clone(), donor.run.best_y);
+        let warm_cfg =
+            BboConfig::smoke_scale(p.n_bits(), evals / 2 - 1);
+        note(
+            b.run(
+                &format!("bbo/warm-start speedup ({} evals)", evals / 2),
+                evals / 2,
+                || {
+                    bbo::run_warm(
+                        &p,
+                        &algo,
+                        &sa,
+                        &warm_cfg,
+                        &Backends::default(),
+                        5,
+                        &never,
+                        Some(&warm),
+                        false,
+                    )
+                    .expect("bench warm run")
+                    .run
+                    .best_y
                 },
             ),
             &mut all,

@@ -45,8 +45,24 @@
 //!   request is served from the durable log with `recovered:true` and
 //!   a byte-identical report (see `docs/ARCHITECTURE.md`
 //!   § Durability).
+//! * **Warm starts across requests** — with `--state DIR`, every
+//!   finished layer's surrogate state (dataset sufficient statistics
+//!   plus fitted parameters, schema `intdecomp-surrogate-state-v1`)
+//!   is persisted in a [`WarmStore`] keyed by
+//!   [`ModelSpec::instance_key`]; a later request on the same
+//!   *instance* — even with a different spec fingerprint (new seed,
+//!   budget or knobs) — seeds its runs from the stored state and
+//!   reports `warm:true`/`warm_source` on the `done` line.
+//!   Incompatible or corrupt states degrade to a cold start with a
+//!   logged warning, never silently.
+//! * **Versioned wire schema** — v2 greets every connection with a
+//!   `hello` line advertising capabilities (`jobs`, `resume`,
+//!   `warm`); requests must tag themselves
+//!   `"schema":"intdecomp-serve-v2"`, and v1 clients get a typed
+//!   `400` telling them to upgrade.
 //!
 //! [`ModelSpec`]: crate::shard::ModelSpec
+//! [`ModelSpec::instance_key`]: crate::shard::ModelSpec::instance_key
 //! [`LayerRecord`]: crate::shard::LayerRecord
 //! [`deterministic_report`]: crate::shard::deterministic_report
 //! [`CostCache`]: crate::engine::CostCache
@@ -55,6 +71,7 @@ pub mod cache;
 pub mod journal;
 pub mod protocol;
 pub mod server;
+pub mod warm;
 
 pub use cache::{CacheBudget, CacheRegistry, RegistryStats};
 pub use journal::{
@@ -63,9 +80,10 @@ pub use journal::{
 };
 pub use protocol::{
     bare_request, compress_request, compress_request_with_deadline,
-    Request, SERVE_SCHEMA,
+    hello_line, is_hello, Request, SERVE_CAPABILITIES, SERVE_SCHEMA,
 };
 pub use server::{
     request, Admission, Admit, Endpoint, Metrics, MetricsSnapshot,
     Permit, ResumeStats, ServeConfig, Server, MAX_LINE_BYTES,
 };
+pub use warm::WarmStore;

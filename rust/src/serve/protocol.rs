@@ -1,4 +1,12 @@
-//! The serve daemon's line-delimited JSON wire format.
+//! The serve daemon's line-delimited JSON wire format
+//! (`intdecomp-serve-v2`).
+//!
+//! On accept the daemon writes one `hello` line advertising its
+//! schema and capabilities (`jobs`, `resume`, `warm`) before reading
+//! anything; clients use it to negotiate and must not treat it as a
+//! response terminal.  Every *request* line must carry
+//! `"schema":"intdecomp-serve-v2"` — v1 clients (no schema member)
+//! get a typed `400` telling them to upgrade.
 //!
 //! One request per line, one or more response lines per request:
 //!
@@ -33,10 +41,15 @@
 //! `"recovered"` (true when any layer was served from the durable
 //! checkpoint log instead of computed in-request) and
 //! `"resumed_layers"` (how many) — metadata only, the `report` bytes
-//! are identical either way.
+//! are identical either way.  On a daemon with a `--state` directory
+//! the `done` line also reports `"warm"` (true when any layer was
+//! warm-started from a persisted surrogate state), `"warm_layers"`
+//! (how many) and `"warm_source"` (where the states came from) —
+//! envelope metadata like the resume fields: the spec fingerprint and
+//! the report bytes never depend on them.
 //!
 //! Every *typed* line (everything but the streamed layer records)
-//! carries `"schema":"intdecomp-serve-v1"`.  Errors are
+//! carries `"schema":"intdecomp-serve-v2"`.  Errors are
 //! `{"type":"error","code":400|429|500,...}` — `429` is the admission
 //! rejection: the request was well-formed but the daemon is at its
 //! in-flight capacity, and the connection stays usable for a retry.
@@ -50,8 +63,13 @@ use crate::shard::ModelSpec;
 use crate::util::cancel::CancelCause;
 use crate::util::json::Json;
 
-/// Schema tag carried by every typed response line.
-pub const SERVE_SCHEMA: &str = "intdecomp-serve-v1";
+/// Schema tag carried by every typed line — responses *and* requests
+/// (v2: requests must tag themselves; the tag rides the envelope and
+/// never enters the spec fingerprint).
+pub const SERVE_SCHEMA: &str = "intdecomp-serve-v2";
+
+/// Capabilities the daemon advertises in its `hello` line, sorted.
+pub const SERVE_CAPABILITIES: [&str; 3] = ["jobs", "resume", "warm"];
 
 /// A parsed request line.
 #[derive(Debug)]
@@ -74,9 +92,29 @@ pub enum Request {
 }
 
 impl Request {
-    /// Parse one request line.
+    /// Parse one request line.  v2 requests must tag themselves with
+    /// `"schema":"intdecomp-serve-v2"`; an untagged (v1) or
+    /// wrong-version line is a typed error so old clients get a `400`
+    /// telling them what this daemon speaks instead of a silent
+    /// misinterpretation.
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line).map_err(|e| anyhow!("request: {e}"))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some(s) if s == SERVE_SCHEMA => {}
+            Some(other) => {
+                return Err(anyhow!(
+                    "request: schema '{other}' not supported \
+                     (this daemon speaks {SERVE_SCHEMA})"
+                ))
+            }
+            None => {
+                return Err(anyhow!(
+                    "request: missing 'schema' \
+                     (this daemon speaks {SERVE_SCHEMA}; v1 clients \
+                     must upgrade)"
+                ))
+            }
+        }
         let ty = j
             .get("type")
             .and_then(Json::as_str)
@@ -109,6 +147,7 @@ impl Request {
 /// Build a `compress` request line for `spec` (no trailing newline).
 pub fn compress_request(spec: &ModelSpec) -> String {
     Json::obj(vec![
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("spec", spec.to_json()),
         ("type", Json::Str("compress".into())),
     ])
@@ -122,6 +161,7 @@ pub fn compress_request_with_deadline(
 ) -> String {
     Json::obj(vec![
         ("deadline_ms", Json::Num(deadline_ms as f64)),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("spec", spec.to_json()),
         ("type", Json::Str("compress".into())),
     ])
@@ -130,7 +170,44 @@ pub fn compress_request_with_deadline(
 
 /// Build a bare typed request line (`stats`, `ping`, `shutdown`).
 pub fn bare_request(ty: &str) -> String {
-    Json::obj(vec![("type", Json::Str(ty.into()))]).to_string()
+    Json::obj(vec![
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str(ty.into())),
+    ])
+    .to_string()
+}
+
+/// The greeting the daemon writes on every accepted connection before
+/// reading anything: schema version plus the capability list clients
+/// negotiate against.
+pub fn hello_line() -> String {
+    Json::obj(vec![
+        (
+            "capabilities",
+            Json::Arr(
+                SERVE_CAPABILITIES
+                    .iter()
+                    .map(|c| Json::Str((*c).into()))
+                    .collect(),
+            ),
+        ),
+        ("schema", Json::Str(SERVE_SCHEMA.into())),
+        ("type", Json::Str("hello".into())),
+    ])
+    .to_string()
+}
+
+/// Whether a line is the daemon's connection greeting.  Clients must
+/// check this on the *first* line they read and skip it — `hello`
+/// carries a `type` member, so [`is_terminal`] would otherwise end the
+/// response stream before any response arrived.
+pub fn is_hello(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| {
+            j.get("type").and_then(Json::as_str).map(|t| t == "hello")
+        })
+        .unwrap_or(false)
 }
 
 /// An `error` response line; `code` follows HTTP idiom (`400` bad
@@ -150,14 +227,18 @@ pub fn error_line(code: u64, message: &str) -> String {
 /// byte-identity artifact clients diff against `compress-model
 /// --report`.  `resumed_layers` counts layers served from the durable
 /// checkpoint log rather than computed in-request (`recovered` is its
-/// non-zero flag); both are envelope metadata — the report bytes do
-/// not depend on them.
+/// non-zero flag); `warm_layers` counts layers warm-started from a
+/// persisted surrogate state (`warm` is its non-zero flag,
+/// `warm_source` says where the states came from).  All of them are
+/// envelope metadata — the report bytes do not depend on them.
 pub fn done_line(
     fingerprint: &str,
     layers: usize,
     report: &str,
     elapsed_s: f64,
     resumed_layers: usize,
+    warm_layers: usize,
+    warm_source: Option<&str>,
 ) -> String {
     Json::obj(vec![
         ("elapsed_s", Json::Num(elapsed_s)),
@@ -168,6 +249,15 @@ pub fn done_line(
         ("resumed_layers", Json::Num(resumed_layers as f64)),
         ("schema", Json::Str(SERVE_SCHEMA.into())),
         ("type", Json::Str("done".into())),
+        ("warm", Json::Bool(warm_layers > 0)),
+        ("warm_layers", Json::Num(warm_layers as f64)),
+        (
+            "warm_source",
+            match warm_source {
+                Some(s) => Json::Str(s.into()),
+                None => Json::Null,
+            },
+        ),
     ])
     .to_string()
 }
@@ -306,9 +396,43 @@ mod tests {
         }
         // Non-integer deadlines are a 400, not a silent default.
         assert!(Request::parse(
-            r#"{"deadline_ms":"soon","spec":{},"type":"compress"}"#
+            r#"{"deadline_ms":"soon","schema":"intdecomp-serve-v2","spec":{},"type":"compress"}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn hello_advertises_schema_and_capabilities() {
+        let line = hello_line();
+        assert!(is_hello(&line));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SERVE_SCHEMA));
+        let caps = j.get("capabilities").unwrap().as_arr().unwrap();
+        let caps: Vec<&str> =
+            caps.iter().filter_map(Json::as_str).collect();
+        assert_eq!(caps, vec!["jobs", "resume", "warm"]);
+        // `hello` is typed, so a naive client would treat it as a
+        // response terminal — which is exactly why clients must check
+        // `is_hello` on the first line.
+        assert!(is_terminal(&line));
+        // And nothing else is a hello.
+        assert!(!is_hello(&pong_line()));
+        assert!(!is_hello("torn garbage"));
+    }
+
+    #[test]
+    fn v1_requests_get_a_typed_upgrade_error() {
+        // An old (v1) client sends no schema member: typed 400
+        // mentioning what this daemon speaks, not a silent accept.
+        let e = Request::parse(r#"{"type":"ping"}"#).unwrap_err();
+        assert!(e.to_string().contains("intdecomp-serve-v2"), "{e}");
+        // A wrong-version tag is named back to the sender.
+        let e = Request::parse(
+            r#"{"schema":"intdecomp-serve-v1","type":"ping"}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("intdecomp-serve-v1"), "{e}");
+        assert!(e.to_string().contains("intdecomp-serve-v2"), "{e}");
     }
 
     #[test]
@@ -335,18 +459,27 @@ mod tests {
     fn bad_requests_are_rejected() {
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse("{}").is_err());
-        assert!(Request::parse(r#"{"type":"frobnicate"}"#).is_err());
+        assert!(Request::parse(
+            r#"{"schema":"intdecomp-serve-v2","type":"frobnicate"}"#
+        )
+        .is_err());
         // compress without a spec, and with an invalid spec.
-        assert!(Request::parse(r#"{"type":"compress"}"#).is_err());
-        assert!(
-            Request::parse(r#"{"spec":{"n":0},"type":"compress"}"#).is_err()
-        );
+        assert!(Request::parse(
+            r#"{"schema":"intdecomp-serve-v2","type":"compress"}"#
+        )
+        .is_err());
+        assert!(Request::parse(
+            r#"{"schema":"intdecomp-serve-v2","spec":{"n":0},"type":"compress"}"#
+        )
+        .is_err());
     }
 
     #[test]
     fn terminal_detection_distinguishes_record_lines() {
         assert!(is_terminal(&error_line(429, "full")));
-        assert!(is_terminal(&done_line("f00d", 2, "report\n", 0.1, 0)));
+        assert!(is_terminal(&done_line(
+            "f00d", 2, "report\n", 0.1, 0, 0, None
+        )));
         assert!(is_terminal(&jobs_line(&[])));
         assert!(is_terminal(&pong_line()));
         assert!(is_terminal(&bye_line()));
@@ -380,19 +513,49 @@ mod tests {
     #[test]
     fn done_line_preserves_report_bytes() {
         let report = "layer  shape\nlayer1 4x8\n";
-        let line = done_line("f00d", 1, report, 0.25, 0);
+        let line = done_line("f00d", 1, report, 0.25, 0, 0, None);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("report").unwrap().as_str(), Some(report));
         assert_eq!(j.get("fingerprint").unwrap().as_str(), Some("f00d"));
         assert_eq!(j.get("layers").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("recovered").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("resumed_layers").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("warm").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("warm_layers").unwrap().as_usize(), Some(0));
+        assert!(matches!(j.get("warm_source"), Some(Json::Null)));
         // A resumed run flags itself but never touches the report.
-        let resumed = done_line("f00d", 1, report, 0.25, 1);
+        let resumed = done_line("f00d", 1, report, 0.25, 1, 0, None);
         let rj = Json::parse(&resumed).unwrap();
         assert_eq!(rj.get("recovered").unwrap().as_bool(), Some(true));
         assert_eq!(rj.get("resumed_layers").unwrap().as_usize(), Some(1));
         assert_eq!(rj.get("report").unwrap().as_str(), Some(report));
+    }
+
+    #[test]
+    fn warm_metadata_rides_the_done_envelope_not_the_report() {
+        // Same fingerprint/report with and without warm layers: the
+        // warm fields are metadata, the byte-identity artifact is
+        // untouched.
+        let report = "layer  shape\nlayer1 4x8\n";
+        let cold = done_line("f00d", 2, report, 0.25, 0, 0, None);
+        let warm =
+            done_line("f00d", 2, report, 0.10, 0, 2, Some("state/warm"));
+        let cj = Json::parse(&cold).unwrap();
+        let wj = Json::parse(&warm).unwrap();
+        assert_eq!(wj.get("warm").unwrap().as_bool(), Some(true));
+        assert_eq!(wj.get("warm_layers").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            wj.get("warm_source").unwrap().as_str(),
+            Some("state/warm")
+        );
+        assert_eq!(
+            cj.get("report").unwrap().as_str(),
+            wj.get("report").unwrap().as_str()
+        );
+        assert_eq!(
+            cj.get("fingerprint").unwrap().as_str(),
+            wj.get("fingerprint").unwrap().as_str()
+        );
     }
 
     #[test]

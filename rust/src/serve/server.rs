@@ -34,9 +34,10 @@ use anyhow::{bail, Context, Result};
 use super::cache::{CacheBudget, CacheRegistry};
 use super::journal::{self, JobStatus, Journal, RecoverMode};
 use super::protocol::{self, Request, SERVE_SCHEMA};
-use crate::bbo::Degradation;
+use super::warm::WarmStore;
+use crate::bbo::{Algorithm, Degradation, WarmStart};
 use crate::cost::BinMatrix;
-use crate::engine::{Engine, EngineConfig, JobError};
+use crate::engine::{Engine, JobError};
 use crate::shard::{
     deterministic_report, recover_log, CheckpointLog, LayerRecord,
     ModelSpec,
@@ -583,6 +584,9 @@ struct Ctx {
     conn_seq: AtomicU64,
     endpoint: Endpoint,
     durability: Option<Durability>,
+    /// Per-instance surrogate-state store (`--state DIR` daemons):
+    /// loads seed warm starts, finished layers save back.
+    warm: Option<WarmStore>,
 }
 
 /// Counters of a journaled daemon's durability layer: what the
@@ -729,12 +733,8 @@ fn recover_state(
                 // Recovery stays on the infallible entry point: a
                 // panic here is a startup failure the operator should
                 // see, not a request to degrade.
-                let eng = Engine::new(EngineConfig {
-                    workers,
-                    restart_workers: entry.spec.restart_workers,
-                    batch_size: 1,
-                    ..Default::default()
-                });
+                let eng =
+                    Engine::new(entry.spec.engine_config(workers, false));
                 let mut werr: Option<std::io::Error> = None;
                 eng.compress_each(engine_jobs, |i, result| {
                     let rec = LayerRecord::from_result(todo[i], &result);
@@ -831,6 +831,13 @@ impl Server {
             )?),
             _ => None,
         };
+        // The warm store needs only the state directory, not the
+        // journal: surrogate states are useful even on a daemon run
+        // with journaling off.
+        let warm = match &cfg.state_dir {
+            Some(dir) => Some(WarmStore::open(dir)?),
+            None => None,
+        };
         let (listener, endpoint) = match &cfg.endpoint {
             Endpoint::Tcp(addr) => {
                 let l = TcpListener::bind(addr)
@@ -863,6 +870,7 @@ impl Server {
                 conn_seq: AtomicU64::new(0),
                 endpoint,
                 durability,
+                warm,
             }),
             _lock: lock,
         })
@@ -1056,6 +1064,11 @@ fn handle_conn(conn: Conn, ctx: &Ctx) -> std::io::Result<()> {
         })
     };
     let mut writer = conn;
+    // v2 greeting: schema + capabilities, written before reading
+    // anything so clients can negotiate.  Best-effort — a peer that
+    // vanished already surfaces as EOF below.
+    let _ = writeln!(writer, "{}", protocol::hello_line());
+    let _ = writer.flush();
     let mut result: std::io::Result<()> = Ok(());
     loop {
         match rx.recv() {
@@ -1254,6 +1267,13 @@ fn handle_compress(
         recovered.iter().map(|r| r.job).collect();
     let mut todo: Vec<usize> = Vec::new();
     let mut jobs = Vec::with_capacity(spec.layers);
+    // Surrogate warm starts (`--state` daemons): the expected state
+    // kind comes from the spec's algorithm; a stored state that does
+    // not match it (or the instance's bit width) degrades to a cold
+    // start with a logged warning instead of a failed request.
+    let expected_kind = Algorithm::by_name(&spec.algo)
+        .and_then(|a| a.state_kind());
+    let mut warm_layers = 0usize;
     for layer in 0..spec.layers {
         if done_layers.contains(&layer) {
             continue;
@@ -1268,6 +1288,25 @@ fn handle_compress(
                 if !spec.cache_key_raw {
                     job.shared_cache =
                         ctx.registry.get(&spec.instance_key(layer));
+                }
+                if let Some(ws) = &ctx.warm {
+                    job.export_state = true;
+                    let key = spec.instance_key(layer);
+                    if let Some(w) = ws.load(&key) {
+                        if w.state.n_bits == spec.n * spec.k
+                            && w.state
+                                .compatible_kind(expected_kind.as_deref())
+                        {
+                            job.warm_start = Some(w);
+                            warm_layers += 1;
+                        } else {
+                            eprintln!(
+                                "serve: warm: {key}: stored state does \
+                                 not fit the spec (kind/bits); cold \
+                                 start"
+                            );
+                        }
+                    }
                 }
                 todo.push(layer);
                 jobs.push(job);
@@ -1329,15 +1368,23 @@ fn handle_compress(
     } else {
         // `contain_panics`: a panicking job must become a typed `500`
         // on this request, never take the daemon down (ISSUE 9).
-        let eng = Engine::new(EngineConfig {
-            workers: ctx.workers,
-            restart_workers: spec.restart_workers,
-            batch_size: 1, // per-job cfg carries the spec's batch size
-            contain_panics: true,
-        });
+        let eng = Engine::new(spec.engine_config(ctx.workers, true));
         eng.try_compress_each(jobs, |i, result| {
             ctx.metrics.absorb_degradation(result.run.degradation);
             let rec = LayerRecord::from_result(todo[i], &result);
+            // Persist the layer's end-of-run surrogate state so later
+            // requests on the same instance warm-start from it.  A
+            // save failure costs future warmth, never this request.
+            if let (Some(ws), Some(st)) = (&ctx.warm, &result.state) {
+                let key = spec.instance_key(todo[i]);
+                let w = WarmStart::new(st.clone()).with_prev_best(
+                    result.run.best_x.clone(),
+                    result.run.best_y,
+                );
+                if let Err(e) = ws.save(&key, &w) {
+                    eprintln!("serve: warm: {key}: save failed: {e}");
+                }
+            }
             // Checkpoint (append + fsync) before the client sees the
             // line: whatever was streamed is always durable.
             if let Some(d) = durable.as_mut() {
@@ -1373,16 +1420,24 @@ fn handle_compress(
                 None => Ok(()),
             }
         }
-        Err(err @ (JobError::Numeric(_) | JobError::Panicked { .. })) => {
+        Err(
+            err @ (JobError::Numeric(_)
+            | JobError::Panicked { .. }
+            | JobError::Warm(_)),
+        ) => {
             // A faulted job: typed `500`, daemon keeps serving.  The
             // journal entry is terminated so the bind-time recovery
             // pass does not replay a job that would fault again.
+            // (`Warm` is belt-and-braces: the compatibility pre-check
+            // above should keep a bad stored state from ever reaching
+            // the engine.)
             if let Some(d) = durable.as_mut() {
                 d.finish_cancelled();
             }
             match &err {
                 JobError::Panicked { .. } => ctx.metrics.contain_panic(),
-                _ => ctx.metrics.degrade_request(),
+                JobError::Numeric(_) => ctx.metrics.degrade_request(),
+                _ => {}
             }
             ctx.metrics.error();
             let _ = writeln!(
@@ -1413,6 +1468,10 @@ fn handle_compress(
             // into layer order (a no-op for uninterrupted runs).
             records.sort_by_key(|r| r.job);
             let report = deterministic_report(&records);
+            let warm_src = ctx
+                .warm
+                .as_ref()
+                .map(|w| w.dir().display().to_string());
             writeln!(
                 out,
                 "{}",
@@ -1422,6 +1481,12 @@ fn handle_compress(
                     &report,
                     timer.seconds(),
                     resumed,
+                    warm_layers,
+                    if warm_layers > 0 {
+                        warm_src.as_deref()
+                    } else {
+                        None
+                    },
                 )
             )?;
             ctx.metrics.complete(timer.seconds());
@@ -1694,6 +1759,12 @@ fn stats_line(ctx: &Ctx) -> String {
 /// response lines, up to and including the terminal typed line
 /// (`done`, `cancelled`, `deadline`, `stats`, `pong`, `bye` or
 /// `error`).
+///
+/// Speaks v2: a leading `hello` greeting (which is typed, and would
+/// otherwise read as an instant response terminal) is consumed and
+/// dropped before the response stream proper.  Against a pre-hello
+/// daemon the first line is simply a response line and is kept — the
+/// client degrades gracefully rather than demanding a greeting.
 pub fn request(endpoint: &Endpoint, line: &str) -> Result<Vec<String>> {
     let mut conn = Conn::connect(endpoint)
         .with_context(|| format!("connecting to {endpoint}"))?;
@@ -1702,9 +1773,13 @@ pub fn request(endpoint: &Endpoint, line: &str) -> Result<Vec<String>> {
     conn.flush()?;
     let reader = BufReader::new(conn.try_clone()?);
     let mut lines = Vec::new();
+    let mut first = true;
     for l in reader.lines() {
         let l = l?;
         if l.trim().is_empty() {
+            continue;
+        }
+        if std::mem::take(&mut first) && protocol::is_hello(&l) {
             continue;
         }
         let terminal = protocol::is_terminal(&l);

@@ -1,0 +1,190 @@
+//! Durable per-instance surrogate-state store backing serve warm
+//! starts (ISSUE 10).
+//!
+//! Lives under `STATE_DIR/warm/`, one JSON document per
+//! [`ModelSpec::instance_key`] — the *instance* identity (shape,
+//! gamma, instance seed, layer), deliberately not the spec
+//! fingerprint: a re-tuned request (different run seed, iteration
+//! budget or algorithm knobs) has a new fingerprint but the same
+//! instance, and that is exactly the case warm starting pays off.
+//!
+//! Durability follows the checkpoint-log discipline with the primitive
+//! that fits a single-document file: write to a temporary sibling,
+//! `fsync`, then atomically rename over the old state, so a crash
+//! leaves either the previous state or the new one — never a torn
+//! file.  The daemon's `serve.state` lockfile already guarantees a
+//! single writer for the whole state directory.  A corrupt or
+//! incompatible document on load is *never* a silent cold start: the
+//! store logs a warning naming the key and the typed parse error, then
+//! serves cold.
+//!
+//! [`ModelSpec::instance_key`]: crate::shard::ModelSpec::instance_key
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::bbo::WarmStart;
+
+/// The on-disk store: a directory of `{instance_key}.json` warm-start
+/// documents.
+pub struct WarmStore {
+    dir: PathBuf,
+}
+
+impl WarmStore {
+    /// Open (creating if needed) the store under `state_dir/warm`.
+    pub fn open(state_dir: &Path) -> Result<WarmStore> {
+        let dir = state_dir.join("warm");
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(WarmStore { dir })
+    }
+
+    /// The store's directory — reported as `warm_source` in `done`
+    /// lines so operators can see where states came from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        // Instance keys are `n{..}-d{..}-...` — alphanumerics and
+        // dashes only, safe as file names without escaping.
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Load the stored warm start for an instance key.  `None` means
+    /// cold: no state yet (silent — the normal first-contact case) or
+    /// a corrupt/unreadable document (logged with the typed error,
+    /// never silent).
+    pub fn load(&self, key: &str) -> Option<WarmStart> {
+        let path = self.path(key);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return None;
+            }
+            Err(e) => {
+                eprintln!(
+                    "serve: warm: {key}: reading {}: {e}; cold start",
+                    path.display()
+                );
+                return None;
+            }
+        };
+        match WarmStart::parse(&text) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!(
+                    "serve: warm: {key}: corrupt state ({e}); cold start"
+                );
+                None
+            }
+        }
+    }
+
+    /// Persist a warm start for an instance key: temp sibling +
+    /// `fsync` + atomic rename, so concurrent readers and crashes see
+    /// either the old state or the new one.
+    pub fn save(&self, key: &str, warm: &WarmStart) -> std::io::Result<()> {
+        let text = warm
+            .to_string_strict()
+            .map_err(std::io::Error::other)?;
+        let path = self.path(key);
+        let tmp = self.dir.join(format!("{key}.json.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_data()?;
+        }
+        fs::rename(&tmp, &path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bbo::SurrogateState;
+    use crate::surrogate::Dataset;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "intdecomp-warmstore-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_warm() -> WarmStart {
+        let mut data = Dataset::new(4);
+        data.push(vec![1, -1, 1, -1], 2.5);
+        data.push(vec![-1, -1, 1, 1], -0.75);
+        let state =
+            SurrogateState { n_bits: 4, dataset: data, surrogate: None };
+        WarmStart::new(state).with_prev_best(vec![-1, -1, 1, 1], -0.75)
+    }
+
+    #[test]
+    fn save_then_load_round_trips_bit_for_bit() {
+        let dir = tmpdir("roundtrip");
+        let store = WarmStore::open(&dir).unwrap();
+        let warm = sample_warm();
+        store.save("n4-test-l0", &warm).unwrap();
+        let back = store.load("n4-test-l0").unwrap();
+        assert_eq!(
+            back.to_string_strict().unwrap(),
+            warm.to_string_strict().unwrap()
+        );
+        let (x, y) = back.prev_best.unwrap();
+        assert_eq!(x, vec![-1, -1, 1, 1]);
+        assert_eq!(y.to_bits(), (-0.75f64).to_bits());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_key_is_a_silent_cold_start() {
+        let dir = tmpdir("missing");
+        let store = WarmStore::open(&dir).unwrap();
+        assert!(store.load("never-saved").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_state_degrades_to_cold_not_a_crash() {
+        let dir = tmpdir("corrupt");
+        let store = WarmStore::open(&dir).unwrap();
+        fs::write(store.dir().join("bad.json"), b"{torn garb").unwrap();
+        assert!(store.load("bad").is_none());
+        // Wrong schema tag is typed-rejected, not misread.
+        fs::write(
+            store.dir().join("vx.json"),
+            br#"{"schema":"intdecomp-surrogate-state-v999"}"#,
+        )
+        .unwrap();
+        assert!(store.load("vx").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_replaces_atomically_and_leaves_no_tmp() {
+        let dir = tmpdir("replace");
+        let store = WarmStore::open(&dir).unwrap();
+        let warm = sample_warm();
+        store.save("k", &warm).unwrap();
+        let richer = {
+            let mut w = sample_warm();
+            w.state.dataset.push(vec![1, 1, 1, 1], 9.0);
+            w
+        };
+        store.save("k", &richer).unwrap();
+        let back = store.load("k").unwrap();
+        assert_eq!(back.state.dataset.len(), 3);
+        assert!(!store.dir().join("k.json.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

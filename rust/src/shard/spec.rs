@@ -19,7 +19,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::bbo::{Algorithm, BboConfig};
-use crate::engine::{CacheKeyMode, CompressionJob};
+use crate::engine::{CacheKeyMode, CompressionJob, EngineConfig};
 use crate::instance::{generate, InstanceConfig};
 use crate::solvers;
 use crate::util::json::Json;
@@ -137,24 +137,39 @@ impl ModelSpec {
             .ok_or_else(|| anyhow!("unknown algorithm '{}'", self.algo))?;
         let solver = solvers::by_name(&self.solver)
             .ok_or_else(|| anyhow!("unknown solver '{}'", self.solver))?;
-        Ok(CompressionJob {
-            name: format!("layer{}", layer + 1),
-            cfg: BboConfig {
-                n_init: p.n_bits(),
-                iters: self.iters,
-                restarts: self.restarts,
-                augment: self.augment,
-                restart_workers: 1,
-                batch_size: self.batch_size,
-            },
-            problem: p,
-            algo,
-            solver,
-            seed: self.seed.wrapping_add(layer as u64),
-            cache_mode: self.cache_mode(),
-            shared_cache: None,
-            cancel: crate::util::cancel::CancelToken::never(),
-        })
+        // The shared BboConfig builder path (ISSUE 10): the same
+        // base + with_* chain every other layer uses, instead of a
+        // re-spelled struct literal.  restart_workers stays 1 here —
+        // the per-process fan-out is an engine override
+        // ([`ModelSpec::engine_config`]), not part of the job.
+        let cfg = BboConfig::smoke_scale(p.n_bits(), self.iters)
+            .with_restarts(self.restarts)
+            .with_augment(self.augment)
+            .with_batch_size(self.batch_size);
+        let seed = self.seed.wrapping_add(layer as u64);
+        Ok(CompressionJob::new(format!("layer{}", layer + 1), p, 0, seed)
+            .with_algo(algo)
+            .with_solver(solver)
+            .with_cache_mode(self.cache_mode())
+            .with_bbo_config(cfg))
+    }
+
+    /// Engine parallelism configuration for running this spec — the one
+    /// construction path shared by `compress-model`, the shard worker
+    /// and both serve call sites (ISSUE 10), so the spec's
+    /// `restart_workers`/`batch_size` knobs reach the engine
+    /// identically everywhere.
+    pub fn engine_config(
+        &self,
+        workers: usize,
+        contain_panics: bool,
+    ) -> EngineConfig {
+        EngineConfig {
+            workers: workers.max(1),
+            restart_workers: self.restart_workers,
+            batch_size: self.batch_size,
+            contain_panics,
+        }
     }
 
     /// Serialise to the manifest JSON layout (keys sorted, so the text

@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::plan::Manifest;
-use crate::engine::{Engine, EngineConfig, JobResult};
+use crate::engine::{Engine, JobResult};
 use crate::util::json::{Json, NonFiniteJson};
 use crate::util::lockfile::LockFile;
 
@@ -457,12 +457,9 @@ pub fn run_shard(
         .iter()
         .map(|&layer| manifest.spec.job(layer))
         .collect::<Result<Vec<_>>>()?;
-    let eng = Engine::new(EngineConfig {
-        workers: workers.max(1),
-        restart_workers: manifest.spec.restart_workers,
-        batch_size: 1, // per-job cfg carries the spec's batch size
-        ..Default::default()
-    });
+    // The shared spec→engine path (ISSUE 10) — identical to
+    // compress-model's and the serve daemon's construction.
+    let eng = Engine::new(manifest.spec.engine_config(workers, false));
     let mut new_records = Vec::with_capacity(todo.len());
     let mut write_err: Option<std::io::Error> = None;
     eng.compress_each(jobs, |i, result| {

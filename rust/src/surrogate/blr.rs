@@ -33,12 +33,13 @@
 //! coefficient vector aside), which is what keeps the per-iteration
 //! surrogate refit flat at paper scale.
 
-use super::{features, Dataset, Surrogate};
+use super::{features, state, Dataset, Surrogate};
 use crate::linalg::{
     cholesky_jittered_scaled_into, dot, solve_lower_into,
     solve_lower_t_in_place, JitterLadder, Matrix, NumericError,
 };
 use crate::solvers::QuadModel;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Prior precision pinned on the intercept (effectively flat — the bias
@@ -393,7 +394,11 @@ impl Blr {
                 Ok(self.scratch.draw.clone())
             }
             Prior::Horseshoe => {
-                if self.hs.is_none() {
+                // (Re)initialise the Gibbs chain when absent — or when a
+                // warm-start import carried scales for a different P
+                // (only possible from a hand-edited state file; a fresh
+                // chain is safe, running with mismatched scales is not).
+                if self.hs.as_ref().map_or(true, |h| h.beta2.len() != p) {
                     self.hs = Some(HorseshoeState {
                         beta2: vec![1.0; p],
                         nu: vec![1.0; p],
@@ -465,6 +470,70 @@ impl Surrogate for Blr {
 
     fn name(&self) -> String {
         format!("{}[{}]", self.prior.label(), self.backend.backend_name())
+    }
+
+    /// Export the posterior's cross-iteration state: the Gibbs-sampled
+    /// noise variance σ_n² plus (for vBOCS) the horseshoe auxiliary
+    /// chain.  The dataset's sufficient statistics G/Φᵀy/yᵀy travel in
+    /// the enclosing [`state::SurrogateState`], so together the two
+    /// reproduce the full posterior.
+    fn export_state(&self) -> state::SurrogateParams {
+        let hs = match &self.hs {
+            Some(h) => Json::obj(vec![
+                ("beta2", Json::arr_f64(&h.beta2)),
+                ("nu", Json::arr_f64(&h.nu)),
+                ("p", Json::Num(h.beta2.len() as f64)),
+                ("tau2", Json::Num(h.tau2)),
+                ("xi", Json::Num(h.xi)),
+            ]),
+            None => Json::Null,
+        };
+        state::SurrogateParams {
+            kind: self.prior.label(),
+            params: Json::obj(vec![
+                ("hs", hs),
+                ("sigma_n2", Json::Num(self.sigma_n2)),
+            ]),
+        }
+    }
+
+    /// Import a [`Surrogate::export_state`] payload.  The kind must be
+    /// this prior's label (an nBOCS state cannot seed a vBOCS chain);
+    /// shapes and finiteness are validated field by field.
+    fn import_state(
+        &mut self,
+        params: &state::SurrogateParams,
+    ) -> Result<(), state::StateError> {
+        let expected = self.prior.label();
+        if params.kind != expected {
+            return Err(state::StateError::KindMismatch {
+                expected,
+                found: params.kind.clone(),
+            });
+        }
+        let doc = &params.params;
+        let sigma_n2 = state::get_finite(doc, "sigma_n2")?;
+        if sigma_n2 <= 0.0 {
+            return Err(state::StateError::Malformed {
+                field: "sigma_n2",
+                detail: format!("noise variance must be positive, got {sigma_n2}"),
+            });
+        }
+        let hs = match state::get(doc, "hs")? {
+            Json::Null => None,
+            v => {
+                let p = state::get_usize(v, "p")?;
+                Some(HorseshoeState {
+                    beta2: state::get_f64_vec(v, "beta2", p)?,
+                    nu: state::get_f64_vec(v, "nu", p)?,
+                    tau2: state::get_finite(v, "tau2")?,
+                    xi: state::get_finite(v, "xi")?,
+                })
+            }
+        };
+        self.sigma_n2 = sigma_n2;
+        self.hs = hs;
+        Ok(())
     }
 }
 
@@ -665,5 +734,70 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "trial {trial}");
             }
         }
+    }
+
+    #[test]
+    fn fitted_state_roundtrips_byte_identically() {
+        let mut rng = Rng::new(506);
+        let n = 5;
+        let (data, _) = planted_dataset(n, 40, 0.1, &mut rng);
+        for prior in [
+            Prior::Normal { sigma2: 0.1 },
+            Prior::NormalGamma { a: 1.0, beta: 0.001 },
+            Prior::Horseshoe,
+        ] {
+            let mut blr = Blr::new(prior.clone());
+            blr.sample_alpha(&data, &mut rng).unwrap();
+            let exported = blr.export_state();
+            let text = exported.to_json().to_string_strict().unwrap();
+            let mut fresh = Blr::new(prior.clone());
+            fresh
+                .import_state(
+                    &state::SurrogateParams::from_json(
+                        &Json::parse(&text).unwrap(),
+                    )
+                    .unwrap(),
+                )
+                .unwrap();
+            let again = fresh.export_state();
+            assert_eq!(
+                again.to_json().to_string_strict().unwrap(),
+                text,
+                "{prior:?} state did not round-trip byte-identically"
+            );
+        }
+    }
+
+    #[test]
+    fn import_rejects_cross_prior_state() {
+        let mut rng = Rng::new(507);
+        let (data, _) = planted_dataset(4, 30, 0.1, &mut rng);
+        let mut nbocs = Blr::new(Prior::Normal { sigma2: 0.1 });
+        nbocs.sample_alpha(&data, &mut rng).unwrap();
+        let exported = nbocs.export_state();
+        let mut vbocs = Blr::new(Prior::Horseshoe);
+        match vbocs.import_state(&exported) {
+            Err(state::StateError::KindMismatch { expected, found }) => {
+                assert_eq!(expected, "vBOCS");
+                assert_eq!(found, "nBOCS");
+            }
+            other => panic!("expected KindMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn import_rejects_non_positive_noise_variance() {
+        let mut blr = Blr::new(Prior::Normal { sigma2: 0.1 });
+        let bad = state::SurrogateParams {
+            kind: "nBOCS".into(),
+            params: Json::obj(vec![
+                ("hs", Json::Null),
+                ("sigma_n2", Json::Num(-1.0)),
+            ]),
+        };
+        assert!(matches!(
+            blr.import_state(&bad),
+            Err(state::StateError::Malformed { field: "sigma_n2", .. })
+        ));
     }
 }

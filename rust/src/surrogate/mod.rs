@@ -14,10 +14,20 @@
 //! (Φ^T Φ, Φ^T y, y^T y) incrementally — O(P^2) per push instead of an
 //! O(rows · P^2) rebuild per iteration, which is what makes the 48×
 //! data-augmentation variant (nBOCSa) tractable.
+//!
+//! The [`state`] module (ISSUE 10) serialises all of this — dataset
+//! moments plus surrogate-specific parameters exported through
+//! [`Surrogate::export_state`] — into the versioned
+//! `intdecomp-surrogate-state-v1` document that warm-starts later runs.
 
 pub mod blr;
 pub mod features;
 pub mod fm;
+pub mod state;
+
+pub use state::{
+    StateError, SurrogateParams, SurrogateState, WarmStart, STATE_SCHEMA,
+};
 
 use crate::linalg::{Matrix, NumericError};
 use crate::solvers::QuadModel;
@@ -57,6 +67,9 @@ pub struct Dataset {
     best_idx: Option<usize>,
     /// Running minimum of `ys` (`f64::INFINITY` while empty).
     best_y: f64,
+    /// Reusable Φ-panel scratch for `push_batch` (capacity retained
+    /// across batches so steady-state ingestion allocates nothing).
+    panel: Vec<f64>,
 }
 
 impl Dataset {
@@ -73,6 +86,7 @@ impl Dataset {
             yty: 0.0,
             best_idx: None,
             best_y: f64::INFINITY,
+            panel: Vec::new(),
         }
     }
 
@@ -143,7 +157,11 @@ impl Dataset {
             return;
         }
         let p = self.p;
-        let mut panel = vec![0.0; kb * p];
+        // Reuse the scratch panel across batches (taken out of `self`
+        // so the moment updates below can still borrow fields mutably).
+        let mut panel = std::mem::take(&mut self.panel);
+        panel.clear();
+        panel.resize(kb * p, 0.0);
         for (r, (x, _)) in pairs.iter().enumerate() {
             debug_assert_eq!(x.len(), self.n_bits);
             features::phi_into(x, &mut panel[r * p..(r + 1) * p]);
@@ -176,6 +194,7 @@ impl Dataset {
             self.yty += y * y;
             self.record(x, y);
         }
+        self.panel = panel;
     }
 
     /// Best (lowest) observed cost and its argmin — O(1), served from
@@ -190,11 +209,16 @@ impl Dataset {
     }
 
     /// Dense feature matrix Φ (rows × P) — the XLA gram-artifact path and
-    /// tests rebuild it on demand.
+    /// tests rebuild it on demand.  Rows are written in place with
+    /// [`features::phi_into`] (one allocation for the matrix, no
+    /// per-row temporaries), bit-identical to the incremental path's
+    /// panel rows.
     pub fn phi_matrix(&self) -> Matrix {
-        let rows: Vec<Vec<f64>> =
-            self.xs.iter().map(|x| features::phi(x)).collect();
-        Matrix::from_rows(&rows)
+        let mut m = Matrix::zeros(self.len(), self.p);
+        for (i, x) in self.xs.iter().enumerate() {
+            features::phi_into(x, m.row_mut(i));
+        }
+        m
     }
 }
 
@@ -215,6 +239,37 @@ pub trait Surrogate: Send {
 
     /// Short identifier for reports (e.g. "nBOCS", "FMQA08").
     fn name(&self) -> String;
+
+    /// Export the surrogate's cross-iteration parameters for the
+    /// versioned state subsystem ([`state::SurrogateState`], ISSUE 10).
+    ///
+    /// The default is a `"stateless"` payload for surrogates that carry
+    /// nothing between fits; BLR exports its noise variance and Gibbs
+    /// chain, FM exports its learned parameters and Adam moments.
+    fn export_state(&self) -> SurrogateParams {
+        SurrogateParams {
+            kind: "stateless".into(),
+            params: crate::util::json::Json::Null,
+        }
+    }
+
+    /// Re-import parameters produced by [`Surrogate::export_state`] on
+    /// a compatible instance.  Strict: a payload from a different
+    /// surrogate kind, or with shapes that do not match this instance,
+    /// is a typed [`StateError`] — never silently ignored.
+    fn import_state(
+        &mut self,
+        params: &SurrogateParams,
+    ) -> Result<(), StateError> {
+        if params.kind == "stateless" {
+            Ok(())
+        } else {
+            Err(StateError::KindMismatch {
+                expected: "stateless".into(),
+                found: params.kind.clone(),
+            })
+        }
+    }
 }
 
 #[cfg(test)]
@@ -282,5 +337,23 @@ mod tests {
         let data = Dataset::new(4);
         assert!(data.is_empty());
         assert!(data.best().is_none());
+    }
+
+    #[test]
+    fn phi_matrix_rows_are_bit_identical_to_phi() {
+        let mut rng = Rng::new(402);
+        let n = 5;
+        let mut data = Dataset::new(n);
+        for _ in 0..7 {
+            data.push(rng.spins(n), rng.normal());
+        }
+        let m = data.phi_matrix();
+        assert_eq!((m.rows, m.cols), (7, data.p));
+        for (i, x) in data.xs.iter().enumerate() {
+            let reference = features::phi(x);
+            for (a, b) in m.row(i).iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

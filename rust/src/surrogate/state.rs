@@ -1,0 +1,660 @@
+//! Versioned surrogate-state serialisation (ISSUE 10).
+//!
+//! A BBO run's reusable state — the [`Dataset`] sufficient statistics
+//! (G = ΦᵀΦ, Φᵀy, yᵀy) plus the surrogate's own cross-iteration
+//! parameters — is exported as a schema-tagged JSON document
+//! (`intdecomp-surrogate-state-v1`) and re-imported to warm-start a
+//! later run on the same (or a slightly drifted) instance.
+//!
+//! Serialisation contract:
+//!
+//! * Documents are written through [`Json::to_string_strict`] — floats
+//!   use shortest round-trip formatting, object keys are sorted, and a
+//!   NaN/Inf anywhere in the tree is a typed error, never `null`.
+//! * `export → import → export` is **byte-identical**: every number in
+//!   the document round-trips bit-exactly (including `-0.0`), and the
+//!   importer stores exactly what it read, so re-export reproduces the
+//!   original bytes.  This is pinned by property tests.
+//! * Import is strict: a missing/ill-typed field, a shape mismatch, an
+//!   unknown schema tag or a non-finite number is a typed
+//!   [`StateError`] — a torn or corrupt state file can never silently
+//!   degrade into a cold start without the caller noticing.
+
+use crate::linalg::Matrix;
+use crate::surrogate::{features, Dataset};
+use crate::util::json::{Json, NonFiniteJson};
+
+/// Schema tag carried by every serialised surrogate-state document.
+pub const STATE_SCHEMA: &str = "intdecomp-surrogate-state-v1";
+
+/// Typed import/export errors of the surrogate-state subsystem.
+///
+/// Every way a state document can be unusable gets its own variant so
+/// callers (engine, serve warm store, CLI) can distinguish "corrupt
+/// file" from "state for a different problem" and report accordingly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateError {
+    /// The document's `schema` tag is missing or not [`STATE_SCHEMA`].
+    BadSchema {
+        /// The tag actually found ("" when absent).
+        found: String,
+    },
+    /// A required field is absent.
+    Missing {
+        /// Dotted field name.
+        field: &'static str,
+    },
+    /// A field is present but ill-typed, ill-shaped or non-finite.
+    Malformed {
+        /// Dotted field name ("" for document-level parse errors).
+        field: &'static str,
+        /// Human-readable description of what was wrong.
+        detail: String,
+    },
+    /// The state was exported from a different problem size.
+    BitsMismatch {
+        /// `n_bits` the importing run expects.
+        expected: usize,
+        /// `n_bits` recorded in the document.
+        found: usize,
+    },
+    /// The surrogate parameters were exported by a different surrogate
+    /// kind (e.g. a vBOCS state offered to an FM surrogate).
+    KindMismatch {
+        /// Kind the importing surrogate expects.
+        expected: String,
+        /// Kind recorded in the document.
+        found: String,
+    },
+    /// Export hit a non-finite number (bug upstream, surfaced typed).
+    NonFinite(NonFiniteJson),
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::BadSchema { found } if found.is_empty() => {
+                write!(f, "surrogate state: missing schema tag (want {STATE_SCHEMA})")
+            }
+            StateError::BadSchema { found } => {
+                write!(f, "surrogate state: schema '{found}' (want {STATE_SCHEMA})")
+            }
+            StateError::Missing { field } => {
+                write!(f, "surrogate state: missing field '{field}'")
+            }
+            StateError::Malformed { field, detail } if field.is_empty() => {
+                write!(f, "surrogate state: {detail}")
+            }
+            StateError::Malformed { field, detail } => {
+                write!(f, "surrogate state: field '{field}': {detail}")
+            }
+            StateError::BitsMismatch { expected, found } => write!(
+                f,
+                "surrogate state: exported for n_bits={found}, run expects n_bits={expected}"
+            ),
+            StateError::KindMismatch { expected, found } => write!(
+                f,
+                "surrogate state: exported by surrogate kind '{found}', \
+                 importer expects '{expected}'"
+            ),
+            StateError::NonFinite(e) => write!(f, "surrogate state export: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StateError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StateError::NonFinite(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<NonFiniteJson> for StateError {
+    fn from(e: NonFiniteJson) -> Self {
+        StateError::NonFinite(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Field accessors (strict: every miss is a typed error).  Shared with
+// the per-surrogate `import_state` implementations in `blr`/`fm`.
+
+pub(crate) fn get<'a>(
+    doc: &'a Json,
+    field: &'static str,
+) -> Result<&'a Json, StateError> {
+    doc.get(field).ok_or(StateError::Missing { field })
+}
+
+pub(crate) fn get_usize(
+    doc: &Json,
+    field: &'static str,
+) -> Result<usize, StateError> {
+    get(doc, field)?.as_usize().ok_or(StateError::Malformed {
+        field,
+        detail: "expected an exact whole number".into(),
+    })
+}
+
+pub(crate) fn get_finite(
+    doc: &Json,
+    field: &'static str,
+) -> Result<f64, StateError> {
+    let v = get(doc, field)?.as_f64().ok_or(StateError::Malformed {
+        field,
+        detail: "expected a number".into(),
+    })?;
+    if !v.is_finite() {
+        return Err(StateError::Malformed {
+            field,
+            detail: format!("non-finite value {v}"),
+        });
+    }
+    Ok(v)
+}
+
+pub(crate) fn get_str<'a>(
+    doc: &'a Json,
+    field: &'static str,
+) -> Result<&'a str, StateError> {
+    get(doc, field)?.as_str().ok_or(StateError::Malformed {
+        field,
+        detail: "expected a string".into(),
+    })
+}
+
+/// Finite-f64 array of an exact expected length.
+pub(crate) fn get_f64_vec(
+    doc: &Json,
+    field: &'static str,
+    expected_len: usize,
+) -> Result<Vec<f64>, StateError> {
+    let arr = get(doc, field)?.as_arr().ok_or(StateError::Malformed {
+        field,
+        detail: "expected an array".into(),
+    })?;
+    if arr.len() != expected_len {
+        return Err(StateError::Malformed {
+            field,
+            detail: format!("expected {expected_len} entries, found {}", arr.len()),
+        });
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let x = v.as_f64().ok_or(StateError::Malformed {
+            field,
+            detail: "expected numeric entries".into(),
+        })?;
+        if !x.is_finite() {
+            return Err(StateError::Malformed {
+                field,
+                detail: format!("non-finite entry {x}"),
+            });
+        }
+        out.push(x);
+    }
+    Ok(out)
+}
+
+/// Spin vector (±1 entries) as a JSON array of integers.
+fn spins_to_json(x: &[i8]) -> Json {
+    Json::Arr(x.iter().map(|&s| Json::Num(f64::from(s))).collect())
+}
+
+fn spins_from_json(
+    v: &Json,
+    field: &'static str,
+    n_bits: usize,
+) -> Result<Vec<i8>, StateError> {
+    let arr = v.as_arr().ok_or(StateError::Malformed {
+        field,
+        detail: "expected a spin array".into(),
+    })?;
+    if arr.len() != n_bits {
+        return Err(StateError::Malformed {
+            field,
+            detail: format!("expected {n_bits} spins, found {}", arr.len()),
+        });
+    }
+    arr.iter()
+        .map(|s| match s.as_f64() {
+            Some(v) if v == 1.0 => Ok(1i8),
+            Some(v) if v == -1.0 => Ok(-1i8),
+            _ => Err(StateError::Malformed {
+                field,
+                detail: "spin entries must be 1 or -1".into(),
+            }),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dataset export/import (lives here so the best-point bookkeeping stays
+// private to the surrogate module tree).
+
+impl Dataset {
+    /// Serialise the dataset — raw pairs *and* the incrementally
+    /// maintained sufficient statistics — as a JSON object.
+    ///
+    /// The moments are exported verbatim rather than recomputed so an
+    /// import restores the exact Gram matrix the donor run accumulated
+    /// (bit-identical; for ±1 features the entries are exact integers).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("g", Json::arr_f64(&self.g.data)),
+            ("gv", Json::arr_f64(&self.gv)),
+            ("n_bits", Json::Num(self.n_bits as f64)),
+            ("xs", Json::Arr(self.xs.iter().map(|x| spins_to_json(x)).collect())),
+            ("ys", Json::arr_f64(&self.ys)),
+            ("yty", Json::Num(self.yty)),
+        ])
+    }
+
+    /// Rebuild a dataset from [`Dataset::to_json`] output.
+    ///
+    /// Strictly validated: shapes must match `n_bits`, spins must be
+    /// ±1, every number must be finite.  Best-point tracking is rebuilt
+    /// with the same strictly-lower / earliest-minimiser rule the
+    /// incremental path uses, so an imported dataset behaves exactly
+    /// like one grown in-process.
+    pub fn from_json(doc: &Json) -> Result<Dataset, StateError> {
+        let n_bits = get_usize(doc, "n_bits")?;
+        let p = features::n_features(n_bits);
+        let xs_json = get(doc, "xs")?.as_arr().ok_or(StateError::Malformed {
+            field: "xs",
+            detail: "expected an array of spin arrays".into(),
+        })?;
+        let mut xs = Vec::with_capacity(xs_json.len());
+        for row in xs_json {
+            xs.push(spins_from_json(row, "xs", n_bits)?);
+        }
+        let ys = get_f64_vec(doc, "ys", xs.len())?;
+        let gv = get_f64_vec(doc, "gv", p)?;
+        let gdata = get_f64_vec(doc, "g", p * p)?;
+        let yty = get_finite(doc, "yty")?;
+
+        let mut best_idx = None;
+        let mut best_y = f64::INFINITY;
+        for (i, &y) in ys.iter().enumerate() {
+            if y < best_y {
+                best_y = y;
+                best_idx = Some(i);
+            }
+        }
+        Ok(Dataset {
+            n_bits,
+            p,
+            xs,
+            ys,
+            g: Matrix::from_vec(p, p, gdata),
+            gv,
+            yty,
+            best_idx,
+            best_y,
+            panel: Vec::new(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surrogate parameter payloads.
+
+/// Opaque surrogate parameter payload: a `kind` discriminator plus the
+/// kind-specific parameter tree produced by `Surrogate::export_state`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SurrogateParams {
+    /// Surrogate kind that produced (and can re-import) the payload —
+    /// `"nBOCS"`/`"gBOCS"`/`"vBOCS"` for BLR priors, `"fm-k8"` style
+    /// for factorisation machines, `"stateless"` for the default.
+    pub kind: String,
+    /// Kind-specific parameter tree.
+    pub params: Json,
+}
+
+impl SurrogateParams {
+    /// Serialise as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("params", self.params.clone()),
+        ])
+    }
+
+    /// Parse from [`SurrogateParams::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<SurrogateParams, StateError> {
+        Ok(SurrogateParams {
+            kind: get_str(doc, "kind")?.to_string(),
+            params: get(doc, "params")?.clone(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The full state document.
+
+/// Everything a later run needs to warm-start: problem size, the
+/// evaluated dataset with sufficient statistics, and (optionally) the
+/// fitted surrogate's own parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SurrogateState {
+    /// Problem size the state was exported for.
+    pub n_bits: usize,
+    /// Evaluated pairs + incrementally maintained moments.
+    pub dataset: Dataset,
+    /// Surrogate parameter payload (`None` for surrogate-free
+    /// algorithms such as random search).
+    pub surrogate: Option<SurrogateParams>,
+}
+
+impl SurrogateState {
+    /// Serialise as a schema-tagged JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", self.dataset.to_json()),
+            ("n_bits", Json::Num(self.n_bits as f64)),
+            ("schema", Json::Str(STATE_SCHEMA.to_string())),
+            (
+                "surrogate",
+                match &self.surrogate {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Serialise to text, failing typed on any non-finite number.
+    pub fn to_string_strict(&self) -> Result<String, StateError> {
+        Ok(self.to_json().to_string_strict()?)
+    }
+
+    /// Parse from [`SurrogateState::to_json`] output (strict).
+    pub fn from_json(doc: &Json) -> Result<SurrogateState, StateError> {
+        let found = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        if found != STATE_SCHEMA {
+            return Err(StateError::BadSchema { found: found.to_string() });
+        }
+        let n_bits = get_usize(doc, "n_bits")?;
+        let dataset = Dataset::from_json(get(doc, "dataset")?)?;
+        if dataset.n_bits != n_bits {
+            return Err(StateError::Malformed {
+                field: "dataset.n_bits",
+                detail: format!(
+                    "dataset n_bits {} disagrees with document n_bits {n_bits}",
+                    dataset.n_bits
+                ),
+            });
+        }
+        let surrogate = match get(doc, "surrogate")? {
+            Json::Null => None,
+            v => Some(SurrogateParams::from_json(v)?),
+        };
+        Ok(SurrogateState { n_bits, dataset, surrogate })
+    }
+
+    /// Parse a serialised state document from text.
+    pub fn parse(text: &str) -> Result<SurrogateState, StateError> {
+        let doc = Json::parse(text).map_err(|e| StateError::Malformed {
+            field: "",
+            detail: format!("not valid JSON: {e}"),
+        })?;
+        SurrogateState::from_json(&doc)
+    }
+
+    /// True when this state can seed a surrogate of the given kind
+    /// (`None` = the algorithm runs without a surrogate; its runs use
+    /// only the dataset and previous best, so any payload is fine).
+    pub fn compatible_kind(&self, expected: Option<&str>) -> bool {
+        match (&self.surrogate, expected) {
+            (None, _) | (Some(_), None) => true,
+            (Some(p), Some(kind)) => p.kind == kind,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start input for `bbo::run_warm`.
+
+/// Warm-start input: a prior run's exported state plus (optionally) the
+/// best point it found, which is re-evaluated on the (possibly drifted)
+/// oracle to anchor the new trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmStart {
+    /// Exported state of the donor run.
+    pub state: SurrogateState,
+    /// Best `(x, y)` of the donor run.  The `y` is the *stale* cost on
+    /// the donor instance; the warm run re-evaluates `x` and only the
+    /// fresh value enters the trace.
+    pub prev_best: Option<(Vec<i8>, f64)>,
+}
+
+impl WarmStart {
+    /// Warm start from a state alone (no previous best).
+    pub fn new(state: SurrogateState) -> WarmStart {
+        WarmStart { state, prev_best: None }
+    }
+
+    /// Attach the donor run's best point.
+    pub fn with_prev_best(mut self, x: Vec<i8>, y: f64) -> WarmStart {
+        self.prev_best = Some((x, y));
+        self
+    }
+
+    /// Serialise as a schema-tagged JSON value (the state document plus
+    /// a `prev_best` member).
+    pub fn to_json(&self) -> Json {
+        let mut doc = self.state.to_json();
+        let prev = match &self.prev_best {
+            Some((x, y)) => Json::obj(vec![
+                ("x", spins_to_json(x)),
+                ("y", Json::Num(*y)),
+            ]),
+            None => Json::Null,
+        };
+        if let Json::Obj(m) = &mut doc {
+            m.insert("prev_best".to_string(), prev);
+        }
+        doc
+    }
+
+    /// Serialise to text, failing typed on any non-finite number.
+    pub fn to_string_strict(&self) -> Result<String, StateError> {
+        Ok(self.to_json().to_string_strict()?)
+    }
+
+    /// Parse from [`WarmStart::to_json`] output (strict).
+    pub fn from_json(doc: &Json) -> Result<WarmStart, StateError> {
+        let state = SurrogateState::from_json(doc)?;
+        let prev_best = match doc.get("prev_best") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let x = spins_from_json(get(v, "x")?, "prev_best.x", state.n_bits)?;
+                let y = get_finite(v, "y")?;
+                Some((x, y))
+            }
+        };
+        Ok(WarmStart { state, prev_best })
+    }
+
+    /// Parse a serialised warm-start document from text.
+    pub fn parse(text: &str) -> Result<WarmStart, StateError> {
+        let doc = Json::parse(text).map_err(|e| StateError::Malformed {
+            field: "",
+            detail: format!("not valid JSON: {e}"),
+        })?;
+        WarmStart::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_dataset() -> Dataset {
+        let mut d = Dataset::new(3);
+        d.push(vec![1, -1, 1], 2.5);
+        d.push(vec![-1, -1, 1], -0.75);
+        d.push(vec![1, 1, -1], 4.0);
+        d
+    }
+
+    #[test]
+    fn dataset_roundtrips_byte_identically() {
+        let d = sample_dataset();
+        let text = d.to_json().to_string_strict().unwrap();
+        let back = Dataset::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_strict().unwrap(), text);
+        assert_eq!(back.best().map(|(_, y)| y), Some(-0.75));
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.g.data, d.g.data);
+        assert_eq!(back.gv, d.gv);
+        assert_eq!(back.yty, d.yty);
+    }
+
+    #[test]
+    fn state_roundtrips_with_and_without_surrogate() {
+        for surrogate in [
+            None,
+            Some(SurrogateParams {
+                kind: "nBOCS".into(),
+                params: Json::obj(vec![("sigma_n2", Json::Num(0.25))]),
+            }),
+        ] {
+            let st = SurrogateState {
+                n_bits: 3,
+                dataset: sample_dataset(),
+                surrogate,
+            };
+            let text = st.to_string_strict().unwrap();
+            let back = SurrogateState::parse(&text).unwrap();
+            assert_eq!(back.to_string_strict().unwrap(), text);
+        }
+    }
+
+    #[test]
+    fn warm_start_roundtrips_prev_best() {
+        let ws = WarmStart::new(SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: None,
+        })
+        .with_prev_best(vec![-1, -1, 1], -0.75);
+        let text = ws.to_string_strict().unwrap();
+        let back = WarmStart::parse(&text).unwrap();
+        assert_eq!(back.to_string_strict().unwrap(), text);
+        assert_eq!(back.prev_best, Some((vec![-1, -1, 1], -0.75)));
+    }
+
+    #[test]
+    fn wrong_schema_is_a_typed_error() {
+        let st = SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: None,
+        };
+        let mut doc = st.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".into(), Json::Str("intdecomp-surrogate-state-v0".into()));
+        }
+        match SurrogateState::from_json(&doc) {
+            Err(StateError::BadSchema { found }) => {
+                assert_eq!(found, "intdecomp-surrogate-state-v0");
+            }
+            other => panic!("expected BadSchema, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn torn_document_is_a_typed_error() {
+        let st = SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: None,
+        };
+        let text = st.to_string_strict().unwrap();
+        let torn = &text[..text.len() / 2];
+        assert!(matches!(
+            SurrogateState::parse(torn),
+            Err(StateError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn shape_violations_are_typed_errors() {
+        let st = SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: None,
+        };
+        // Corrupt the Gram matrix length.
+        let mut doc = st.to_json();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(d)) = m.get_mut("dataset") {
+                if let Some(Json::Arr(g)) = d.get_mut("g") {
+                    g.pop();
+                }
+            }
+        }
+        assert!(matches!(
+            SurrogateState::from_json(&doc),
+            Err(StateError::Malformed { field: "g", .. })
+        ));
+        // Non-±1 spin.
+        let mut doc2 = st.to_json();
+        if let Json::Obj(m) = &mut doc2 {
+            if let Some(Json::Obj(d)) = m.get_mut("dataset") {
+                if let Some(Json::Arr(xs)) = d.get_mut("xs") {
+                    if let Some(Json::Arr(row)) = xs.get_mut(0) {
+                        row[0] = Json::Num(0.0);
+                    }
+                }
+            }
+        }
+        assert!(matches!(
+            SurrogateState::from_json(&doc2),
+            Err(StateError::Malformed { field: "xs", .. })
+        ));
+    }
+
+    #[test]
+    fn non_finite_export_is_a_typed_error() {
+        let mut d = sample_dataset();
+        d.yty = f64::NAN;
+        let st = SurrogateState { n_bits: 3, dataset: d, surrogate: None };
+        assert!(matches!(
+            st.to_string_strict(),
+            Err(StateError::NonFinite(_))
+        ));
+    }
+
+    #[test]
+    fn kind_compatibility_rules() {
+        let with = SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: Some(SurrogateParams { kind: "nBOCS".into(), params: Json::Null }),
+        };
+        let without = SurrogateState {
+            n_bits: 3,
+            dataset: sample_dataset(),
+            surrogate: None,
+        };
+        assert!(with.compatible_kind(Some("nBOCS")));
+        assert!(!with.compatible_kind(Some("vBOCS")));
+        assert!(with.compatible_kind(None)); // RS: params ignored
+        assert!(without.compatible_kind(Some("nBOCS")));
+    }
+
+    #[test]
+    fn negative_zero_survives_the_roundtrip() {
+        let mut d = Dataset::new(2);
+        d.push(vec![1, -1], -0.0);
+        let st = SurrogateState { n_bits: 2, dataset: d, surrogate: None };
+        let text = st.to_string_strict().unwrap();
+        let back = SurrogateState::parse(&text).unwrap();
+        assert_eq!(back.dataset.ys[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.to_string_strict().unwrap(), text);
+    }
+}

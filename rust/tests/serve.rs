@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::thread;
 
-use intdecomp::engine::{Engine, EngineConfig};
+use intdecomp::engine::Engine;
 use intdecomp::serve::{
     self, bare_request, compress_request, Endpoint, ServeConfig, Server,
 };
@@ -66,12 +66,7 @@ fn served_compression_is_byte_identical_and_warms_the_shared_cache() {
     // exactly as `compress-model --report` builds it.
     let jobs: Vec<_> =
         (0..spec.layers).map(|i| spec.job(i).unwrap()).collect();
-    let eng = Engine::new(EngineConfig {
-        workers: 2,
-        restart_workers: spec.restart_workers,
-        batch_size: 1,
-        ..Default::default()
-    });
+    let eng = Engine::new(spec.engine_config(2, false));
     let results = eng.compress_all(jobs);
     let records: Vec<LayerRecord> = results
         .iter()
@@ -151,14 +146,119 @@ fn full_daemon_answers_429_and_keeps_serving() {
 #[test]
 fn malformed_requests_get_400() {
     let (_server, endpoint, handle) = start(1);
-    for bad in ["torn {garbage", r#"{"type":"frobnicate"}"#, r#"{"type":"compress"}"#]
-    {
+    for bad in [
+        "torn {garbage",
+        r#"{"schema":"intdecomp-serve-v2","type":"frobnicate"}"#,
+        r#"{"schema":"intdecomp-serve-v2","type":"compress"}"#,
+    ] {
         let lines = serve::request(&endpoint, bad).unwrap();
         let err = Json::parse(&lines[0]).unwrap();
         assert_eq!(err.get("type").and_then(Json::as_str), Some("error"));
         assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
     }
+    // A v1 client (no schema member) gets a typed 400 naming the
+    // schema this daemon speaks, never a silent accept.
+    let lines =
+        serve::request(&endpoint, r#"{"type":"ping"}"#).unwrap();
+    let err = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err.get("code").and_then(Json::as_u64), Some(400));
+    assert!(err
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("intdecomp-serve-v2"));
     stop(&endpoint, handle);
+}
+
+#[test]
+fn connection_greets_with_hello_and_capabilities() {
+    let (_server, endpoint, handle) = start(1);
+    let addr = match &endpoint {
+        Endpoint::Tcp(a) => a.clone(),
+        #[cfg(unix)]
+        Endpoint::Unix(_) => unreachable!("test binds TCP"),
+    };
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    // The daemon speaks first: one hello line before any request.
+    let mut first = String::new();
+    r.read_line(&mut first).unwrap();
+    let j = Json::parse(first.trim()).unwrap();
+    assert_eq!(j.get("type").and_then(Json::as_str), Some("hello"));
+    assert_eq!(
+        j.get("schema").and_then(Json::as_str),
+        Some("intdecomp-serve-v2")
+    );
+    let caps: Vec<&str> = j
+        .get("capabilities")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(caps, vec!["jobs", "resume", "warm"]);
+    // The same connection still serves a properly tagged request.
+    writeln!(s, "{}", bare_request("ping")).unwrap();
+    let mut reply = String::new();
+    r.read_line(&mut reply).unwrap();
+    let p = Json::parse(reply.trim()).unwrap();
+    assert_eq!(p.get("type").and_then(Json::as_str), Some("pong"));
+    drop(r);
+    drop(s);
+    stop(&endpoint, handle);
+}
+
+#[test]
+fn state_daemon_warm_starts_a_perturbed_respin() {
+    let dir = std::env::temp_dir()
+        .join(format!("intdecomp_serve_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let server = Arc::new(
+        Server::bind(ServeConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".into()),
+            max_inflight: 1,
+            workers: 2,
+            state_dir: Some(dir.clone()),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let endpoint = server.local_endpoint().clone();
+    let srv = Arc::clone(&server);
+    let handle = thread::spawn(move || srv.run());
+
+    // First contact: cold, but every layer's surrogate state persists.
+    let spec = tiny_spec();
+    let lines = serve::request(&endpoint, &compress_request(&spec)).unwrap();
+    let done = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(done.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(done.get("warm").and_then(Json::as_bool), Some(false));
+    assert!(dir.join("warm").is_dir(), "states persisted under DIR/warm");
+
+    // A perturbed respin: new run seed = new fingerprint, but the same
+    // instance keys — every layer warm-starts from the stored states.
+    let mut spec2 = tiny_spec();
+    spec2.seed = 12;
+    assert_ne!(spec2.fingerprint(), spec.fingerprint());
+    let lines2 =
+        serve::request(&endpoint, &compress_request(&spec2)).unwrap();
+    let done2 = Json::parse(lines2.last().unwrap()).unwrap();
+    assert_eq!(done2.get("type").and_then(Json::as_str), Some("done"));
+    assert_eq!(done2.get("warm").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        done2.get("warm_layers").and_then(Json::as_usize),
+        Some(spec.layers)
+    );
+    assert!(done2
+        .get("warm_source")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("warm"));
+
+    stop(&endpoint, handle);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,219 @@
+//! Integration tests of the versioned surrogate-state subsystem
+//! (ISSUE 10): byte-identical round trips of exported states across
+//! every surrogate family, a 300-case randomized round-trip property,
+//! typed rejection of torn/corrupt documents at every truncation
+//! offset, and the end-to-end warm-start acceptance bound — a warm
+//! run reaches the cold best in at most half the cold evaluation
+//! budget.
+
+use intdecomp::bbo::{self, Algorithm, Backends, BboConfig, SurrogateState, WarmStart};
+use intdecomp::instance::{generate, InstanceConfig};
+use intdecomp::minlp::Oracle;
+use intdecomp::solvers::sa::SimulatedAnnealing;
+use intdecomp::surrogate::Dataset;
+use intdecomp::util::cancel::CancelToken;
+use intdecomp::util::rng::Rng;
+
+fn problem(seed: u64) -> intdecomp::cost::Problem {
+    generate(&InstanceConfig { n: 4, d: 8, k: 2, gamma: 0.8, seed }, 0)
+}
+
+fn all_stateful_algorithms() -> Vec<Algorithm> {
+    vec![
+        Algorithm::Vbocs,
+        Algorithm::Nbocs { sigma2: 0.1 },
+        Algorithm::Gbocs { beta: 0.001 },
+        Algorithm::Fmqa { k_fm: 8 },
+        Algorithm::Rfmqa { k_fm: 8, eps: 0.1 },
+    ]
+}
+
+#[test]
+fn exported_states_roundtrip_byte_identically_for_every_algorithm() {
+    let p = problem(5005);
+    let sa = SimulatedAnnealing { sweeps: 20, ..Default::default() };
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 6).with_restarts(2);
+    let never = CancelToken::never();
+    for algo in all_stateful_algorithms() {
+        let w = bbo::run_warm(&p, &algo, &sa, &cfg, &Backends::default(), 7, &never, None, true)
+            .unwrap();
+        let state = w.state.expect("state export was requested");
+        assert_eq!(
+            state.surrogate.as_ref().map(|s| s.kind.clone()),
+            algo.state_kind(),
+            "{algo:?} must export its own kind"
+        );
+        let text = state.to_string_strict().unwrap();
+        let back = SurrogateState::parse(&text).unwrap();
+        assert_eq!(
+            back.to_string_strict().unwrap(),
+            text,
+            "{algo:?}: state round trip must be byte-identical"
+        );
+        // The same property through the warm-start envelope with the
+        // donor's best point attached.
+        let warm = WarmStart::new(back).with_prev_best(w.run.best_x.clone(), w.run.best_y);
+        let wtext = warm.to_string_strict().unwrap();
+        let wback = WarmStart::parse(&wtext).unwrap();
+        assert_eq!(
+            wback.to_string_strict().unwrap(),
+            wtext,
+            "{algo:?}: warm-start round trip must be byte-identical"
+        );
+        let (x, y) = wback.prev_best.unwrap();
+        assert_eq!(x, w.run.best_x);
+        assert_eq!(y.to_bits(), w.run.best_y.to_bits());
+    }
+}
+
+#[test]
+fn random_states_roundtrip_byte_identically_300_cases() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0u64..300 {
+        let n_bits = 2 + (case as usize % 9);
+        let rows = (case as usize * 7) % 17;
+        let mut data = Dataset::new(n_bits);
+        for r in 0..rows {
+            // Mix magnitudes and signed zeros — the serialisation must
+            // preserve every bit pattern of a finite f64.
+            let y = match (case + r as u64) % 5 {
+                0 => -0.0,
+                1 => 0.0,
+                2 => rng.normal() * 1e12,
+                3 => rng.normal() * 1e-300,
+                _ => rng.normal(),
+            };
+            data.push(rng.spins(n_bits), y);
+        }
+        let state = SurrogateState { n_bits, dataset: data, surrogate: None };
+        let text = state.to_string_strict().unwrap();
+        let back = SurrogateState::parse(&text).unwrap();
+        assert_eq!(back.to_string_strict().unwrap(), text, "case {case}");
+        assert_eq!(back.dataset.len(), rows, "case {case}");
+        for (a, b) in back.dataset.ys.iter().zip(state.dataset.ys.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}");
+        }
+        // Half the cases also ride the WarmStart envelope.
+        if case % 2 == 0 {
+            let warm = WarmStart::new(back).with_prev_best(rng.spins(n_bits), rng.normal());
+            let wtext = warm.to_string_strict().unwrap();
+            let wback = WarmStart::parse(&wtext).unwrap();
+            assert_eq!(wback.to_string_strict().unwrap(), wtext, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn non_finite_costs_fail_strict_serialisation_typed() {
+    let mut data = Dataset::new(2);
+    data.push(vec![1, -1], f64::NAN);
+    let state = SurrogateState { n_bits: 2, dataset: data, surrogate: None };
+    assert!(
+        state.to_string_strict().is_err(),
+        "a NaN cost must be a typed serialisation error, not silent JSON"
+    );
+}
+
+#[test]
+fn every_truncation_of_a_state_document_is_a_typed_error() {
+    // A real exported document (fitted nBOCS posterior), torn at every
+    // byte offset: each prefix must fail typed — parse never panics
+    // and never silently accepts a torn document.
+    let p = problem(5005);
+    let sa = SimulatedAnnealing { sweeps: 10, ..Default::default() };
+    let cfg = BboConfig::smoke_scale(p.n_bits(), 4).with_restarts(2);
+    let w = bbo::run_warm(
+        &p,
+        &Algorithm::Nbocs { sigma2: 0.1 },
+        &sa,
+        &cfg,
+        &Backends::default(),
+        3,
+        &CancelToken::never(),
+        None,
+        true,
+    )
+    .unwrap();
+    let text = w.state.unwrap().to_string_strict().unwrap();
+    assert!(text.is_ascii(), "state documents are ASCII JSON");
+    for cut in 0..text.len() {
+        assert!(
+            SurrogateState::parse(&text[..cut]).is_err(),
+            "torn at offset {cut} must be rejected"
+        );
+    }
+    assert!(SurrogateState::parse(&text).is_ok());
+    // A wrong schema tag is a typed rejection too, not a misread.
+    let retagged = text.replace("intdecomp-surrogate-state-v1", "intdecomp-surrogate-state-v9");
+    assert!(SurrogateState::parse(&retagged).is_err());
+}
+
+#[test]
+fn warm_start_reaches_the_cold_best_in_at_most_half_the_evals() {
+    let p = problem(5005);
+    let sa = SimulatedAnnealing { sweeps: 30, ..Default::default() };
+    let never = CancelToken::never();
+    let algo = Algorithm::Nbocs { sigma2: 0.1 };
+    let backends = Backends::default();
+
+    // Cold baseline (also the state donor): n_init + iters evals.
+    let cold_cfg = BboConfig::smoke_scale(p.n_bits(), 24);
+    let cold = bbo::run_warm(&p, &algo, &sa, &cold_cfg, &backends, 5, &never, None, true).unwrap();
+    let cold_evals = cold.run.ys.len();
+    assert_eq!(cold_evals, p.n_bits() + 24);
+    let warm_input = WarmStart::new(cold.state.clone().unwrap())
+        .with_prev_best(cold.run.best_x.clone(), cold.run.best_y);
+
+    // Warm rerun on the same instance with less than half the budget:
+    // the anchor re-evaluation of the donor best reproduces the cold
+    // best bit-for-bit on evaluation one.
+    let warm_cfg = BboConfig::smoke_scale(p.n_bits(), cold_evals / 2 - 1);
+    let warm = bbo::run_warm(
+        &p,
+        &algo,
+        &sa,
+        &warm_cfg,
+        &backends,
+        99,
+        &never,
+        Some(&warm_input),
+        false,
+    )
+    .unwrap();
+    assert!(warm.warm, "the run must report its warm start");
+    assert!(warm.state.is_none(), "no export was requested");
+    assert_eq!(
+        warm.run.ys[0].to_bits(),
+        cold.run.best_y.to_bits(),
+        "the anchor evaluation reproduces the cold best exactly"
+    );
+    assert!(
+        warm.run.ys.len() * 2 <= cold_evals,
+        "warm used {} evals, cold used {cold_evals}",
+        warm.run.ys.len()
+    );
+    assert!(
+        warm.run.best_y <= cold.run.best_y,
+        "warm ({}) must be at least as good as cold ({})",
+        warm.run.best_y,
+        cold.run.best_y
+    );
+
+    // A serialisation round trip of the warm input changes nothing:
+    // the text-fed run is bit-identical to the memory-fed one.
+    let via_text = WarmStart::parse(&warm_input.to_string_strict().unwrap()).unwrap();
+    let warm2 = bbo::run_warm(
+        &p,
+        &algo,
+        &sa,
+        &warm_cfg,
+        &backends,
+        99,
+        &never,
+        Some(&via_text),
+        false,
+    )
+    .unwrap();
+    assert_eq!(warm2.run.best_y.to_bits(), warm.run.best_y.to_bits());
+    assert_eq!(warm2.run.best_x, warm.run.best_x);
+}
